@@ -1,0 +1,44 @@
+//! Quickstart: simulate one PRIMAL benchmark point and print the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the five-line introduction to the public API: build an
+//! [`ExperimentConfig`] for one of the paper's benchmark points, run the
+//! cycle-accurate simulator, read the Table II/III quantities off the
+//! report.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::sim::Simulator;
+
+fn main() {
+    // The paper's headline point: Llama-13B, 2048/2048, LoRA rank 8 (Q,V).
+    let cfg = ExperimentConfig::paper_point(
+        ModelId::Llama2_13b,
+        &[LoraTarget::Q, LoraTarget::V],
+        2048,
+    );
+
+    let report = Simulator::new(&cfg).run();
+
+    println!("PRIMAL quickstart — {}", report.model);
+    println!("  CT allocation : {} CTs ({} per layer, layer-wise adjacent)",
+             report.total_cts, report.cts_per_layer);
+    println!("  TTFT          : {:.3} s   (paper: 2.533 s)", report.ttft_s);
+    println!("  ITL           : {:.3} ms  (paper: 12.518 ms)", report.itl_ms);
+    println!("  throughput    : {:.2} tok/s (paper: 145.40)", report.throughput_tps);
+    println!("  avg power     : {:.2} W    (paper: 17.70)", report.avg_power_w);
+    println!("  efficiency    : {:.2} tok/J (paper: 9.85)", report.efficiency_tpj);
+
+    // The same API drives ablations: switch SRPG off and re-run.
+    let mut no_srpg = cfg.clone();
+    no_srpg.srpg = false;
+    let baseline = Simulator::new(&no_srpg).run();
+    println!(
+        "  SRPG saving   : {:.1}% power ({:.2} W -> {:.2} W)",
+        100.0 * (1.0 - report.avg_power_w / baseline.avg_power_w),
+        baseline.avg_power_w,
+        report.avg_power_w,
+    );
+}

@@ -1,0 +1,167 @@
+"""AOT lowering: JAX entry points -> HLO text + weight/golden manifests.
+
+Run once by `make artifacts`; never on the request path. Emits, per entry
+point, an HLO **text** module (xla_extension 0.5.1 rejects jax>=0.5
+serialized HloModuleProto -- 64-bit instruction ids; the text parser
+reassigns ids, see /opt/xla-example/README.md), plus:
+
+  artifacts/manifest.json      -- parameter order/shapes/dtypes per module,
+                                  model config, golden-vector descriptors
+  artifacts/data/<name>.bin    -- little-endian raw tensors (weights,
+                                  golden inputs, golden outputs)
+
+The Rust runtime (`rust/src/runtime/`) loads the HLO text via
+`HloModuleProto::from_text_file`, feeds the parameters in manifest order,
+and checks the golden outputs -- this is the L2<->L3 functional bridge.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+from .kernels.lora_matmul import pim_lora_matmul
+
+# Reduced-but-tile-aligned config used for the functional golden model.
+# Timing/energy simulation uses the full Llama shapes (rust/src/config);
+# functional numerics are validated at this scale (DESIGN.md substitutions).
+GOLDEN_CFG = model.LayerConfig(
+    hidden=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    intermediate=1024,
+    lora_rank=8,
+    lora_targets=("q", "v"),
+    kv_capacity=512,
+)
+PREFILL_T = 64
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_entries(tree, data_dir: pathlib.Path, prefix: str):
+    """Dump every leaf of a pytree to data/<prefix>_<i>.bin; return metadata."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    entries = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        name = f"{prefix}_{i:03d}"
+        path = data_dir / f"{name}.bin"
+        arr.tofile(path)
+        entries.append(
+            {
+                "name": name,
+                "file": f"data/{name}.bin",
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+            }
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    data = out / "data"
+    data.mkdir(parents=True, exist_ok=True)
+
+    cfg = GOLDEN_CFG
+    key = jax.random.PRNGKey(SEED)
+    kw, kx, kc = jax.random.split(key, 3)
+    w = model.init_layer_weights(cfg, kw)
+
+    manifest: dict = {
+        "seed": SEED,
+        "config": dataclasses.asdict(cfg),
+        "modules": {},
+    }
+
+    # ---------------- decode_step ----------------
+    x = jax.random.normal(kx, (cfg.hidden,), jnp.float32)
+    k_cache = jnp.zeros((cfg.kv_capacity, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    # Pre-populate a short KV history so attention is non-trivial.
+    hist = 37
+    kh = jax.random.normal(kc, (hist, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    vh = jax.random.normal(kw, (hist, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    k_cache = k_cache.at[:hist].set(kh)
+    v_cache = v_cache.at[:hist].set(vh)
+    pos = jnp.int32(hist)
+
+    fd = model.jitted_decode_step(cfg)
+    lowered = fd.lower(w, x, k_cache, v_cache, pos)
+    (out / "decode_step.hlo.txt").write_text(to_hlo_text(lowered))
+    y, k_new, v_new = fd(w, x, k_cache, v_cache, pos)
+
+    manifest["modules"]["decode_step"] = {
+        "hlo": "decode_step.hlo.txt",
+        "params": _leaf_entries((w, x, k_cache, v_cache, pos), data, "ds_in"),
+        "outputs": _leaf_entries((y, k_new, v_new), data, "ds_out"),
+    }
+
+    # ---------------- prefill_block ----------------
+    xb = jax.random.normal(kc, (PREFILL_T, cfg.hidden), jnp.float32)
+    pos0 = jnp.int32(0)
+    fp = model.jitted_prefill_block(cfg)
+    lowered = fp.lower(w, xb, pos0)
+    (out / "prefill_block.hlo.txt").write_text(to_hlo_text(lowered))
+    yb, kb, vb = fp(w, xb, pos0)
+    manifest["modules"]["prefill_block"] = {
+        "hlo": "prefill_block.hlo.txt",
+        "params": _leaf_entries((w, xb, pos0), data, "pf_in"),
+        "outputs": _leaf_entries((yb, kb, vb), data, "pf_out"),
+    }
+
+    # ---------------- lora_matmul (bare PE-pair kernel) ----------------
+    T, K, M, R = 4, 512, 512, 8
+    kk = jax.random.split(key, 4)
+    xs = jax.random.normal(kk[0], (T, K), jnp.float32)
+    wf = jax.random.normal(kk[1], (M, K), jnp.float32) / np.sqrt(K)
+    wq, sc = ref.quantize_weight_tiles(wf)
+    a = jax.random.normal(kk[2], (R, K), jnp.float32) * 0.05
+    b = jax.random.normal(kk[3], (M, R), jnp.float32) * 0.05
+
+    def fn(xs, wq, sc, a, b):
+        return pim_lora_matmul(xs, wq, sc, a, b)
+
+    jf = jax.jit(fn)
+    lowered = jf.lower(xs, wq, sc, a, b)
+    (out / "lora_matmul.hlo.txt").write_text(to_hlo_text(lowered))
+    ym = jf(xs, wq, sc, a, b)
+    manifest["modules"]["lora_matmul"] = {
+        "hlo": "lora_matmul.hlo.txt",
+        "params": _leaf_entries((xs, wq, sc, a, b), data, "lm_in"),
+        "outputs": _leaf_entries((ym,), data, "lm_out"),
+    }
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    n_files = len(list(data.iterdir()))
+    print(f"wrote 3 HLO modules + manifest + {n_files} tensors to {out}/")
+
+
+if __name__ == "__main__":
+    main()

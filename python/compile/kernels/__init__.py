@@ -1,0 +1,9 @@
+"""PRIMAL L1 Pallas kernels + pure-jnp oracles.
+
+`lora_matmul`   -- PE-pair crossbar SMAC with fused SRAM-DCIM LoRA path.
+`attention`     -- router-executed DMAC attention over scratchpad KV blocks.
+`ref`           -- the numerical contract both kernels and the Rust
+                   fixed-point model must satisfy.
+"""
+
+from . import attention, lora_matmul, ref  # noqa: F401

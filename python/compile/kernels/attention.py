@@ -1,0 +1,123 @@
+"""Pallas kernel for PRIMAL's in-network DMAC attention.
+
+In PRIMAL the attention score Q.K^T, softmax and the A.V product are
+executed by the DMAC units *inside the IPCN routers*, streaming over KV
+tiles held in the distributed scratchpads (cyclic placement, paper
+SS III.B). The natural TPU expression is an online-softmax (flash-style)
+kernel that sweeps 256-row KV blocks -- each block corresponds to one
+scratchpad region / router neighbourhood, and the running (m, l, acc)
+re-normalization corresponds to the in-network reduction of partial
+attention results.
+
+Decode only (single query token): the prefill path uses the same kernel
+per query block inside model.py. Lowered with interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KV_BLOCK = 256  # scratchpad KV block: 256 rows, matching the macro tiling
+
+_NEG_INF = -1e30
+
+
+def _dmac_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref):
+    """Online-softmax decode attention over one KV block for all heads.
+
+    Block shapes (H = heads, D = head_dim, B = KV_BLOCK):
+      q_ref:   [H, D]      query token
+      k_ref:   [B, H, D]   KV-cache key block (one scratchpad region)
+      v_ref:   [B, H, D]   value block
+      len_ref: [1, 1]      valid KV length (int32)
+      o_ref:   [H, D]      output (written on final block)
+      m/l/acc: carried softmax state, revisited on every block
+    """
+    blk = pl.program_id(0)
+    n_blk = pl.num_programs(0)
+
+    q = q_ref[...]                    # [H, D]
+    k = k_ref[...]                    # [B, H, D]
+    v = v_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    # Router DMAC: scores for this block.  [H, B]
+    s = jnp.einsum("hd,bhd->hb", q, k) * scale
+
+    # Mask rows beyond the live KV length.
+    kv_len = len_ref[0, 0]
+    row = blk * KV_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(row < kv_len, s, _NEG_INF)
+
+    m_blk = jnp.max(s, axis=1, keepdims=True)             # [H, 1]
+    p = jnp.exp(s - m_blk)                                # [H, B]
+    # Fully-masked block guard (kv_len may end before this block).
+    p = jnp.where(m_blk > _NEG_INF / 2, p, 0.0)
+    l_blk = jnp.sum(p, axis=1, keepdims=True)             # [H, 1]
+    pv = jnp.einsum("hb,bhd->hd", p, v)                   # [H, D]
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = m_blk
+        l_ref[...] = l_blk
+        acc_ref[...] = pv
+
+    @pl.when(blk > 0)
+    def _merge():
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, m_blk)
+        alpha = jnp.exp(m_prev - m_new)   # rescale old state
+        beta = jnp.exp(m_blk - m_new)     # rescale this block
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + l_blk * beta
+        acc_ref[...] = acc_ref[...] * alpha + pv * beta
+
+    @pl.when(blk == n_blk - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[...] = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dmac_attention(q, k, v, kv_len, *, interpret: bool = True):
+    """Decode attention over the scratchpad KV cache.
+
+    q: [H, D] f32; k/v: [S, H, D] f32 with S a multiple of KV_BLOCK;
+    kv_len: scalar int32, number of valid rows. Returns [H, D] f32.
+    """
+    h, d = q.shape
+    s = k.shape[0]
+    assert s % KV_BLOCK == 0, s
+    n_blk = s // KV_BLOCK
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+
+    out, _, _, _ = pl.pallas_call(
+        _dmac_decode_kernel,
+        grid=(n_blk,),
+        in_specs=[
+            pl.BlockSpec((h, d), lambda b: (0, 0)),                 # q
+            pl.BlockSpec((KV_BLOCK, h, d), lambda b: (b, 0, 0)),    # k
+            pl.BlockSpec((KV_BLOCK, h, d), lambda b: (b, 0, 0)),    # v
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),                 # kv_len
+        ],
+        out_specs=[
+            pl.BlockSpec((h, d), lambda b: (0, 0)),                 # out
+            pl.BlockSpec((h, 1), lambda b: (0, 0)),                 # m
+            pl.BlockSpec((h, 1), lambda b: (0, 0)),                 # l
+            pl.BlockSpec((h, d), lambda b: (0, 0)),                 # acc
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)
+    return out

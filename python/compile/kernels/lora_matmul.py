@@ -1,0 +1,151 @@
+"""Pallas kernel for the PRIMAL PE-pair hot spot: crossbar SMAC + LoRA.
+
+One grid step of this kernel emulates one Router-PE pair of the IPCN:
+
+  * a 256x256 int8 RRAM-ACIM tile performs the static-weight MAC over a
+    DAC-quantized activation slice (analog bit-line accumulation ->
+    expressed as an MXU-shaped int8 x int8 -> int32 matmul),
+  * the attached 256x64 SRAM-DCIM macro contributes the digital LoRA
+    partial product for the same activation slice,
+  * the IPCN reduction over K-tiles is expressed as a grid-carried
+    accumulation into the output block (revisited across the K grid
+    dimension), mirroring the in-network partial-sum reduction tree.
+
+TPU mapping notes (DESIGN.md SS Hardware-Adaptation): the crossbar tile is
+one BlockSpec block pinned in VMEM across the K-grid sweep
+(weight-stationary, exactly the RRAM "program once" property); the DAC /
+ADC quantization is elementwise VPU work; the 256x256 int8 MAC is
+MXU-native. Kernels are lowered with `interpret=True` -- real-TPU Mosaic
+lowering cannot execute on the CPU PJRT plugin (see /opt/xla-example).
+
+Grid: (M/TILE_M, K/TILE_K); output block [T, TILE_M] is revisited for
+every k-step, so the kernel initializes it at k==0 and accumulates after.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INT8_QMAX, RRAM_TILE_COLS, RRAM_TILE_ROWS
+
+TILE_M = RRAM_TILE_ROWS
+TILE_K = RRAM_TILE_COLS
+
+
+def _pe_pair_kernel(x_ref, wq_ref, wscale_ref, a_ref, b_ref, o_ref, ab_ref):
+    """One Router-PE pair step: quantize slice, crossbar MAC, LoRA MAC.
+
+    Block shapes:
+      x_ref:      [T, TILE_K]  activation slice for this K-tile
+      wq_ref:     [TILE_M, TILE_K] int8 crossbar tile
+      wscale_ref: [1, 1]      per-tile weight scale
+      a_ref:      [R, TILE_K] LoRA A slice (digital SRAM-DCIM rows)
+      b_ref:      [TILE_M, R] LoRA B tile
+      o_ref:      [T, TILE_M] output block (revisited across k)
+      ab_ref:     [T, R]      scratch-like carried x@A^T partial (revisited)
+    """
+    kt = pl.program_id(1)
+    n_kt = pl.num_programs(1)
+
+    x = x_ref[...]
+
+    # --- DAC: symmetric int8 quantization of the activation slice -------
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    x_scale = jnp.where(absmax > 0, absmax, 1.0) / INT8_QMAX
+    xq = jnp.clip(jnp.round(x / x_scale), -INT8_QMAX, INT8_QMAX)
+    xq = xq.astype(jnp.int8)
+
+    # --- RRAM-ACIM: int8 x int8 -> int32 bit-line accumulation ----------
+    # (MXU-shaped matmul; accumulate in int32 like the analog read-out.)
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32),
+        wq_ref[...].astype(jnp.int32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [T, TILE_M]
+
+    # --- ADC read-out: dequantize this tile's partial sum ---------------
+    partial = acc.astype(jnp.float32) * x_scale * wscale_ref[0, 0]
+
+    # --- SRAM-DCIM: digital LoRA partial (x_slice @ A_slice^T) ----------
+    ab_partial = jax.lax.dot_general(
+        x, a_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [T, R]
+
+    # --- IPCN reduction: accumulate across the K grid dimension ---------
+    @pl.when(kt == 0)
+    def _init():
+        o_ref[...] = partial
+        ab_ref[...] = ab_partial
+
+    @pl.when(kt > 0)
+    def _accum():
+        o_ref[...] += partial
+        ab_ref[...] += ab_partial
+
+    # --- Final k-step: apply LoRA B (second SRAM-DCIM stage) ------------
+    @pl.when(kt == n_kt - 1)
+    def _finish():
+        o_ref[...] += jax.lax.dot_general(
+            ab_ref[...], b_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pim_lora_matmul(x, wq, w_scales, a, b, *, interpret: bool = True):
+    """PRIMAL PE-array matmul: y = dequant(xq @ Wq^T) + (x @ A^T) @ B^T.
+
+    x:        [T, K] f32     activations (T tokens / sequence block)
+    wq:       [M, K] int8    crossbar conductances (from quantize_weight_tiles)
+    w_scales: [M/256, K/256] f32 per-tile scales
+    a:        [R, K] f32     LoRA A (R <= 64, one SRAM-DCIM column bank)
+    b:        [M, R] f32     LoRA B
+    Returns   [T, M] f32.
+    """
+    t, k = x.shape
+    m = wq.shape[0]
+    r = a.shape[0]
+    assert m % TILE_M == 0 and k % TILE_K == 0, (m, k)
+    assert b.shape == (m, r) and a.shape == (r, k)
+    n_mt, n_kt = m // TILE_M, k // TILE_K
+
+    grid = (n_mt, n_kt)
+    out, _ = pl.pallas_call(
+        _pe_pair_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, TILE_K), lambda i, j: (0, j)),          # x
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j: (i, j)),     # wq
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),               # scales
+            pl.BlockSpec((r, TILE_K), lambda i, j: (0, j)),          # A
+            pl.BlockSpec((TILE_M, r), lambda i, j: (i, 0)),          # B
+        ],
+        out_specs=[
+            pl.BlockSpec((t, TILE_M), lambda i, j: (0, i)),          # y
+            pl.BlockSpec((t, r), lambda i, j: (0, 0)),               # x@A^T carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, m), jnp.float32),
+            jax.ShapeDtypeStruct((t, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wq, w_scales, a, b)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pim_matmul(x, wq, w_scales, *, interpret: bool = True):
+    """Crossbar-only SMAC (no LoRA path) -- used for K and MLP projections."""
+    t, k = x.shape
+    m = wq.shape[0]
+    # Zero-rank LoRA degenerates numerically; reuse the fused kernel with
+    # rank-1 zeros to keep a single code path on hardware and in tests.
+    a = jnp.zeros((1, k), jnp.float32)
+    b = jnp.zeros((m, 1), jnp.float32)
+    return pim_lora_matmul(x, wq, w_scales, a, b, interpret=interpret)

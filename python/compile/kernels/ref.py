@@ -1,0 +1,202 @@
+"""Pure-jnp oracles for the PRIMAL L1 kernels.
+
+These functions define the *numerical contract* of the PRIMAL compute
+fabric. Three implementations must agree with them:
+
+  1. the Pallas kernels in `lora_matmul.py` / `attention.py` (pytest,
+     this package's `tests/`),
+  2. the lowered HLO artifacts executed by the Rust runtime
+     (`rust/src/runtime/` integration tests),
+  3. the Rust fixed-point PE model (`rust/src/pe/numerics.rs`), which
+     re-implements the same quantization spec in integer arithmetic.
+
+Quantization spec (mirrors the RRAM-ACIM macro of Wan et al. [5] at the
+behavioural level):
+
+  * Pre-trained weights live in the analog crossbar as **int8** conductances
+    with one float scale per 256x256 tile:
+        scale_w[i,j] = max(|W_tile|) / 127 ,  Wq = round(W / scale_w)
+  * Activations are converted by the DAC per 256-element K-slice:
+        scale_x[j]   = max(|x_slice|) / 127 ,  xq = round(x / scale_x)
+    (clipped to [-127, 127]; the symmetric range avoids -128 asymmetry,
+    matching typical ACIM DAC designs).
+  * The bit-line accumulation is exact in int32 (256 * 127 * 127 < 2^31),
+    then the ADC read-out re-scales: partial = acc * scale_w * scale_x.
+    An optional `adc_bits` models a finite-resolution ADC by uniformly
+    quantizing each tile's partial sum into 2^adc_bits levels over its
+    full-scale range.
+  * The LoRA path runs on the **digital** SRAM-DCIM macro and is computed
+    in float32 ("highly accurate digital MAC" -- paper SS II.A.2).
+
+All tensors are float32 unless stated otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Tile geometry fixed by the macros (paper Table I).
+RRAM_TILE_ROWS = 256  # crossbar output (column) dimension per tile
+RRAM_TILE_COLS = 256  # crossbar input (row) dimension per tile
+SRAM_TILE_ROWS = 256
+SRAM_TILE_COLS = 64  # => max LoRA rank handled by one SRAM-DCIM macro
+
+INT8_QMAX = 127.0
+
+
+# --------------------------------------------------------------------------
+# Quantization helpers
+# --------------------------------------------------------------------------
+
+def symmetric_scale(t: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Symmetric int8 scale max(|t|)/127, guarded against all-zero inputs."""
+    m = jnp.max(jnp.abs(t), axis=axis, keepdims=axis is not None)
+    return jnp.where(m > 0, m, 1.0) / INT8_QMAX
+
+
+def quantize_i8(t: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest symmetric int8 quantization (returns int8)."""
+    q = jnp.round(t / scale)
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+
+def quantize_weight_tiles(w: jnp.ndarray):
+    """Quantize a [M, K] weight matrix into 256x256 int8 crossbar tiles.
+
+    Returns (wq int8 [M, K], scales f32 [M/256, K/256]). M and K must be
+    multiples of the tile size -- the mapping layer pads to tile boundaries
+    before programming the crossbars, exactly as the hardware leaves
+    unused rows/columns unprogrammed.
+    """
+    m, k = w.shape
+    tm, tk = RRAM_TILE_ROWS, RRAM_TILE_COLS
+    assert m % tm == 0 and k % tk == 0, f"untiled shape {w.shape}"
+    tiles = w.reshape(m // tm, tm, k // tk, tk)
+    scales = jnp.max(jnp.abs(tiles), axis=(1, 3))
+    scales = jnp.where(scales > 0, scales, 1.0) / INT8_QMAX
+    wq = jnp.round(tiles / scales[:, None, :, None])
+    wq = jnp.clip(wq, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return wq.reshape(m, k), scales
+
+
+# --------------------------------------------------------------------------
+# SMAC: static-weight MAC on the RRAM-ACIM crossbar (+ fused LoRA path)
+# --------------------------------------------------------------------------
+
+def pim_matmul_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    adc_bits: int | None = None,
+) -> jnp.ndarray:
+    """Reference for the quantized crossbar matmul  y = dequant(xq @ Wq^T).
+
+    x:        [T, K] float32 activations (T tokens).
+    wq:       [M, K] int8 crossbar conductances (tiled quantization).
+    w_scales: [M/256, K/256] float32 per-tile scales.
+    Returns   [T, M] float32.
+
+    Computation proceeds tile-by-tile exactly as the hardware does:
+    per K-slice DAC quantization of x, int32 bit-line accumulation within
+    each 256x256 tile, ADC read-out, then the IPCN reduction over K tiles.
+    """
+    t, k = x.shape
+    m = wq.shape[0]
+    tm, tk = RRAM_TILE_ROWS, RRAM_TILE_COLS
+    n_mt, n_kt = m // tm, k // tk
+
+    # DAC: per-(token, K-slice) activation quantization.
+    xs = x.reshape(t, n_kt, tk)
+    x_scale = symmetric_scale(xs, axis=2)  # [T, n_kt, 1]
+    xq = jnp.round(xs / x_scale)
+    xq = jnp.clip(xq, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+    wt = wq.reshape(n_mt, tm, n_kt, tk)
+
+    # int32 bit-line accumulate per tile: [T, n_kt, n_mt, tm]
+    acc = jnp.einsum(
+        "tkc,mrkc->tkmr",
+        xq.astype(jnp.int32),
+        wt.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    # ADC read-out: rescale per tile.
+    partial = (
+        acc.astype(jnp.float32)
+        * x_scale[:, :, :, None]          # [T, n_kt, 1, 1]
+        * w_scales.T[None, :, :, None]    # [1, n_kt, n_mt, 1]
+    )
+    if adc_bits is not None:
+        # Finite-resolution ADC: uniform quantization of each tile's
+        # partial sum over the tile's full-scale range.
+        full_scale = (
+            INT8_QMAX * INT8_QMAX * tk
+            * x_scale[:, :, :, None]
+            * w_scales.T[None, :, :, None]
+        )
+        lsb = 2.0 * full_scale / (2.0 ** adc_bits)
+        partial = jnp.round(partial / lsb) * lsb
+    # IPCN reduction over K tiles.
+    return partial.sum(axis=1).reshape(t, m)
+
+
+def lora_path_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Digital SRAM-DCIM LoRA path:  y = (x @ A^T) @ B^T  in float32.
+
+    x: [T, K], a: [r, K], b: [M, r]  ->  [T, M].
+    """
+    return (x @ a.T) @ b.T
+
+
+def pim_lora_matmul_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    adc_bits: int | None = None,
+) -> jnp.ndarray:
+    """Full PE-pair computation: crossbar SMAC + fused digital LoRA path."""
+    return pim_matmul_ref(x, wq, w_scales, adc_bits) + lora_path_ref(x, a, b)
+
+
+# --------------------------------------------------------------------------
+# DMAC: dynamic MAC attention executed in the IPCN routers
+# --------------------------------------------------------------------------
+
+def dmac_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray | int | None = None,
+) -> jnp.ndarray:
+    """Reference for router-executed attention (decode: one query token).
+
+    q: [H, D], k/v: [S, H, D] (scratchpad KV cache, S = allocated capacity).
+    kv_len: number of valid cache rows (<= S); the rest are masked.
+    None => all S rows valid. Returns [H, D]. float32 throughout -- the
+    DMAC units are digital full-precision MACs inside the routers
+    (paper SS II.B).
+    """
+    s, h, d = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, :] < kv_len
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hs,shd->hd", p, v)
+
+
+def dmac_attention_prefill_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray
+) -> jnp.ndarray:
+    """Causal prefill attention. q/k/v: [T, H, D] -> [T, H, D]."""
+    t, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,shd->thd", p, v)

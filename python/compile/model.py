@@ -1,0 +1,315 @@
+"""L2: PRIMAL's compute graph -- a LoRA-augmented Llama-style decoder layer.
+
+This is the JAX expression of exactly what the PRIMAL fabric computes for
+one transformer layer (paper Fig. 4 / SS III): RMSNorm -> Q/K/V projections
+on the RRAM crossbars with the SRAM-DCIM LoRA path fused on the adapted
+matrices -> RoPE -> in-network DMAC attention over the scratchpad KV cache
+-> O projection -> SwiGLU MLP (also crossbar SMAC).
+
+Everything is built from the L1 kernels so that lowering produces a single
+HLO module per entry point; `aot.py` dumps these as HLO text for the Rust
+runtime (`rust/src/runtime/`), which executes them on the request path for
+functional (golden-model) validation of the cycle simulator's fixed-point
+numerics. Python itself never runs at serving time.
+
+Weights are carried pre-quantized (int8 tiles + per-tile scales), i.e. in
+the exact form the mapping layer programs into the crossbars.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import dmac_attention
+from .kernels.lora_matmul import pim_lora_matmul, pim_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerConfig:
+    """Shape configuration for one decoder layer.
+
+    All projection dims must be multiples of the 256 crossbar tile; the
+    mapping layer pads real models to tile boundaries, so the AOT shapes
+    are already tile-aligned.
+    """
+
+    hidden: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 64
+    intermediate: int = 1024
+    lora_rank: int = 8
+    lora_targets: tuple[str, ...] = ("q", "v")  # which of q,k,v,o are adapted
+    rope_theta: float = 500000.0
+    rms_eps: float = 1e-5
+    kv_capacity: int = 512  # scratchpad KV allocation (multiple of 256)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+class QuantLinear(NamedTuple):
+    """A crossbar-programmed projection: int8 tiles + per-tile scales."""
+
+    wq: jnp.ndarray       # [M, K] int8
+    scales: jnp.ndarray   # [M/256, K/256] f32
+
+
+class LoraPair(NamedTuple):
+    """A LoRA adapter held in SRAM-DCIM: y += (x @ A^T) @ B^T."""
+
+    a: jnp.ndarray  # [r, K] f32
+    b: jnp.ndarray  # [M, r] f32
+
+
+class LayerWeights(NamedTuple):
+    """All weights of one decoder layer in programmed (on-chip) form."""
+
+    attn_norm: jnp.ndarray   # [hidden]
+    mlp_norm: jnp.ndarray    # [hidden]
+    wq: QuantLinear
+    wk: QuantLinear
+    wv: QuantLinear
+    wo: QuantLinear
+    w_gate: QuantLinear
+    w_up: QuantLinear
+    w_down: QuantLinear
+    lora_q: LoraPair
+    lora_k: LoraPair
+    lora_v: LoraPair
+    lora_o: LoraPair
+
+
+def _zero_lora(m: int, k: int) -> LoraPair:
+    """Rank-1 zero adapter: numerically inert, keeps one kernel code path."""
+    return LoraPair(jnp.zeros((1, k), jnp.float32), jnp.zeros((m, 1), jnp.float32))
+
+
+def init_layer_weights(cfg: LayerConfig, key: jax.Array) -> LayerWeights:
+    """Random synthetic weights in programmed form (timing is shape-only;
+    numerics are validated on this reduced model -- DESIGN.md substitutions)."""
+    ks = jax.random.split(key, 12)
+    h, qd, kvd, im = cfg.hidden, cfg.q_dim, cfg.kv_dim, cfg.intermediate
+
+    def q(key, m, k, std):
+        w = jax.random.normal(key, (m, k), jnp.float32) * std
+        return QuantLinear(*ref.quantize_weight_tiles(w))
+
+    def lora(key, name, m, k):
+        if name not in cfg.lora_targets:
+            return _zero_lora(m, k)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (cfg.lora_rank, k), jnp.float32) * (1.0 / k**0.5)
+        # Standard LoRA init sets B = 0; use a small non-zero B so tests
+        # actually exercise the SRAM-DCIM path.
+        b = jax.random.normal(kb, (m, cfg.lora_rank), jnp.float32) * 0.02
+        return LoraPair(a, b)
+
+    std = 1.0 / h**0.5
+    return LayerWeights(
+        attn_norm=jnp.ones((h,), jnp.float32),
+        mlp_norm=jnp.ones((h,), jnp.float32),
+        wq=q(ks[0], qd, h, std),
+        wk=q(ks[1], kvd, h, std),
+        wv=q(ks[2], kvd, h, std),
+        wo=q(ks[3], h, qd, std),
+        w_gate=q(ks[4], im, h, std),
+        w_up=q(ks[5], im, h, std),
+        w_down=q(ks[6], h, im, 1.0 / im**0.5),
+        lora_q=lora(ks[7], "q", qd, h),
+        lora_k=lora(ks[8], "k", kvd, h),
+        lora_v=lora(ks[9], "v", kvd, h),
+        lora_o=lora(ks[10], "o", h, qd),
+    )
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """cos/sin tables for the given absolute positions. [T, head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, H, D]; cos/sin: [T, D/2] (split-half convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[:, None, :], sin[:, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _proj(x, lin: QuantLinear, lora: LoraPair, interpret: bool) -> jnp.ndarray:
+    return pim_lora_matmul(x, lin.wq, lin.scales, lora.a, lora.b,
+                           interpret=interpret)
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """GQA: expand [*, n_kv, D] -> [*, n_kv*groups, D]."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=-2)
+
+
+# --------------------------------------------------------------------------
+# Entry points (the units aot.py lowers)
+# --------------------------------------------------------------------------
+
+def decode_step(
+    cfg: LayerConfig,
+    w: LayerWeights,
+    x: jnp.ndarray,          # [hidden] current token's hidden state
+    k_cache: jnp.ndarray,    # [S, n_kv, D] scratchpad K blocks
+    v_cache: jnp.ndarray,    # [S, n_kv, D]
+    pos: jnp.ndarray,        # scalar int32: this token's position
+    *,
+    interpret: bool = True,
+):
+    """One decoder-layer decode step. Returns (y [hidden], k_new, v_new).
+
+    The caller (Rust coordinator) owns the cache append -- mirroring the
+    hardware, where the router writes the fresh K/V rows into the cyclic
+    scratchpad buffer (dataflow SS III.B) and the DMAC units then read
+    capacity-S blocks with a validity length.
+    """
+    h = rms_norm(x[None, :], w.attn_norm, cfg.rms_eps)  # [1, hidden]
+
+    q = _proj(h, w.wq, w.lora_q, interpret).reshape(1, cfg.n_heads, cfg.head_dim)
+    k = _proj(h, w.wk, w.lora_k, interpret).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+    v = _proj(h, w.wv, w.lora_v, interpret).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+
+    cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)[0]       # [H, D]
+    k_new = apply_rope(k, cos, sin)[0]   # [n_kv, D]
+    v_new = v[0]
+
+    # Append this token's K/V at index `pos` (functional update; the Rust
+    # side does the same append into the cyclic scratchpad region).
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new[None], (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new[None], (pos, 0, 0))
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k_full = _repeat_kv(k_cache, groups)
+    v_full = _repeat_kv(v_cache, groups)
+    attn = dmac_attention(q, k_full, v_full, pos + 1, interpret=interpret)
+
+    o = _proj(attn.reshape(1, cfg.q_dim), w.wo, w.lora_o, interpret)[0]
+    x = x + o
+
+    # SwiGLU MLP on the crossbars.
+    hm = rms_norm(x[None, :], w.mlp_norm, cfg.rms_eps)
+    gate = pim_matmul(hm, w.w_gate.wq, w.w_gate.scales, interpret=interpret)
+    up = pim_matmul(hm, w.w_up.wq, w.w_up.scales, interpret=interpret)
+    act = jax.nn.silu(gate) * up
+    down = pim_matmul(act, w.w_down.wq, w.w_down.scales, interpret=interpret)
+    return x + down[0], k_new, v_new
+
+
+def prefill_block(
+    cfg: LayerConfig,
+    w: LayerWeights,
+    x: jnp.ndarray,    # [T, hidden] block of prompt hidden states
+    pos0: jnp.ndarray, # scalar int32: absolute position of x[0]
+    *,
+    interpret: bool = True,
+):
+    """Prefill one decoder layer over a T-token block (causal within block).
+
+    Returns (y [T, hidden], k_block [T, n_kv, D], v_block [T, n_kv, D]);
+    the K/V block is handed to the coordinator for scratchpad placement.
+    Block-local causal attention matches PRIMAL's per-CT prefill pipeline
+    (Fig. 6): each CT computes attention over the tokens resident in its
+    scratchpads.
+    """
+    t = x.shape[0]
+    h = rms_norm(x, w.attn_norm, cfg.rms_eps)
+
+    q = _proj(h, w.wq, w.lora_q, interpret).reshape(t, cfg.n_heads, cfg.head_dim)
+    k = _proj(h, w.wk, w.lora_k, interpret).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+    v = _proj(h, w.wv, w.lora_v, interpret).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+
+    positions = pos0 + jnp.arange(t)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    attn = ref.dmac_attention_prefill_ref(
+        q, _repeat_kv(k, groups), _repeat_kv(v, groups)
+    )
+
+    o = _proj(attn.reshape(t, cfg.q_dim), w.wo, w.lora_o, interpret)
+    x = x + o
+
+    hm = rms_norm(x, w.mlp_norm, cfg.rms_eps)
+    gate = pim_matmul(hm, w.w_gate.wq, w.w_gate.scales, interpret=interpret)
+    up = pim_matmul(hm, w.w_up.wq, w.w_up.scales, interpret=interpret)
+    act = jax.nn.silu(gate) * up
+    down = pim_matmul(act, w.w_down.wq, w.w_down.scales, interpret=interpret)
+    return x + down, k, v
+
+
+def decode_step_ref(cfg: LayerConfig, w: LayerWeights, x, k_cache, v_cache, pos):
+    """Pure-jnp oracle for decode_step (uses ref kernels throughout)."""
+    h = rms_norm(x[None, :], w.attn_norm, cfg.rms_eps)
+
+    def proj(lin, lora):
+        return ref.pim_lora_matmul_ref(h, lin.wq, lin.scales, lora.a, lora.b)
+
+    q = proj(w.wq, w.lora_q).reshape(1, cfg.n_heads, cfg.head_dim)
+    k = proj(w.wk, w.lora_k).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+    v = proj(w.wv, w.lora_v).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+    cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)[0]
+    k_new = apply_rope(k, cos, sin)[0]
+    v_new = v[0]
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new[None], (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new[None], (pos, 0, 0))
+    groups = cfg.n_heads // cfg.n_kv_heads
+    attn = ref.dmac_attention_ref(
+        q, _repeat_kv(k_cache, groups), _repeat_kv(v_cache, groups), pos + 1
+    )
+    ah = attn.reshape(1, cfg.q_dim)
+    o = ref.pim_lora_matmul_ref(ah, w.wo.wq, w.wo.scales, w.lora_o.a, w.lora_o.b)
+    x = x + o[0]
+    hm = rms_norm(x[None, :], w.mlp_norm, cfg.rms_eps)
+    gate = ref.pim_matmul_ref(hm, w.w_gate.wq, w.w_gate.scales)
+    up = ref.pim_matmul_ref(hm, w.w_up.wq, w.w_up.scales)
+    act = jax.nn.silu(gate) * up
+    down = ref.pim_matmul_ref(act, w.w_down.wq, w.w_down.scales)
+    return x + down[0], k_new, v_new
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_decode_step(cfg: LayerConfig, interpret: bool = True):
+    """jax.jit'ed decode_step closed over cfg (weights as tracers)."""
+    def f(w, x, k_cache, v_cache, pos):
+        return decode_step(cfg, w, x, k_cache, v_cache, pos, interpret=interpret)
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_prefill_block(cfg: LayerConfig, interpret: bool = True):
+    def f(w, x, pos0):
+        return prefill_block(cfg, w, x, pos0, interpret=interpret)
+    return jax.jit(f)

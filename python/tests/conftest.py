@@ -1,0 +1,8 @@
+"""Make the `compile` package importable whether pytest runs from the
+repo root (`pytest python/tests/`) or from `python/` (`pytest tests/`,
+as the Makefile does)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+These are the core numerical-contract tests: hypothesis sweeps over
+shapes/ranks/seeds for the PE-pair crossbar kernel, and over head counts /
+KV lengths for the DMAC attention kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import KV_BLOCK, dmac_attention
+from compile.kernels.lora_matmul import pim_lora_matmul, pim_matmul
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# quantization primitives
+# --------------------------------------------------------------------------
+
+class TestQuantization:
+    def test_weight_tiles_roundtrip_small_error(self):
+        rng = np.random.default_rng(0)
+        w = _rand(rng, 512, 768)
+        wq, sc = ref.quantize_weight_tiles(w)
+        assert wq.dtype == jnp.int8
+        assert sc.shape == (2, 3)
+        deq = np.asarray(wq, np.float32).reshape(2, 256, 3, 256) * np.asarray(
+            sc
+        )[:, None, :, None]
+        err = np.abs(deq.reshape(512, 768) - np.asarray(w))
+        # round-to-nearest error is bounded by scale/2 per tile
+        bound = np.repeat(np.repeat(np.asarray(sc) / 2, 256, 0), 256, 1)
+        assert (err <= bound + 1e-6).all()
+
+    def test_weight_tiles_all_zero_tile(self):
+        w = jnp.zeros((256, 512))
+        wq, sc = ref.quantize_weight_tiles(w)
+        assert np.all(np.asarray(wq) == 0)
+        assert np.all(np.isfinite(np.asarray(sc)))
+
+    def test_weight_tiles_rejects_untiled(self):
+        with pytest.raises(AssertionError):
+            ref.quantize_weight_tiles(jnp.zeros((100, 256)))
+
+    def test_quantize_symmetric_range(self):
+        rng = np.random.default_rng(1)
+        t = _rand(rng, 64, scale=10.0)
+        q = ref.quantize_i8(t, ref.symmetric_scale(t))
+        assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_symmetric_scale_never_zero(self, seed):
+        rng = np.random.default_rng(seed)
+        t = _rand(rng, 16, scale=rng.uniform(0, 2))
+        s = ref.symmetric_scale(t)
+        assert float(s) > 0
+
+
+# --------------------------------------------------------------------------
+# PE-pair kernel: crossbar SMAC + LoRA
+# --------------------------------------------------------------------------
+
+class TestPimLoraMatmul:
+    @given(
+        t=st.sampled_from([1, 3, 8]),
+        n_kt=st.integers(1, 3),
+        n_mt=st.integers(1, 3),
+        r=st.sampled_from([1, 4, 8, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matches_ref(self, t, n_kt, n_mt, r, seed):
+        rng = np.random.default_rng(seed)
+        k, m = 256 * n_kt, 256 * n_mt
+        x = _rand(rng, t, k)
+        w = _rand(rng, m, k, scale=1.0 / np.sqrt(k))
+        wq, sc = ref.quantize_weight_tiles(w)
+        a = _rand(rng, r, k, scale=0.05)
+        b = _rand(rng, m, r, scale=0.05)
+        got = pim_lora_matmul(x, wq, sc, a, b)
+        want = ref.pim_lora_matmul_ref(x, wq, sc, a, b)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+    def test_zero_lora_equals_plain(self):
+        rng = np.random.default_rng(7)
+        x = _rand(rng, 2, 512)
+        w = _rand(rng, 256, 512, scale=0.05)
+        wq, sc = ref.quantize_weight_tiles(w)
+        got = pim_matmul(x, wq, sc)
+        want = ref.pim_matmul_ref(x, wq, sc)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+    def test_lora_path_contributes(self):
+        """The SRAM-DCIM path must actually change the output."""
+        rng = np.random.default_rng(8)
+        x = _rand(rng, 1, 256)
+        w = _rand(rng, 256, 256, scale=0.05)
+        wq, sc = ref.quantize_weight_tiles(w)
+        a = _rand(rng, 8, 256, scale=0.3)
+        b = _rand(rng, 256, 8, scale=0.3)
+        with_lora = np.asarray(pim_lora_matmul(x, wq, sc, a, b))
+        without = np.asarray(pim_matmul(x, wq, sc))
+        assert np.abs(with_lora - without).max() > 0.1
+
+    def test_quantization_error_bounded(self):
+        """Crossbar output must track the float matmul within int8 error."""
+        rng = np.random.default_rng(9)
+        x = _rand(rng, 4, 512)
+        w = _rand(rng, 512, 512, scale=1.0 / np.sqrt(512))
+        wq, sc = ref.quantize_weight_tiles(w)
+        got = np.asarray(pim_matmul(x, wq, sc))
+        exact = np.asarray(x) @ np.asarray(w).T
+        rel = np.abs(got - exact).max() / np.abs(exact).max()
+        assert rel < 0.05, f"quantization error too large: {rel}"
+
+    def test_adc_quantization_monotone(self):
+        """Fewer ADC bits => more error; many bits ~ exact read-out."""
+        rng = np.random.default_rng(10)
+        x = _rand(rng, 2, 512)
+        w = _rand(rng, 256, 512, scale=0.05)
+        wq, sc = ref.quantize_weight_tiles(w)
+        exact = np.asarray(ref.pim_matmul_ref(x, wq, sc))
+        errs = []
+        for bits in (6, 8, 12, 24):
+            approx = np.asarray(ref.pim_matmul_ref(x, wq, sc, adc_bits=bits))
+            errs.append(np.abs(approx - exact).max())
+        assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+        assert errs[-1] < 1e-3
+
+
+# --------------------------------------------------------------------------
+# DMAC attention kernel
+# --------------------------------------------------------------------------
+
+class TestDmacAttention:
+    @given(
+        h=st.sampled_from([1, 4, 8]),
+        d=st.sampled_from([64, 128]),
+        n_blk=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, h, d, n_blk, seed):
+        rng = np.random.default_rng(seed)
+        s = KV_BLOCK * n_blk
+        kv_len = int(rng.integers(1, s + 1))
+        q = _rand(rng, h, d)
+        k = _rand(rng, s, h, d)
+        v = _rand(rng, s, h, d)
+        got = dmac_attention(q, k, v, kv_len)
+        want = ref.dmac_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+    def test_kv_len_one(self):
+        """Degenerate cache: output == v[0]."""
+        rng = np.random.default_rng(3)
+        q = _rand(rng, 4, 64)
+        k = _rand(rng, KV_BLOCK, 4, 64)
+        v = _rand(rng, KV_BLOCK, 4, 64)
+        got = np.asarray(dmac_attention(q, k, v, 1))
+        np.testing.assert_allclose(got, np.asarray(v[0]), rtol=1e-5, atol=1e-6)
+
+    def test_masked_tail_is_ignored(self):
+        """Garbage beyond kv_len must not affect the output."""
+        rng = np.random.default_rng(4)
+        q = _rand(rng, 4, 64)
+        k = _rand(rng, 2 * KV_BLOCK, 4, 64)
+        v = _rand(rng, 2 * KV_BLOCK, 4, 64)
+        kv_len = 100
+        a = np.asarray(dmac_attention(q, k, v, kv_len))
+        k2 = k.at[kv_len:].set(1e4)
+        v2 = v.at[kv_len:].set(-1e4)
+        b = np.asarray(dmac_attention(q, k2, v2, kv_len))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_softmax_weights_are_convex(self):
+        """Output lies in the convex hull of the values (per head/dim)."""
+        rng = np.random.default_rng(5)
+        q = _rand(rng, 2, 64)
+        k = _rand(rng, KV_BLOCK, 2, 64)
+        v = _rand(rng, KV_BLOCK, 2, 64)
+        kv_len = 50
+        out = np.asarray(dmac_attention(q, k, v, kv_len))
+        vv = np.asarray(v[:kv_len])
+        assert (out <= vv.max(axis=0) + 1e-5).all()
+        assert (out >= vv.min(axis=0) - 1e-5).all()
+
+    def test_prefill_ref_causality(self):
+        """Changing a later token never affects an earlier output row."""
+        rng = np.random.default_rng(6)
+        t, h, d = 8, 2, 64
+        q = _rand(rng, t, h, d)
+        k = _rand(rng, t, h, d)
+        v = _rand(rng, t, h, d)
+        base = np.asarray(ref.dmac_attention_prefill_ref(q, k, v))
+        k2 = k.at[-1].set(100.0)
+        v2 = v.at[-1].set(-100.0)
+        pert = np.asarray(ref.dmac_attention_prefill_ref(q, k2, v2))
+        np.testing.assert_allclose(base[:-1], pert[:-1], rtol=1e-6, atol=1e-6)
+        assert np.abs(base[-1] - pert[-1]).max() > 1e-3

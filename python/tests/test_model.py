@@ -1,0 +1,203 @@
+"""L2 correctness: decoder layer (kernel path) vs pure-jnp oracle, shapes,
+RoPE/RMSNorm properties, and manifest/artifact consistency."""
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.LayerConfig(
+    hidden=512, n_heads=8, n_kv_heads=8, head_dim=64,
+    intermediate=1024, lora_rank=8, lora_targets=("q", "v"), kv_capacity=512,
+)
+GQA_CFG = dataclasses.replace(CFG, n_kv_heads=4, lora_targets=("q", "v"))
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.init_layer_weights(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def gqa_weights():
+    return model.init_layer_weights(GQA_CFG, jax.random.PRNGKey(1))
+
+
+def _decode_inputs(cfg, seed=2, hist=19):
+    key = jax.random.PRNGKey(seed)
+    kx, kk, kv = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (cfg.hidden,), jnp.float32)
+    kc = jnp.zeros((cfg.kv_capacity, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:hist].set(
+        jax.random.normal(kk, (hist, cfg.n_kv_heads, cfg.head_dim), jnp.float32))
+    vc = vc.at[:hist].set(
+        jax.random.normal(kv, (hist, cfg.n_kv_heads, cfg.head_dim), jnp.float32))
+    return x, kc, vc, jnp.int32(hist)
+
+
+class TestDecodeStep:
+    def test_matches_ref(self, weights):
+        x, kc, vc, pos = _decode_inputs(CFG)
+        y, kn, vn = model.decode_step(CFG, weights, x, kc, vc, pos)
+        yr, knr, vnr = model.decode_step_ref(CFG, weights, x, kc, vc, pos)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(kn), np.asarray(knr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(vn), np.asarray(vnr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_shapes(self, weights):
+        x, kc, vc, pos = _decode_inputs(CFG)
+        y, kn, vn = model.decode_step(CFG, weights, x, kc, vc, pos)
+        assert y.shape == (CFG.hidden,)
+        assert kn.shape == (CFG.n_kv_heads, CFG.head_dim)
+        assert vn.shape == (CFG.n_kv_heads, CFG.head_dim)
+
+    def test_gqa_matches_ref(self, gqa_weights):
+        x, kc, vc, pos = _decode_inputs(GQA_CFG, seed=3)
+        y, _, _ = model.decode_step(GQA_CFG, gqa_weights, x, kc, vc, pos)
+        yr, _, _ = model.decode_step_ref(GQA_CFG, gqa_weights, x, kc, vc, pos)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_position_zero(self, weights):
+        """First decode token: empty history, attends only to itself."""
+        x, kc, vc, _ = _decode_inputs(CFG, hist=0)
+        y, _, _ = model.decode_step(CFG, weights, x, kc, vc, jnp.int32(0))
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_lora_changes_output(self, weights):
+        """Swapping in a different adapter changes the layer output."""
+        x, kc, vc, pos = _decode_inputs(CFG)
+        y1, _, _ = model.decode_step(CFG, weights, x, kc, vc, pos)
+        w2 = weights._replace(
+            lora_q=model.LoraPair(weights.lora_q.a * 2.0, weights.lora_q.b))
+        y2, _, _ = model.decode_step(CFG, w2, x, kc, vc, pos)
+        assert np.abs(np.asarray(y1) - np.asarray(y2)).max() > 1e-4
+
+
+class TestPrefillBlock:
+    def test_shapes(self, weights):
+        t = 16
+        x = jax.random.normal(jax.random.PRNGKey(4), (t, CFG.hidden), jnp.float32)
+        y, kb, vb = model.prefill_block(CFG, weights, x, jnp.int32(0))
+        assert y.shape == (t, CFG.hidden)
+        assert kb.shape == (t, CFG.n_kv_heads, CFG.head_dim)
+        assert vb.shape == (t, CFG.n_kv_heads, CFG.head_dim)
+
+    def test_prefill_then_decode_consistent(self, weights):
+        """Decode right after prefill sees the prefill K/V via the cache."""
+        t = 8
+        x = jax.random.normal(jax.random.PRNGKey(5), (t, CFG.hidden), jnp.float32)
+        _, kb, vb = model.prefill_block(CFG, weights, x, jnp.int32(0))
+        kc = jnp.zeros((CFG.kv_capacity, CFG.n_kv_heads, CFG.head_dim))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:t].set(kb)
+        vc = vc.at[:t].set(vb)
+        xd = jax.random.normal(jax.random.PRNGKey(6), (CFG.hidden,), jnp.float32)
+        y, _, _ = model.decode_step(CFG, weights, xd, kc, vc, jnp.int32(t))
+        yr, _, _ = model.decode_step_ref(CFG, weights, xd, kc, vc, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestBuildingBlocks:
+    def test_rms_norm_unit_scale(self):
+        x = jnp.full((1, 64), 3.0)
+        out = model.rms_norm(x, jnp.ones(64), 1e-6)
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-4)
+
+    def test_rope_preserves_norm(self):
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (5, 4, 64), jnp.float32)
+        cos, sin = model.rope_tables(jnp.arange(5), 64, 500000.0)
+        y = model.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (per 2D subspace)."""
+        d = 64
+        key = jax.random.PRNGKey(8)
+        q = jax.random.normal(key, (1, 1, d), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(9), (1, 1, d), jnp.float32)
+
+        def dot_at(m, n):
+            cm, sm = model.rope_tables(jnp.array([m]), d, 500000.0)
+            cn, sn = model.rope_tables(jnp.array([n]), d, 500000.0)
+            qm = model.apply_rope(q, cm, sm)[0, 0]
+            kn = model.apply_rope(k, cn, sn)[0, 0]
+            return float(jnp.dot(qm, kn))
+
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+
+    def test_repeat_kv(self):
+        x = jnp.arange(2 * 2 * 3, dtype=jnp.float32).reshape(2, 2, 3)
+        y = model._repeat_kv(x, 2)
+        assert y.shape == (2, 4, 3)
+        np.testing.assert_array_equal(np.asarray(y[:, 0]), np.asarray(y[:, 1]))
+
+
+class TestArtifacts:
+    """Consistency of the emitted artifacts (requires `make artifacts`)."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        p = pathlib.Path(__file__).resolve().parents[2] / "artifacts/manifest.json"
+        if not p.exists():
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        return json.loads(p.read_text()), p.parent
+
+    def test_modules_present(self, manifest):
+        m, root = manifest
+        for mod in ("decode_step", "prefill_block", "lora_matmul"):
+            assert mod in m["modules"]
+            assert (root / m["modules"][mod]["hlo"]).exists()
+
+    def test_tensor_files_match_manifest(self, manifest):
+        m, root = manifest
+        dtype_size = {"float32": 4, "int8": 1, "int32": 4}
+        for mod in m["modules"].values():
+            for entry in mod["params"] + mod["outputs"]:
+                f = root / entry["file"]
+                assert f.exists(), entry["file"]
+                n = int(np.prod(entry["shape"])) if entry["shape"] else 1
+                assert f.stat().st_size == n * dtype_size[entry["dtype"]]
+
+    def test_golden_decode_output_reproducible(self, manifest):
+        """Re-running the jitted decode on the stored inputs reproduces the
+        stored outputs bit-for-bit (the Rust runtime relies on this)."""
+        m, root = manifest
+        mod = m["modules"]["decode_step"]
+
+        def load(entry):
+            a = np.fromfile(root / entry["file"], dtype=entry["dtype"])
+            return jnp.asarray(a.reshape(entry["shape"]))
+
+        leaves = [load(e) for e in mod["params"]]
+        cfg = model.LayerConfig(**{
+            k: tuple(v) if isinstance(v, list) else v
+            for k, v in m["config"].items()})
+        treedef = jax.tree_util.tree_structure(
+            (model.init_layer_weights(cfg, jax.random.PRNGKey(0)),
+             jnp.zeros(cfg.hidden),
+             jnp.zeros((cfg.kv_capacity, cfg.n_kv_heads, cfg.head_dim)),
+             jnp.zeros((cfg.kv_capacity, cfg.n_kv_heads, cfg.head_dim)),
+             jnp.int32(0)))
+        w, x, kc, vc, pos = jax.tree_util.tree_unflatten(treedef, leaves)
+        y, kn, vn = model.jitted_decode_step(cfg)(w, x, kc, vc, pos)
+        outs = [np.asarray(t) for t in (y, kn, vn)]
+        for got, entry in zip(outs, mod["outputs"]):
+            want = np.fromfile(root / entry["file"], dtype=entry["dtype"])
+            np.testing.assert_allclose(
+                got.ravel(), want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,77 @@
+//! Shared mini-bench harness (the offline build has no criterion).
+//!
+//! Provides wall-clock measurement with warmup + median-of-N reporting,
+//! and the paper-expectation tables the table benches compare against.
+//! Every bench prints `name: median ± spread` lines plus its regenerated
+//! table, and exits non-zero if a shape check fails, so `cargo bench`
+//! doubles as a reproduction gate.
+
+use std::time::Instant;
+
+/// Measure `f` with `warmup` + `iters` runs; returns (median_s, max_s).
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    (times[times.len() / 2], *times.last().unwrap())
+}
+
+/// Report one benchmark line.
+pub fn report(name: &str, median_s: f64, max_s: f64) {
+    println!("bench {name:<40} median {:>10.3} ms   max {:>10.3} ms",
+             median_s * 1e3, max_s * 1e3);
+}
+
+/// A paper-vs-measured comparison row; `band` is the acceptable ratio
+/// envelope (measured/paper must fall inside [1/band, band]).
+pub struct Expect {
+    pub label: &'static str,
+    pub paper: f64,
+    pub measured: f64,
+    pub band: f64,
+}
+
+impl Expect {
+    pub fn check(&self) -> bool {
+        let ratio = self.measured / self.paper;
+        ratio >= 1.0 / self.band && ratio <= self.band
+    }
+}
+
+/// Print the comparison table; returns false if any row is out of band.
+pub fn check_expectations(rows: &[Expect]) -> bool {
+    let mut ok = true;
+    println!("\n{:<44} {:>12} {:>12} {:>8}  {}", "metric", "paper", "measured", "ratio", "in-band");
+    for r in rows {
+        let ratio = r.measured / r.paper;
+        let pass = r.check();
+        ok &= pass;
+        println!(
+            "{:<44} {:>12.3} {:>12.3} {:>7.2}x  {}",
+            r.label,
+            r.paper,
+            r.measured,
+            ratio,
+            if pass { "yes" } else { "OUT-OF-BAND" }
+        );
+    }
+    ok
+}
+
+/// Exit with failure if shape checks failed (makes cargo bench a gate).
+pub fn finish(ok: bool) {
+    if ok {
+        println!("\nbench OK");
+    } else {
+        eprintln!("\nbench FAILED: reproduction out of band");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Perf bench: the simulator's own hot paths (for the §Perf pass).
+//!
+//! Tracks the wall-clock cost of the building blocks a Table II sweep
+//! multiplies: layer-model construction (program generation + costing),
+//! per-token decode evaluation, full-request simulation, and the mapping
+//! shape search. The §Perf target in DESIGN.md: a full 12-point paper
+//! grid in minutes, i.e. a 13B 2048/2048 request well under a second.
+
+mod common;
+
+use common::{finish, measure, report};
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::dataflow::decode_program;
+use primal::mapping::map_model;
+use primal::sim::cost::program_cost;
+use primal::sim::{LayerCostModel, Simulator};
+
+fn main() {
+    let cfg = ExperimentConfig::paper_point(
+        ModelId::Llama2_13b,
+        &[LoraTarget::Q, LoraTarget::V],
+        2048,
+    );
+    let mapping = map_model(&cfg);
+    let lm0 = &mapping.layers[0];
+
+    // 1. program generation + costing (the layer-model building block)
+    let (med, max) = measure(3, 10, || {
+        let p = decode_program(&cfg, lm0, 2048);
+        let _ = program_cost(&p, &cfg.system, &cfg.calib);
+    });
+    report("decode program gen+cost (13B layer)", med, max);
+    let prog_cost_ms = med * 1e3;
+
+    // 2. layer-model construction (10 sampled kv points)
+    let (med, max) = measure(1, 5, || {
+        let _ = LayerCostModel::build(&cfg, lm0);
+    });
+    report("LayerCostModel::build (13B)", med, max);
+
+    // 3. per-token decode evaluation (the 82k-iteration inner loop)
+    let model = LayerCostModel::build(&cfg, lm0);
+    let (med, max) = measure(3, 10, || {
+        let mut acc = 0u64;
+        for kv in 2048..4096 {
+            acc = acc.wrapping_add(model.eval(kv).cycles);
+        }
+        std::hint::black_box(acc);
+    });
+    report("2048 decode-token evals", med, max);
+    let eval_per_token_us = med / 2048.0 * 1e6;
+
+    // 4. end-to-end 13B 2048/2048 request
+    let (e2e_med, e2e_max) = measure(1, 3, || {
+        let _ = Simulator::new(&cfg).run();
+    });
+    report("full 13B 2048/2048 simulation", e2e_med, e2e_max);
+
+    // 5. mapping shape search
+    let (med, max) = measure(1, 5, || {
+        let _ = map_model(&cfg);
+    });
+    report("13B mapping shape search", med, max);
+
+    println!(
+        "\nderived: {prog_cost_ms:.2} ms/program-cost, \
+         {eval_per_token_us:.3} us/decode-token eval"
+    );
+
+    // §Perf gates (see EXPERIMENTS.md §Perf).
+    let mut ok = true;
+    ok &= e2e_med < 1.0; // full 13B request < 1 s
+    ok &= eval_per_token_us < 5.0; // decode eval O(1), < 5 us
+    if !ok {
+        eprintln!("§Perf gate violated: e2e {e2e_med:.3} s, eval {eval_per_token_us:.2} us");
+    }
+    finish(ok);
+}

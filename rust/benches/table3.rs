@@ -1,0 +1,87 @@
+//! Bench T3: regenerate paper Table III (TTFT, ITL) over the 12-point
+//! grid and check each cell against the paper within a 2x band, plus the
+//! structural properties the table exhibits (TTFT superlinear in context,
+//! ITL growing with context and with model depth).
+
+mod common;
+
+use common::{check_expectations, finish, measure, report, Expect};
+use primal::metrics::{paper_grid, run_point, table3};
+
+/// Paper Table III values: (model, lora, ctx) -> (ttft_s, itl_ms).
+const PAPER: &[(&str, &str, usize, f64, f64)] = &[
+    ("Llama 3.2 1B", "Q", 1024, 0.370, 1.708),
+    ("Llama 3.2 1B", "Q", 2048, 1.192, 2.955),
+    ("Llama 3.2 1B", "Q, V", 1024, 0.373, 1.711),
+    ("Llama 3.2 1B", "Q, V", 2048, 1.199, 2.958),
+    ("Llama 3 8B", "Q", 1024, 0.710, 5.726),
+    ("Llama 3 8B", "Q", 2048, 2.012, 8.052),
+    ("Llama 3 8B", "Q, V", 1024, 0.782, 5.738),
+    ("Llama 3 8B", "Q, V", 2048, 2.037, 8.065),
+    ("Llama 2 13B", "Q", 1024, 0.962, 9.494),
+    ("Llama 2 13B", "Q", 2048, 2.494, 12.499),
+    ("Llama 2 13B", "Q, V", 1024, 0.982, 9.513),
+    ("Llama 2 13B", "Q, V", 2048, 2.533, 12.518),
+];
+
+fn main() {
+    let grid = paper_grid();
+    let reports: Vec<_> = grid.iter().map(run_point).collect();
+    println!("{}", table3(&reports));
+
+    let (med, max) = measure(1, 3, || {
+        run_point(grid.last().unwrap());
+    });
+    report("simulate 13B 2048/2048 grid point", med, max);
+
+    let mut rows = Vec::new();
+    for (model, lora, ctx, ttft, itl) in PAPER {
+        let r = reports
+            .iter()
+            .find(|r| r.model == *model && r.lora_label == *lora && r.input_tokens == *ctx)
+            .expect("grid point");
+        rows.push(Expect {
+            label: Box::leak(format!("{model} {lora} {ctx} TTFT").into_boxed_str()),
+            paper: *ttft,
+            measured: r.ttft_s,
+            band: 2.0,
+        });
+        rows.push(Expect {
+            label: Box::leak(format!("{model} {lora} {ctx} ITL").into_boxed_str()),
+            paper: *itl,
+            measured: r.itl_ms,
+            band: 2.0,
+        });
+    }
+    let mut ok = check_expectations(&rows);
+
+    // Shape checks.
+    for lora in ["Q", "Q, V"] {
+        for model in ["Llama 3.2 1B", "Llama 3 8B", "Llama 2 13B"] {
+            let get = |ctx: usize| {
+                reports
+                    .iter()
+                    .find(|r| {
+                        r.model == model && r.lora_label == lora && r.input_tokens == ctx
+                    })
+                    .unwrap()
+            };
+            let (short, long) = (get(1024), get(2048));
+            // TTFT grows superlinearly with context (attention quad term).
+            ok &= long.ttft_s > short.ttft_s * 2.0;
+            // ITL grows with context (KV sweep).
+            ok &= long.itl_ms > short.itl_ms;
+        }
+    }
+    // ITL ordering by depth: 16 < 32 < 40 layers.
+    let itl = |m: &str| {
+        reports
+            .iter()
+            .find(|r| r.model == m && r.lora_label == "Q, V" && r.input_tokens == 1024)
+            .unwrap()
+            .itl_ms
+    };
+    ok &= itl("Llama 3.2 1B") < itl("Llama 3 8B");
+    ok &= itl("Llama 3 8B") < itl("Llama 2 13B");
+    finish(ok);
+}

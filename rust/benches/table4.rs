@@ -1,0 +1,55 @@
+//! Bench T4: regenerate paper Table IV (per-macro power/area breakdown of
+//! one Router-PE pair) and verify the published percentages, plus the
+//! CACTI-style scratchpad model against its Table IV row.
+
+mod common;
+
+use common::{check_expectations, finish, Expect};
+use primal::config::ExperimentConfig;
+use primal::config::{LoraTarget, ModelId};
+use primal::energy::{macro_breakdown, CactiSram};
+use primal::metrics::table4;
+
+fn main() {
+    let cfg = ExperimentConfig::paper_point(
+        ModelId::Llama32_1b,
+        &[LoraTarget::Q, LoraTarget::V],
+        1024,
+    );
+    println!("{}", table4(&cfg));
+
+    let rows = macro_breakdown(&cfg.system);
+    let get = |name: &str| rows.iter().find(|r| r.name.starts_with(name)).unwrap();
+
+    let spad = CactiSram::paper_scratchpad();
+    let expectations = [
+        // Table IV absolute values (exact: the config is seeded from them)
+        Expect { label: "RRAM-ACIM power (uW)", paper: 120.0, measured: get("RRAM").power_uw, band: 1.01 },
+        Expect { label: "SRAM-DCIM power (uW)", paper: 950.0, measured: get("SRAM").power_uw, band: 1.01 },
+        Expect { label: "Scratchpad power (uW)", paper: 42.0, measured: get("Scratchpad").power_uw, band: 1.01 },
+        Expect { label: "Router power (uW)", paper: 103.0, measured: get("Router").power_uw, band: 1.01 },
+        Expect { label: "Total pair power (uW)", paper: 1215.0, measured: get("Total").power_uw, band: 1.01 },
+        Expect { label: "Total pair area (mm2)", paper: 0.2212, measured: get("Total").area_mm2, band: 1.01 },
+        // Published breakdown percentages.
+        Expect { label: "SRAM-DCIM power share (%)", paper: 78.1, measured: get("SRAM").power_pct, band: 1.02 },
+        Expect { label: "RRAM-ACIM area share (%)", paper: 65.2, measured: get("RRAM").area_pct, band: 1.02 },
+        // CACTI-style scratchpad model vs its Table IV row (modelled, so
+        // a wider band): area and streaming-duty power.
+        Expect { label: "CACTI scratchpad area (mm2)", paper: 0.013, measured: spad.area_mm2(), band: 1.5 },
+        Expect {
+            label: "CACTI scratchpad power @0.4G acc/s (uW)",
+            paper: 42.0,
+            measured: spad.average_power_uw(0.4e9),
+            band: 1.5,
+        },
+        // Chiplet area footnote: 227.5 mm^2 per CT.
+        Expect {
+            label: "CT chiplet area (mm2)",
+            paper: 227.5,
+            measured: cfg.system.ct_area_mm2(),
+            band: 1.05,
+        },
+    ];
+    let ok = check_expectations(&expectations);
+    finish(ok);
+}

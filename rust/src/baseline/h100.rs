@@ -1,0 +1,185 @@
+//! Analytical H100 serving model (batch-1 autoregressive decoding).
+//!
+//! Batch-1 LLM decode on a GPU is memory-bandwidth bound: every output
+//! token must stream the full weight set from HBM. Prefill is
+//! compute-bound on the tensor cores. The model:
+//!
+//!   ITL  ~= weight_bytes / (HBM_bw * eff_bw) + kernel/launch overheads
+//!   TTFT ~= 2 * P * T_in / (peak_flops * eff_flops)
+//!   power: utilization-weighted between idle and TDP
+//!
+//! Efficiency constants are calibrated so the Llama-13B 2048/2048 point
+//! lands near the paper's quoted H100 numbers (~97 tok/s implied by the
+//! 1.5x claim, 0.4 tok/J); the same constants are then used for every
+//! other model/context, so ratios elsewhere are genuine predictions.
+
+use crate::config::{LoraConfig, ModelConfig};
+
+/// Public H100 SXM specs + fitted serving-efficiency factors.
+#[derive(Debug, Clone)]
+pub struct H100Model {
+    /// HBM3 bandwidth, bytes/s (3.35 TB/s).
+    pub hbm_bw: f64,
+    /// Peak dense BF16 tensor FLOPs (989e12).
+    pub peak_flops: f64,
+    /// TDP and idle power, watts.
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    /// Weight precision the serving stack uses (fp16 = 2 bytes).
+    pub weight_bytes: f64,
+    /// Achieved fraction of peak HBM bandwidth in the decode GEMV path.
+    /// Batch-1 decode with *unmerged LoRA adapters* interleaves hundreds
+    /// of small GEMV kernels per token (base + A + B per adapted
+    /// projection per layer), which drops achieved bandwidth well below
+    /// the dense-GEMV ~60%: fitted 0.42 against the paper's implied
+    /// ~97 tok/s / 0.4 tok/J H100 point.
+    pub eff_bw: f64,
+    /// Achieved fraction of peak FLOPs in prefill (fitted ~45%).
+    pub eff_flops: f64,
+    /// Per-token fixed overhead (kernel launches, sampling, host), s.
+    pub token_overhead_s: f64,
+    /// Average draw as a fraction of TDP while actively decoding
+    /// (batch-1 decode leaves the GPU mostly idle between DRAM bursts).
+    pub decode_power_frac: f64,
+    /// Average draw fraction during prefill (compute-saturated).
+    pub prefill_power_frac: f64,
+}
+
+impl Default for H100Model {
+    fn default() -> Self {
+        Self {
+            hbm_bw: 3.35e12,
+            peak_flops: 989e12,
+            tdp_w: 700.0,
+            idle_w: 90.0,
+            weight_bytes: 2.0,
+            eff_bw: 0.42,
+            eff_flops: 0.45,
+            token_overhead_s: 1.0e-3,
+            decode_power_frac: 0.35,
+            prefill_power_frac: 0.85,
+        }
+    }
+}
+
+/// H100 result for one (model, context) point.
+#[derive(Debug, Clone)]
+pub struct H100Report {
+    pub ttft_s: f64,
+    pub itl_ms: f64,
+    pub throughput_tps: f64,
+    pub avg_power_w: f64,
+    pub efficiency_tpj: f64,
+}
+
+impl H100Model {
+    /// Serve one batch-1 request of `t_in`/`t_out` tokens.
+    pub fn serve(
+        &self,
+        model: &ModelConfig,
+        lora: &LoraConfig,
+        t_in: usize,
+        t_out: usize,
+    ) -> H100Report {
+        let p_base = model.total_weights() as f64;
+        let p_lora = (lora.layer_params(model.hidden, model.q_dim(), model.kv_dim())
+            * model.layers) as f64;
+        let weights_b = (p_base + p_lora) * self.weight_bytes;
+
+        // ---- decode: bandwidth-bound GEMV sweep + KV read ---------------
+        let avg_kv = t_in as f64 + t_out as f64 / 2.0;
+        let kv_bytes_tok = model.kv_bytes_per_token() as f64 / 2.0 * avg_kv;
+        // (fp16 cache: kv_bytes_per_token() assumes f32 -> /2)
+        let itl_s = (weights_b + kv_bytes_tok) / (self.hbm_bw * self.eff_bw)
+            + self.token_overhead_s;
+
+        // ---- prefill: compute-bound ---------------------------------------
+        let flops = 2.0 * (p_base + p_lora) * t_in as f64
+            // attention: 2 * 2 * h * T^2/2 * d per layer ~ small vs GEMMs
+            + 2.0 * (t_in as f64).powi(2) * (model.q_dim() as f64) * model.layers as f64;
+        let ttft_s = flops / (self.peak_flops * self.eff_flops) + 5e-3;
+
+        // ---- aggregate -----------------------------------------------------
+        let decode_s = itl_s * t_out as f64;
+        let total_s = ttft_s + decode_s;
+        let tokens = (t_in + t_out) as f64;
+        let throughput = tokens / total_s;
+        let energy = ttft_s * (self.prefill_power_frac * self.tdp_w)
+            + decode_s * (self.decode_power_frac * self.tdp_w);
+        let avg_power = energy / total_s;
+        H100Report {
+            ttft_s,
+            itl_ms: itl_s * 1e3,
+            throughput_tps: throughput,
+            avg_power_w: avg_power,
+            efficiency_tpj: throughput / avg_power,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LoraTarget, ModelId};
+
+    fn serve(id: ModelId, ctx: usize) -> H100Report {
+        let m = ModelConfig::of(id);
+        let lora = LoraConfig {
+            rank: 8,
+            targets: vec![LoraTarget::Q, LoraTarget::V],
+            alpha: 16.0,
+        };
+        H100Model::default().serve(&m, &lora, ctx, ctx)
+    }
+
+    #[test]
+    fn llama13b_matches_paper_quotes() {
+        // Paper: H100 ~0.4 tok/J on 13B 2048/2048; PRIMAL 1.5x faster
+        // implies H100 ~97 tok/s.
+        let r = serve(ModelId::Llama2_13b, 2048);
+        assert!(
+            (70.0..130.0).contains(&r.throughput_tps),
+            "13B tput {} (expect ~97)",
+            r.throughput_tps
+        );
+        assert!(
+            (0.3..0.55).contains(&r.efficiency_tpj),
+            "13B eff {} (expect ~0.4)",
+            r.efficiency_tpj
+        );
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound() {
+        // ITL should be close to weights / effective bandwidth.
+        let h = H100Model::default();
+        let r = serve(ModelId::Llama2_13b, 2048);
+        let floor_ms = (12.85e9 * h.weight_bytes) / (h.hbm_bw * h.eff_bw) * 1e3;
+        assert!(r.itl_ms > floor_ms, "{} vs floor {}", r.itl_ms, floor_ms);
+        assert!(r.itl_ms < floor_ms * 2.0);
+    }
+
+    #[test]
+    fn smaller_models_faster() {
+        let a = serve(ModelId::Llama32_1b, 1024);
+        let b = serve(ModelId::Llama3_8b, 1024);
+        let c = serve(ModelId::Llama2_13b, 1024);
+        assert!(a.throughput_tps > b.throughput_tps);
+        assert!(b.throughput_tps > c.throughput_tps);
+    }
+
+    #[test]
+    fn power_between_idle_and_tdp() {
+        for id in ModelId::all_paper() {
+            let r = serve(id, 2048);
+            assert!(r.avg_power_w > 90.0 && r.avg_power_w < 700.0);
+        }
+    }
+
+    #[test]
+    fn longer_context_longer_ttft() {
+        let a = serve(ModelId::Llama3_8b, 1024);
+        let b = serve(ModelId::Llama3_8b, 2048);
+        assert!(b.ttft_s > a.ttft_s * 1.8, "{} vs {}", b.ttft_s, a.ttft_s);
+    }
+}

@@ -1,0 +1,12 @@
+//! Baseline comparators — the NVIDIA H100 serving model (experiment C1).
+//!
+//! The paper compares PRIMAL against an H100 running Llama-13B
+//! (2048/2048, batch 1, LoRA r8 Q,V) and quotes 1.5x throughput and 25x
+//! energy efficiency (9.85 tok/J vs 0.4 tok/J). We cannot measure an
+//! H100 here, so we reproduce the comparison with an analytical roofline
+//! serving model calibrated to public H100 specs; EXPERIMENTS.md records
+//! paper-vs-model for the two headline ratios.
+
+mod h100;
+
+pub use h100::{H100Model, H100Report};

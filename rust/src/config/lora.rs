@@ -1,0 +1,98 @@
+//! LoRA adapter configuration (paper: rank 8, targets Q or Q,V).
+
+
+/// Which projection matrices carry a LoRA adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoraTarget {
+    Q,
+    K,
+    V,
+    O,
+}
+
+impl LoraTarget {
+    pub fn label(targets: &[LoraTarget]) -> String {
+        targets
+            .iter()
+            .map(|t| match t {
+                LoraTarget::Q => "Q",
+                LoraTarget::K => "K",
+                LoraTarget::V => "V",
+                LoraTarget::O => "O",
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// LoRA adapter hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct LoraConfig {
+    /// Low-rank dimension r (paper benchmarks r = 8).
+    pub rank: usize,
+    /// Adapted projections (paper: {Q} and {Q, V}).
+    pub targets: Vec<LoraTarget>,
+    /// LoRA scaling alpha (merged into B at programming time; it does not
+    /// change compute cost, only numerics).
+    pub alpha: f64,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        Self { rank: 8, targets: vec![LoraTarget::Q, LoraTarget::V], alpha: 16.0 }
+    }
+}
+
+impl LoraConfig {
+    /// LoRA parameter count for one layer of the given shapes:
+    /// each adapted projection [M, K] contributes r*(M + K).
+    pub fn layer_params(&self, hidden: usize, q_dim: usize, kv_dim: usize) -> usize {
+        self.targets
+            .iter()
+            .map(|t| {
+                let (m, k) = match t {
+                    LoraTarget::Q => (q_dim, hidden),
+                    LoraTarget::K | LoraTarget::V => (kv_dim, hidden),
+                    LoraTarget::O => (hidden, q_dim),
+                };
+                self.rank * (m + k)
+            })
+            .sum()
+    }
+
+    /// Extra MACs one decode token incurs per layer from the LoRA path:
+    /// r*K (A x) + r*M (B (Ax)) per adapted projection.
+    pub fn layer_macs(&self, hidden: usize, q_dim: usize, kv_dim: usize) -> usize {
+        // same arithmetic as parameter count for a single token
+        self.layer_params(hidden, q_dim, kv_dim)
+    }
+
+    pub fn has(&self, t: LoraTarget) -> bool {
+        self.targets.contains(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank8_qv_params() {
+        // Llama-13B shapes: hidden=q_dim=kv_dim=5120.
+        let c = LoraConfig { rank: 8, targets: vec![LoraTarget::Q, LoraTarget::V], alpha: 16.0 };
+        assert_eq!(c.layer_params(5120, 5120, 5120), 2 * 8 * (5120 + 5120));
+    }
+
+    #[test]
+    fn label() {
+        assert_eq!(LoraTarget::label(&[LoraTarget::Q, LoraTarget::V]), "Q, V");
+        assert_eq!(LoraTarget::label(&[LoraTarget::Q]), "Q");
+    }
+
+    #[test]
+    fn q_only_less_than_qv() {
+        let q = LoraConfig { rank: 8, targets: vec![LoraTarget::Q], alpha: 16.0 };
+        let qv = LoraConfig::default();
+        assert!(q.layer_params(4096, 4096, 1024) < qv.layer_params(4096, 4096, 1024));
+    }
+}

@@ -1,0 +1,110 @@
+//! Configuration: system parameters (paper Table I), the Llama model zoo,
+//! LoRA adapter configuration, and the calibrated timing/power constants.
+//!
+//! Everything is plain serde-serializable data so experiment configs can be
+//! written as JSON and loaded via the `primal` CLI (`--config file.json`).
+
+mod calib;
+mod lora;
+mod models;
+mod system;
+
+pub use calib::CalibConstants;
+pub use lora::{LoraConfig, LoraTarget};
+pub use models::{ModelConfig, ModelId};
+pub use system::{MacroParams, SystemConfig};
+
+
+/// A complete experiment configuration: what to run on what hardware.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub system: SystemConfig,
+    pub model: ModelConfig,
+    pub lora: LoraConfig,
+    /// Prompt length (prefill tokens).
+    pub input_tokens: usize,
+    /// Generation length (decode tokens).
+    pub output_tokens: usize,
+    /// Batch size (the paper evaluates batch 1).
+    pub batch: usize,
+    /// Enable the SRPG scheme (reprogramming pipeline + power gating).
+    pub srpg: bool,
+    /// Extension beyond the paper: also map the LM head (hidden -> vocab
+    /// projection) onto dedicated CTs and charge its per-token decode
+    /// cost (crossbar SMAC + in-network top-k reduction). The paper's
+    /// evaluation excludes it; leave false to reproduce the tables.
+    pub include_lm_head: bool,
+    pub calib: CalibConstants,
+}
+
+impl ExperimentConfig {
+    /// The paper's standard benchmarking point for a given model/context.
+    pub fn paper_point(
+        model: ModelId,
+        targets: &[LoraTarget],
+        context: usize,
+    ) -> Self {
+        Self {
+            system: SystemConfig::default(),
+            model: ModelConfig::of(model),
+            lora: LoraConfig {
+                rank: 8,
+                targets: targets.to_vec(),
+                alpha: 16.0,
+            },
+            input_tokens: context,
+            output_tokens: context,
+            batch: 1,
+            srpg: true,
+            include_lm_head: false,
+            calib: CalibConstants::default(),
+        }
+    }
+
+    /// Validate cross-field invariants; returns a list of human-readable
+    /// problems (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.batch == 0 {
+            problems.push("batch must be >= 1".into());
+        }
+        if self.input_tokens == 0 {
+            problems.push("input_tokens must be >= 1".into());
+        }
+        if self.model.hidden % self.system.rram_cols != 0 {
+            problems.push(format!(
+                "hidden {} not a multiple of the crossbar tile {}; the mapper \
+                 pads, but paper models are tile-aligned",
+                self.model.hidden, self.system.rram_cols
+            ));
+        }
+        if self.lora.rank > self.system.sram_cols {
+            problems.push(format!(
+                "LoRA rank {} exceeds the SRAM-DCIM column count {} (one \
+                 macro bank per adapter matrix)",
+                self.lora.rank, self.system.sram_cols
+            ));
+        }
+        // KV capacity: the cyclic ring stripes fp16 K+V over every router
+        // of a layer's CT group (see mapping::layer). Estimate the group
+        // size from the weight footprint and check the per-router share
+        // fits the 32 KB scratchpad.
+        let cts_per_layer = self
+            .model
+            .layer_weights()
+            .div_ceil(self.system.rram_weights_per_ct())
+            .max(1);
+        let ring_routers = cts_per_layer * self.system.pes_per_ct();
+        let tokens = self.input_tokens + self.output_tokens;
+        let kv_token_bytes = 2 * self.model.kv_dim() * 2; // K+V, fp16
+        let per_router = tokens.div_ceil(ring_routers) * kv_token_bytes;
+        if per_router > self.system.scratchpad_bytes {
+            problems.push(format!(
+                "KV cache needs {per_router} B/router but the scratchpad \
+                 is {} B (context too long for this model's CT group)",
+                self.system.scratchpad_bytes
+            ));
+        }
+        problems
+    }
+}

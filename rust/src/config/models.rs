@@ -1,0 +1,196 @@
+//! Llama model zoo — the three models the paper benchmarks (Table II/III)
+//! plus a reduced "golden" model matching the AOT functional artifacts.
+
+
+/// The models evaluated in the paper, plus the reduced functional model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    /// Llama 3.2 1B (16 layers, hidden 2048, GQA 8).
+    Llama32_1b,
+    /// Llama 3 8B (32 layers, hidden 4096, GQA 8).
+    Llama3_8b,
+    /// Llama 2 13B (40 layers, hidden 5120, MHA).
+    Llama2_13b,
+    /// Reduced layer matching artifacts/manifest.json (functional golden).
+    Golden,
+}
+
+impl ModelId {
+    pub fn all_paper() -> [ModelId; 3] {
+        [ModelId::Llama32_1b, ModelId::Llama3_8b, ModelId::Llama2_13b]
+    }
+
+    pub fn parse(s: &str) -> Option<ModelId> {
+        match s.to_ascii_lowercase().as_str() {
+            "llama3.2-1b" | "llama32-1b" | "1b" => Some(ModelId::Llama32_1b),
+            "llama3-8b" | "8b" => Some(ModelId::Llama3_8b),
+            "llama2-13b" | "13b" => Some(ModelId::Llama2_13b),
+            "golden" => Some(ModelId::Golden),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ModelId::Llama32_1b => "Llama 3.2 1B",
+            ModelId::Llama3_8b => "Llama 3 8B",
+            ModelId::Llama2_13b => "Llama 2 13B",
+            ModelId::Golden => "Golden (reduced)",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Transformer architecture shapes (decoder-only, Llama family).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub id: ModelId,
+    pub layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    pub fn of(id: ModelId) -> Self {
+        match id {
+            ModelId::Llama32_1b => Self {
+                id,
+                layers: 16,
+                hidden: 2048,
+                n_heads: 32,
+                n_kv_heads: 8,
+                head_dim: 64,
+                intermediate: 8192,
+                vocab: 128256,
+            },
+            ModelId::Llama3_8b => Self {
+                id,
+                layers: 32,
+                hidden: 4096,
+                n_heads: 32,
+                n_kv_heads: 8,
+                head_dim: 128,
+                intermediate: 14336,
+                vocab: 128256,
+            },
+            ModelId::Llama2_13b => Self {
+                id,
+                layers: 40,
+                hidden: 5120,
+                n_heads: 40,
+                n_kv_heads: 40,
+                head_dim: 128,
+                intermediate: 13824,
+                vocab: 32000,
+            },
+            ModelId::Golden => Self {
+                id,
+                layers: 2,
+                hidden: 512,
+                n_heads: 8,
+                n_kv_heads: 8,
+                head_dim: 64,
+                intermediate: 1024,
+                vocab: 1024,
+            },
+        }
+    }
+
+    /// Q projection output dim.
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// K/V projection output dim (GQA-aware).
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Weight parameter count of one decoder layer (attention + MLP).
+    pub fn layer_weights(&self) -> usize {
+        let attn = self.q_dim() * self.hidden       // W_Q
+            + 2 * self.kv_dim() * self.hidden       // W_K, W_V
+            + self.hidden * self.q_dim();           // W_O
+        let mlp = 3 * self.intermediate * self.hidden; // gate, up, down
+        attn + mlp
+    }
+
+    /// Total decoder weights (excluding embeddings, which PRIMAL keeps in
+    /// the host-side embedding store, not on the crossbars).
+    pub fn total_weights(&self) -> usize {
+        self.layer_weights() * self.layers
+    }
+
+    /// KV cache bytes per token across all layers (f32 K + V).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.kv_dim() * 4 * self.layers
+    }
+
+    /// MAC count of one decode step through one layer, excluding attention
+    /// (projections + MLP = the SMAC work on the crossbars).
+    pub fn layer_smac_macs(&self) -> usize {
+        self.layer_weights()
+    }
+
+    /// MAC count of attention (DMAC QK^T + AV) for one decode token with
+    /// `kv_len` cached tokens.
+    pub fn layer_dmac_macs(&self, kv_len: usize) -> usize {
+        2 * self.n_heads * self.head_dim * kv_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_parameter_counts() {
+        // Per-layer weights must land near the published model sizes.
+        let m1 = ModelConfig::of(ModelId::Llama32_1b);
+        assert_eq!(m1.layer_weights(), 60_817_408 / 1 /* 60.8M */);
+        let total_1b = m1.total_weights();
+        assert!((0.9e9..1.1e9).contains(&(total_1b as f64)),
+            "1B decoder weights ~0.97B, got {total_1b}");
+
+        let m8 = ModelConfig::of(ModelId::Llama3_8b);
+        assert!((6.5e9..7.2e9).contains(&(m8.total_weights() as f64)));
+
+        let m13 = ModelConfig::of(ModelId::Llama2_13b);
+        assert!((12.0e9..13.0e9).contains(&(m13.total_weights() as f64)));
+    }
+
+    #[test]
+    fn gqa_dims() {
+        let m = ModelConfig::of(ModelId::Llama3_8b);
+        assert_eq!(m.q_dim(), 4096);
+        assert_eq!(m.kv_dim(), 1024);
+        let m13 = ModelConfig::of(ModelId::Llama2_13b);
+        assert_eq!(m13.q_dim(), m13.kv_dim()); // MHA
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for id in ModelId::all_paper() {
+            let s = match id {
+                ModelId::Llama32_1b => "llama3.2-1b",
+                ModelId::Llama3_8b => "llama3-8b",
+                ModelId::Llama2_13b => "llama2-13b",
+                ModelId::Golden => unreachable!(),
+            };
+            assert_eq!(ModelId::parse(s), Some(id));
+        }
+        assert_eq!(ModelId::parse("nope"), None);
+    }
+
+    #[test]
+    fn dmac_scales_with_kv() {
+        let m = ModelConfig::of(ModelId::Llama32_1b);
+        assert_eq!(m.layer_dmac_macs(100) * 2, m.layer_dmac_macs(200));
+    }
+}

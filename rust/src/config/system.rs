@@ -1,0 +1,145 @@
+//! System-level hardware parameters — paper Table I plus the per-macro
+//! power/area numbers of Table IV (the interface between the authors' RTL
+//! flow and the system evaluation; see DESIGN.md substitutions).
+
+
+/// Power/area of one hardware macro instance (paper Table IV, 7 nm).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroParams {
+    /// Average active power in microwatts.
+    pub active_power_uw: f64,
+    /// Area in mm^2.
+    pub area_mm2: f64,
+}
+
+/// Full system configuration (paper Table I defaults).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Clock frequency in Hz (Table I: 1 GHz).
+    pub freq_hz: f64,
+    /// Inter-router link width in bits (Table I: 64).
+    pub link_bits: usize,
+    /// IPCN mesh dimension (Table I: 32x32).
+    pub mesh_dim: usize,
+    /// RRAM-ACIM crossbar rows (output dim) per PE (Table I: 256).
+    pub rram_rows: usize,
+    /// RRAM-ACIM crossbar cols (input dim) per PE (Table I: 256).
+    pub rram_cols: usize,
+    /// SRAM-DCIM rows per PE (Table I: 256).
+    pub sram_rows: usize,
+    /// SRAM-DCIM cols per PE (Table I: 64).
+    pub sram_cols: usize,
+    /// Scratchpad bytes per router (Table I: 32 KB).
+    pub scratchpad_bytes: usize,
+    /// FIFO bytes per router port (Table I: 128 B).
+    pub fifo_bytes: usize,
+    /// DMAC units per router (Table I: 16).
+    pub dmac_per_router: usize,
+    /// AXI-stream I/O pairs per router (Table I: 6).
+    pub io_pairs: usize,
+    /// Weight precision in the crossbar (bits/cell-group; int8 behaviour).
+    pub weight_bits: usize,
+
+    // ---- Table IV macro models (per Router-PE pair) -------------------
+    pub rram_macro: MacroParams,
+    pub sram_macro: MacroParams,
+    pub scratchpad_macro: MacroParams,
+    pub router_macro: MacroParams,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            freq_hz: 1.0e9,
+            link_bits: 64,
+            mesh_dim: 32,
+            rram_rows: 256,
+            rram_cols: 256,
+            sram_rows: 256,
+            sram_cols: 64,
+            scratchpad_bytes: 32 * 1024,
+            fifo_bytes: 128,
+            dmac_per_router: 16,
+            io_pairs: 6,
+            weight_bits: 8,
+            rram_macro: MacroParams { active_power_uw: 120.0, area_mm2: 0.1442 },
+            sram_macro: MacroParams { active_power_uw: 950.0, area_mm2: 0.035 },
+            scratchpad_macro: MacroParams { active_power_uw: 42.0, area_mm2: 0.013 },
+            router_macro: MacroParams { active_power_uw: 103.0, area_mm2: 0.029 },
+        }
+    }
+}
+
+impl SystemConfig {
+    /// PEs per compute tile (= routers in the mesh; Table I: 1024).
+    pub fn pes_per_ct(&self) -> usize {
+        self.mesh_dim * self.mesh_dim
+    }
+
+    /// int8 weight capacity of one CT's RRAM (cells = bytes at 8 bits).
+    pub fn rram_weights_per_ct(&self) -> usize {
+        self.pes_per_ct() * self.rram_rows * self.rram_cols
+    }
+
+    /// LoRA weight capacity (f32 words) of one CT's SRAM-DCIM macros.
+    pub fn sram_words_per_ct(&self) -> usize {
+        self.pes_per_ct() * self.sram_rows * self.sram_cols
+    }
+
+    /// Link bandwidth in bytes per cycle.
+    pub fn link_bytes_per_cycle(&self) -> usize {
+        self.link_bits / 8
+    }
+
+    /// Cycle period in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    /// Total per-pair active power in W (Table IV "Total": 1215 uW).
+    pub fn pair_active_power_w(&self) -> f64 {
+        (self.rram_macro.active_power_uw
+            + self.sram_macro.active_power_uw
+            + self.scratchpad_macro.active_power_uw
+            + self.router_macro.active_power_uw)
+            * 1e-6
+    }
+
+    /// Total per-pair area in mm^2 (Table IV "Total": 0.2212 mm^2).
+    pub fn pair_area_mm2(&self) -> f64 {
+        self.rram_macro.area_mm2
+            + self.sram_macro.area_mm2
+            + self.scratchpad_macro.area_mm2
+            + self.router_macro.area_mm2
+    }
+
+    /// CT chiplet area (paper Table IV footnote: 227.5 mm^2 including the
+    /// NMC + periphery; pairs alone: 1024 x 0.2212 = 226.5 mm^2).
+    pub fn ct_area_mm2(&self) -> f64 {
+        self.pair_area_mm2() * self.pes_per_ct() as f64 + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let s = SystemConfig::default();
+        assert_eq!(s.pes_per_ct(), 1024);
+        assert_eq!(s.link_bytes_per_cycle(), 8);
+        assert_eq!(s.rram_weights_per_ct(), 1024 * 65536);
+        assert_eq!(s.scratchpad_bytes, 32768);
+        assert_eq!(s.dmac_per_router, 16);
+    }
+
+    #[test]
+    fn table4_totals() {
+        let s = SystemConfig::default();
+        assert!((s.pair_active_power_w() - 1215e-6).abs() < 1e-9);
+        assert!((s.pair_area_mm2() - 0.2212).abs() < 1e-6);
+        // chiplet area ~ 227.5 mm^2
+        assert!((s.ct_area_mm2() - 227.5).abs() < 1.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! LoRA adapter manager: which downstream task's adapters are resident.
+//!
+//! PRIMAL keeps the frozen base model in RRAM permanently; the SRAM-DCIM
+//! macros hold exactly one task's LoRA matrices at a time (per CT group).
+//! Serving a request for a different task triggers an SRPG-pipelined
+//! reprogramming pass. The manager tracks residency, counts swaps, and
+//! reports whether a request needs a swap — the server charges the
+//! corresponding reprogramming latency through the simulator.
+
+use std::collections::BTreeMap;
+
+/// Identifier of a downstream task / adapter set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AdapterId(pub u32);
+
+/// Outcome of an admission-time residency check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapOutcome {
+    /// The task's adapters are already resident: zero-cost admission.
+    Hit,
+    /// Adapters must be reprogrammed (returns the evicted task, if any).
+    Swap { evicted: Option<AdapterId> },
+}
+
+/// Registry + residency state.
+#[derive(Debug, Default)]
+pub struct AdapterManager {
+    /// Registered adapters and their byte sizes (per layer group).
+    registered: BTreeMap<AdapterId, usize>,
+    /// Task currently resident in the SRAM-DCIM macros.
+    resident: Option<AdapterId>,
+    /// Swap statistics.
+    pub swaps: u64,
+    pub hits: u64,
+}
+
+impl AdapterManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an adapter set (e.g. one per downstream task).
+    pub fn register(&mut self, id: AdapterId, bytes_per_layer: usize) {
+        self.registered.insert(id, bytes_per_layer);
+    }
+
+    pub fn is_registered(&self, id: AdapterId) -> bool {
+        self.registered.contains_key(&id)
+    }
+
+    pub fn resident(&self) -> Option<AdapterId> {
+        self.resident
+    }
+
+    /// Admit a request for `id`: returns whether a swap is needed and
+    /// updates residency. Panics if the adapter was never registered
+    /// (server validates admission first).
+    pub fn admit(&mut self, id: AdapterId) -> SwapOutcome {
+        assert!(self.is_registered(id), "adapter {id:?} not registered");
+        if self.resident == Some(id) {
+            self.hits += 1;
+            SwapOutcome::Hit
+        } else {
+            let evicted = self.resident.replace(id);
+            self.swaps += 1;
+            SwapOutcome::Swap { evicted }
+        }
+    }
+
+    /// Bytes to reprogram for a swap to `id` (per layer group).
+    pub fn swap_bytes(&self, id: AdapterId) -> usize {
+        self.registered.get(&id).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_admission_swaps_then_hits() {
+        let mut m = AdapterManager::new();
+        m.register(AdapterId(1), 1024);
+        assert_eq!(m.admit(AdapterId(1)), SwapOutcome::Swap { evicted: None });
+        assert_eq!(m.admit(AdapterId(1)), SwapOutcome::Hit);
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.hits, 1);
+    }
+
+    #[test]
+    fn switching_tasks_evicts() {
+        let mut m = AdapterManager::new();
+        m.register(AdapterId(1), 1024);
+        m.register(AdapterId(2), 2048);
+        m.admit(AdapterId(1));
+        assert_eq!(
+            m.admit(AdapterId(2)),
+            SwapOutcome::Swap { evicted: Some(AdapterId(1)) }
+        );
+        assert_eq!(m.resident(), Some(AdapterId(2)));
+        assert_eq!(m.swap_bytes(AdapterId(2)), 2048);
+    }
+
+    #[test]
+    #[should_panic(expected = "not registered")]
+    fn unregistered_admission_panics() {
+        let mut m = AdapterManager::new();
+        m.admit(AdapterId(9));
+    }
+}

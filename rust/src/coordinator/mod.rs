@@ -1,0 +1,20 @@
+//! The serving coordinator: PRIMAL as an inference server.
+//!
+//! Wraps the cycle simulator in the front-end a downstream user drives:
+//! a request queue with FCFS admission, a LoRA adapter manager that
+//! tracks which task's adapters are resident in the SRAM-DCIM macros
+//! (swaps trigger SRPG reprogramming), a batch-1 decode loop matching the
+//! paper's serving model, and per-request token streams. Timing comes
+//! from the simulator; optionally the PJRT golden runtime executes the
+//! functional model on the same schedule (`FunctionalMode::Golden`).
+//!
+//! Everything is std-thread based (the offline build has no tokio); the
+//! engine runs on a worker thread and communicates over mpsc channels.
+
+mod adapter;
+mod server;
+
+pub use adapter::{AdapterId, AdapterManager, SwapOutcome};
+pub use server::{
+    FunctionalMode, Request, RequestResult, Server, ServerConfig, ServerStats, TokenEvent,
+};

@@ -1,0 +1,384 @@
+//! The serving loop: request queue -> adapter swap -> prefill -> decode.
+//!
+//! Timing is *simulated* (the paper's cycle model); wall-clock is only
+//! used for coordinator-overhead accounting. A request's lifecycle:
+//!
+//!   submit -> queue (FCFS) -> adapter residency check (swap => SRPG
+//!   reprogramming latency) -> prefill (TTFT) -> per-token decode loop
+//!   (token stream) -> completion record
+//!
+//! With `FunctionalMode::Golden` the PJRT runtime executes the reduced
+//! functional model's decode step alongside the timing loop, proving the
+//! request path runs real numerics without Python.
+
+use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
+use crate::config::ExperimentConfig;
+use crate::runtime::GoldenRuntime;
+use crate::sim::{LayerCostModel, Simulator};
+use crate::sim::cost::program_cost;
+use crate::dataflow::{prefill_program, reprogram_program};
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: AdapterId,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Streamed token event (sent per generated token).
+#[derive(Debug, Clone, Copy)]
+pub struct TokenEvent {
+    pub request: u64,
+    pub index: usize,
+    /// Simulated emission time, seconds since the request started.
+    pub at_s: f64,
+}
+
+/// Completion record.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub request: u64,
+    pub adapter: AdapterId,
+    pub swap: bool,
+    /// Simulated queueing delay before this request started (s).
+    pub queue_s: f64,
+    pub ttft_s: f64,
+    pub itl_ms: f64,
+    pub total_s: f64,
+    pub tokens_out: usize,
+    /// Golden-model decode step executed on the request path (ms), if
+    /// functional mode was enabled.
+    pub golden_exec_ms: Option<f64>,
+}
+
+/// Functional-execution mode of the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalMode {
+    /// Timing only (full-size models).
+    TimingOnly,
+    /// Also run the reduced golden model per request via PJRT.
+    Golden,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub experiment: ExperimentConfig,
+    pub functional: FunctionalMode,
+    /// Artifacts dir for golden mode.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub adapter_swaps: u64,
+    pub adapter_hits: u64,
+    pub total_tokens: u64,
+    pub sim_time_s: f64,
+    /// Mean TTFT/ITL over served requests.
+    pub mean_ttft_s: f64,
+    pub mean_itl_ms: f64,
+}
+
+/// The PRIMAL inference server (batch 1, FCFS — the paper's model).
+pub struct Server {
+    cfg: ExperimentConfig,
+    adapters: AdapterManager,
+    queue: VecDeque<Request>,
+    /// Simulated clock (seconds).
+    now_s: f64,
+    /// Cached per-layer decode model + prefill/reprog costs (the mapping
+    /// is fixed per server).
+    layer_model: LayerCostModel,
+    reprog_ttft_s: f64,
+    prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
+    n_layers: usize,
+    golden: Option<GoldenRuntime>,
+    golden_exe: Option<xla::PjRtLoadedExecutable>,
+    stats: ServerStats,
+}
+
+impl Server {
+    pub fn new(cfg: ServerConfig) -> Result<Self> {
+        let exp = cfg.experiment;
+        let sim = Simulator::new(&exp);
+        let mapping = sim.mapping();
+        let lm0 = &mapping.layers[0];
+        let layer_model = LayerCostModel::build(&exp, lm0);
+        let cyc = exp.system.cycle_s();
+
+        // Reprogramming cost for one group (SRPG pipelines the rest).
+        let reprog = program_cost(&reprogram_program(&exp, lm0), &exp.system, &exp.calib);
+        let reprog_ttft_s = if exp.srpg {
+            reprog.cycles as f64 * cyc
+        } else {
+            (reprog.cycles * exp.model.layers as u64) as f64 * cyc
+        };
+
+        // Prefill stage template at the experiment's input length.
+        let block = 128usize.min(exp.input_tokens.max(1));
+        let n_blocks = exp.input_tokens.div_ceil(block);
+        let mut prefill_block_s = Vec::new();
+        for b in 0..n_blocks {
+            let this_block = if b + 1 == n_blocks {
+                exp.input_tokens - b * block
+            } else {
+                block
+            };
+            let kv = (b * block + this_block / 2).max(1);
+            let c = program_cost(
+                &prefill_program(&exp, lm0, this_block, kv),
+                &exp.system,
+                &exp.calib,
+            );
+            prefill_block_s.push((this_block, c.cycles as f64 * cyc));
+        }
+
+        let (golden, golden_exe) = match cfg.functional {
+            FunctionalMode::TimingOnly => (None, None),
+            FunctionalMode::Golden => {
+                let rt = GoldenRuntime::open(&cfg.artifacts_dir)?;
+                let exe = rt.compile("decode_step")?;
+                (Some(rt), Some(exe))
+            }
+        };
+
+        Ok(Self {
+            n_layers: exp.model.layers,
+            cfg: exp,
+            adapters: AdapterManager::new(),
+            queue: VecDeque::new(),
+            now_s: 0.0,
+            layer_model,
+            reprog_ttft_s,
+            prefill_block_s,
+            golden,
+            golden_exe,
+            stats: ServerStats::default(),
+        })
+    }
+
+    pub fn register_adapter(&mut self, id: AdapterId) {
+        let m = &self.cfg.model;
+        let bytes = self.cfg.lora.layer_params(m.hidden, m.q_dim(), m.kv_dim()) * 4;
+        self.adapters.register(id, bytes);
+    }
+
+    /// Enqueue a request (validated against the server's context budget).
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if !self.adapters.is_registered(req.adapter) {
+            bail!("adapter {:?} not registered", req.adapter);
+        }
+        if req.input_tokens == 0 || req.output_tokens == 0 {
+            bail!("request {} has empty input or output", req.id);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Serve everything in the queue (batch-1 FCFS), streaming token
+    /// events into `tokens` if provided. Returns completion records.
+    pub fn run(
+        &mut self,
+        tokens: Option<&mpsc::Sender<TokenEvent>>,
+    ) -> Result<Vec<RequestResult>> {
+        let cyc = self.cfg.system.cycle_s();
+        let mut results = Vec::new();
+        while let Some(req) = self.queue.pop_front() {
+            let started = self.now_s;
+            let swap = match self.adapters.admit(req.adapter) {
+                SwapOutcome::Hit => false,
+                SwapOutcome::Swap { .. } => true,
+            };
+
+            // ---- TTFT: (swap ? reprogram :) + layer-sequential prefill --
+            let mut ttft = if swap { self.reprog_ttft_s } else { 0.0 };
+            // Scale the prefill template if the request length differs
+            // from the server's configured point (simple re-blocking).
+            let prefill_per_layer: f64 = if req.input_tokens == self.cfg.input_tokens {
+                self.prefill_block_s.iter().map(|(_, s)| s).sum()
+            } else {
+                let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
+                    / self.cfg.input_tokens as f64;
+                per_tok * req.input_tokens as f64
+            };
+            ttft += prefill_per_layer * self.n_layers as f64;
+
+            // ---- golden functional step (optional) ----------------------
+            let golden_exec_ms = match (&self.golden, &self.golden_exe) {
+                (Some(rt), Some(exe)) => {
+                    let inputs = rt.load_inputs("decode_step")?;
+                    let t0 = std::time::Instant::now();
+                    let _ = rt.execute(exe, &inputs)?;
+                    Some(t0.elapsed().as_secs_f64() * 1e3)
+                }
+                _ => None,
+            };
+
+            // ---- decode loop --------------------------------------------
+            let mut decode_s = 0.0;
+            for i in 0..req.output_tokens {
+                let kv = req.input_tokens + i;
+                let tok_s =
+                    (self.layer_model.eval(kv).cycles * self.n_layers as u64) as f64 * cyc;
+                decode_s += tok_s;
+                if let Some(tx) = tokens {
+                    let _ = tx.send(TokenEvent {
+                        request: req.id,
+                        index: i,
+                        at_s: ttft + decode_s,
+                    });
+                }
+            }
+
+            let total = ttft + decode_s;
+            self.now_s += total;
+            let itl_ms = decode_s / req.output_tokens as f64 * 1e3;
+            self.stats.served += 1;
+            self.stats.total_tokens += (req.input_tokens + req.output_tokens) as u64;
+            self.stats.sim_time_s = self.now_s;
+            self.stats.mean_ttft_s += ttft;
+            self.stats.mean_itl_ms += itl_ms;
+            results.push(RequestResult {
+                request: req.id,
+                adapter: req.adapter,
+                swap,
+                queue_s: started,
+                ttft_s: ttft,
+                itl_ms,
+                total_s: total,
+                tokens_out: req.output_tokens,
+                golden_exec_ms,
+            });
+        }
+        if self.stats.served > 0 {
+            self.stats.mean_ttft_s /= self.stats.served as f64;
+            self.stats.mean_itl_ms /= self.stats.served as f64;
+        }
+        self.stats.adapter_swaps = self.adapters.swaps;
+        self.stats.adapter_hits = self.adapters.hits;
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+
+    fn server() -> Server {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        Server::new(ServerConfig {
+            experiment: exp,
+            functional: FunctionalMode::TimingOnly,
+            artifacts_dir: "artifacts".into(),
+        })
+        .unwrap()
+    }
+
+    fn req(id: u64, adapter: u32) -> Request {
+        Request { id, adapter: AdapterId(adapter), input_tokens: 256, output_tokens: 32 }
+    }
+
+    #[test]
+    fn serves_fcfs_with_swaps_and_hits() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.register_adapter(AdapterId(2));
+        for (i, a) in [(0u64, 1u32), (1, 1), (2, 2), (3, 2), (4, 1)] {
+            s.submit(req(i, a)).unwrap();
+        }
+        let results = s.run(None).unwrap();
+        assert_eq!(results.len(), 5);
+        // swaps at 0 (cold), 2 (1->2), 4 (2->1); hits at 1, 3
+        let swaps: Vec<bool> = results.iter().map(|r| r.swap).collect();
+        assert_eq!(swaps, vec![true, false, true, false, true]);
+        assert_eq!(s.stats().adapter_swaps, 3);
+        assert_eq!(s.stats().adapter_hits, 2);
+        // same-task repeat must be strictly faster to first token
+        assert!(results[1].ttft_s < results[0].ttft_s);
+    }
+
+    #[test]
+    fn token_stream_is_ordered() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap();
+        let (tx, rx) = mpsc::channel();
+        s.run(Some(&tx)).unwrap();
+        drop(tx);
+        let events: Vec<TokenEvent> = rx.iter().collect();
+        assert_eq!(events.len(), 32);
+        for w in events.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+            assert_eq!(w[1].index, w[0].index + 1);
+        }
+    }
+
+    #[test]
+    fn rejects_unregistered_and_empty() {
+        let mut s = server();
+        assert!(s.submit(req(0, 7)).is_err());
+        s.register_adapter(AdapterId(1));
+        let bad = Request {
+            id: 1,
+            adapter: AdapterId(1),
+            input_tokens: 0,
+            output_tokens: 8,
+        };
+        assert!(s.submit(bad).is_err());
+    }
+
+    #[test]
+    fn simulated_clock_advances() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap();
+        s.submit(req(1, 1)).unwrap();
+        let results = s.run(None).unwrap();
+        assert!(results[1].queue_s >= results[0].total_s * 0.99);
+        assert!(s.stats().sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn no_srpg_server_pays_bigger_swap() {
+        let mk = |srpg: bool| -> f64 {
+            let mut exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q],
+                256,
+            );
+            exp.srpg = srpg;
+            let mut s = Server::new(ServerConfig {
+                experiment: exp,
+                functional: FunctionalMode::TimingOnly,
+                artifacts_dir: "artifacts".into(),
+            })
+            .unwrap();
+            s.register_adapter(AdapterId(1));
+            s.submit(req(0, 1)).unwrap();
+            s.run(None).unwrap()[0].ttft_s
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(without > with, "no-SRPG {without} must exceed SRPG {with}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Dataflow orchestration: mapping -> IPCN instruction programs.
+//!
+//! Implements the paper's three-pattern dataflow (SS III.B): input
+//! embeddings **broadcast** to the W_Q/K/V regions; partial SMAC results
+//! **reduced** across the column-distributed tiles; attention scores
+//! computed by **unicast**-fed DMAC over the cyclic KV ring, followed by
+//! in-router softmax; then O-projection and the SwiGLU MLP on the same
+//! pattern. The generator emits one [`Program`] per (layer, step-kind),
+//! with the LoRA SRAM-DCIM phases overlapping their base-matrix SMAC
+//! phases (the router feeds both macros from one activation stream).
+
+mod generate;
+
+pub use generate::{decode_program, prefill_program, reprogram_program, ProgramParams};

@@ -1,0 +1,98 @@
+//! Per-macro power/area breakdown — regenerates paper Table IV.
+
+use crate::config::SystemConfig;
+
+/// The four macro classes of a Router-PE pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacroKind {
+    RramAcim,
+    SramDcim,
+    Scratchpad,
+    Router,
+}
+
+impl MacroKind {
+    pub fn all() -> [MacroKind; 4] {
+        [MacroKind::RramAcim, MacroKind::SramDcim, MacroKind::Scratchpad, MacroKind::Router]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MacroKind::RramAcim => "RRAM-ACIM",
+            MacroKind::SramDcim => "SRAM-DCIM",
+            MacroKind::Scratchpad => "Scratchpad Mem.",
+            MacroKind::Router => "Router",
+        }
+    }
+}
+
+/// One row of Table IV: absolute values plus percentage breakdowns.
+#[derive(Debug, Clone)]
+pub struct MacroBreakdown {
+    pub kind: Option<MacroKind>, // None = Total row
+    pub name: String,
+    pub power_uw: f64,
+    pub power_pct: f64,
+    pub area_mm2: f64,
+    pub area_pct: f64,
+}
+
+/// Compute the full Table IV breakdown from the system config.
+pub fn macro_breakdown(sys: &SystemConfig) -> Vec<MacroBreakdown> {
+    let entries = [
+        (MacroKind::RramAcim, sys.rram_macro),
+        (MacroKind::SramDcim, sys.sram_macro),
+        (MacroKind::Scratchpad, sys.scratchpad_macro),
+        (MacroKind::Router, sys.router_macro),
+    ];
+    let p_total: f64 = entries.iter().map(|(_, m)| m.active_power_uw).sum();
+    let a_total: f64 = entries.iter().map(|(_, m)| m.area_mm2).sum();
+    let mut rows: Vec<MacroBreakdown> = entries
+        .iter()
+        .map(|(k, m)| MacroBreakdown {
+            kind: Some(*k),
+            name: k.name().to_string(),
+            power_uw: m.active_power_uw,
+            power_pct: 100.0 * m.active_power_uw / p_total,
+            area_mm2: m.area_mm2,
+            area_pct: 100.0 * m.area_mm2 / a_total,
+        })
+        .collect();
+    rows.push(MacroBreakdown {
+        kind: None,
+        name: "Total (Router-PE pair)".to_string(),
+        power_uw: p_total,
+        power_pct: 100.0,
+        area_mm2: a_total,
+        area_pct: 100.0,
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_rows() {
+        let rows = macro_breakdown(&SystemConfig::default());
+        assert_eq!(rows.len(), 5);
+        let total = rows.last().unwrap();
+        assert!((total.power_uw - 1215.0).abs() < 1e-9);
+        assert!((total.area_mm2 - 0.2212).abs() < 1e-9);
+        // Paper: SRAM-DCIM dominates power (78.1%), RRAM dominates area (65.2%).
+        let sram = &rows[1];
+        assert!((sram.power_pct - 78.1).abs() < 0.5, "sram pct {}", sram.power_pct);
+        let rram = &rows[0];
+        assert!((rram.area_pct - 65.2).abs() < 0.5, "rram pct {}", rram.area_pct);
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let rows = macro_breakdown(&SystemConfig::default());
+        let p: f64 = rows.iter().filter(|r| r.kind.is_some()).map(|r| r.power_pct).sum();
+        let a: f64 = rows.iter().filter(|r| r.kind.is_some()).map(|r| r.area_pct).sum();
+        assert!((p - 100.0).abs() < 1e-9);
+        assert!((a - 100.0).abs() < 1e-9);
+    }
+}

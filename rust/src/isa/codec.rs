@@ -1,0 +1,315 @@
+//! Fixed-width binary encoding of IPCN instructions.
+//!
+//! Each instruction occupies one 128-bit instruction-memory word:
+//!
+//! ```text
+//!  bits 0..8    opcode
+//!  bits 8..24   a.x | ct ids      (u16)
+//!  bits 24..40  a.y               (u16)
+//!  bits 40..56  b.x               (u16)
+//!  bits 56..72  b.y               (u16)
+//!  bits 72..104 payload           (u32: bytes / macs / elems)
+//!  bits 104..120 aux              (u16: passes / flags)
+//!  bits 120..128 reserved
+//! ```
+//!
+//! Rect operands pack (x0,y0) into a and (x1,y1) into b. The encoding is
+//! intentionally generous — the NMC instruction memory is small (a few KB
+//! per layer program thanks to repeat groups), so density is not the
+//! constraint; decode simplicity is.
+
+use super::{Coord, Instr, Rect};
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum CodecError {
+    BadOpcode(u8),
+    BadLength(usize),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadOpcode(op) => write!(f, "unknown opcode {op:#x}"),
+            CodecError::BadLength(n) => write!(f, "expected 16 bytes, got {n}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+const OP_BCAST: u8 = 0x01;
+const OP_REDUCE: u8 = 0x02;
+const OP_UCAST: u8 = 0x03;
+const OP_SMAC: u8 = 0x04;
+const OP_SRMAC: u8 = 0x05;
+const OP_DMAC: u8 = 0x06;
+const OP_SOFTMAX: u8 = 0x07;
+const OP_SPRD: u8 = 0x08;
+const OP_SPWR: u8 = 0x09;
+const OP_REPROG: u8 = 0x0a;
+const OP_GATE: u8 = 0x0b;
+const OP_SYNC: u8 = 0x0c;
+const OP_D2D: u8 = 0x0d;
+
+struct Word {
+    buf: [u8; 16],
+}
+
+impl Word {
+    fn new(op: u8) -> Self {
+        let mut buf = [0u8; 16];
+        buf[0] = op;
+        Word { buf }
+    }
+
+    fn put_u16(&mut self, slot: usize, v: u16) -> &mut Self {
+        let off = 1 + slot * 2;
+        self.buf[off..off + 2].copy_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn put_u32(&mut self, v: u32) -> &mut Self {
+        self.buf[9..13].copy_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn put_aux(&mut self, v: u16) -> &mut Self {
+        self.buf[13..15].copy_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn get_u16(buf: &[u8], slot: usize) -> u16 {
+        let off = 1 + slot * 2;
+        u16::from_le_bytes([buf[off], buf[off + 1]])
+    }
+
+    fn get_u32(buf: &[u8]) -> u32 {
+        u32::from_le_bytes([buf[9], buf[10], buf[11], buf[12]])
+    }
+
+    fn get_aux(buf: &[u8]) -> u16 {
+        u16::from_le_bytes([buf[13], buf[14]])
+    }
+}
+
+fn put_coord(w: &mut Word, slot0: usize, c: Coord) {
+    w.put_u16(slot0, c.x).put_u16(slot0 + 1, c.y);
+}
+
+fn put_rect(w: &mut Word, r: Rect) {
+    w.put_u16(0, r.x0).put_u16(1, r.y0).put_u16(2, r.x1).put_u16(3, r.y1);
+}
+
+fn get_coord(buf: &[u8], slot0: usize) -> Coord {
+    Coord { x: Word::get_u16(buf, slot0), y: Word::get_u16(buf, slot0 + 1) }
+}
+
+fn get_rect(buf: &[u8]) -> Rect {
+    Rect {
+        x0: Word::get_u16(buf, 0),
+        y0: Word::get_u16(buf, 1),
+        x1: Word::get_u16(buf, 2),
+        y1: Word::get_u16(buf, 3),
+    }
+}
+
+/// Encode one instruction into its 16-byte instruction-memory word.
+pub fn encode(i: &Instr) -> [u8; 16] {
+    let mut w;
+    match i {
+        Instr::Broadcast { root, dest, bytes } => {
+            w = Word::new(OP_BCAST);
+            // root in slots 0-1, dest packed into aux-extended slots 2-3 +
+            // aux: dest needs 4 u16s; store (x0,y0) in slots 2,3 and
+            // (x1,y1) in payload halves — instead use: root slots 0,1;
+            // dest.x0/y0 slots 2,3; dest.x1 in payload low half is taken.
+            // Simplest: dest.x1/y1 go to aux and reserved byte pair.
+            put_coord(&mut w, 0, *root);
+            w.put_u16(2, dest.x0).put_u16(3, dest.y0);
+            w.put_u32(*bytes);
+            w.put_aux(dest.x1);
+            w.buf[15] = 0;
+            // y1 <= 255 fits the reserved byte (meshes are <= 256 wide).
+            debug_assert!(dest.y1 <= 255);
+            w.buf[15] = dest.y1 as u8;
+        }
+        Instr::Reduce { src, root, bytes } => {
+            w = Word::new(OP_REDUCE);
+            put_coord(&mut w, 0, *root);
+            w.put_u16(2, src.x0).put_u16(3, src.y0);
+            w.put_u32(*bytes);
+            w.put_aux(src.x1);
+            debug_assert!(src.y1 <= 255);
+            w.buf[15] = src.y1 as u8;
+        }
+        Instr::Unicast { from, to, bytes } => {
+            w = Word::new(OP_UCAST);
+            put_coord(&mut w, 0, *from);
+            put_coord(&mut w, 2, *to);
+            w.put_u32(*bytes);
+        }
+        Instr::Smac { pes, passes } => {
+            w = Word::new(OP_SMAC);
+            put_rect(&mut w, *pes);
+            w.put_aux(*passes);
+        }
+        Instr::SramMac { pes, passes } => {
+            w = Word::new(OP_SRMAC);
+            put_rect(&mut w, *pes);
+            w.put_aux(*passes);
+        }
+        Instr::Dmac { routers, macs } => {
+            w = Word::new(OP_DMAC);
+            put_rect(&mut w, *routers);
+            w.put_u32(*macs);
+        }
+        Instr::Softmax { routers, elems } => {
+            w = Word::new(OP_SOFTMAX);
+            put_rect(&mut w, *routers);
+            w.put_u32(*elems);
+        }
+        Instr::SpadRead { routers, bytes } => {
+            w = Word::new(OP_SPRD);
+            put_rect(&mut w, *routers);
+            w.put_u32(*bytes);
+        }
+        Instr::SpadWrite { routers, bytes } => {
+            w = Word::new(OP_SPWR);
+            put_rect(&mut w, *routers);
+            w.put_u32(*bytes);
+        }
+        Instr::Reprogram { pes, bytes } => {
+            w = Word::new(OP_REPROG);
+            put_rect(&mut w, *pes);
+            w.put_u32(*bytes);
+        }
+        Instr::Gate { ct, off } => {
+            w = Word::new(OP_GATE);
+            w.put_u16(0, *ct);
+            w.put_aux(u16::from(*off));
+        }
+        Instr::Sync => {
+            w = Word::new(OP_SYNC);
+        }
+        Instr::D2d { from_ct, to_ct, bytes, hops } => {
+            w = Word::new(OP_D2D);
+            w.put_u16(0, *from_ct).put_u16(1, *to_ct);
+            w.put_u32(*bytes);
+            w.put_aux(*hops);
+        }
+    }
+    w.buf
+}
+
+/// Decode one 16-byte instruction-memory word.
+pub fn decode(buf: &[u8]) -> Result<Instr, CodecError> {
+    if buf.len() != 16 {
+        return Err(CodecError::BadLength(buf.len()));
+    }
+    let op = buf[0];
+    let instr = match op {
+        OP_BCAST => Instr::Broadcast {
+            root: get_coord(buf, 0),
+            dest: Rect {
+                x0: Word::get_u16(buf, 2),
+                y0: Word::get_u16(buf, 3),
+                x1: Word::get_aux(buf),
+                y1: buf[15] as u16,
+            },
+            bytes: Word::get_u32(buf),
+        },
+        OP_REDUCE => Instr::Reduce {
+            root: get_coord(buf, 0),
+            src: Rect {
+                x0: Word::get_u16(buf, 2),
+                y0: Word::get_u16(buf, 3),
+                x1: Word::get_aux(buf),
+                y1: buf[15] as u16,
+            },
+            bytes: Word::get_u32(buf),
+        },
+        OP_UCAST => Instr::Unicast {
+            from: get_coord(buf, 0),
+            to: get_coord(buf, 2),
+            bytes: Word::get_u32(buf),
+        },
+        OP_SMAC => Instr::Smac { pes: get_rect(buf), passes: Word::get_aux(buf) },
+        OP_SRMAC => Instr::SramMac { pes: get_rect(buf), passes: Word::get_aux(buf) },
+        OP_DMAC => Instr::Dmac { routers: get_rect(buf), macs: Word::get_u32(buf) },
+        OP_SOFTMAX => Instr::Softmax { routers: get_rect(buf), elems: Word::get_u32(buf) },
+        OP_SPRD => Instr::SpadRead { routers: get_rect(buf), bytes: Word::get_u32(buf) },
+        OP_SPWR => Instr::SpadWrite { routers: get_rect(buf), bytes: Word::get_u32(buf) },
+        OP_REPROG => Instr::Reprogram { pes: get_rect(buf), bytes: Word::get_u32(buf) },
+        OP_GATE => Instr::Gate { ct: Word::get_u16(buf, 0), off: Word::get_aux(buf) != 0 },
+        OP_SYNC => Instr::Sync,
+        OP_D2D => Instr::D2d {
+            from_ct: Word::get_u16(buf, 0),
+            to_ct: Word::get_u16(buf, 1),
+            bytes: Word::get_u32(buf),
+            hops: Word::get_aux(buf),
+        },
+        other => return Err(CodecError::BadOpcode(other)),
+    };
+    Ok(instr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Instr> {
+        vec![
+            Instr::Broadcast {
+                root: Coord::new(0, 0),
+                dest: Rect::new(0, 0, 32, 32),
+                bytes: 8192,
+            },
+            Instr::Reduce {
+                src: Rect::new(4, 0, 12, 8),
+                root: Coord::new(4, 0),
+                bytes: 1024,
+            },
+            Instr::Unicast { from: Coord::new(1, 2), to: Coord::new(30, 31), bytes: 64 },
+            Instr::Smac { pes: Rect::new(0, 0, 8, 8), passes: 8 },
+            Instr::SramMac { pes: Rect::new(8, 0, 16, 4), passes: 2 },
+            Instr::Dmac { routers: Rect::new(0, 16, 32, 32), macs: 4_000_000 },
+            Instr::Softmax { routers: Rect::new(0, 0, 4, 4), elems: 2048 },
+            Instr::SpadRead { routers: Rect::new(0, 0, 32, 32), bytes: 65536 },
+            Instr::SpadWrite { routers: Rect::new(2, 2, 3, 3), bytes: 512 },
+            Instr::Reprogram { pes: Rect::new(0, 0, 32, 32), bytes: 163840 },
+            Instr::Gate { ct: 7, off: true },
+            Instr::Gate { ct: 3, off: false },
+            Instr::Sync,
+            Instr::D2d { from_ct: 0, to_ct: 1, bytes: 8192, hops: 1 },
+            Instr::D2d { from_ct: 0, to_ct: 5, bytes: 4096, hops: 5 },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_forms() {
+        for i in samples() {
+            let buf = encode(&i);
+            let back = decode(&buf).unwrap();
+            assert_eq!(i, back, "round-trip failed for {i:?}");
+        }
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let mut buf = [0u8; 16];
+        buf[0] = 0xff;
+        assert_eq!(decode(&buf), Err(CodecError::BadOpcode(0xff)));
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        assert_eq!(decode(&[0u8; 8]), Err(CodecError::BadLength(8)));
+    }
+
+    #[test]
+    fn encoding_is_16_bytes_and_stable() {
+        let i = Instr::Sync;
+        assert_eq!(encode(&i).len(), 16);
+        assert_eq!(encode(&i), encode(&i));
+    }
+}

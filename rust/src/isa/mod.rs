@@ -1,0 +1,183 @@
+//! The IPCN instruction set architecture.
+//!
+//! The paper (SS II.B) gives the IPCN "a dedicated instruction set ... that
+//! enables reprogrammable control over data movement and computation", with
+//! instructions stored in the NMC's instruction memory and *repeatable*
+//! ("due to operation redundancy in LLM workloads, each command to the
+//! routers is repeatable as governed by the controller").
+//!
+//! This module defines:
+//!  * [`Instr`] — the instruction forms (collectives, SMAC/DMAC compute,
+//!    scratchpad traffic, SRAM reprogramming, power gating, sync);
+//!  * [`encode`]/[`decode`] — a fixed 128-bit binary encoding (the NMC's
+//!    instruction-memory image format), with round-trip tests;
+//!  * [`Program`] — an instruction stream with phase markers and repeat
+//!    groups, as emitted by the dataflow orchestrator;
+//!  * [`Nmc`] — the network-main-controller model: fetch/decode/issue
+//!    accounting used by the cycle simulator.
+
+mod codec;
+mod nmc;
+mod program;
+
+pub use codec::{decode, encode, CodecError};
+pub use nmc::{Nmc, NmcStats};
+pub use program::{Phase, PhaseKind, Program};
+
+
+/// Router coordinate inside a CT's mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl Coord {
+    pub fn new(x: usize, y: usize) -> Self {
+        Self { x: x as u16, y: y as u16 }
+    }
+
+    /// Manhattan distance (XY routing path length).
+    pub fn manhattan(&self, other: &Coord) -> u64 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u64
+    }
+}
+
+/// A rectangular region of routers [x0, x1) x [y0, y1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub x0: u16,
+    pub y0: u16,
+    pub x1: u16,
+    pub y1: u16,
+}
+
+impl Rect {
+    pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
+        assert!(x0 <= x1 && y0 <= y1, "degenerate rect");
+        Self { x0: x0 as u16, y0: y0 as u16, x1: x1 as u16, y1: y1 as u16 }
+    }
+
+    pub fn width(&self) -> usize {
+        (self.x1 - self.x0) as usize
+    }
+
+    pub fn height(&self) -> usize {
+        (self.y1 - self.y0) as usize
+    }
+
+    pub fn count(&self) -> usize {
+        self.width() * self.height()
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x >= self.x0 && c.x < self.x1 && c.y >= self.y0 && c.y < self.y1
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Coord> + '_ {
+        (self.y0..self.y1)
+            .flat_map(move |y| (self.x0..self.x1).map(move |x| Coord { x, y }))
+    }
+
+    pub fn center(&self) -> Coord {
+        Coord { x: (self.x0 + self.x1) / 2, y: (self.y0 + self.y1) / 2 }
+    }
+
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        self.x0 < o.x1 && o.x0 < self.x1 && self.y0 < o.y1 && o.y0 < self.y1
+    }
+}
+
+/// One IPCN instruction. Payload sizes are in bytes; compute quantities in
+/// macro-native units (passes / MACs / elements).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// Broadcast `bytes` from `root` to every router in `dest` along the
+    /// spanning tree computed by the collective planner.
+    Broadcast { root: Coord, dest: Rect, bytes: u32 },
+    /// Reduce `bytes` of partial sums from every router in `src` to `root`
+    /// (f32 add performed in the routers on the way up the tree).
+    Reduce { src: Rect, root: Coord, bytes: u32 },
+    /// Point-to-point transfer.
+    Unicast { from: Coord, to: Coord, bytes: u32 },
+    /// RRAM-ACIM static-weight MAC: each router in `pes` drives its
+    /// crossbar for `passes` analog passes (one pass = one <=256-elem
+    /// input slice through the 256x256 array).
+    Smac { pes: Rect, passes: u16 },
+    /// SRAM-DCIM digital MAC (LoRA path): `passes` per router in `pes`.
+    SramMac { pes: Rect, passes: u16 },
+    /// Dynamic MAC in the routers (QK^T / AV): `macs` total distributed
+    /// over the routers in `routers`.
+    Dmac { routers: Rect, macs: u32 },
+    /// Softmax over `elems` elements distributed over `routers`.
+    Softmax { routers: Rect, elems: u32 },
+    /// Scratchpad read (router-local).
+    SpadRead { routers: Rect, bytes: u32 },
+    /// Scratchpad write (router-local).
+    SpadWrite { routers: Rect, bytes: u32 },
+    /// Reprogram the SRAM-DCIM macros in `pes` with `bytes` of new LoRA
+    /// weights (streamed from the CT's D2D port via the mesh).
+    Reprogram { pes: Rect, bytes: u32 },
+    /// Power-gate (true) or wake (false) a CT's IPCN + RRAM macros.
+    Gate { ct: u16, off: bool },
+    /// Barrier: all preceding instructions in the phase must complete.
+    Sync,
+    /// Inter-CT transfer over the D2D link. `hops` == 0 streams
+    /// cut-through at the full SerDes rate (prefill blocks,
+    /// reprogramming); `hops` >= 1 is a store-and-forward chain of that
+    /// many chiplet ingests (decode's small per-token deliveries, which
+    /// are turnaround-bound well below the streaming rate).
+    D2d { from_ct: u16, to_ct: u16, bytes: u32, hops: u16 },
+}
+
+impl Instr {
+    /// Short mnemonic (trace rendering / disassembly).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Broadcast { .. } => "BCAST",
+            Instr::Reduce { .. } => "REDUCE",
+            Instr::Unicast { .. } => "UCAST",
+            Instr::Smac { .. } => "SMAC",
+            Instr::SramMac { .. } => "SRMAC",
+            Instr::Dmac { .. } => "DMAC",
+            Instr::Softmax { .. } => "SOFTMAX",
+            Instr::SpadRead { .. } => "SPRD",
+            Instr::SpadWrite { .. } => "SPWR",
+            Instr::Reprogram { .. } => "REPROG",
+            Instr::Gate { .. } => "GATE",
+            Instr::Sync => "SYNC",
+            Instr::D2d { .. } => "D2D",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_basics() {
+        let r = Rect::new(2, 3, 6, 8);
+        assert_eq!(r.width(), 4);
+        assert_eq!(r.height(), 5);
+        assert_eq!(r.count(), 20);
+        assert!(r.contains(Coord::new(2, 3)));
+        assert!(!r.contains(Coord::new(6, 3)));
+        assert_eq!(r.iter().count(), 20);
+    }
+
+    #[test]
+    fn rect_overlap() {
+        let a = Rect::new(0, 0, 4, 4);
+        let b = Rect::new(3, 3, 6, 6);
+        let c = Rect::new(4, 0, 8, 4);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+    }
+
+    #[test]
+    fn manhattan() {
+        assert_eq!(Coord::new(0, 0).manhattan(&Coord::new(3, 4)), 7);
+        assert_eq!(Coord::new(5, 5).manhattan(&Coord::new(5, 5)), 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Network Main Controller model (paper Fig. 3).
+//!
+//! The NMC fetches instructions from its instruction memory, decodes them,
+//! and issues commands to the routers; a repeat register re-issues a group
+//! without re-fetching. For the cycle simulator, the NMC contributes the
+//! per-group issue overhead and tracks fetch/issue statistics; the routers'
+//! execution time is modeled by the NoC + PE cost models.
+
+use super::{Program};
+use crate::config::CalibConstants;
+
+/// NMC execution statistics for one program run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NmcStats {
+    /// Instructions fetched from instruction memory (repeat groups fetch once).
+    pub fetched: u64,
+    /// Commands issued to routers (repeats re-issue).
+    pub issued: u64,
+    /// Cycles spent on issue overhead (not overlapped with execution).
+    pub issue_cycles: u64,
+    /// Instruction-memory bytes occupied.
+    pub imem_bytes: u64,
+}
+
+/// The NMC model: owns the issue-overhead accounting.
+#[derive(Debug, Clone)]
+pub struct Nmc {
+    issue_overhead: u64,
+    pub stats: NmcStats,
+}
+
+impl Nmc {
+    pub fn new(calib: &CalibConstants) -> Self {
+        Self { issue_overhead: calib.nmc_issue_cycles, stats: NmcStats::default() }
+    }
+
+    /// Account a program's control overhead. Returns the cycles the NMC
+    /// adds to the critical path: one issue-overhead slot per *phase*
+    /// (command groups within a phase issue back-to-back and overlap
+    /// router execution; the serializing step is the phase barrier).
+    pub fn run_program(&mut self, p: &Program) -> u64 {
+        let mut cycles = 0;
+        for phase in &p.phases {
+            self.stats.fetched += phase.instrs.len() as u64;
+            self.stats.issued += phase.issue_count();
+            cycles += self.issue_overhead;
+        }
+        self.stats.imem_bytes += p.image_bytes() as u64;
+        self.stats.issue_cycles += cycles;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instr, Phase, PhaseKind, Rect};
+
+    #[test]
+    fn overhead_per_phase_not_per_repeat() {
+        let calib = CalibConstants::default();
+        let mut nmc = Nmc::new(&calib);
+        let mut p = Program::new();
+        p.push(
+            Phase::new(
+                PhaseKind::QkvProjection,
+                vec![Instr::Smac { pes: Rect::new(0, 0, 8, 8), passes: 1 }],
+            )
+            .repeated(100),
+        );
+        let cycles = nmc.run_program(&p);
+        assert_eq!(cycles, calib.nmc_issue_cycles);
+        assert_eq!(nmc.stats.fetched, 1);
+        assert_eq!(nmc.stats.issued, 100);
+    }
+
+    #[test]
+    fn stats_accumulate_across_programs() {
+        let calib = CalibConstants::default();
+        let mut nmc = Nmc::new(&calib);
+        let mut p = Program::new();
+        p.push(Phase::new(PhaseKind::SoftmaxPhase, vec![Instr::Sync]));
+        nmc.run_program(&p);
+        nmc.run_program(&p);
+        assert_eq!(nmc.stats.fetched, 2);
+        assert_eq!(nmc.stats.issue_cycles, 2 * calib.nmc_issue_cycles);
+    }
+}

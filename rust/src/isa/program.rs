@@ -1,0 +1,187 @@
+//! Programs: phase-structured instruction streams with repeat groups.
+//!
+//! The dataflow orchestrator emits one [`Program`] per (layer, phase-kind).
+//! Within a phase, instructions between `Sync` barriers execute in
+//! parallel across the mesh; phases execute in order. A repeat count on a
+//! phase expresses the paper's "each command to the routers is repeatable
+//! as governed by the controller via the instruction" — e.g. the same
+//! broadcast+SMAC+reduce group repeats for every 256-row tile stripe.
+
+use super::{codec, Instr};
+
+/// Semantic tag of a phase (drives trace rendering and SRPG accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseKind {
+    InputBroadcast,
+    QkvProjection,
+    LoraPath,
+    PartialReduce,
+    AttentionScore,
+    SoftmaxPhase,
+    AttentionValue,
+    OutputProjection,
+    MlpGateUp,
+    MlpActivation,
+    MlpDown,
+    KvAppend,
+    Reprogramming,
+    InterCtTransfer,
+    PowerControl,
+}
+
+impl PhaseKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseKind::InputBroadcast => "input-bcast",
+            PhaseKind::QkvProjection => "qkv-proj",
+            PhaseKind::LoraPath => "lora",
+            PhaseKind::PartialReduce => "reduce",
+            PhaseKind::AttentionScore => "qk^t",
+            PhaseKind::SoftmaxPhase => "softmax",
+            PhaseKind::AttentionValue => "a*v",
+            PhaseKind::OutputProjection => "o-proj",
+            PhaseKind::MlpGateUp => "mlp-gate-up",
+            PhaseKind::MlpActivation => "mlp-act",
+            PhaseKind::MlpDown => "mlp-down",
+            PhaseKind::KvAppend => "kv-append",
+            PhaseKind::Reprogramming => "reprog",
+            PhaseKind::InterCtTransfer => "d2d",
+            PhaseKind::PowerControl => "gate",
+        }
+    }
+}
+
+/// A phase: a group of instructions that (conceptually) occupy one row of
+/// the Fig. 6 timing diagram, optionally repeated.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    pub instrs: Vec<Instr>,
+    /// Repeat count (NMC loop register). Latency/energy scale linearly.
+    pub repeat: u32,
+    /// Whether this phase may overlap the *previous* phase (pipelined
+    /// double-buffering inside a layer, e.g. LoRA path concurrent with the
+    /// crossbar SMAC it augments).
+    pub overlaps_prev: bool,
+}
+
+impl Phase {
+    pub fn new(kind: PhaseKind, instrs: Vec<Instr>) -> Self {
+        Self { kind, instrs, repeat: 1, overlaps_prev: false }
+    }
+
+    pub fn repeated(mut self, n: u32) -> Self {
+        self.repeat = n.max(1);
+        self
+    }
+
+    pub fn overlapping(mut self) -> Self {
+        self.overlaps_prev = true;
+        self
+    }
+
+    /// Total instruction issues including repeats.
+    pub fn issue_count(&self) -> u64 {
+        self.instrs.len() as u64 * self.repeat as u64
+    }
+}
+
+/// A full program (one layer's worth of phases, typically).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub phases: Vec<Phase>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, phase: Phase) {
+        self.phases.push(phase);
+    }
+
+    pub fn instr_count(&self) -> u64 {
+        self.phases.iter().map(|p| p.issue_count()).sum()
+    }
+
+    /// Assemble to the NMC instruction-memory image. Repeat groups are
+    /// stored once with their count (this is what keeps layer programs in
+    /// the KB range); the image layout is
+    /// `[u32 phase-count] ([u8 kind][u32 repeat][u32 n] n*16B)...`.
+    pub fn assemble(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.phases.len() * 64);
+        out.extend_from_slice(&(self.phases.len() as u32).to_le_bytes());
+        for p in &self.phases {
+            out.push(p.kind as u8);
+            out.push(u8::from(p.overlaps_prev));
+            out.extend_from_slice(&p.repeat.to_le_bytes());
+            out.extend_from_slice(&(p.instrs.len() as u32).to_le_bytes());
+            for i in &p.instrs {
+                out.extend_from_slice(&codec::encode(i));
+            }
+        }
+        out
+    }
+
+    /// Instruction-memory footprint in bytes.
+    pub fn image_bytes(&self) -> usize {
+        self.assemble().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Coord, Rect};
+
+    fn sample() -> Program {
+        let mut p = Program::new();
+        p.push(Phase::new(
+            PhaseKind::InputBroadcast,
+            vec![Instr::Broadcast {
+                root: Coord::new(0, 0),
+                dest: Rect::new(0, 0, 8, 8),
+                bytes: 8192,
+            }],
+        ));
+        p.push(
+            Phase::new(
+                PhaseKind::QkvProjection,
+                vec![Instr::Smac { pes: Rect::new(0, 0, 8, 8), passes: 8 }],
+            )
+            .repeated(8),
+        );
+        p.push(
+            Phase::new(
+                PhaseKind::LoraPath,
+                vec![Instr::SramMac { pes: Rect::new(0, 0, 8, 8), passes: 1 }],
+            )
+            .overlapping(),
+        );
+        p
+    }
+
+    #[test]
+    fn issue_counts_respect_repeat() {
+        let p = sample();
+        assert_eq!(p.instr_count(), 1 + 8 + 1);
+    }
+
+    #[test]
+    fn assemble_is_compact() {
+        let p = sample();
+        let img = p.assemble();
+        // 4 header + 3 * (10 phase header + n*16)
+        assert_eq!(img.len(), 4 + 3 * 10 + 3 * 16);
+        // repeat group of 8 must NOT inflate the image
+        assert!(img.len() < 200);
+    }
+
+    #[test]
+    fn overlap_flag_survives() {
+        let p = sample();
+        assert!(!p.phases[1].overlaps_prev);
+        assert!(p.phases[2].overlaps_prev);
+    }
+}

@@ -1,0 +1,47 @@
+//! # PRIMAL — Processing-In-Memory based LoRA LLM Inference Accelerator
+//!
+//! A full-system reproduction of the PRIMAL paper (CS.AR 2026): a
+//! cycle-accurate, instruction-level simulator of the chiplet-based PIM
+//! accelerator (heterogeneous RRAM-ACIM / SRAM-DCIM PEs on a 2D-mesh
+//! IPCN), the spatial mapping + dataflow orchestration, the SRPG
+//! reprogramming/power-gating scheme, an H100 baseline model, a serving
+//! coordinator, and a PJRT runtime that executes the AOT-lowered JAX/Pallas
+//! golden model for functional validation.
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * **L1/L2 (Python, build-time only)** — Pallas kernels + JAX decoder
+//!   layer, lowered once by `make artifacts` to HLO text under
+//!   `artifacts/`. Python never runs on the request path.
+//! * **L3 (this crate)** — everything else. The simulator is the product;
+//!   [`coordinator`] wraps it in a serving front-end; [`runtime`] executes
+//!   the golden HLO modules via the `xla` PJRT CPU client.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+//! use primal::sim::Simulator;
+//!
+//! let cfg = ExperimentConfig::paper_point(
+//!     ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], 1024);
+//! let report = Simulator::new(&cfg).run();
+//! println!("throughput {:.2} tok/s, power {:.2} W",
+//!          report.throughput_tps, report.avg_power_w);
+//! ```
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod isa;
+pub mod mapping;
+pub mod metrics;
+pub mod noc;
+pub mod pe;
+pub mod runtime;
+pub mod sim;
+pub mod srpg;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,314 @@
+//! `primal` — the PRIMAL accelerator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   simulate  — run one benchmark point, print the report (+ --trace)
+//!   report    — regenerate a paper table (--table 1|2|3|4|h100|srpg)
+//!   serve     — run the serving coordinator on a synthetic request mix
+//!   sweep     — context-length sweep for one model
+//!   validate  — compile + execute the AOT golden modules via PJRT and
+//!               check them against the stored golden vectors
+//!
+//! Argument parsing is hand-rolled (the offline build carries no clap);
+//! every flag is `--key value` or a boolean `--flag`.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::coordinator::{
+    AdapterId, FunctionalMode, Request, Server, ServerConfig,
+};
+use primal::metrics;
+use primal::runtime::{default_artifacts_dir, GoldenRuntime};
+use primal::sim::Simulator;
+use primal::trace::render_gantt;
+use primal::util::Rng;
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: primal <command> [flags]
+
+commands:
+  simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--no-srpg] [--trace]
+  report     --table <1|2|3|4|h100|srpg>
+  serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N] [--golden]
+  sweep      --model <1b|8b|13b> [--from N] [--to N]
+  validate   [--artifacts DIR]
+
+examples:
+  primal simulate --model 13b --ctx 2048 --lora qv
+  primal report --table 2
+  primal serve --model 1b --requests 8 --adapters 3
+  primal validate"
+    );
+    std::process::exit(2)
+}
+
+/// Parse `--key value` / `--flag` pairs.
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args.get(i + 1);
+            match val {
+                Some(v) if !v.starts_with("--") => {
+                    out.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    out.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            eprintln!("unexpected argument: {a}");
+            usage();
+        }
+    }
+    out
+}
+
+fn model_flag(flags: &BTreeMap<String, String>) -> ModelId {
+    let name = flags.get("model").map(String::as_str).unwrap_or("1b");
+    ModelId::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (try 1b, 8b, 13b)");
+        usage()
+    })
+}
+
+fn lora_flag(flags: &BTreeMap<String, String>) -> Vec<LoraTarget> {
+    match flags.get("lora").map(String::as_str).unwrap_or("qv") {
+        "q" => vec![LoraTarget::Q],
+        "qv" => vec![LoraTarget::Q, LoraTarget::V],
+        other => {
+            eprintln!("unknown lora targets '{other}' (try q or qv)");
+            usage()
+        }
+    }
+}
+
+fn num_flag(flags: &BTreeMap<String, String>, key: &str, default: usize) -> usize {
+    flags
+        .get(key)
+        .map(|v| v.parse().unwrap_or_else(|_| {
+            eprintln!("--{key} expects a number, got '{v}'");
+            usage()
+        }))
+        .unwrap_or(default)
+}
+
+fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
+    let ctx = num_flag(&flags, "ctx", 1024);
+    let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
+    if flags.contains_key("no-srpg") {
+        cfg.srpg = false;
+    }
+    let problems = cfg.validate();
+    if !problems.is_empty() {
+        for p in &problems {
+            eprintln!("config: {p}");
+        }
+        return ExitCode::FAILURE;
+    }
+    let sim = if flags.contains_key("trace") {
+        Simulator::new(&cfg).with_trace()
+    } else {
+        Simulator::new(&cfg)
+    };
+    let r = sim.run();
+    println!("model        : {}", r.model);
+    println!("LoRA         : rank 8 ({})", r.lora_label);
+    println!("context      : {}/{}", r.input_tokens, r.output_tokens);
+    println!("SRPG         : {}", if r.srpg { "on" } else { "off" });
+    println!("CTs          : {} ({} per layer)", r.total_cts, r.cts_per_layer);
+    println!("TTFT         : {:.3} s", r.ttft_s);
+    println!("ITL          : {:.3} ms (first {:.3}, last {:.3})",
+             r.itl_ms, r.itl_first_ms, r.itl_last_ms);
+    println!("throughput   : {:.2} tok/s", r.throughput_tps);
+    println!("avg power    : {:.2} W", r.avg_power_w);
+    println!("efficiency   : {:.2} tok/J", r.efficiency_tpj);
+    println!("total energy : {:.2} J over {:.3} s", r.total_energy_j, r.total_s());
+    if flags.contains_key("trace") {
+        println!();
+        println!("{}", render_gantt(&r.trace, 100));
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
+    let which = flags.get("table").map(String::as_str).unwrap_or("2");
+    match which {
+        "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
+        "2" | "3" => {
+            eprintln!("running the 12-point paper grid (three models x two LoRA sets x two contexts)...");
+            let reports: Vec<_> = metrics::paper_grid()
+                .iter()
+                .map(metrics::run_point)
+                .collect();
+            if which == "2" {
+                println!("{}", metrics::table2(&reports));
+            } else {
+                println!("{}", metrics::table3(&reports));
+            }
+        }
+        "4" => println!("{}", metrics::table4(&metrics::paper_grid()[0])),
+        "h100" => {
+            let c = metrics::h100_comparison();
+            println!("{}", metrics::render_h100(&c));
+        }
+        "srpg" => {
+            let rows = metrics::srpg_ablation(2048);
+            println!("{}", metrics::render_srpg(&rows));
+        }
+        other => {
+            eprintln!("unknown table '{other}'");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
+    let ctx = num_flag(&flags, "ctx", 512);
+    let n_requests = num_flag(&flags, "requests", 8);
+    let n_adapters = num_flag(&flags, "adapters", 3);
+    let cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
+    let functional = if flags.contains_key("golden") {
+        FunctionalMode::Golden
+    } else {
+        FunctionalMode::TimingOnly
+    };
+    let mut server = match Server::new(ServerConfig {
+        experiment: cfg,
+        functional,
+        artifacts_dir: default_artifacts_dir(),
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server init failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    for a in 0..n_adapters {
+        server.register_adapter(AdapterId(a as u32));
+    }
+    let mut rng = Rng::new(7);
+    for i in 0..n_requests {
+        let adapter = AdapterId(rng.range(0, n_adapters) as u32);
+        let req = Request {
+            id: i as u64,
+            adapter,
+            input_tokens: ctx,
+            output_tokens: ctx.min(128),
+        };
+        server.submit(req).unwrap();
+    }
+    match server.run(None) {
+        Ok(results) => {
+            println!("req  adapter  swap   queue_s   ttft_s   itl_ms  golden_ms");
+            for r in &results {
+                println!(
+                    "{:>3}  {:>7}  {:>4}  {:>8.3}  {:>7.3}  {:>7.3}  {}",
+                    r.request,
+                    r.adapter.0,
+                    if r.swap { "yes" } else { "-" },
+                    r.queue_s,
+                    r.ttft_s,
+                    r.itl_ms,
+                    r.golden_exec_ms
+                        .map(|m| format!("{m:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            let s = server.stats();
+            println!(
+                "\nserved {} requests, {} tokens, {:.2} simulated s; \
+                 swaps {}, hits {}; mean TTFT {:.3} s, mean ITL {:.3} ms",
+                s.served, s.total_tokens, s.sim_time_s,
+                s.adapter_swaps, s.adapter_hits, s.mean_ttft_s, s.mean_itl_ms
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_sweep(flags: BTreeMap<String, String>) -> ExitCode {
+    let model = model_flag(&flags);
+    let from = num_flag(&flags, "from", 256);
+    let to = num_flag(&flags, "to", 4096);
+    println!("{:>6} {:>9} {:>9} {:>9} {:>8} {:>8}",
+             "ctx", "ttft_s", "itl_ms", "tok/s", "P_W", "tok/J");
+    let mut ctx = from;
+    while ctx <= to {
+        let cfg = ExperimentConfig::paper_point(model, &lora_flag(&flags), ctx);
+        let r = Simulator::new(&cfg).run();
+        println!(
+            "{:>6} {:>9.3} {:>9.3} {:>9.2} {:>8.2} {:>8.2}",
+            ctx, r.ttft_s, r.itl_ms, r.throughput_tps, r.avg_power_w, r.efficiency_tpj
+        );
+        ctx *= 2;
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_validate(flags: BTreeMap<String, String>) -> ExitCode {
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let rt = match GoldenRuntime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot open artifacts at {}: {e:#}", dir.display());
+            eprintln!("run `make artifacts` first");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("artifacts: {} ({} modules)", dir.display(), rt.manifest().modules.len());
+    match rt.validate_all() {
+        Ok(reports) => {
+            let mut ok = true;
+            for r in &reports {
+                println!(
+                    "{:>14}: {} ({} outputs, max abs err {:.2e}, max rel {:.2e}, {:.1} ms)",
+                    r.module,
+                    if r.passed { "PASS" } else { "FAIL" },
+                    r.n_outputs,
+                    r.max_abs_err,
+                    r.max_rel_err,
+                    r.exec_ms,
+                );
+                ok &= r.passed;
+            }
+            if ok {
+                println!("golden validation OK — the PJRT request path reproduces the JAX/Pallas numerics");
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("validation failed: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(flags),
+        "report" => cmd_report(flags),
+        "serve" => cmd_serve(flags),
+        "sweep" => cmd_sweep(flags),
+        "validate" => cmd_validate(flags),
+        _ => usage(),
+    }
+}

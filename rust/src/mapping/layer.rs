@@ -1,0 +1,180 @@
+//! Layer- and model-level mapping: CT allocation, scratchpad co-location,
+//! and the cyclic KV ring per layer.
+
+use super::optimizer::{optimize_layer, MappingStrategy};
+use super::placement::{MatrixId, MatrixRegion, MatrixShape};
+use crate::config::ExperimentConfig;
+use crate::pe::scratchpad::CyclicKv;
+
+/// Mapping of one decoder layer onto a contiguous group of CTs.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub layer: usize,
+    /// First global CT index of this layer's group.
+    pub ct_base: usize,
+    /// CTs in the group.
+    pub n_cts: usize,
+    /// Matrix regions; `MatrixRegion::ct` is *local* to the group
+    /// (0..n_cts); add `ct_base` for the global index.
+    pub regions: Vec<MatrixRegion>,
+    /// KV ring: striped across the routers of the K/V regions (co-location
+    /// with the K/V weights, paper SS III.A).
+    pub kv_ring_routers: usize,
+    /// Bytes of K+V per token on its hosting router.
+    pub kv_token_bytes: usize,
+    /// LoRA adapter bytes this layer holds in SRAM-DCIM (for reprogramming
+    /// volume), f32.
+    pub lora_bytes: usize,
+}
+
+impl LayerMapping {
+    /// Regions of one matrix.
+    pub fn regions_of(&self, id: MatrixId) -> Vec<&MatrixRegion> {
+        self.regions.iter().filter(|r| r.id == id).collect()
+    }
+
+    /// The KV ring for a given context capacity.
+    pub fn kv_ring(&self, capacity_tokens: usize) -> CyclicKv {
+        let per_router = capacity_tokens.div_ceil(self.kv_ring_routers);
+        CyclicKv::new(
+            self.kv_ring_routers,
+            self.kv_token_bytes,
+            per_router * self.kv_token_bytes,
+        )
+    }
+
+    /// Scratchpad bytes needed per KV-ring router for `tokens` of context.
+    pub fn kv_bytes_per_router(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.kv_ring_routers) * self.kv_token_bytes
+    }
+}
+
+/// The whole model's mapping.
+#[derive(Debug, Clone)]
+pub struct ModelMapping {
+    pub layers: Vec<LayerMapping>,
+    pub total_cts: usize,
+}
+
+impl ModelMapping {
+    pub fn build(cfg: &ExperimentConfig, strategy: MappingStrategy) -> Self {
+        let m = &cfg.model;
+        let matrices =
+            MatrixShape::layer_matrices(m.hidden, m.q_dim(), m.kv_dim(), m.intermediate);
+        // All layers share one packed layout (identical shapes), placed at
+        // consecutive CT bases — the paper's layer-wise adjacent-CT scheme.
+        let packed = optimize_layer(&matrices, &cfg.system, &cfg.calib, strategy);
+
+        // KV ring: the cyclic buffer spans ALL routers of the layer's CT
+        // group ("organized in a cyclic fashion across distributed memory
+        // units", SS III.B) — anchored at the K/V regions but spilling over
+        // the whole group so long contexts fit the 32 KB scratchpads.
+        // Capacity check (13B, 4096 ctx): KV must be fp16 — at f32 the
+        // layer's KV (167.8 MB) would exceed the group's aggregate
+        // scratchpad (163.8 MB); at fp16 it is 83.9 MB. The DMAC units
+        // up-convert to f32 on read (digital MACs are full precision).
+        let kv_ring_routers = packed.n_cts * cfg.system.pes_per_ct();
+        // Each token's K+V vector lands whole on ONE ring router (cyclic
+        // striping by token index), fp16.
+        let kv_token_bytes = 2 * m.kv_dim() * 2;
+
+        let lora_bytes = cfg.lora.layer_params(m.hidden, m.q_dim(), m.kv_dim()) * 4;
+
+        let layers: Vec<LayerMapping> = (0..m.layers)
+            .map(|l| LayerMapping {
+                layer: l,
+                ct_base: l * packed.n_cts,
+                n_cts: packed.n_cts,
+                regions: packed.regions.clone(),
+                kv_ring_routers: kv_ring_routers.max(1),
+                kv_token_bytes,
+                lora_bytes,
+            })
+            .collect();
+        let total_cts = m.layers * packed.n_cts;
+        Self { layers, total_cts }
+    }
+
+    pub fn cts_per_layer(&self) -> usize {
+        self.layers.first().map(|l| l.n_cts).unwrap_or(0)
+    }
+
+    /// Global CT group of layer `l`.
+    pub fn ct_group(&self, l: usize) -> std::ops::Range<usize> {
+        let lm = &self.layers[l];
+        lm.ct_base..lm.ct_base + lm.n_cts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+
+    fn cfg(model: ModelId) -> ExperimentConfig {
+        ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], 1024)
+    }
+
+    #[test]
+    fn llama1b_is_one_ct_per_layer() {
+        let m = ModelMapping::build(&cfg(ModelId::Llama32_1b), MappingStrategy::Optimized);
+        assert_eq!(m.cts_per_layer(), 1);
+        assert_eq!(m.total_cts, 16);
+        assert_eq!(m.ct_group(3), 3..4);
+    }
+
+    #[test]
+    fn llama8b_multi_ct_layers() {
+        let m = ModelMapping::build(&cfg(ModelId::Llama3_8b), MappingStrategy::Optimized);
+        assert!(m.cts_per_layer() >= 4);
+        assert_eq!(m.total_cts, 32 * m.cts_per_layer());
+    }
+
+    #[test]
+    fn llama13b_scale() {
+        let m = ModelMapping::build(&cfg(ModelId::Llama2_13b), MappingStrategy::Optimized);
+        assert!(m.cts_per_layer() >= 5, "13B layer = 317M weights > 4 CTs");
+        assert_eq!(m.total_cts, 40 * m.cts_per_layer());
+    }
+
+    #[test]
+    fn kv_ring_nonempty_and_token_bytes() {
+        let m = ModelMapping::build(&cfg(ModelId::Llama32_1b), MappingStrategy::Optimized);
+        let l = &m.layers[0];
+        // Ring spans the full CT group (1024 routers for the 1B model).
+        assert_eq!(l.kv_ring_routers, 1024);
+        // 1B: kv_dim 512 -> K+V at fp16 = 2*512*2 = 2048 B per token.
+        assert_eq!(l.kv_token_bytes, 2048);
+    }
+
+    #[test]
+    fn kv_ring_capacity_covers_context() {
+        let c = cfg(ModelId::Llama32_1b);
+        let m = ModelMapping::build(&c, MappingStrategy::Optimized);
+        let l = &m.layers[0];
+        let ring = l.kv_ring(4096);
+        assert!(ring.capacity() >= 4096);
+    }
+
+    #[test]
+    fn lora_bytes_match_config() {
+        let c = cfg(ModelId::Llama2_13b);
+        let m = ModelMapping::build(&c, MappingStrategy::Optimized);
+        // rank 8, Q+V on 5120: 2 * 8 * (5120 + 5120) * 4 bytes
+        assert_eq!(m.layers[0].lora_bytes, 2 * 8 * (5120 + 5120) * 4);
+    }
+
+    #[test]
+    fn scratchpad_kv_fits_paper_contexts() {
+        // 13B 2048/2048: 4096 tokens * 2*5120*4 B spread over the ring.
+        let c = cfg(ModelId::Llama2_13b);
+        let m = ModelMapping::build(&c, MappingStrategy::Optimized);
+        let l = &m.layers[0];
+        let per_router = l.kv_bytes_per_router(4096);
+        // Must fit the 32 KB scratchpad (perhaps with the whole pad for KV).
+        assert!(
+            per_router <= 32 * 1024,
+            "KV per router {per_router} B exceeds scratchpad"
+        );
+    }
+}

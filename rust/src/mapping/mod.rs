@@ -1,0 +1,35 @@
+//! Spatial mapping of weight matrices onto the PE crossbar arrays.
+//!
+//! Paper SS III.A: each weight matrix is "heuristically constrained to a
+//! column-wise rectangular region" on the mesh; the mapping is optimized by
+//! tuning (1) intra-matrix region shape, (2) inter-matrix shape/packing,
+//! and (3) row-column ordering. Intermediate tensors are co-located with
+//! their weights in the adjacent scratchpads; the KV cache is striped
+//! cyclically across the attention region's routers. LoRA matrices adopt
+//! the same partitioning (they are structurally aligned with the base
+//! matrices), landing in the SRAM-DCIM macro of the same Router-PE pairs.
+//!
+//! Layer-to-CT allocation (paper SS III.C): each layer occupies a
+//! contiguous group of adjacent CTs ("CT-based, layer-wise weight
+//! allocation"), which is what SRPG's pipelined reprogramming and
+//! power-gating operate on.
+
+mod layer;
+mod optimizer;
+mod placement;
+
+pub use layer::{LayerMapping, ModelMapping};
+pub use optimizer::{optimize_layer, MappingStrategy};
+pub use placement::{MatrixId, MatrixRegion, MatrixShape};
+
+use crate::config::ExperimentConfig;
+
+/// Build the full model mapping for an experiment (tuned shapes).
+pub fn map_model(cfg: &ExperimentConfig) -> ModelMapping {
+    ModelMapping::build(cfg, MappingStrategy::Optimized)
+}
+
+/// The naive baseline mapping (no shape tuning) for the A2 ablation.
+pub fn map_model_naive(cfg: &ExperimentConfig) -> ModelMapping {
+    ModelMapping::build(cfg, MappingStrategy::Naive)
+}

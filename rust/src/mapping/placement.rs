@@ -1,0 +1,174 @@
+//! Matrix identities, tile shapes, and per-CT rectangular regions.
+
+use crate::isa::Rect;
+
+/// The seven weight matrices of one decoder layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MatrixId {
+    WQ,
+    WK,
+    WV,
+    WO,
+    WGate,
+    WUp,
+    WDown,
+}
+
+impl MatrixId {
+    pub fn all() -> [MatrixId; 7] {
+        [
+            MatrixId::WQ,
+            MatrixId::WK,
+            MatrixId::WV,
+            MatrixId::WO,
+            MatrixId::WGate,
+            MatrixId::WUp,
+            MatrixId::WDown,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixId::WQ => "W_Q",
+            MatrixId::WK => "W_K",
+            MatrixId::WV => "W_V",
+            MatrixId::WO => "W_O",
+            MatrixId::WGate => "W_gate",
+            MatrixId::WUp => "W_up",
+            MatrixId::WDown => "W_down",
+        }
+    }
+
+    /// Attention-block matrices (share the layer-input broadcast).
+    pub fn is_attention(&self) -> bool {
+        matches!(self, MatrixId::WQ | MatrixId::WK | MatrixId::WV | MatrixId::WO)
+    }
+}
+
+/// Logical [m, k] shape of a matrix, and its 256x256 tile grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatrixShape {
+    pub id: MatrixId,
+    /// Output dimension (crossbar rows).
+    pub m: usize,
+    /// Input dimension (crossbar cols).
+    pub k: usize,
+}
+
+impl MatrixShape {
+    pub const TILE: usize = 256;
+
+    /// Tile-grid rows (output tiles), padding partial tiles.
+    pub fn n_mt(&self) -> usize {
+        self.m.div_ceil(Self::TILE)
+    }
+
+    /// Tile-grid cols (input tiles).
+    pub fn n_kt(&self) -> usize {
+        self.k.div_ceil(Self::TILE)
+    }
+
+    /// Total crossbar tiles (= routers needed at 1 tile/PE).
+    pub fn tiles(&self) -> usize {
+        self.n_mt() * self.n_kt()
+    }
+
+    /// The seven matrices of a decoder layer with the given model dims.
+    pub fn layer_matrices(
+        hidden: usize,
+        q_dim: usize,
+        kv_dim: usize,
+        intermediate: usize,
+    ) -> Vec<MatrixShape> {
+        vec![
+            MatrixShape { id: MatrixId::WQ, m: q_dim, k: hidden },
+            MatrixShape { id: MatrixId::WK, m: kv_dim, k: hidden },
+            MatrixShape { id: MatrixId::WV, m: kv_dim, k: hidden },
+            MatrixShape { id: MatrixId::WO, m: hidden, k: q_dim },
+            MatrixShape { id: MatrixId::WGate, m: intermediate, k: hidden },
+            MatrixShape { id: MatrixId::WUp, m: intermediate, k: hidden },
+            MatrixShape { id: MatrixId::WDown, m: hidden, k: intermediate },
+        ]
+    }
+}
+
+/// One matrix's (piece of a) rectangular region on one CT's mesh.
+///
+/// The region hosts a `mt_range x kt_range` block of the matrix's tile
+/// grid laid out row-major inside `rect` (paper: "column-wise rectangular
+/// region"). A matrix that does not fit one CT is split into several
+/// regions on consecutive CTs, each still rectangular.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatrixRegion {
+    pub id: MatrixId,
+    /// CT index (global, 0-based).
+    pub ct: usize,
+    /// Region on that CT's mesh.
+    pub rect: Rect,
+    /// Tile rows [mt0, mt1) of the matrix grid hosted here.
+    pub mt_range: (usize, usize),
+    /// Tile cols [kt0, kt1) hosted here.
+    pub kt_range: (usize, usize),
+}
+
+impl MatrixRegion {
+    pub fn n_tiles(&self) -> usize {
+        (self.mt_range.1 - self.mt_range.0) * (self.kt_range.1 - self.kt_range.0)
+    }
+
+    /// Tile columns hosted (reduction span along k).
+    pub fn n_kt(&self) -> usize {
+        self.kt_range.1 - self.kt_range.0
+    }
+
+    pub fn n_mt(&self) -> usize {
+        self.mt_range.1 - self.mt_range.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_grid_counts() {
+        let s = MatrixShape { id: MatrixId::WQ, m: 2048, k: 2048 };
+        assert_eq!(s.n_mt(), 8);
+        assert_eq!(s.n_kt(), 8);
+        assert_eq!(s.tiles(), 64);
+        // padding
+        let p = MatrixShape { id: MatrixId::WK, m: 500, k: 300 };
+        assert_eq!(p.n_mt(), 2);
+        assert_eq!(p.n_kt(), 2);
+    }
+
+    #[test]
+    fn llama1b_layer_tiles() {
+        let ms = MatrixShape::layer_matrices(2048, 2048, 512, 8192);
+        let total: usize = ms.iter().map(|m| m.tiles()).sum();
+        // 64 + 16 + 16 + 64 + 256 + 256 + 256 = 928 tiles < 1024 (one CT)
+        assert_eq!(total, 928);
+    }
+
+    #[test]
+    fn llama8b_layer_needs_multiple_cts() {
+        let ms = MatrixShape::layer_matrices(4096, 4096, 1024, 14336);
+        let total: usize = ms.iter().map(|m| m.tiles()).sum();
+        // 256+64+64+256 + 3*16*56(pad) = 640 + 2688 = 3328 tiles
+        assert_eq!(total, 3328);
+        assert!(total > 1024);
+    }
+
+    #[test]
+    fn region_tile_count() {
+        let r = MatrixRegion {
+            id: MatrixId::WQ,
+            ct: 0,
+            rect: Rect::new(0, 0, 8, 8),
+            mt_range: (0, 8),
+            kt_range: (0, 8),
+        };
+        assert_eq!(r.n_tiles(), 64);
+        assert_eq!(r.n_kt(), 8);
+    }
+}

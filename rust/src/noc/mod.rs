@@ -1,0 +1,22 @@
+//! The 2D-mesh Inter-PE Computational Network (IPCN).
+//!
+//! Submodules:
+//!  * [`topology`] — mesh geometry, XY routing paths;
+//!  * [`spanning`] — spanning-tree construction for broadcast/reduce
+//!    collectives (paper SS III.B: "the collective communication pattern is
+//!    orchestrated using a spanning tree algorithm");
+//!  * [`flit`] — a flit-level, cycle-driven router model (4 planar ports +
+//!    2 PE adapters, per-port FIFOs, credit flow) used for validation and
+//!    small-mesh studies;
+//!  * [`analytic`] — the closed-form per-instruction cost model used by
+//!    full-model simulation, validated against [`flit`] in tests and in
+//!    the `noc_model` bench (experiment A3).
+
+pub mod analytic;
+pub mod flit;
+pub mod spanning;
+pub mod topology;
+
+pub use analytic::AnalyticNoc;
+pub use spanning::SpanningTree;
+pub use topology::{xy_path, Mesh};

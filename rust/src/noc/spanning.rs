@@ -1,0 +1,283 @@
+//! Spanning-tree construction for broadcast / reduction collectives.
+//!
+//! Paper SS III.B: "The collective communication pattern is orchestrated
+//! using a spanning tree algorithm, which determines the routing paths for
+//! each phase. This algorithm ensures balanced and congestion-free traffic
+//! by leveraging the regular and aligned mapping."
+//!
+//! For a rectangular destination region we build the classic dimension-
+//! ordered two-stage tree: the root first spans its row segment (X stage),
+//! then each row node spans its column segment (Y stage). Over a rect this
+//! is congestion-free — every mesh link is used by at most one tree edge —
+//! and its depth is the Manhattan radius of the rect from the root.
+
+use super::topology::Link;
+use crate::isa::{Coord, Rect};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A spanning tree over a set of routers, rooted at `root`.
+#[derive(Debug, Clone)]
+pub struct SpanningTree {
+    pub root: Coord,
+    /// parent[child] = parent coord (root absent).
+    pub parent: BTreeMap<Coord, Coord>,
+    /// Tree depth in hops (max root->leaf distance).
+    pub depth: u64,
+}
+
+impl SpanningTree {
+    /// Closed-form metrics of the dimension-ordered rect tree — the hot
+    /// path used by `AnalyticNoc` (building the explicit tree is
+    /// O(n * depth) in BTreeMap walks; these are O(1)). Equivalence with
+    /// the built tree is asserted in `closed_forms_match_built_tree`.
+    ///
+    /// depth = trunk (root -> clamped entry) + horizontal radius of the
+    /// rect from the entry + vertical radius.
+    pub fn depth_for_rect(root: Coord, dest: Rect) -> u64 {
+        let entry = Coord {
+            x: root.x.clamp(dest.x0, dest.x1 - 1),
+            y: root.y.clamp(dest.y0, dest.y1 - 1),
+        };
+        let trunk = root.manhattan(&entry);
+        let dx = (entry.x - dest.x0).max(dest.x1 - 1 - entry.x) as u64;
+        let dy = (entry.y - dest.y0).max(dest.y1 - 1 - entry.y) as u64;
+        trunk + dx + dy
+    }
+
+    /// Edge count: every node except the root has one parent edge.
+    pub fn edges_for_rect(root: Coord, dest: Rect) -> u64 {
+        let entry = Coord {
+            x: root.x.clamp(dest.x0, dest.x1 - 1),
+            y: root.y.clamp(dest.y0, dest.y1 - 1),
+        };
+        let trunk = root.manhattan(&entry);
+        // rect nodes (minus the entry if the root is inside the rect and
+        // IS the entry, which then has no parent edge) + trunk nodes.
+        dest.count() as u64 + trunk - 1
+    }
+
+    /// Max fan-in: row spine nodes feed <=2 horizontal + 2 vertical
+    /// children; edge/corner entries feed fewer.
+    pub fn fan_in_for_rect(root: Coord, dest: Rect) -> u64 {
+        let entry = Coord {
+            x: root.x.clamp(dest.x0, dest.x1 - 1),
+            y: root.y.clamp(dest.y0, dest.y1 - 1),
+        };
+        let horiz = u64::from(entry.x > dest.x0) + u64::from(entry.x + 1 < dest.x1);
+        let vert = u64::from(entry.y > dest.y0) + u64::from(entry.y + 1 < dest.y1);
+        // Spine nodes away from the entry also feed up to `vert` column
+        // children plus one horizontal pass-through.
+        let spine = 1 + vert;
+        (horiz + vert).max(spine).max(1)
+    }
+
+    /// Dimension-ordered tree covering `dest` from `root`.
+    ///
+    /// `root` need not lie inside `dest`; the trunk first routes from the
+    /// root to the nearest point of the rect (XY), then fans out.
+    pub fn for_rect(root: Coord, dest: Rect) -> Self {
+        assert!(dest.count() > 0, "empty destination rect");
+        let mut parent = BTreeMap::new();
+
+        // Entry point: clamp root into the rect.
+        let entry = Coord {
+            x: root.x.clamp(dest.x0, dest.x1 - 1),
+            y: root.y.clamp(dest.y0, dest.y1 - 1),
+        };
+
+        // Trunk: root -> entry along XY.
+        let mut prev = root;
+        for link in super::topology::xy_path(root, entry) {
+            parent.insert(link.to, prev);
+            prev = link.to;
+        }
+
+        // X stage: entry spans its row within the rect.
+        let row = entry.y;
+        for x in (dest.x0..dest.x1).rev() {
+            let c = Coord { x, y: row };
+            if c == entry {
+                continue;
+            }
+            let towards = if x > entry.x { x - 1 } else { x + 1 };
+            parent.insert(c, Coord { x: towards, y: row });
+        }
+
+        // Y stage: every row node spans its column.
+        for x in dest.x0..dest.x1 {
+            for y in dest.y0..dest.y1 {
+                let c = Coord { x, y };
+                if y == row {
+                    continue;
+                }
+                let towards = if y > row { y - 1 } else { y + 1 };
+                parent.insert(c, Coord { x, y: towards });
+            }
+        }
+        parent.remove(&root);
+
+        let depth = Self::compute_depth(root, &parent);
+        Self { root, parent, depth }
+    }
+
+    fn compute_depth(root: Coord, parent: &BTreeMap<Coord, Coord>) -> u64 {
+        let mut depth = 0;
+        for &node in parent.keys() {
+            let mut d = 0u64;
+            let mut cur = node;
+            while cur != root {
+                cur = parent[&cur];
+                d += 1;
+                assert!(d <= 4096, "cycle in spanning tree at {node:?}");
+            }
+            depth = depth.max(d);
+        }
+        depth
+    }
+
+    /// All nodes covered (root + members).
+    pub fn nodes(&self) -> BTreeSet<Coord> {
+        let mut s: BTreeSet<Coord> = self.parent.keys().copied().collect();
+        s.insert(self.root);
+        s
+    }
+
+    /// Directed edges child->parent (reduce direction). Broadcast uses the
+    /// reverse orientation.
+    pub fn edges_up(&self) -> Vec<Link> {
+        self.parent
+            .iter()
+            .map(|(&child, &par)| Link { from: child, to: par })
+            .collect()
+    }
+
+    /// Maximum number of tree edges sharing one mesh link (congestion-free
+    /// trees have 1).
+    pub fn max_link_sharing(&self) -> usize {
+        let mut counts: BTreeMap<(Coord, Coord), usize> = BTreeMap::new();
+        for e in self.edges_up() {
+            assert_eq!(
+                e.from.manhattan(&e.to),
+                1,
+                "tree edge must be a mesh link: {e:?}"
+            );
+            *counts.entry((e.from, e.to)).or_default() += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    }
+
+    /// Fan-in bound: the largest number of children any node has. The
+    /// reduce phase serializes children at the parent's input ports, so
+    /// the analytic model charges `max_fan_in` serialization slots.
+    pub fn max_fan_in(&self) -> usize {
+        let mut counts: BTreeMap<Coord, usize> = BTreeMap::new();
+        for par in self.parent.values() {
+            *counts.entry(*par).or_default() += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_rect_exactly() {
+        let dest = Rect::new(2, 3, 10, 9);
+        let t = SpanningTree::for_rect(Coord::new(4, 4), dest);
+        let nodes = t.nodes();
+        for c in dest.iter() {
+            assert!(nodes.contains(&c), "{c:?} not covered");
+        }
+        assert_eq!(nodes.len(), dest.count()); // root inside rect
+    }
+
+    #[test]
+    fn root_outside_rect_gets_trunk() {
+        let dest = Rect::new(4, 4, 8, 8);
+        let root = Coord::new(0, 0);
+        let t = SpanningTree::for_rect(root, dest);
+        let nodes = t.nodes();
+        assert!(nodes.contains(&root));
+        // trunk nodes exist between root and rect
+        assert!(nodes.len() > dest.count());
+        for c in dest.iter() {
+            assert!(nodes.contains(&c));
+        }
+    }
+
+    #[test]
+    fn no_cycles_and_rooted() {
+        let t = SpanningTree::for_rect(Coord::new(0, 0), Rect::new(0, 0, 16, 16));
+        // compute_depth asserts acyclicity; also every node reaches root.
+        assert!(t.depth >= 30); // 15 + 15
+    }
+
+    #[test]
+    fn congestion_free_over_rect() {
+        for root in [Coord::new(0, 0), Coord::new(5, 5), Coord::new(31, 0)] {
+            let t = SpanningTree::for_rect(root, Rect::new(0, 0, 32, 32));
+            assert_eq!(t.max_link_sharing(), 1, "root {root:?}");
+        }
+    }
+
+    #[test]
+    fn depth_is_manhattan_radius() {
+        let dest = Rect::new(0, 0, 8, 8);
+        let t = SpanningTree::for_rect(Coord::new(0, 0), dest);
+        assert_eq!(t.depth, 14); // 7 + 7 to the far corner
+    }
+
+    #[test]
+    fn singleton_rect() {
+        let t = SpanningTree::for_rect(Coord::new(3, 3), Rect::new(3, 3, 4, 4));
+        assert_eq!(t.depth, 0);
+        assert!(t.parent.is_empty());
+    }
+
+    #[test]
+    fn fan_in_bounded() {
+        let t = SpanningTree::for_rect(Coord::new(16, 16), Rect::new(0, 0, 32, 32));
+        // dimension-ordered tree: <= 2 row children + 2 column children
+        assert!(t.max_fan_in() <= 4, "fan-in {}", t.max_fan_in());
+    }
+
+    #[test]
+    fn closed_forms_match_built_tree() {
+        // The O(1) closed forms used by AnalyticNoc must agree with the
+        // explicitly built tree across roots inside/outside the rect.
+        let cases = [
+            (Coord::new(0, 0), Rect::new(0, 0, 32, 32)),
+            (Coord::new(16, 16), Rect::new(0, 0, 32, 32)),
+            (Coord::new(31, 0), Rect::new(4, 4, 12, 20)),
+            (Coord::new(0, 31), Rect::new(8, 0, 9, 1)),
+            (Coord::new(5, 5), Rect::new(5, 5, 6, 6)),
+            (Coord::new(2, 9), Rect::new(3, 1, 30, 28)),
+        ];
+        for (root, dest) in cases {
+            let t = SpanningTree::for_rect(root, dest);
+            assert_eq!(
+                SpanningTree::depth_for_rect(root, dest),
+                t.depth,
+                "depth mismatch for {root:?} {dest:?}"
+            );
+            assert_eq!(
+                SpanningTree::edges_for_rect(root, dest),
+                t.edges_up().len() as u64,
+                "edges mismatch for {root:?} {dest:?}"
+            );
+            assert!(
+                SpanningTree::fan_in_for_rect(root, dest)
+                    >= t.max_fan_in() as u64,
+                "fan-in closed form must upper-bound the tree for {root:?} {dest:?}: {} < {}",
+                SpanningTree::fan_in_for_rect(root, dest),
+                t.max_fan_in()
+            );
+            assert!(
+                SpanningTree::fan_in_for_rect(root, dest) <= 4,
+                "fan-in closed form exceeds dimension-order bound"
+            );
+        }
+    }
+}

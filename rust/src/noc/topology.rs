@@ -1,0 +1,135 @@
+//! Mesh geometry and deterministic XY (dimension-ordered) routing.
+
+use crate::isa::Coord;
+
+/// A w x h 2D mesh of routers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub w: usize,
+    pub h: usize,
+}
+
+impl Mesh {
+    pub fn new(w: usize, h: usize) -> Self {
+        assert!(w > 0 && h > 0);
+        Self { w, h }
+    }
+
+    pub fn square(dim: usize) -> Self {
+        Self::new(dim, dim)
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        (c.x as usize) < self.w && (c.y as usize) < self.h
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = Coord> + '_ {
+        (0..self.h).flat_map(move |y| (0..self.w).map(move |x| Coord::new(x, y)))
+    }
+
+    pub fn count(&self) -> usize {
+        self.w * self.h
+    }
+
+    /// Node id for dense indexing.
+    pub fn id(&self, c: Coord) -> usize {
+        c.y as usize * self.w + c.x as usize
+    }
+
+    pub fn coord(&self, id: usize) -> Coord {
+        Coord::new(id % self.w, id / self.w)
+    }
+
+    /// The four mesh neighbours of `c` (fewer on edges).
+    pub fn neighbors(&self, c: Coord) -> Vec<Coord> {
+        let mut out = Vec::with_capacity(4);
+        if c.x > 0 {
+            out.push(Coord { x: c.x - 1, y: c.y });
+        }
+        if (c.x as usize) < self.w - 1 {
+            out.push(Coord { x: c.x + 1, y: c.y });
+        }
+        if c.y > 0 {
+            out.push(Coord { x: c.x, y: c.y - 1 });
+        }
+        if (c.y as usize) < self.h - 1 {
+            out.push(Coord { x: c.x, y: c.y + 1 });
+        }
+        out
+    }
+}
+
+/// Directed link between adjacent routers (dense-indexable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Link {
+    pub from: Coord,
+    pub to: Coord,
+}
+
+/// The XY-routed path from `a` to `b`: X dimension first, then Y.
+/// Deterministic, minimal, and deadlock-free under dimension ordering.
+pub fn xy_path(a: Coord, b: Coord) -> Vec<Link> {
+    let mut links = Vec::with_capacity(a.manhattan(&b) as usize);
+    let mut cur = a;
+    while cur.x != b.x {
+        let nx = if b.x > cur.x { cur.x + 1 } else { cur.x - 1 };
+        let next = Coord { x: nx, y: cur.y };
+        links.push(Link { from: cur, to: next });
+        cur = next;
+    }
+    while cur.y != b.y {
+        let ny = if b.y > cur.y { cur.y + 1 } else { cur.y - 1 };
+        let next = Coord { x: cur.x, y: ny };
+        links.push(Link { from: cur, to: next });
+        cur = next;
+    }
+    links
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_length_is_manhattan() {
+        let a = Coord::new(1, 2);
+        let b = Coord::new(7, 9);
+        assert_eq!(xy_path(a, b).len() as u64, a.manhattan(&b));
+        assert!(xy_path(a, a).is_empty());
+    }
+
+    #[test]
+    fn path_is_contiguous_x_then_y() {
+        let a = Coord::new(3, 3);
+        let b = Coord::new(0, 6);
+        let p = xy_path(a, b);
+        // contiguity
+        for w in p.windows(2) {
+            assert_eq!(w[0].to, w[1].from);
+        }
+        assert_eq!(p.first().unwrap().from, a);
+        assert_eq!(p.last().unwrap().to, b);
+        // X moves precede Y moves
+        let first_y_move = p.iter().position(|l| l.from.x == l.to.x);
+        if let Some(i) = first_y_move {
+            assert!(p[i..].iter().all(|l| l.from.x == l.to.x));
+        }
+    }
+
+    #[test]
+    fn mesh_neighbors_edge_cases() {
+        let m = Mesh::square(4);
+        assert_eq!(m.neighbors(Coord::new(0, 0)).len(), 2);
+        assert_eq!(m.neighbors(Coord::new(1, 0)).len(), 3);
+        assert_eq!(m.neighbors(Coord::new(1, 1)).len(), 4);
+        assert_eq!(m.neighbors(Coord::new(3, 3)).len(), 2);
+    }
+
+    #[test]
+    fn id_coord_roundtrip() {
+        let m = Mesh::new(5, 7);
+        for id in 0..m.count() {
+            assert_eq!(m.id(m.coord(id)), id);
+        }
+    }
+}

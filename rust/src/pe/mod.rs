@@ -1,0 +1,19 @@
+//! Processing-element models: the heterogeneous macro pair.
+//!
+//!  * [`rram`] — RRAM-ACIM behavioural model (256x256 analog crossbar;
+//!    frozen pre-trained weight tiles; program-once).
+//!  * [`sram`] — SRAM-DCIM behavioural model (256x64 digital MAC; LoRA
+//!    matrices; fast rewrite for adapter swaps).
+//!  * [`scratchpad`] — the per-router 32 KB buffer with cyclic KV blocks.
+//!  * [`numerics`] — the integer-exact quantization arithmetic shared with
+//!    `python/compile/kernels/ref.py` (same spec, same results; verified
+//!    against the AOT golden vectors in `tests/golden_numerics.rs`).
+
+pub mod numerics;
+pub mod rram;
+pub mod scratchpad;
+pub mod sram;
+
+pub use rram::RramAcim;
+pub use scratchpad::Scratchpad;
+pub use sram::SramDcim;

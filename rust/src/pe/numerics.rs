@@ -1,0 +1,297 @@
+//! Integer-exact quantization arithmetic — the Rust half of the numerical
+//! contract defined in `python/compile/kernels/ref.py`.
+//!
+//! The spec (kept in lockstep with ref.py's module docstring):
+//!  * weights: symmetric int8 per 256x256 tile, scale = max|W|/127;
+//!  * activations: symmetric int8 per 256-element K-slice (DAC);
+//!  * bit-line accumulation exact in i32; ADC read-out rescales by
+//!    scale_w * scale_x (optional finite `adc_bits` uniform quantizer);
+//!  * LoRA path in f32 (digital SRAM-DCIM).
+//!
+//! `tests/golden_numerics.rs` checks this implementation bit-for-bit-ish
+//! (f32 tolerance) against the AOT golden vectors emitted by aot.py.
+
+pub const TILE: usize = 256;
+pub const QMAX: f32 = 127.0;
+
+/// Round-half-away-from-zero, matching jnp.round... careful: jnp.round is
+/// round-half-to-even (banker's). We replicate half-to-even explicitly.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    // f32::round_ties_even is stable since 1.77
+    x.round_ties_even()
+}
+
+/// Symmetric int8 scale of a slice: max|t|/127, guarded against zeros.
+pub fn symmetric_scale(t: &[f32]) -> f32 {
+    let m = t.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    (if m > 0.0 { m } else { 1.0 }) / QMAX
+}
+
+/// Quantize to int8 with the given scale (round-ties-even, clip ±127).
+pub fn quantize_i8(t: &[f32], scale: f32, out: &mut [i8]) {
+    for (o, &v) in out.iter_mut().zip(t) {
+        let q = round_ties_even(v / scale).clamp(-QMAX, QMAX);
+        *o = q as i8;
+    }
+}
+
+/// A weight matrix quantized into 256x256 int8 crossbar tiles.
+#[derive(Debug, Clone)]
+pub struct QuantMatrix {
+    /// Row-major [m, k] int8.
+    pub wq: Vec<i8>,
+    /// Per-tile scales, row-major [m/256, k/256].
+    pub scales: Vec<f32>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major [m, k] f32 matrix (m, k multiples of 256).
+    pub fn quantize(w: &[f32], m: usize, k: usize) -> Self {
+        assert_eq!(w.len(), m * k);
+        assert!(m % TILE == 0 && k % TILE == 0, "untiled shape {m}x{k}");
+        let (n_mt, n_kt) = (m / TILE, k / TILE);
+        let mut scales = vec![0.0f32; n_mt * n_kt];
+        for mt in 0..n_mt {
+            for kt in 0..n_kt {
+                let mut mx = 0.0f32;
+                for r in 0..TILE {
+                    let row = mt * TILE + r;
+                    let base = row * k + kt * TILE;
+                    for &v in &w[base..base + TILE] {
+                        mx = mx.max(v.abs());
+                    }
+                }
+                scales[mt * n_kt + kt] = (if mx > 0.0 { mx } else { 1.0 }) / QMAX;
+            }
+        }
+        let mut wq = vec![0i8; m * k];
+        for row in 0..m {
+            let mt = row / TILE;
+            for kt in 0..n_kt {
+                let s = scales[mt * n_kt + kt];
+                let base = row * k + kt * TILE;
+                for c in 0..TILE {
+                    let q = round_ties_even(w[base + c] / s).clamp(-QMAX, QMAX);
+                    wq[base + c] = q as i8;
+                }
+            }
+        }
+        Self { wq, scales, m, k }
+    }
+
+    pub fn n_mt(&self) -> usize {
+        self.m / TILE
+    }
+
+    pub fn n_kt(&self) -> usize {
+        self.k / TILE
+    }
+
+    pub fn scale(&self, mt: usize, kt: usize) -> f32 {
+        self.scales[mt * self.n_kt() + kt]
+    }
+}
+
+/// Crossbar SMAC: y[t, m] = dequant(xq @ Wq^T), tile-by-tile, exactly the
+/// hardware (and ref.py) order of operations. `x` is row-major [t, k].
+pub fn pim_matmul(x: &[f32], t: usize, w: &QuantMatrix, adc_bits: Option<u32>) -> Vec<f32> {
+    let (m, k) = (w.m, w.k);
+    assert_eq!(x.len(), t * k);
+    let (n_mt, n_kt) = (w.n_mt(), w.n_kt());
+    let mut y = vec![0.0f32; t * m];
+    let mut xq = vec![0i8; TILE];
+    for ti in 0..t {
+        for kt in 0..n_kt {
+            let xs = &x[ti * k + kt * TILE..ti * k + (kt + 1) * TILE];
+            let sx = symmetric_scale(xs);
+            quantize_i8(xs, sx, &mut xq);
+            for mt in 0..n_mt {
+                let sw = w.scale(mt, kt);
+                for r in 0..TILE {
+                    let row = mt * TILE + r;
+                    let wrow = &w.wq[row * k + kt * TILE..row * k + (kt + 1) * TILE];
+                    let mut acc: i32 = 0;
+                    for c in 0..TILE {
+                        acc += i32::from(xq[c]) * i32::from(wrow[c]);
+                    }
+                    let mut partial = acc as f32 * sx * sw;
+                    if let Some(bits) = adc_bits {
+                        let full_scale = QMAX * QMAX * TILE as f32 * sx * sw;
+                        let lsb = 2.0 * full_scale / 2f32.powi(bits as i32);
+                        partial = round_ties_even(partial / lsb) * lsb;
+                    }
+                    y[ti * m + row] += partial;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Digital LoRA path: y[t, m] = (x @ A^T) @ B^T in f32.
+/// a: [r, k] row-major; b: [m, r] row-major.
+pub fn lora_path(x: &[f32], t: usize, k: usize, a: &[f32], b: &[f32], r: usize, m: usize) -> Vec<f32> {
+    assert_eq!(a.len(), r * k);
+    assert_eq!(b.len(), m * r);
+    let mut ax = vec![0.0f32; t * r];
+    for ti in 0..t {
+        for ri in 0..r {
+            let mut s = 0.0f32;
+            for ki in 0..k {
+                s += x[ti * k + ki] * a[ri * k + ki];
+            }
+            ax[ti * r + ri] = s;
+        }
+    }
+    let mut y = vec![0.0f32; t * m];
+    for ti in 0..t {
+        for mi in 0..m {
+            let mut s = 0.0f32;
+            for ri in 0..r {
+                s += ax[ti * r + ri] * b[mi * r + ri];
+            }
+            y[ti * m + mi] = s;
+        }
+    }
+    y
+}
+
+/// Full PE-pair computation: crossbar SMAC + fused LoRA path.
+pub fn pim_lora_matmul(
+    x: &[f32],
+    t: usize,
+    w: &QuantMatrix,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+) -> Vec<f32> {
+    let mut y = pim_matmul(x, t, w, None);
+    let l = lora_path(x, t, w.k, a, b, r, w.m);
+    for (yi, li) in y.iter_mut().zip(&l) {
+        *yi += li;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det_matrix(m: usize, k: usize, seed: u64) -> Vec<f32> {
+        // small deterministic pseudo-random generator (xorshift)
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..m * k)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_shapes_and_range() {
+        let w = det_matrix(512, 256, 1);
+        let q = QuantMatrix::quantize(&w, 512, 256);
+        assert_eq!(q.n_mt(), 2);
+        assert_eq!(q.n_kt(), 1);
+        assert!(q.wq.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+        assert!(q.scales.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "untiled")]
+    fn quantize_rejects_untiled() {
+        QuantMatrix::quantize(&[0.0; 100 * 256], 100, 256);
+    }
+
+    #[test]
+    fn matmul_tracks_float_reference() {
+        let t = 3;
+        let (m, k) = (256, 512);
+        let x = det_matrix(t, k, 2);
+        let w = det_matrix(m, k, 3)
+            .iter()
+            .map(|v| v / (k as f32).sqrt())
+            .collect::<Vec<_>>();
+        let q = QuantMatrix::quantize(&w, m, k);
+        let got = pim_matmul(&x, t, &q, None);
+        // float reference
+        let mut want = vec![0.0f32; t * m];
+        for ti in 0..t {
+            for mi in 0..m {
+                let mut s = 0.0;
+                for ki in 0..k {
+                    s += x[ti * k + ki] * w[mi * k + ki];
+                }
+                want[ti * m + mi] = s;
+            }
+        }
+        let max_abs = want.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .fold(0.0f32, |a, (&g, &w)| a.max((g - w).abs()));
+        assert!(
+            max_err / max_abs < 0.05,
+            "rel err {} too large",
+            max_err / max_abs
+        );
+    }
+
+    #[test]
+    fn zero_rank_lora_is_identity() {
+        let t = 2;
+        let (m, k, r) = (256, 256, 1);
+        let x = det_matrix(t, k, 4);
+        let w = det_matrix(m, k, 5);
+        let q = QuantMatrix::quantize(&w, m, k);
+        let a = vec![0.0f32; r * k];
+        let b = vec![0.0f32; m * r];
+        let plain = pim_matmul(&x, t, &q, None);
+        let fused = pim_lora_matmul(&x, t, &q, &a, &b, r);
+        assert_eq!(plain, fused);
+    }
+
+    #[test]
+    fn adc_bits_add_bounded_error() {
+        let t = 2;
+        let (m, k) = (256, 512);
+        let x = det_matrix(t, k, 6);
+        let w = det_matrix(m, k, 7);
+        let q = QuantMatrix::quantize(&w, m, k);
+        let exact = pim_matmul(&x, t, &q, None);
+        let approx = pim_matmul(&x, t, &q, Some(8));
+        let coarse = pim_matmul(&x, t, &q, Some(6));
+        let err8: f32 = exact
+            .iter()
+            .zip(&approx)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        let err6: f32 = exact
+            .iter()
+            .zip(&coarse)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err6 >= err8);
+        assert!(err8 > 0.0);
+    }
+
+    #[test]
+    fn lora_rank_one_outer_product() {
+        // r=1: y = (x . a) * b
+        let (t, k, m, r) = (1, 256, 256, 1);
+        let x = det_matrix(t, k, 8);
+        let a = det_matrix(r, k, 9);
+        let b = det_matrix(m, r, 10);
+        let y = lora_path(&x, t, k, &a, &b, r, m);
+        let dot: f32 = x.iter().zip(&a).map(|(p, q)| p * q).sum();
+        for mi in 0..m {
+            assert!((y[mi] - dot * b[mi]).abs() < 1e-3);
+        }
+    }
+}

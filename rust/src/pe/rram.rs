@@ -1,0 +1,111 @@
+//! RRAM-ACIM macro behavioural model (after Wan et al., Nature 2022 [5]).
+//!
+//! Non-volatile 256x256 analog crossbar: weights are programmed once per
+//! base model (write is slow and endurance-limited, so the simulator
+//! charges programming only at model-load time); SMAC passes run the DAC ->
+//! bit-line accumulate -> ADC pipeline. Latency/energy per pass come from
+//! the calibration constants seeded by Table IV.
+
+use crate::config::{CalibConstants, SystemConfig};
+
+/// Programming state of one crossbar tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileState {
+    /// Never programmed (unused capacity).
+    Blank,
+    /// Holds a frozen pre-trained weight tile (matrix id, tile row, tile col).
+    Programmed { matrix: u32, mt: u16, kt: u16 },
+}
+
+/// One PE's RRAM-ACIM macro.
+#[derive(Debug, Clone)]
+pub struct RramAcim {
+    pub rows: usize,
+    pub cols: usize,
+    pub state: TileState,
+    /// Total analog passes executed (stats / energy cross-check).
+    pub passes: u64,
+    /// Whether the macro is currently power-gated by SRPG.
+    pub gated: bool,
+}
+
+impl RramAcim {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self {
+            rows: sys.rram_rows,
+            cols: sys.rram_cols,
+            state: TileState::Blank,
+            passes: 0,
+            gated: false,
+        }
+    }
+
+    /// Program a weight tile (once, at model load). Reprogramming a
+    /// non-blank macro is a model-swap, which the paper's flow does not do
+    /// at run time — the simulator treats it as a configuration error.
+    pub fn program(&mut self, matrix: u32, mt: u16, kt: u16) -> Result<(), String> {
+        if let TileState::Programmed { matrix: m0, .. } = self.state {
+            return Err(format!(
+                "RRAM tile already programmed with matrix {m0}; runtime \
+                 reprogramming of RRAM is not supported (use SRAM-DCIM for \
+                 mutable weights)"
+            ));
+        }
+        self.state = TileState::Programmed { matrix, mt, kt };
+        Ok(())
+    }
+
+    /// Cycles to run `n` SMAC passes (one pass = one <=256-elem slice).
+    pub fn pass_cycles(&self, n: u64, calib: &CalibConstants) -> u64 {
+        assert!(!self.gated, "SMAC issued to a power-gated RRAM macro");
+        n * calib.rram_pass_cycles
+    }
+
+    /// Record `n` executed passes (called by the sim after timing).
+    pub fn record_passes(&mut self, n: u64) {
+        self.passes += n;
+    }
+
+    /// int8 weight bytes held by this macro when programmed.
+    pub fn capacity_bytes(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_once_only() {
+        let sys = SystemConfig::default();
+        let mut m = RramAcim::new(&sys);
+        assert!(m.program(1, 0, 0).is_ok());
+        let err = m.program(2, 0, 0).unwrap_err();
+        assert!(err.contains("already programmed"));
+    }
+
+    #[test]
+    fn pass_cycles_linear() {
+        let sys = SystemConfig::default();
+        let calib = CalibConstants::default();
+        let m = RramAcim::new(&sys);
+        assert_eq!(m.pass_cycles(10, &calib), 10 * calib.rram_pass_cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-gated")]
+    fn gated_macro_rejects_work() {
+        let sys = SystemConfig::default();
+        let calib = CalibConstants::default();
+        let mut m = RramAcim::new(&sys);
+        m.gated = true;
+        let _ = m.pass_cycles(1, &calib);
+    }
+
+    #[test]
+    fn capacity_matches_table1() {
+        let m = RramAcim::new(&SystemConfig::default());
+        assert_eq!(m.capacity_bytes(), 65536);
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-router scratchpad model with cyclic KV-cache block placement.
+//!
+//! Paper SS III.B: K/V vectors of each generated token are appended to
+//! statically pre-allocated buffers, "organized in a cyclic fashion across
+//! distributed memory units, enabling uniform load distribution and
+//! mitigating memory contention... scratchpad utilization remains balanced
+//! irrespective of sequence length."
+//!
+//! The scratchpad is split at allocation time into named regions
+//! (intermediate Q/K/V/O tiles co-located with their weights, plus the KV
+//! ring). `CyclicKv` implements the distributed ring across the routers
+//! that host a layer's KV.
+
+use crate::config::SystemConfig;
+use std::collections::BTreeMap;
+
+/// A named region inside one router's scratchpad.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// One router's scratchpad: a 32 KB budget carved into regions.
+#[derive(Debug, Clone, Default)]
+pub struct Scratchpad {
+    pub capacity: usize,
+    regions: BTreeMap<String, Region>,
+    used: usize,
+    /// Traffic counters (energy cross-check).
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl Scratchpad {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self { capacity: sys.scratchpad_bytes, ..Default::default() }
+    }
+
+    /// Allocate a named region; fails when over budget.
+    pub fn alloc(&mut self, name: &str, bytes: usize) -> Result<Region, String> {
+        if self.regions.contains_key(name) {
+            return Err(format!("region '{name}' already allocated"));
+        }
+        if self.used + bytes > self.capacity {
+            return Err(format!(
+                "scratchpad overflow: {} + {bytes} > {} (region '{name}')",
+                self.used, self.capacity
+            ));
+        }
+        let r = Region { offset: self.used, bytes };
+        self.used += bytes;
+        self.regions.insert(name.to_string(), r);
+        Ok(r)
+    }
+
+    pub fn region(&self, name: &str) -> Option<Region> {
+        self.regions.get(name).copied()
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn record_read(&mut self, bytes: u64) {
+        self.bytes_read += bytes;
+    }
+
+    pub fn record_write(&mut self, bytes: u64) {
+        self.bytes_written += bytes;
+    }
+}
+
+/// The distributed cyclic KV ring for one layer: tokens are striped
+/// round-robin across the `n_routers` scratchpad regions that co-locate
+/// with the layer's K/V weights.
+#[derive(Debug, Clone)]
+pub struct CyclicKv {
+    pub n_routers: usize,
+    /// Bytes of K+V one token occupies on its host router.
+    pub token_bytes: usize,
+    /// Per-router region capacity in tokens.
+    pub tokens_per_router: usize,
+    /// Tokens currently resident.
+    pub len: usize,
+}
+
+impl CyclicKv {
+    pub fn new(n_routers: usize, token_bytes: usize, region_bytes: usize) -> Self {
+        assert!(n_routers > 0);
+        Self {
+            n_routers,
+            token_bytes,
+            tokens_per_router: region_bytes / token_bytes.max(1),
+            len: 0,
+        }
+    }
+
+    /// Router (by KV-ring index) hosting token `t` — the cyclic placement.
+    pub fn host(&self, t: usize) -> usize {
+        t % self.n_routers
+    }
+
+    /// Append one token; returns the hosting ring index.
+    pub fn append(&mut self) -> Result<usize, String> {
+        let h = self.host(self.len);
+        let resident = self.tokens_on(h);
+        if resident >= self.tokens_per_router {
+            return Err(format!(
+                "KV ring overflow on router {h}: {resident} tokens >= cap {}",
+                self.tokens_per_router
+            ));
+        }
+        self.len += 1;
+        Ok(h)
+    }
+
+    /// Tokens resident on ring index `r`.
+    pub fn tokens_on(&self, r: usize) -> usize {
+        if r >= self.n_routers {
+            return 0;
+        }
+        self.len / self.n_routers + usize::from(r < self.len % self.n_routers)
+    }
+
+    /// Max-min resident-token imbalance (cyclic placement keeps this <= 1).
+    pub fn imbalance(&self) -> usize {
+        if self.len == 0 {
+            return 0;
+        }
+        let max = (0..self.n_routers).map(|r| self.tokens_on(r)).max().unwrap();
+        let min = (0..self.n_routers).map(|r| self.tokens_on(r)).min().unwrap();
+        max - min
+    }
+
+    /// Total capacity in tokens.
+    pub fn capacity(&self) -> usize {
+        self.tokens_per_router * self.n_routers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_respects_budget() {
+        let mut s = Scratchpad::new(&SystemConfig::default());
+        assert!(s.alloc("kv", 16 * 1024).is_ok());
+        assert!(s.alloc("act", 12 * 1024).is_ok());
+        let err = s.alloc("big", 8 * 1024).unwrap_err();
+        assert!(err.contains("overflow"));
+        assert_eq!(s.free_bytes(), 4 * 1024);
+    }
+
+    #[test]
+    fn duplicate_region_rejected() {
+        let mut s = Scratchpad::new(&SystemConfig::default());
+        s.alloc("kv", 1024).unwrap();
+        assert!(s.alloc("kv", 1024).is_err());
+    }
+
+    #[test]
+    fn cyclic_balance_invariant() {
+        // 16 KB regions at 512 B/token = 32 tokens per router, 224 total.
+        let mut kv = CyclicKv::new(7, 512, 16 * 1024);
+        assert_eq!(kv.capacity(), 224);
+        for _ in 0..223 {
+            kv.append().unwrap();
+            assert!(kv.imbalance() <= 1, "imbalance {} at len {}", kv.imbalance(), kv.len);
+        }
+        // 223 = 7 * 31 + 6 -> hosts 0..5 hold 32, host 6 holds 31.
+        assert_eq!(kv.tokens_on(0), 32);
+        assert_eq!(kv.tokens_on(6), 31);
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let mut kv = CyclicKv::new(2, 512, 1024); // 2 tokens per router
+        for _ in 0..4 {
+            kv.append().unwrap();
+        }
+        assert!(kv.append().is_err());
+    }
+
+    #[test]
+    fn host_is_round_robin() {
+        let kv = CyclicKv::new(4, 512, 16 * 1024);
+        assert_eq!(kv.host(0), 0);
+        assert_eq!(kv.host(5), 1);
+        assert_eq!(kv.host(11), 3);
+    }
+}

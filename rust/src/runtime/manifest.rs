@@ -1,0 +1,195 @@
+//! Parser for `artifacts/manifest.json` (emitted by aot.py).
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One tensor entry (parameter or output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Path relative to the artifacts root.
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub sha256_prefix: String,
+}
+
+impl TensorSpec {
+    pub fn elem_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "int8" => 1,
+            "float32" | "int32" => 4,
+            other => panic!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.n_elems() * self.elem_bytes()
+    }
+}
+
+/// One lowered HLO module with its tensors.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub hlo: String,
+    pub params: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The golden-model configuration aot.py baked in.
+#[derive(Debug, Clone)]
+pub struct GoldenConfig {
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub lora_rank: usize,
+    pub kv_capacity: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub config: GoldenConfig,
+    pub modules: Vec<ModuleSpec>,
+}
+
+fn tensor(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.get("name").and_then(Json::as_str).context("tensor name")?.into(),
+        file: j.get("file").and_then(Json::as_str).context("tensor file")?.into(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<_>>()?,
+        dtype: j.get("dtype").and_then(Json::as_str).context("tensor dtype")?.into(),
+        sha256_prefix: j
+            .get("sha256")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .into(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let cfg = j.get("config").context("config")?;
+        let num = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
+        };
+        let config = GoldenConfig {
+            hidden: num("hidden")?,
+            n_heads: num("n_heads")?,
+            n_kv_heads: num("n_kv_heads")?,
+            head_dim: num("head_dim")?,
+            intermediate: num("intermediate")?,
+            lora_rank: num("lora_rank")?,
+            kv_capacity: num("kv_capacity")?,
+        };
+        let mut modules = Vec::new();
+        for (name, m) in j.get("modules").and_then(Json::as_obj).context("modules")? {
+            let parse_list = |k: &str| -> Result<Vec<TensorSpec>> {
+                m.get(k)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("{name}.{k}"))?
+                    .iter()
+                    .map(tensor)
+                    .collect()
+            };
+            modules.push(ModuleSpec {
+                name: name.clone(),
+                hlo: m.get("hlo").and_then(Json::as_str).context("hlo")?.into(),
+                params: parse_list("params")?,
+                outputs: parse_list("outputs")?,
+            });
+        }
+        Ok(Self {
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            config,
+            modules,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "seed": 20260710,
+      "config": {"hidden": 512, "n_heads": 8, "n_kv_heads": 8,
+                 "head_dim": 64, "intermediate": 1024, "lora_rank": 8,
+                 "lora_targets": ["q", "v"], "rope_theta": 500000.0,
+                 "rms_eps": 1e-05, "kv_capacity": 512},
+      "modules": {
+        "decode_step": {
+          "hlo": "decode_step.hlo.txt",
+          "params": [
+            {"name": "ds_in_000", "file": "data/ds_in_000.bin",
+             "shape": [512], "dtype": "float32", "sha256": "aabb"},
+            {"name": "ds_in_001", "file": "data/ds_in_001.bin",
+             "shape": [512, 512], "dtype": "int8", "sha256": "ccdd"}
+          ],
+          "outputs": [
+            {"name": "ds_out_000", "file": "data/ds_out_000.bin",
+             "shape": [], "dtype": "int32", "sha256": "eeff"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.seed, 20260710);
+        assert_eq!(m.config.hidden, 512);
+        assert_eq!(m.modules.len(), 1);
+        let ds = &m.modules[0];
+        assert_eq!(ds.name, "decode_step");
+        assert_eq!(ds.params.len(), 2);
+        assert_eq!(ds.params[1].byte_len(), 512 * 512);
+        assert_eq!(ds.outputs[0].byte_len(), 4); // scalar int32
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let p = Path::new("artifacts/manifest.json");
+        if !p.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(p).unwrap();
+        assert_eq!(m.modules.len(), 3);
+        let names: Vec<&str> = m.modules.iter().map(|x| x.name.as_str()).collect();
+        assert!(names.contains(&"decode_step"));
+        assert!(names.contains(&"prefill_block"));
+        assert!(names.contains(&"lora_matmul"));
+        for module in &m.modules {
+            assert!(!module.params.is_empty());
+            assert!(!module.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse(r#"{"seed": 1}"#).is_err());
+    }
+}

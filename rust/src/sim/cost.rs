@@ -1,0 +1,338 @@
+//! Per-instruction and per-phase cycle + energy evaluation.
+//!
+//! Each IPCN instruction maps to a closed-form cost from the analytic NoC
+//! model and the macro latency models. Within a phase, instructions on
+//! disjoint router regions execute in parallel (phase latency = max);
+//! repeats multiply; phases marked `overlaps_prev` merge with the previous
+//! phase under max() — the hardware pipelines them on disjoint macros.
+
+use crate::config::{CalibConstants, SystemConfig};
+use crate::energy::EnergyLedger;
+use crate::isa::{Instr, Phase, Program};
+use crate::noc::AnalyticNoc;
+
+/// Cycle + energy summary of a phase or program run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    pub cycles: u64,
+    /// Event counters (posted to the ledger by `post`).
+    pub rram_passes: u64,
+    pub sram_passes: u64,
+    pub dmac_macs: u64,
+    pub softmax_elems: u64,
+    pub spad_bytes: u64,
+    pub net_byte_hops: u64,
+    pub reprog_bytes: u64,
+    pub d2d_bytes: u64,
+}
+
+impl PhaseCost {
+    pub fn post(&self, ledger: &mut EnergyLedger) {
+        ledger.post_rram_passes(self.rram_passes);
+        ledger.post_sram_passes(self.sram_passes);
+        ledger.post_dmac_macs(self.dmac_macs + self.softmax_elems * 4);
+        ledger.post_scratchpad_bytes(self.spad_bytes);
+        ledger.post_network(self.net_byte_hops, 1);
+        ledger.post_sram_writes(self.reprog_bytes);
+        // D2D energy folded into network at a fixed 4-hop equivalent.
+        ledger.post_network(self.d2d_bytes * 4, 1);
+    }
+
+    fn merge_parallel(&mut self, other: PhaseCost) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.rram_passes += other.rram_passes;
+        self.sram_passes += other.sram_passes;
+        self.dmac_macs += other.dmac_macs;
+        self.softmax_elems += other.softmax_elems;
+        self.spad_bytes += other.spad_bytes;
+        self.net_byte_hops += other.net_byte_hops;
+        self.reprog_bytes += other.reprog_bytes;
+        self.d2d_bytes += other.d2d_bytes;
+    }
+
+    fn scale(&mut self, n: u64) {
+        self.cycles *= n;
+        self.rram_passes *= n;
+        self.sram_passes *= n;
+        self.dmac_macs *= n;
+        self.softmax_elems *= n;
+        self.spad_bytes *= n;
+        self.net_byte_hops *= n;
+        self.reprog_bytes *= n;
+        self.d2d_bytes *= n;
+    }
+}
+
+/// Cost of one instruction.
+pub fn instr_cost(
+    i: &Instr,
+    sys: &SystemConfig,
+    calib: &CalibConstants,
+    noc: &AnalyticNoc,
+) -> PhaseCost {
+    let mut c = PhaseCost::default();
+    match i {
+        Instr::Broadcast { root, dest, bytes } => {
+            let n = noc.broadcast(*root, *dest, *bytes as u64);
+            c.cycles = n.cycles;
+            c.net_byte_hops = n.byte_hops;
+        }
+        Instr::Reduce { src, root, bytes } => {
+            let n = noc.reduce(*src, *root, *bytes as u64);
+            c.cycles = n.cycles;
+            c.net_byte_hops = n.byte_hops;
+        }
+        Instr::Unicast { from, to, bytes } => {
+            let n = noc.unicast(*from, *to, *bytes as u64);
+            c.cycles = n.cycles;
+            c.net_byte_hops = n.byte_hops;
+        }
+        Instr::Smac { pes, passes } => {
+            // All routers in the region run their passes in parallel.
+            c.cycles = *passes as u64 * calib.rram_pass_cycles
+                + calib.scratchpad_latency_cycles;
+            c.rram_passes = pes.count() as u64 * *passes as u64;
+        }
+        Instr::SramMac { pes, passes } => {
+            c.cycles = *passes as u64 * calib.sram_pass_cycles;
+            c.sram_passes = pes.count() as u64 * *passes as u64;
+        }
+        Instr::Dmac { routers, macs } => {
+            let units = (routers.count() * sys.dmac_per_router) as f64;
+            c.cycles = ((*macs as f64)
+                / (units * calib.dmac_macs_per_cycle))
+                .ceil() as u64;
+            c.dmac_macs = *macs as u64;
+        }
+        Instr::Softmax { routers, elems } => {
+            // exp LUT + normalize, distributed over the routers.
+            c.cycles = ((*elems as f64 * calib.softmax_cycles_per_elem)
+                / routers.count() as f64)
+                .ceil() as u64
+                // plus one cross-region reduction for the normalizer
+                + calib.hop_cycles * (routers.width() + routers.height()) as u64;
+            c.softmax_elems = *elems as u64;
+        }
+        Instr::SpadRead { routers, bytes } | Instr::SpadWrite { routers, bytes } => {
+            // Streams in parallel across the region's scratchpads; each
+            // pad moves its share at one 64-bit word per cycle.
+            let per_router = (*bytes as f64 / routers.count() as f64).ceil();
+            c.cycles = calib.scratchpad_latency_cycles
+                + (per_router / sys.link_bytes_per_cycle() as f64).ceil() as u64;
+            c.spad_bytes = *bytes as u64;
+        }
+        Instr::Reprogram { pes, bytes } => {
+            // Writes stream into the region's SRAM macros in parallel,
+            // bottlenecked by the per-macro write port.
+            let per_macro = (*bytes as f64 / pes.count() as f64).ceil();
+            c.cycles = (per_macro / calib.sram_write_bytes_per_cycle).ceil() as u64;
+            c.reprog_bytes = *bytes as u64;
+        }
+        Instr::Gate { .. } => {
+            // Power-gate settle time: a handful of cycles.
+            c.cycles = 8;
+        }
+        Instr::Sync => {
+            c.cycles = calib.nmc_issue_cycles;
+        }
+        Instr::D2d { bytes, hops, .. } => {
+            if *hops >= 1 {
+                // Store-and-forward chain: every hop re-buffers the
+                // payload (decode's small per-token deliveries).
+                c.cycles = (*hops as u64)
+                    * (calib.d2d_latency_cycles
+                        + (*bytes as f64 / calib.d2d_sf_bytes_per_cycle).ceil() as u64);
+            } else {
+                // Cut-through stream at full SerDes rate.
+                c.cycles = calib.d2d_latency_cycles
+                    + (*bytes as f64 / calib.d2d_bytes_per_cycle).ceil() as u64;
+            }
+            c.d2d_bytes = *bytes as u64 * (*hops).max(1) as u64;
+        }
+    }
+    c
+}
+
+/// Cost of one phase: parallel-max over instructions, times repeat.
+pub fn phase_cost(
+    p: &Phase,
+    sys: &SystemConfig,
+    calib: &CalibConstants,
+    noc: &AnalyticNoc,
+) -> PhaseCost {
+    let mut c = PhaseCost::default();
+    for i in &p.instrs {
+        c.merge_parallel(instr_cost(i, sys, calib, noc));
+    }
+    c.scale(p.repeat as u64);
+    c
+}
+
+/// Cost of a whole program: sequential over phases, honoring
+/// `overlaps_prev` (max-merge with the previous phase) and adding the NMC
+/// issue overhead per phase.
+pub fn program_cost(
+    prog: &Program,
+    sys: &SystemConfig,
+    calib: &CalibConstants,
+) -> PhaseCost {
+    let noc = AnalyticNoc::new(sys, calib);
+    let mut total = PhaseCost::default();
+    let mut prev_cycles = 0u64;
+    for p in &prog.phases {
+        let c = phase_cost(p, sys, calib, &noc);
+        if p.overlaps_prev {
+            // Runs concurrently with the previous phase on disjoint
+            // macros: only the excess over the previous phase's length
+            // extends the critical path.
+            let extra = c.cycles.saturating_sub(prev_cycles);
+            total.cycles += extra;
+            prev_cycles += extra;
+            let mut e = c;
+            e.cycles = 0;
+            total.merge_events(e);
+        } else {
+            total.cycles += c.cycles + calib.nmc_issue_cycles;
+            prev_cycles = c.cycles;
+            let mut e = c;
+            e.cycles = 0;
+            total.merge_events(e);
+        }
+    }
+    total
+}
+
+impl PhaseCost {
+    fn merge_events(&mut self, other: PhaseCost) {
+        self.rram_passes += other.rram_passes;
+        self.sram_passes += other.sram_passes;
+        self.dmac_macs += other.dmac_macs;
+        self.softmax_elems += other.softmax_elems;
+        self.spad_bytes += other.spad_bytes;
+        self.net_byte_hops += other.net_byte_hops;
+        self.reprog_bytes += other.reprog_bytes;
+        self.d2d_bytes += other.d2d_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Coord, PhaseKind, Rect};
+
+    fn setup() -> (SystemConfig, CalibConstants, AnalyticNoc) {
+        let sys = SystemConfig::default();
+        let calib = CalibConstants::default();
+        let noc = AnalyticNoc::new(&sys, &calib);
+        (sys, calib, noc)
+    }
+
+    #[test]
+    fn smac_parallel_across_region() {
+        let (sys, calib, noc) = setup();
+        let small = instr_cost(
+            &Instr::Smac { pes: Rect::new(0, 0, 2, 2), passes: 8 },
+            &sys, &calib, &noc,
+        );
+        let large = instr_cost(
+            &Instr::Smac { pes: Rect::new(0, 0, 16, 16), passes: 8 },
+            &sys, &calib, &noc,
+        );
+        assert_eq!(small.cycles, large.cycles, "SMAC latency is per-pass, not per-PE");
+        assert!(large.rram_passes > small.rram_passes);
+    }
+
+    #[test]
+    fn dmac_throughput_scales_with_routers() {
+        let (sys, calib, noc) = setup();
+        let narrow = instr_cost(
+            &Instr::Dmac { routers: Rect::new(0, 0, 4, 4), macs: 1_000_000 },
+            &sys, &calib, &noc,
+        );
+        let wide = instr_cost(
+            &Instr::Dmac { routers: Rect::new(0, 0, 32, 32), macs: 1_000_000 },
+            &sys, &calib, &noc,
+        );
+        assert!(wide.cycles * 32 <= narrow.cycles, "wide {} narrow {}", wide.cycles, narrow.cycles);
+    }
+
+    #[test]
+    fn phase_max_not_sum() {
+        let (sys, calib, noc) = setup();
+        let a = Instr::Smac { pes: Rect::new(0, 0, 4, 4), passes: 4 };
+        let b = Instr::Smac { pes: Rect::new(8, 0, 12, 4), passes: 2 };
+        let pa = phase_cost(&Phase::new(PhaseKind::QkvProjection, vec![a.clone()]), &sys, &calib, &noc);
+        let pboth = phase_cost(&Phase::new(PhaseKind::QkvProjection, vec![a, b]), &sys, &calib, &noc);
+        assert_eq!(pa.cycles, pboth.cycles);
+    }
+
+    #[test]
+    fn repeat_scales_linearly() {
+        let (sys, calib, noc) = setup();
+        let p = Phase::new(
+            PhaseKind::QkvProjection,
+            vec![Instr::Smac { pes: Rect::new(0, 0, 4, 4), passes: 4 }],
+        );
+        let one = phase_cost(&p, &sys, &calib, &noc);
+        let ten = phase_cost(&p.clone().repeated(10), &sys, &calib, &noc);
+        assert_eq!(ten.cycles, 10 * one.cycles);
+        assert_eq!(ten.rram_passes, 10 * one.rram_passes);
+    }
+
+    #[test]
+    fn overlap_hides_shorter_phase() {
+        let (sys, calib, _) = setup();
+        let mut prog = Program::new();
+        prog.push(Phase::new(
+            PhaseKind::QkvProjection,
+            vec![Instr::Smac { pes: Rect::new(0, 0, 8, 8), passes: 8 }],
+        ));
+        prog.push(
+            Phase::new(
+                PhaseKind::LoraPath,
+                vec![Instr::SramMac { pes: Rect::new(0, 0, 8, 8), passes: 2 }],
+            )
+            .overlapping(),
+        );
+        let with_overlap = program_cost(&prog, &sys, &calib);
+
+        let mut prog2 = Program::new();
+        prog2.push(Phase::new(
+            PhaseKind::QkvProjection,
+            vec![Instr::Smac { pes: Rect::new(0, 0, 8, 8), passes: 8 }],
+        ));
+        prog2.push(Phase::new(
+            PhaseKind::LoraPath,
+            vec![Instr::SramMac { pes: Rect::new(0, 0, 8, 8), passes: 2 }],
+        ));
+        let without = program_cost(&prog2, &sys, &calib);
+        assert!(with_overlap.cycles < without.cycles);
+        // events identical either way
+        assert_eq!(with_overlap.sram_passes, without.sram_passes);
+    }
+
+    #[test]
+    fn broadcast_unicast_reduce_costs_positive() {
+        let (sys, calib, noc) = setup();
+        for i in [
+            Instr::Broadcast { root: Coord::new(0, 0), dest: Rect::new(0, 0, 8, 8), bytes: 4096 },
+            Instr::Unicast { from: Coord::new(0, 0), to: Coord::new(5, 5), bytes: 128 },
+            Instr::Reduce { src: Rect::new(0, 0, 8, 8), root: Coord::new(4, 4), bytes: 1024 },
+            Instr::D2d { from_ct: 0, to_ct: 1, bytes: 8192, hops: 0 },
+        ] {
+            let c = instr_cost(&i, &sys, &calib, &noc);
+            assert!(c.cycles > 0, "{i:?}");
+        }
+    }
+
+    #[test]
+    fn reprogram_parallel_across_macros() {
+        let (sys, calib, noc) = setup();
+        let whole = instr_cost(
+            &Instr::Reprogram { pes: Rect::new(0, 0, 32, 32), bytes: 1_048_576 },
+            &sys, &calib, &noc,
+        );
+        // 1 MB over 1024 macros at 4 B/cyc = 256 cycles
+        assert_eq!(whole.cycles, 256);
+    }
+}

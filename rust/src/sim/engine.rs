@@ -1,0 +1,375 @@
+//! The simulation engine: prefill pipeline + decode loop + SRPG + energy.
+//!
+//! Executes one inference request (the paper's benchmarking unit:
+//! batch 1, fixed input/output lengths) and produces a [`SimReport`] with
+//! the Table II/III quantities. See DESIGN.md for the timing-model
+//! derivation and EXPERIMENTS.md for calibration.
+
+use super::cost::program_cost;
+use super::layer_model::LayerCostModel;
+use crate::config::ExperimentConfig;
+use crate::dataflow::{prefill_program, reprogram_program};
+use crate::energy::{CtPowerState, EnergyLedger};
+use crate::mapping::{map_model, map_model_naive, ModelMapping};
+use crate::srpg::SrpgSchedule;
+use crate::trace::{Trace, TraceEvent, TraceKind};
+
+/// Everything a paper table needs about one simulated request.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    // ---- identity -------------------------------------------------------
+    pub model: String,
+    pub lora_label: String,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    pub srpg: bool,
+    // ---- Table III ------------------------------------------------------
+    /// Time to first token, seconds (reprogram CT0 + prefill).
+    pub ttft_s: f64,
+    /// Inter-token latency, milliseconds (mean over decode tokens).
+    pub itl_ms: f64,
+    // ---- Table II -------------------------------------------------------
+    /// (input + output) tokens / end-to-end seconds.
+    pub throughput_tps: f64,
+    pub avg_power_w: f64,
+    /// tokens per joule.
+    pub efficiency_tpj: f64,
+    // ---- internals ------------------------------------------------------
+    pub total_cts: usize,
+    pub cts_per_layer: usize,
+    pub total_cycles: u64,
+    pub total_energy_j: f64,
+    pub energy: crate::energy::EnergyBreakdown,
+    pub reprog_stall_cycles: u64,
+    pub trace: Trace,
+    /// First-token decode latency vs last (ITL growth across the sweep).
+    pub itl_first_ms: f64,
+    pub itl_last_ms: f64,
+}
+
+impl SimReport {
+    /// End-to-end wall time of the request in seconds.
+    pub fn total_s(&self) -> f64 {
+        self.ttft_s + self.output_tokens as f64 * self.itl_ms * 1e-3
+    }
+}
+
+/// The simulator: owns the mapping and cost models for one experiment.
+pub struct Simulator {
+    cfg: ExperimentConfig,
+    mapping: ModelMapping,
+    trace_enabled: bool,
+}
+
+impl Simulator {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        let mapping = map_model(cfg);
+        Self { cfg: cfg.clone(), mapping, trace_enabled: false }
+    }
+
+    /// A2 ablation: the naive mapping baseline.
+    pub fn new_naive_mapping(cfg: &ExperimentConfig) -> Self {
+        let mapping = map_model_naive(cfg);
+        Self { cfg: cfg.clone(), mapping, trace_enabled: false }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace_enabled = true;
+        self
+    }
+
+    pub fn mapping(&self) -> &ModelMapping {
+        &self.mapping
+    }
+
+    /// Simulate one request (batch 1).
+    pub fn run(&self) -> SimReport {
+        let cfg = &self.cfg;
+        let m = &cfg.model;
+        let mut ledger = EnergyLedger::new(&cfg.system, &cfg.calib);
+        let mut trace = Trace::new(self.trace_enabled);
+
+        let lm0 = &self.mapping.layers[0];
+        let n_groups = m.layers; // one group per layer
+        let cts_per_group = self.mapping.cts_per_layer();
+        let total_cts = self.mapping.total_cts;
+
+        // ---- reprogramming (adapter swap) --------------------------------
+        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let srpg = SrpgSchedule {
+            n_groups,
+            cts_per_group,
+            reprog_cycles: reprog.cycles,
+            enabled: cfg.srpg,
+        };
+
+        // ---- prefill (layer-sequential) -----------------------------------
+        // The paper executes inference "in a strictly sequential,
+        // layer-by-layer manner" [SS III.C]: layer l's CT group processes
+        // the *whole* prompt (in blocks of up to 128 tokens, causal
+        // attention over the KV resident so far) before layer l+1 starts.
+        // There is no inter-layer block pipelining — the only overlap is
+        // SRPG's reprogramming (handled below).
+        let block = 128usize.min(cfg.input_tokens.max(1));
+        let n_blocks = cfg.input_tokens.div_ceil(block);
+        let mut stage_cost = Vec::with_capacity(n_blocks);
+        let mut stage_events = Vec::with_capacity(n_blocks);
+        for b in 0..n_blocks {
+            let this_block = if b + 1 == n_blocks {
+                cfg.input_tokens - b * block
+            } else {
+                block
+            };
+            // Mid-block causal span: tokens before the block + half of it.
+            let kv = b * block + this_block / 2;
+            let c = program_cost(
+                &prefill_program(cfg, lm0, this_block, kv.max(1)),
+                &cfg.system,
+                &cfg.calib,
+            );
+            stage_cost.push(c.cycles);
+            stage_events.push(c);
+        }
+        let layer_prefill_cycles: u64 = stage_cost.iter().sum();
+        let mut group_start = vec![0u64; n_groups];
+        for (l, gs) in group_start.iter_mut().enumerate() {
+            *gs = l as u64 * layer_prefill_cycles;
+        }
+        let prefill_makespan = layer_prefill_cycles * n_groups as u64;
+
+        // ---- SRPG reprogramming plan --------------------------------------
+        let plan = srpg.plan(&group_start);
+        for e in &plan.events {
+            trace.push(*e);
+        }
+        // Prefill trace events live after the TTFT reprogramming penalty
+        // (group_start is relative to the moment compute may begin).
+        if self.trace_enabled {
+            for (l, gs) in group_start.iter().enumerate() {
+                trace.push(TraceEvent {
+                    ct_group: l,
+                    kind: TraceKind::Prefill,
+                    start: plan.ttft_penalty + gs,
+                    end: plan.ttft_penalty + gs + layer_prefill_cycles,
+                });
+            }
+        }
+        let ttft_cycles = plan.ttft_penalty + prefill_makespan + plan.pipeline_stalls;
+
+        // Prefill energy: dynamic events per (layer, block).
+        for c in &stage_events {
+            let mut ev = *c;
+            ev.cycles = 0;
+            for _ in 0..n_groups {
+                ev.post(&mut ledger);
+            }
+        }
+        ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
+
+        // Prefill state energy: layer-sequential — one group busy at a time.
+        let active_ct_cycles =
+            layer_prefill_cycles as f64 * (n_groups * cts_per_group) as f64;
+        let total_ct_cycles = ttft_cycles as f64 * total_cts as f64;
+        let reprog_cycles_total = plan.reprog_ct_cycles;
+        let idle_ct_cycles =
+            (total_ct_cycles - active_ct_cycles - reprog_cycles_total).max(0.0);
+        // post_ct_state(state, n_cts, cycles): passing the CT-cycle
+        // integral as n_cts with cycles=1 integrates exactly.
+        ledger.post_ct_state(CtPowerState::Active, active_ct_cycles, 1);
+        ledger.post_ct_state(srpg.idle_state(), idle_ct_cycles, 1);
+        ledger.post_ct_state(CtPowerState::Reprogramming, reprog_cycles_total, 1);
+
+        // ---- decode loop ---------------------------------------------------
+        let layer_model = LayerCostModel::build(cfg, lm0);
+        // Extension: LM-head projection per decode token (off by default;
+        // paper tables exclude it — see sim::lm_head).
+        let lm_head = if cfg.include_lm_head {
+            let head = super::lm_head::LmHead::build(cfg);
+            let cost = head.decode_cost(cfg);
+            Some((head, cost))
+        } else {
+            None
+        };
+        let mut decode_cycles_total = 0u64;
+        let mut itl_first = 0u64;
+        let mut itl_last = 0u64;
+        let out = cfg.output_tokens;
+        for i in 0..out {
+            let kv = cfg.input_tokens + i;
+            let per_layer = layer_model.eval(kv);
+            let mut tok_cycles = per_layer.cycles * n_groups as u64;
+            if let Some((_, head_cost)) = &lm_head {
+                tok_cycles += head_cost.cycles;
+                let mut ev = *head_cost;
+                ev.cycles = 0;
+                ev.post(&mut ledger);
+            }
+            if i == 0 {
+                itl_first = tok_cycles;
+            }
+            if i + 1 == out {
+                itl_last = tok_cycles;
+            }
+            decode_cycles_total += tok_cycles;
+            // dynamic energy per layer
+            let mut ev = per_layer;
+            ev.cycles = 0;
+            for _ in 0..n_groups {
+                ev.post(&mut ledger);
+            }
+            // State energy: at any instant exactly one group computes and
+            // the rest are gated/idle, so integrating "one active group"
+            // over the whole token interval gives the exact CT-cycle split.
+            let sc = srpg.decode_interval(tok_cycles);
+            ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
+            ledger.post_ct_state(srpg.idle_state(), sc.idle, 1);
+            // decode trace: only the first few tokens (diagram readability)
+            if self.trace_enabled && i < 4 {
+                let t0 = ttft_cycles + decode_cycles_total - tok_cycles;
+                for l in 0..n_groups {
+                    trace.push(TraceEvent {
+                        ct_group: l,
+                        kind: TraceKind::Decode,
+                        start: t0 + per_layer.cycles * l as u64,
+                        end: t0 + per_layer.cycles * (l + 1) as u64,
+                    });
+                }
+            }
+        }
+
+        // ---- report ---------------------------------------------------------
+        let cyc = cfg.system.cycle_s();
+        let total_cycles = ttft_cycles + decode_cycles_total;
+        ledger.span_cycles = total_cycles;
+        let ttft_s = ttft_cycles as f64 * cyc;
+        let itl_ms = if out > 0 {
+            decode_cycles_total as f64 / out as f64 * cyc * 1e3
+        } else {
+            0.0
+        };
+        let total_s = ttft_s + decode_cycles_total as f64 * cyc;
+        let tokens = (cfg.input_tokens + out) as f64;
+        let throughput = tokens / total_s;
+        let avg_power = ledger.average_power_w();
+        let energy_j = ledger.total_j();
+
+        SimReport {
+            model: m.id.to_string(),
+            lora_label: crate::config::LoraTarget::label(&cfg.lora.targets),
+            input_tokens: cfg.input_tokens,
+            output_tokens: out,
+            srpg: cfg.srpg,
+            ttft_s,
+            itl_ms,
+            throughput_tps: throughput,
+            avg_power_w: avg_power,
+            efficiency_tpj: throughput / avg_power.max(1e-12),
+            total_cts,
+            cts_per_layer: cts_per_group,
+            total_cycles,
+            total_energy_j: energy_j,
+            energy: ledger.breakdown,
+            reprog_stall_cycles: plan.pipeline_stalls,
+            trace,
+            itl_first_ms: itl_first as f64 * cyc * 1e3,
+            itl_last_ms: itl_last as f64 * cyc * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+
+    fn run(model: ModelId, ctx: usize) -> SimReport {
+        let cfg = ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], ctx);
+        Simulator::new(&cfg).run()
+    }
+
+    #[test]
+    fn report_sane_1b() {
+        let r = run(ModelId::Llama32_1b, 1024);
+        assert!(r.ttft_s > 0.0 && r.ttft_s < 60.0, "ttft {}", r.ttft_s);
+        assert!(r.itl_ms > 0.0 && r.itl_ms < 1000.0, "itl {}", r.itl_ms);
+        assert!(r.throughput_tps > 1.0);
+        assert!(r.avg_power_w > 0.0);
+        assert_eq!(r.total_cts, 16);
+    }
+
+    #[test]
+    fn itl_grows_with_context() {
+        let a = run(ModelId::Llama32_1b, 1024);
+        let b = run(ModelId::Llama32_1b, 2048);
+        assert!(b.itl_ms > a.itl_ms, "{} vs {}", b.itl_ms, a.itl_ms);
+        assert!(b.ttft_s > a.ttft_s);
+        assert!(b.throughput_tps < a.throughput_tps);
+    }
+
+    #[test]
+    fn bigger_models_slower_and_hungrier() {
+        let a = run(ModelId::Llama32_1b, 1024);
+        let b = run(ModelId::Llama3_8b, 1024);
+        let c = run(ModelId::Llama2_13b, 1024);
+        assert!(a.itl_ms < b.itl_ms && b.itl_ms < c.itl_ms);
+        assert!(a.avg_power_w < b.avg_power_w && b.avg_power_w < c.avg_power_w);
+        assert!(a.throughput_tps > b.throughput_tps);
+    }
+
+    #[test]
+    fn itl_increases_within_sweep() {
+        let r = run(ModelId::Llama32_1b, 1024);
+        assert!(r.itl_last_ms > r.itl_first_ms);
+    }
+
+    #[test]
+    fn srpg_saves_power() {
+        let mut cfg =
+            ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 1024);
+        let with = Simulator::new(&cfg).run();
+        cfg.srpg = false;
+        let without = Simulator::new(&cfg).run();
+        assert!(
+            with.avg_power_w < without.avg_power_w * 0.6,
+            "SRPG {} W vs baseline {} W",
+            with.avg_power_w,
+            without.avg_power_w
+        );
+        // and SRPG must not be slower in steady decode
+        assert!(with.itl_ms <= without.itl_ms * 1.01);
+    }
+
+    #[test]
+    fn throughput_identity_holds() {
+        let r = run(ModelId::Llama32_1b, 1024);
+        let expect = (r.input_tokens + r.output_tokens) as f64
+            / (r.ttft_s + r.output_tokens as f64 * r.itl_ms * 1e-3);
+        assert!((r.throughput_tps - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_identity_holds() {
+        let r = run(ModelId::Llama3_8b, 1024);
+        assert!((r.efficiency_tpj - r.throughput_tps / r.avg_power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_records_pipeline() {
+        let cfg = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 256);
+        let r = Simulator::new(&cfg).with_trace().run();
+        assert!(!r.trace.events.is_empty());
+        let kinds: std::collections::BTreeSet<_> =
+            r.trace.events.iter().map(|e| e.kind.glyph()).collect();
+        assert!(kinds.contains(&'R') && kinds.contains(&'P') && kinds.contains(&'D'));
+    }
+
+    #[test]
+    fn energy_parts_positive() {
+        let r = run(ModelId::Llama32_1b, 1024);
+        assert!(r.energy.rram_j > 0.0);
+        assert!(r.energy.dmac_j > 0.0);
+        assert!(r.energy.network_j > 0.0);
+        assert!(r.energy.retention_j > 0.0);
+        assert!((r.energy.total_j() - r.total_energy_j).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-layer decode cost model: piecewise-linear in kv_len.
+//!
+//! A Llama-13B 2048/2048 run executes ~82k (layer, token) decode programs;
+//! re-generating and re-costing each would spend most of its time
+//! rebuilding spanning trees. Every kv-dependent instruction the dataflow
+//! generator emits (DMAC MACs, softmax elems, score gather bytes, KV
+//! reads) is linear in kv_len, but phases combine instructions under
+//! max() (parallel execution), so the *phase* cost is piecewise-linear
+//! with breakpoints where the dominant instruction changes. We sample the
+//! exact program cost at a geometric grid of kv values and interpolate;
+//! samples are exact, interpolation error between adjacent samples is
+//! bounded by the segment's curvature (checked in tests at <2%).
+
+use super::cost::{program_cost, PhaseCost};
+use crate::config::ExperimentConfig;
+use crate::dataflow::decode_program;
+use crate::mapping::LayerMapping;
+
+/// kv sample grid (covers the paper's contexts with margin).
+const KV_SAMPLES: [usize; 10] = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096, 8192];
+
+/// Piecewise-linear per-layer decode model.
+#[derive(Debug, Clone)]
+pub struct LayerCostModel {
+    samples: Vec<(usize, PhaseCost)>,
+}
+
+impl LayerCostModel {
+    pub fn build(cfg: &ExperimentConfig, lm: &LayerMapping) -> Self {
+        let samples = KV_SAMPLES
+            .iter()
+            .map(|&kv| {
+                (kv, program_cost(&decode_program(cfg, lm, kv), &cfg.system, &cfg.calib))
+            })
+            .collect();
+        Self { samples }
+    }
+
+    /// Evaluate at a kv length (linear interpolation; clamped extrapolation
+    /// above the last sample uses the final segment's slope).
+    pub fn eval(&self, kv_len: usize) -> PhaseCost {
+        let pts = &self.samples;
+        // find the bracketing segment
+        let (lo, hi) = match pts.iter().position(|(k, _)| *k >= kv_len) {
+            Some(0) => return pts[0].1,
+            Some(i) => (pts[i - 1], pts[i]),
+            None => (pts[pts.len() - 2], pts[pts.len() - 1]),
+        };
+        let (k0, c0) = lo;
+        let (k1, c1) = hi;
+        let f = (kv_len as f64 - k0 as f64) / (k1 as f64 - k0 as f64);
+        let lerp = |a: u64, b: u64| -> u64 {
+            (a as f64 + (b as f64 - a as f64) * f).round().max(0.0) as u64
+        };
+        PhaseCost {
+            cycles: lerp(c0.cycles, c1.cycles),
+            rram_passes: lerp(c0.rram_passes, c1.rram_passes),
+            sram_passes: lerp(c0.sram_passes, c1.sram_passes),
+            dmac_macs: lerp(c0.dmac_macs, c1.dmac_macs),
+            softmax_elems: lerp(c0.softmax_elems, c1.softmax_elems),
+            spad_bytes: lerp(c0.spad_bytes, c1.spad_bytes),
+            net_byte_hops: lerp(c0.net_byte_hops, c1.net_byte_hops),
+            reprog_bytes: lerp(c0.reprog_bytes, c1.reprog_bytes),
+            d2d_bytes: lerp(c0.d2d_bytes, c1.d2d_bytes),
+        }
+    }
+
+    /// Mean cycles-per-kv-token slope over [1024, 2048] (diagnostics).
+    pub fn slope_cycles(&self) -> f64 {
+        (self.eval(2048).cycles as f64 - self.eval(1024).cycles as f64) / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+    use crate::mapping::map_model;
+
+    fn model_for(id: ModelId) -> (ExperimentConfig, LayerCostModel) {
+        let cfg = ExperimentConfig::paper_point(id, &[LoraTarget::Q, LoraTarget::V], 1024);
+        let mapping = map_model(&cfg);
+        let m = LayerCostModel::build(&cfg, &mapping.layers[0]);
+        (cfg, m)
+    }
+
+    #[test]
+    fn exact_at_sample_points() {
+        let (cfg, m) = model_for(ModelId::Llama32_1b);
+        let mapping = map_model(&cfg);
+        for kv in [0usize, 512, 2048, 4096] {
+            let direct = program_cost(
+                &decode_program(&cfg, &mapping.layers[0], kv),
+                &cfg.system,
+                &cfg.calib,
+            );
+            assert_eq!(m.eval(kv).cycles, direct.cycles, "kv {kv}");
+        }
+    }
+
+    #[test]
+    fn interpolation_error_small() {
+        let (cfg, m) = model_for(ModelId::Llama3_8b);
+        let mapping = map_model(&cfg);
+        for kv in [300usize, 777, 1700, 2500, 3900] {
+            let direct = program_cost(
+                &decode_program(&cfg, &mapping.layers[0], kv),
+                &cfg.system,
+                &cfg.calib,
+            );
+            let pred = m.eval(kv);
+            let err = (pred.cycles as f64 - direct.cycles as f64).abs()
+                / direct.cycles as f64;
+            assert!(err < 0.02, "kv {kv}: err {err:.4}");
+        }
+    }
+
+    #[test]
+    fn slope_positive_and_monotone() {
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        assert!(m.slope_cycles() > 0.0);
+        assert!(m.eval(2000).cycles > m.eval(100).cycles);
+    }
+
+    #[test]
+    fn bigger_models_cost_more() {
+        let (_, m1) = model_for(ModelId::Llama32_1b);
+        let (_, m13) = model_for(ModelId::Llama2_13b);
+        assert!(m13.eval(1024).cycles > m1.eval(1024).cycles);
+    }
+
+    #[test]
+    fn extrapolates_beyond_last_sample() {
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        assert!(m.eval(10_000).cycles > m.eval(8192).cycles);
+    }
+}

@@ -1,0 +1,125 @@
+//! LM-head component (extension beyond the paper).
+//!
+//! The paper's evaluation covers only decoder layers; a deployable system
+//! must also compute the final hidden -> vocab projection each decode
+//! step. PRIMAL's natural realization: the LM-head matrix is frozen base
+//! weight, so it maps onto dedicated RRAM CTs exactly like a layer's
+//! projection, and the logits never leave the chip — the routers reduce
+//! to a top-k candidate set in-network (the same spanning-tree reduction
+//! used for partial sums, merging (value, index) pairs instead of adding).
+//!
+//! Enabled via `ExperimentConfig::include_lm_head` (off by default so the
+//! paper's tables stay pinned; the `sweep` CLI and the ablation tests
+//! exercise it).
+
+use super::cost::PhaseCost;
+use crate::config::ExperimentConfig;
+use crate::isa::{Coord, Instr, Phase, PhaseKind, Program, Rect};
+
+/// Mapping + cost model of the LM head.
+#[derive(Debug, Clone)]
+pub struct LmHead {
+    /// Dedicated CTs holding the vocab x hidden int8 matrix.
+    pub n_cts: usize,
+    /// Crossbar tiles used.
+    pub tiles: usize,
+    /// k of the in-network top-k (sampling candidate set).
+    pub top_k: usize,
+}
+
+impl LmHead {
+    pub fn build(cfg: &ExperimentConfig) -> Self {
+        let m = &cfg.model;
+        let tiles = m.vocab.div_ceil(256) * m.hidden.div_ceil(256);
+        let n_cts = tiles.div_ceil(cfg.system.pes_per_ct()).max(1);
+        Self { n_cts, tiles, top_k: 64 }
+    }
+
+    /// The per-decode-token program: deliver the final hidden state to
+    /// the head CTs, run the crossbar passes, reduce top-k in-network.
+    pub fn decode_program(&self, cfg: &ExperimentConfig) -> Program {
+        let m = &cfg.model;
+        let mesh = cfg.system.mesh_dim;
+        let group = Rect::new(0, 0, mesh, mesh);
+        let entry = Coord::new(0, 0);
+        let mut prog = Program::new();
+        // Store-and-forward chain delivery (decode-sized payload).
+        prog.push(Phase::new(
+            PhaseKind::InputBroadcast,
+            vec![
+                Instr::D2d {
+                    from_ct: 0,
+                    to_ct: self.n_cts as u16,
+                    bytes: (m.hidden * 4) as u32,
+                    hops: self.n_cts as u16,
+                },
+                Instr::Broadcast { root: entry, dest: group, bytes: (m.hidden * 4) as u32 },
+            ],
+        ));
+        // Crossbar sweep: kt passes per hosting router.
+        let kt = m.hidden.div_ceil(256).max(1);
+        prog.push(
+            Phase::new(
+                PhaseKind::QkvProjection,
+                vec![Instr::Smac { pes: group, passes: kt as u16 }],
+            )
+            .overlapping(),
+        );
+        // In-network top-k: each router reduces its local logits to k
+        // candidates (value+index = 8 B each), then the tree merges.
+        let topk_bytes = (self.top_k * 8) as u32;
+        prog.push(Phase::new(
+            PhaseKind::PartialReduce,
+            vec![Instr::Reduce { src: group, root: entry, bytes: topk_bytes }],
+        ));
+        prog
+    }
+
+    /// Per-token decode cost.
+    pub fn decode_cost(&self, cfg: &ExperimentConfig) -> PhaseCost {
+        super::cost::program_cost(&self.decode_program(cfg), &cfg.system, &cfg.calib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+
+    fn cfg(model: ModelId) -> ExperimentConfig {
+        ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], 1024)
+    }
+
+    #[test]
+    fn ct_allocation_scales_with_vocab() {
+        // 1B: 128256 x 2048 -> 501*8 = 4008 tiles -> 4 CTs.
+        let h1 = LmHead::build(&cfg(ModelId::Llama32_1b));
+        assert_eq!(h1.n_cts, 4, "tiles {}", h1.tiles);
+        // 13B: 32000 x 5120 -> 125*20 = 2500 tiles -> 3 CTs.
+        let h13 = LmHead::build(&cfg(ModelId::Llama2_13b));
+        assert_eq!(h13.n_cts, 3, "tiles {}", h13.tiles);
+    }
+
+    #[test]
+    fn decode_cost_is_small_vs_layer_sweep() {
+        // The in-network top-k keeps the LM head off the critical path:
+        // well under one layer-sweep's worth of cycles.
+        let c = cfg(ModelId::Llama32_1b);
+        let head = LmHead::build(&c);
+        let cost = head.decode_cost(&c);
+        // 1B per-layer decode base is ~20-30k cycles; head must be less
+        // than ~2 layers' worth.
+        assert!(cost.cycles < 60_000, "LM head {} cycles", cost.cycles);
+        assert!(cost.cycles > 1_000, "LM head suspiciously free");
+    }
+
+    #[test]
+    fn topk_reduce_much_cheaper_than_full_logits() {
+        let c = cfg(ModelId::Llama32_1b);
+        let head = LmHead::build(&c);
+        let with_topk = head.decode_cost(&c).cycles;
+        // Full logit streaming would move vocab*4 bytes off-chip:
+        // 128256*4/6.4 ~ 80k cycles — top-k must beat it by a wide margin.
+        assert!(with_topk * 2 < 80_000, "top-k {} vs full-logit ~80k", with_topk);
+    }
+}

@@ -1,0 +1,24 @@
+//! The cycle-accurate, instruction-level simulator.
+//!
+//! Executes the dataflow-generated IPCN programs on the analytic cost
+//! models (NoC + macros), pipelines prefill across CT groups, runs the
+//! decode loop token-by-token, applies the SRPG schedule, integrates
+//! energy, and produces the [`SimReport`] that the report CLI / benches
+//! turn into the paper's tables.
+//!
+//! Structure:
+//!  * [`cost`] — per-instruction / per-phase cycle + energy evaluation;
+//!  * [`layer_model`] — per-layer linear cost model (constant + kv slope),
+//!    derived from generated programs and validated for linearity;
+//!  * [`engine`] — prefill pipeline, decode loop, SRPG application,
+//!    report assembly.
+
+pub mod cost;
+pub mod engine;
+pub mod layer_model;
+pub mod lm_head;
+
+pub use cost::{phase_cost, program_cost, PhaseCost};
+pub use engine::{SimReport, Simulator};
+pub use layer_model::LayerCostModel;
+pub use lm_head::LmHead;

@@ -1,0 +1,236 @@
+//! SRPG — SRAM Reprogramming and Power Gating (paper SS III.C, Fig. 5).
+//!
+//! Two coupled mechanisms on top of the CT-based, layer-wise weight
+//! allocation:
+//!
+//!  1. **Pipelined reprogramming.** At task-switch time the SRAMs of the
+//!     first CT group are reprogrammed; once that group starts computing,
+//!     the next group's SRAMs are reprogrammed in parallel. Only the first
+//!     group's reprogramming contributes to TTFT — the rest hides behind
+//!     compute (Fig. 6).
+//!  2. **Power gating.** A CT group that is idle has its IPCN routers and
+//!     RRAM macros power-gated; SRAM-DCIM and scratchpad macros stay on
+//!     retention to preserve the volatile LoRA weights and the KV cache.
+//!     Without SRPG (the ablation baseline) idle CTs remain fully clocked.
+//!
+//! [`SrpgSchedule`] computes, for one inference request, the per-state
+//! CT-cycle integrals the energy ledger consumes, the reprogramming
+//! critical-path contribution to TTFT, and the Fig. 6 trace events.
+
+use crate::energy::CtPowerState;
+use crate::trace::{TraceEvent, TraceKind};
+
+/// Per-state CT-cycle integrals for one simulated interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StateCycles {
+    /// CT-cycles spent actively computing.
+    pub active: f64,
+    /// CT-cycles gated (SRPG on) or idle-ungated (SRPG off).
+    pub idle: f64,
+    /// CT-cycles reprogramming SRAMs.
+    pub reprogramming: f64,
+}
+
+/// The SRPG schedule for one request on a layer-sequential model.
+#[derive(Debug, Clone)]
+pub struct SrpgSchedule {
+    /// Layers (CT groups) in execution order.
+    pub n_groups: usize,
+    /// CTs per group.
+    pub cts_per_group: usize,
+    /// Cycles to reprogram one group's SRAMs (adapter swap).
+    pub reprog_cycles: u64,
+    /// SRPG enabled?
+    pub enabled: bool,
+}
+
+/// Result of scheduling the reprogramming pipeline against per-group
+/// compute durations.
+#[derive(Debug, Clone)]
+pub struct ReprogramPlan {
+    /// Cycles added to TTFT before any compute can start.
+    pub ttft_penalty: u64,
+    /// Extra stall cycles inserted mid-pipeline when a group's
+    /// reprogramming hadn't finished by the time the wave reached it
+    /// (occurs when per-group compute is shorter than reprogramming).
+    pub pipeline_stalls: u64,
+    /// Trace events for the Fig. 6 diagram.
+    pub events: Vec<TraceEvent>,
+    /// Total reprogramming CT-cycles (energy).
+    pub reprog_ct_cycles: f64,
+}
+
+impl SrpgSchedule {
+    /// Plan the adapter-swap reprogramming against a prefill wave whose
+    /// group g starts compute at `group_start[g]` (cycles, relative to the
+    /// moment the swap command arrives).
+    ///
+    /// With SRPG: group 0 reprograms first (TTFT penalty), then group g+1
+    /// reprograms while group g computes. If group g+1's reprogramming
+    /// would finish after the wave arrives, the wave stalls.
+    ///
+    /// Without SRPG: all groups reprogram *serially up front* (the
+    /// baseline has no per-group power domain to overlap into), so TTFT
+    /// absorbs the whole swap.
+    pub fn plan(&self, group_start: &[u64]) -> ReprogramPlan {
+        assert_eq!(group_start.len(), self.n_groups);
+        let mut events = Vec::new();
+        let reprog_ct_cycles =
+            (self.reprog_cycles * self.n_groups as u64) as f64 * self.cts_per_group as f64;
+
+        if !self.enabled {
+            let total = self.reprog_cycles * self.n_groups as u64;
+            for g in 0..self.n_groups {
+                events.push(TraceEvent {
+                    ct_group: g,
+                    kind: TraceKind::Reprogram,
+                    start: self.reprog_cycles * g as u64,
+                    end: self.reprog_cycles * (g as u64 + 1),
+                });
+            }
+            return ReprogramPlan {
+                ttft_penalty: total,
+                pipeline_stalls: 0,
+                events,
+                reprog_ct_cycles,
+            };
+        }
+
+        // SRPG: group 0 up front.
+        let mut events_out = vec![TraceEvent {
+            ct_group: 0,
+            kind: TraceKind::Reprogram,
+            start: 0,
+            end: self.reprog_cycles,
+        }];
+        let ttft_penalty = self.reprog_cycles;
+        let mut stalls = 0u64;
+        // Group g (>0) starts reprogramming as soon as the previous
+        // group's reprogramming is done (one shared D2D write stream per
+        // neighbouring pair; Fig. 5 shows one group in flight at a time).
+        let mut reprog_done = self.reprog_cycles;
+        for g in 1..self.n_groups {
+            let start = reprog_done;
+            let end = start + self.reprog_cycles;
+            events_out.push(TraceEvent {
+                ct_group: g,
+                kind: TraceKind::Reprogram,
+                start,
+                end,
+            });
+            // The compute wave reaches group g at ttft_penalty +
+            // group_start[g] + accumulated stalls; if reprogramming is not
+            // done, stall the wave.
+            let wave_arrival = ttft_penalty + group_start[g] + stalls;
+            if end > wave_arrival {
+                stalls += end - wave_arrival;
+            }
+            reprog_done = end;
+        }
+        events.extend(events_out);
+        ReprogramPlan {
+            ttft_penalty,
+            pipeline_stalls: stalls,
+            events,
+            reprog_ct_cycles,
+        }
+    }
+
+    /// Integrate per-state CT-cycles for a decode interval of `cycles`
+    /// where exactly one group computes and the others idle.
+    pub fn decode_interval(&self, cycles: u64) -> StateCycles {
+        let others = (self.n_groups - 1) as f64 * self.cts_per_group as f64;
+        StateCycles {
+            active: cycles as f64 * self.cts_per_group as f64,
+            idle: cycles as f64 * others,
+            reprogramming: 0.0,
+        }
+    }
+
+    /// Power state idle groups sit in.
+    pub fn idle_state(&self) -> CtPowerState {
+        if self.enabled {
+            CtPowerState::Gated
+        } else {
+            CtPowerState::IdleUngated
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(enabled: bool, n_groups: usize) -> SrpgSchedule {
+        SrpgSchedule {
+            n_groups,
+            cts_per_group: 1,
+            reprog_cycles: 1000,
+            enabled,
+        }
+    }
+
+    #[test]
+    fn srpg_hides_all_but_first_group() {
+        let s = sched(true, 8);
+        // Compute per group much longer than reprogramming: no stalls.
+        let starts: Vec<u64> = (0..8).map(|g| g * 10_000).collect();
+        let plan = s.plan(&starts);
+        assert_eq!(plan.ttft_penalty, 1000);
+        assert_eq!(plan.pipeline_stalls, 0);
+        assert_eq!(plan.events.len(), 8);
+    }
+
+    #[test]
+    fn no_srpg_pays_everything_up_front() {
+        let s = sched(false, 8);
+        let starts: Vec<u64> = (0..8).map(|g| g * 10_000).collect();
+        let plan = s.plan(&starts);
+        assert_eq!(plan.ttft_penalty, 8000);
+        assert_eq!(plan.pipeline_stalls, 0);
+    }
+
+    #[test]
+    fn fast_compute_wave_stalls_on_reprogramming() {
+        let s = sched(true, 4);
+        // Wave crosses groups every 100 cycles but reprogramming takes
+        // 1000: the pipeline must stall.
+        let starts: Vec<u64> = (0..4).map(|g| g * 100).collect();
+        let plan = s.plan(&starts);
+        assert_eq!(plan.ttft_penalty, 1000);
+        assert!(plan.pipeline_stalls > 0);
+        // Worst case bound: (n-1) * reprog
+        assert!(plan.pipeline_stalls <= 3000);
+    }
+
+    #[test]
+    fn decode_interval_accounting() {
+        let s = SrpgSchedule {
+            n_groups: 16,
+            cts_per_group: 2,
+            reprog_cycles: 0,
+            enabled: true,
+        };
+        let sc = s.decode_interval(100);
+        assert_eq!(sc.active, 200.0);
+        assert_eq!(sc.idle, 3000.0);
+        // totals conserve CT-cycles
+        assert_eq!(sc.active + sc.idle, (16 * 2 * 100) as f64);
+    }
+
+    #[test]
+    fn idle_state_follows_flag() {
+        assert_eq!(sched(true, 2).idle_state(), CtPowerState::Gated);
+        assert_eq!(sched(false, 2).idle_state(), CtPowerState::IdleUngated);
+    }
+
+    #[test]
+    fn reprogram_events_never_overlap_same_stream() {
+        let s = sched(true, 5);
+        let starts: Vec<u64> = (0..5).map(|g| g * 5000).collect();
+        let plan = s.plan(&starts);
+        for w in plan.events.windows(2) {
+            assert!(w[0].end <= w[1].start, "{:?} overlaps {:?}", w[0], w[1]);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Execution trace + ASCII timing-diagram rendering (paper Fig. 6).
+//!
+//! The simulator emits [`TraceEvent`]s (CT group, activity kind, start/end
+//! cycle); [`render_gantt`] turns them into the Fig. 6-style timing
+//! diagram: one row per CT group, time left-to-right, showing the
+//! reprogramming pipeline overlapping the prefill wave and the
+//! layer-sequential decode sweep.
+
+/// Activity classes shown in the timing diagram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    Reprogram,
+    Prefill,
+    Decode,
+    Gated,
+}
+
+impl TraceKind {
+    /// Single-character glyph for the ASCII Gantt.
+    pub fn glyph(&self) -> char {
+        match self {
+            TraceKind::Reprogram => 'R',
+            TraceKind::Prefill => 'P',
+            TraceKind::Decode => 'D',
+            TraceKind::Gated => '.',
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Reprogram => "SRAM reprogram",
+            TraceKind::Prefill => "prefill compute",
+            TraceKind::Decode => "decode compute",
+            TraceKind::Gated => "power-gated",
+        }
+    }
+}
+
+/// One activity interval on one CT group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub ct_group: usize,
+    pub kind: TraceKind,
+    /// Start cycle (inclusive).
+    pub start: u64,
+    /// End cycle (exclusive).
+    pub end: u64,
+}
+
+impl TraceEvent {
+    pub fn duration(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// A recorded trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Whether event recording is enabled (decode sweeps can emit tens of
+    /// thousands of events; the engine truncates beyond a cap).
+    pub enabled: bool,
+    cap: usize,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Self { events: Vec::new(), enabled, cap: 100_000 }
+    }
+
+    pub fn push(&mut self, e: TraceEvent) {
+        if self.enabled && self.events.len() < self.cap {
+            self.events.push(e);
+        }
+    }
+
+    pub fn span(&self) -> u64 {
+        self.events.iter().map(|e| e.end).max().unwrap_or(0)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.events.iter().map(|e| e.ct_group + 1).max().unwrap_or(0)
+    }
+}
+
+/// Render the Fig. 6-style ASCII Gantt: one row per CT group, `width`
+/// character columns spanning [0, span).
+pub fn render_gantt(trace: &Trace, width: usize) -> String {
+    let span = trace.span().max(1);
+    let n = trace.n_groups();
+    let mut rows = vec![vec![' '; width]; n];
+    for e in &trace.events {
+        let c0 = (e.start as u128 * width as u128 / span as u128) as usize;
+        let mut c1 = (e.end as u128 * width as u128 / span as u128) as usize;
+        if c1 <= c0 {
+            c1 = c0 + 1;
+        }
+        for c in c0..c1.min(width) {
+            // Later events overwrite only blanks or lower-priority glyphs,
+            // so short reprogram marks stay visible over long gated spans.
+            let g = e.kind.glyph();
+            let cur = rows[e.ct_group][c];
+            let pri = |ch: char| match ch {
+                'R' => 3,
+                'P' | 'D' => 2,
+                '.' => 1,
+                _ => 0,
+            };
+            if pri(g) >= pri(cur) {
+                rows[e.ct_group][c] = g;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "timing diagram: {} cycles, {} CT groups  (R=reprogram P=prefill D=decode .=gated)\n",
+        span, n
+    ));
+    for (g, row) in rows.iter().enumerate() {
+        out.push_str(&format!("CT{g:>3} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Summarize per-kind busy cycles (trace sanity checks + reports).
+pub fn kind_totals(trace: &Trace) -> std::collections::BTreeMap<&'static str, u64> {
+    let mut m = std::collections::BTreeMap::new();
+    for e in &trace.events {
+        *m.entry(e.kind.name()).or_default() += e.duration();
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> Trace {
+        let mut t = Trace::new(true);
+        t.push(TraceEvent { ct_group: 0, kind: TraceKind::Reprogram, start: 0, end: 100 });
+        t.push(TraceEvent { ct_group: 0, kind: TraceKind::Prefill, start: 100, end: 500 });
+        t.push(TraceEvent { ct_group: 1, kind: TraceKind::Reprogram, start: 100, end: 200 });
+        t.push(TraceEvent { ct_group: 1, kind: TraceKind::Prefill, start: 500, end: 900 });
+        t.push(TraceEvent { ct_group: 1, kind: TraceKind::Gated, start: 200, end: 500 });
+        t
+    }
+
+    #[test]
+    fn span_and_groups() {
+        let t = demo_trace();
+        assert_eq!(t.span(), 900);
+        assert_eq!(t.n_groups(), 2);
+    }
+
+    #[test]
+    fn gantt_contains_all_glyphs() {
+        let t = demo_trace();
+        let g = render_gantt(&t, 90);
+        assert!(g.contains('R'));
+        assert!(g.contains('P'));
+        assert!(g.contains('.'));
+        assert_eq!(g.lines().count(), 3); // header + 2 rows
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.push(TraceEvent { ct_group: 0, kind: TraceKind::Decode, start: 0, end: 10 });
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn kind_totals_sum_durations() {
+        let t = demo_trace();
+        let m = kind_totals(&t);
+        assert_eq!(m["SRAM reprogram"], 200);
+        assert_eq!(m["prefill compute"], 800);
+    }
+
+    #[test]
+    fn zero_width_events_still_visible() {
+        let mut t = Trace::new(true);
+        t.push(TraceEvent { ct_group: 0, kind: TraceKind::Reprogram, start: 0, end: 1 });
+        t.push(TraceEvent { ct_group: 0, kind: TraceKind::Prefill, start: 1, end: 1_000_000 });
+        let g = render_gantt(&t, 80);
+        assert!(g.contains('R'), "short event must render at least one glyph");
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-free utilities: deterministic RNG, a minimal JSON
+//! parser/writer (for `artifacts/manifest.json` and experiment configs),
+//! and fixed-width table rendering for the report CLI.
+//!
+//! The build is fully offline with a small vendored crate set (no serde /
+//! rand / clap), so these are hand-rolled and tested here.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,108 @@
+//! Integration: the L1/L2/L3 numerical contract.
+//!
+//! Three implementations must agree on the PRIMAL quantization spec:
+//! the Pallas kernels (validated against ref.py by pytest), the AOT HLO
+//! modules executed here via PJRT, and the Rust fixed-point PE model.
+//! These tests close the triangle on the stored golden vectors.
+//!
+//! All tests skip gracefully when `artifacts/` has not been built
+//! (`make artifacts`) so `cargo test` works on a fresh checkout.
+
+use primal::pe::numerics::{pim_lora_matmul, QuantMatrix};
+use primal::runtime::{default_artifacts_dir, GoldenRuntime, HostTensor};
+
+fn runtime() -> Option<GoldenRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(GoldenRuntime::open(dir).expect("open artifacts"))
+}
+
+#[test]
+fn pjrt_reproduces_all_golden_modules() {
+    let Some(rt) = runtime() else { return };
+    let reports = rt.validate_all().expect("validation run");
+    assert_eq!(reports.len(), 3, "decode_step, prefill_block, lora_matmul");
+    for r in &reports {
+        assert!(
+            r.passed,
+            "module {} diverged: max abs {} rel {}",
+            r.module, r.max_abs_err, r.max_rel_err
+        );
+    }
+}
+
+#[test]
+fn rust_fixed_point_matches_jax_lora_matmul() {
+    // The lora_matmul module's stored inputs are (x, wq, scales, a, b);
+    // run the Rust integer-exact implementation on the same bytes and
+    // compare against the module's golden output.
+    let Some(rt) = runtime() else { return };
+    let inputs = rt.load_inputs("lora_matmul").expect("inputs");
+    let goldens = rt.load_goldens("lora_matmul").expect("goldens");
+    assert_eq!(inputs.len(), 5);
+
+    let x = &inputs[0];
+    let wq = &inputs[1];
+    let scales = &inputs[2];
+    let a = &inputs[3];
+    let b = &inputs[4];
+    let (t, k) = (x.spec.shape[0], x.spec.shape[1]);
+    let m = wq.spec.shape[0];
+    let r = a.spec.shape[0];
+
+    // Rebuild the QuantMatrix from the stored int8 + scales directly.
+    let q = QuantMatrix {
+        wq: wq.data.iter().map(|&v| v as i8).collect(),
+        scales: scales.as_f32(),
+        m,
+        k,
+    };
+    let got = pim_lora_matmul(&x.as_f32(), t, &q, &a.as_f32(), &b.as_f32(), r);
+
+    let want = goldens[0].as_f32();
+    assert_eq!(got.len(), want.len());
+    let mut max_err = 0f32;
+    let mut max_mag = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+        max_mag = max_mag.max(w.abs());
+    }
+    assert!(
+        max_err / max_mag < 1e-4,
+        "fixed-point vs JAX golden: max err {max_err} (mag {max_mag})"
+    );
+}
+
+#[test]
+fn manifest_tensors_self_consistent() {
+    let Some(rt) = runtime() else { return };
+    for module in &rt.manifest().modules {
+        for spec in module.params.iter().chain(&module.outputs) {
+            let t = HostTensor::load(&default_artifacts_dir(), spec).expect("load");
+            assert_eq!(t.data.len(), spec.byte_len(), "{}", spec.name);
+            if spec.dtype == "float32" {
+                let v = t.as_f32();
+                assert!(
+                    v.iter().all(|x| x.is_finite()),
+                    "{} contains non-finite values",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_config_is_tile_aligned() {
+    // The reduced functional model must obey the same 256-alignment the
+    // mapper requires for the full models.
+    let Some(rt) = runtime() else { return };
+    let c = &rt.manifest().config;
+    assert_eq!(c.hidden % 256, 0);
+    assert_eq!(c.intermediate % 256, 0);
+    assert_eq!(c.kv_capacity % 256, 0);
+    assert!(c.lora_rank <= 64, "rank must fit one SRAM-DCIM column bank");
+}

@@ -1,0 +1,54 @@
+//! Integration: the LM-head extension — enabling it must add a small,
+//! bounded per-token cost and the expected extra CT allocation, without
+//! disturbing the paper-mode (head-off) reproduction.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::sim::{LmHead, Simulator};
+
+fn cfg(model: ModelId, head: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], 512);
+    c.include_lm_head = head;
+    c
+}
+
+#[test]
+fn head_adds_bounded_itl() {
+    for model in [ModelId::Llama32_1b, ModelId::Llama2_13b] {
+        let off = Simulator::new(&cfg(model, false)).run();
+        let on = Simulator::new(&cfg(model, true)).run();
+        assert!(on.itl_ms > off.itl_ms, "{model:?}: head must cost something");
+        // ...but no more than ~15% of a decode step (in-network top-k).
+        assert!(
+            on.itl_ms < off.itl_ms * 1.15,
+            "{model:?}: head overhead {:.3} -> {:.3} ms too large",
+            off.itl_ms,
+            on.itl_ms
+        );
+        // TTFT unchanged: prefill computes no logits until the last token
+        // (the head cost of that single token is inside the first ITL).
+        assert!((on.ttft_s - off.ttft_s).abs() / off.ttft_s < 1e-9);
+    }
+}
+
+#[test]
+fn head_allocation_matches_vocab() {
+    // 1B has the 128k vocab (4 CTs); 13B the 32k vocab (3 CTs) despite
+    // being the bigger model — allocation follows vocab x hidden, not
+    // parameter count.
+    let h1 = LmHead::build(&cfg(ModelId::Llama32_1b, true));
+    let h13 = LmHead::build(&cfg(ModelId::Llama2_13b, true));
+    assert_eq!(h1.n_cts, 4);
+    assert_eq!(h13.n_cts, 3);
+}
+
+#[test]
+fn paper_mode_unaffected() {
+    // The default config keeps the head off — Table II/III reproduction
+    // must not silently shift.
+    let c = ExperimentConfig::paper_point(
+        ModelId::Llama32_1b,
+        &[LoraTarget::Q, LoraTarget::V],
+        512,
+    );
+    assert!(!c.include_lm_head);
+}

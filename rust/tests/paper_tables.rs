@@ -1,0 +1,139 @@
+//! Integration: end-to-end simulation vs the paper's published tables.
+//!
+//! These are the repo's reproduction gates at test granularity (the
+//! benches print the full tables; here we assert the critical cells and
+//! the structural relationships the paper's narrative depends on).
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::metrics;
+use primal::sim::Simulator;
+
+fn point(model: ModelId, targets: &[LoraTarget], ctx: usize) -> primal::sim::SimReport {
+    let cfg = ExperimentConfig::paper_point(model, targets, ctx);
+    Simulator::new(&cfg).run()
+}
+
+fn within(measured: f64, paper: f64, band: f64) -> bool {
+    let r = measured / paper;
+    r >= 1.0 / band && r <= band
+}
+
+#[test]
+fn headline_13b_point_within_band() {
+    // Paper Table II/III, Llama-13B 2048/2048 LoRA r8 (Q,V).
+    let r = point(ModelId::Llama2_13b, &[LoraTarget::Q, LoraTarget::V], 2048);
+    assert!(within(r.throughput_tps, 145.40, 1.5), "tput {}", r.throughput_tps);
+    assert!(within(r.efficiency_tpj, 9.85, 1.5), "eff {}", r.efficiency_tpj);
+    assert!(within(r.ttft_s, 2.533, 1.5), "ttft {}", r.ttft_s);
+    assert!(within(r.itl_ms, 12.518, 1.5), "itl {}", r.itl_ms);
+    assert!(within(r.avg_power_w, 17.70, 1.6), "power {}", r.avg_power_w);
+}
+
+#[test]
+fn all_twelve_grid_points_within_2x() {
+    let paper: &[(&str, &str, usize, f64, f64)] = &[
+        // (model, lora, ctx, ttft_s, itl_ms) from Table III
+        ("Llama 3.2 1B", "Q", 1024, 0.370, 1.708),
+        ("Llama 3.2 1B", "Q", 2048, 1.192, 2.955),
+        ("Llama 3.2 1B", "Q, V", 1024, 0.373, 1.711),
+        ("Llama 3.2 1B", "Q, V", 2048, 1.199, 2.958),
+        ("Llama 3 8B", "Q", 1024, 0.710, 5.726),
+        ("Llama 3 8B", "Q", 2048, 2.012, 8.052),
+        ("Llama 3 8B", "Q, V", 1024, 0.782, 5.738),
+        ("Llama 3 8B", "Q, V", 2048, 2.037, 8.065),
+        ("Llama 2 13B", "Q", 1024, 0.962, 9.494),
+        ("Llama 2 13B", "Q", 2048, 2.494, 12.499),
+        ("Llama 2 13B", "Q, V", 1024, 0.982, 9.513),
+        ("Llama 2 13B", "Q, V", 2048, 2.533, 12.518),
+    ];
+    let reports: Vec<_> = metrics::paper_grid().iter().map(metrics::run_point).collect();
+    for (model, lora, ctx, ttft, itl) in paper {
+        let r = reports
+            .iter()
+            .find(|r| r.model == *model && r.lora_label == *lora && r.input_tokens == *ctx)
+            .unwrap();
+        assert!(
+            within(r.ttft_s, *ttft, 2.0),
+            "{model} {lora} {ctx}: TTFT {} vs paper {ttft}",
+            r.ttft_s
+        );
+        assert!(
+            within(r.itl_ms, *itl, 2.0),
+            "{model} {lora} {ctx}: ITL {} vs paper {itl}",
+            r.itl_ms
+        );
+    }
+}
+
+#[test]
+fn h100_headline_ratios() {
+    let c = metrics::h100_comparison();
+    // Paper: 1.5x throughput, 25x efficiency.
+    assert!(within(c.throughput_ratio, 1.5, 1.6), "tput ratio {}", c.throughput_ratio);
+    assert!(within(c.efficiency_ratio, 25.0, 1.6), "eff ratio {}", c.efficiency_ratio);
+}
+
+#[test]
+fn srpg_savings_near_80_pct() {
+    let rows = metrics::srpg_ablation(2048);
+    let max_saving = rows.iter().map(|r| r.saving_pct).fold(0.0f64, f64::max);
+    assert!(
+        (60.0..95.0).contains(&max_saving),
+        "max SRPG saving {max_saving}% (paper: up to 80%)"
+    );
+}
+
+#[test]
+fn power_scales_sublinearly() {
+    // Table II shape: 13B has ~12.9x the weights of 1B but only ~6.6x the
+    // power (2.23 W -> 14.76 W). Require the ratio well below linear.
+    let p1 = point(ModelId::Llama32_1b, &[LoraTarget::Q], 2048).avg_power_w;
+    let p13 = point(ModelId::Llama2_13b, &[LoraTarget::Q], 2048).avg_power_w;
+    let ratio = p13 / p1;
+    assert!(
+        (2.0..9.0).contains(&ratio),
+        "13B/1B power ratio {ratio} (paper ~6.6, weights ~12.9)"
+    );
+}
+
+#[test]
+fn lora_targets_change_little() {
+    // Paper: Q vs Q,V differ by <1% in throughput — the LoRA path rides
+    // the SRAM-DCIM macros in parallel with the crossbar SMAC.
+    let q = point(ModelId::Llama3_8b, &[LoraTarget::Q], 1024);
+    let qv = point(ModelId::Llama3_8b, &[LoraTarget::Q, LoraTarget::V], 1024);
+    let delta = (q.throughput_tps - qv.throughput_tps).abs() / q.throughput_tps;
+    assert!(delta < 0.02, "Q vs Q,V throughput delta {delta}");
+}
+
+#[test]
+fn context_scaling_shape() {
+    // TTFT superlinear (attention quadratic), ITL growth linear-ish.
+    for model in ModelId::all_paper() {
+        let a = point(model, &[LoraTarget::Q, LoraTarget::V], 1024);
+        let b = point(model, &[LoraTarget::Q, LoraTarget::V], 2048);
+        assert!(b.ttft_s / a.ttft_s > 2.0, "{model:?} TTFT ratio");
+        assert!(b.ttft_s / a.ttft_s < 5.0, "{model:?} TTFT ratio too steep");
+        let itl_ratio = b.itl_ms / a.itl_ms;
+        assert!(
+            (1.2..2.4).contains(&itl_ratio),
+            "{model:?} ITL ratio {itl_ratio} (paper: 1.3-1.7)"
+        );
+    }
+}
+
+#[test]
+fn ct_allocation_matches_model_scale() {
+    // Layer-wise CT allocation: 1B fits one CT per layer; 8B/13B spill.
+    let cfg1 = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 1024);
+    let cfg13 = ExperimentConfig::paper_point(ModelId::Llama2_13b, &[LoraTarget::Q], 1024);
+    let s1 = Simulator::new(&cfg1);
+    let s13 = Simulator::new(&cfg13);
+    assert_eq!(s1.mapping().cts_per_layer(), 1);
+    assert!(s13.mapping().cts_per_layer() >= 5);
+    assert_eq!(s1.mapping().total_cts, 16);
+    assert_eq!(
+        s13.mapping().total_cts,
+        40 * s13.mapping().cts_per_layer()
+    );
+}

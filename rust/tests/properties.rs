@@ -1,0 +1,316 @@
+//! Property-based invariant tests (hand-rolled sweeps over util::Rng —
+//! the offline build carries no proptest; each property runs across many
+//! random cases with the failing seed printed on assertion).
+//!
+//! Invariants covered (DESIGN.md "Testing strategy"):
+//!  * XY routing: minimal, contiguous, dimension-ordered;
+//!  * spanning trees: exact cover, acyclic, congestion-free, bounded fan-in;
+//!  * ISA codec: encode/decode round-trip over random instructions;
+//!  * mapping: regions in-bounds, disjoint, exact tile cover, for random
+//!    (tile-aligned) model shapes;
+//!  * cyclic KV ring: imbalance <= 1 under any append schedule;
+//!  * quantized numerics: error bound vs float reference on random data;
+//!  * energy ledger: non-negativity, additivity, gating dominance;
+//!  * SRPG plans: stalls bounded by (n-1) * reprog, TTFT penalty exact;
+//!  * layer cost model: monotone in kv for random configs;
+//!  * flit sim vs analytic: random unicasts stay within the model band.
+
+use primal::config::{CalibConstants, ExperimentConfig, LoraTarget, ModelId, SystemConfig};
+use primal::isa::{decode, encode, Coord, Instr, Rect};
+use primal::mapping::{optimize_layer, MappingStrategy, MatrixShape};
+use primal::noc::flit::{FlitSim, Message};
+use primal::noc::topology::{xy_path, Mesh};
+use primal::noc::{AnalyticNoc, SpanningTree};
+use primal::pe::numerics::{pim_matmul, QuantMatrix};
+use primal::pe::scratchpad::CyclicKv;
+use primal::sim::LayerCostModel;
+use primal::srpg::SrpgSchedule;
+use primal::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_xy_paths_minimal_and_contiguous() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let a = Coord::new(rng.range(0, 32), rng.range(0, 32));
+        let b = Coord::new(rng.range(0, 32), rng.range(0, 32));
+        let p = xy_path(a, b);
+        assert_eq!(p.len() as u64, a.manhattan(&b), "case {case}: non-minimal");
+        let mut cur = a;
+        let mut seen_y_move = false;
+        for l in &p {
+            assert_eq!(l.from, cur, "case {case}: discontinuous");
+            assert_eq!(l.from.manhattan(&l.to), 1, "case {case}: non-mesh hop");
+            if l.from.x == l.to.x {
+                seen_y_move = true;
+            } else {
+                assert!(!seen_y_move, "case {case}: X move after Y move");
+            }
+            cur = l.to;
+        }
+        if !p.is_empty() {
+            assert_eq!(cur, b);
+        }
+    }
+}
+
+#[test]
+fn prop_spanning_trees_cover_and_congestion_free() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let x0 = rng.range(0, 28);
+        let y0 = rng.range(0, 28);
+        let x1 = x0 + 1 + rng.range(0, 32 - x0 - 1);
+        let y1 = y0 + 1 + rng.range(0, 32 - y0 - 1);
+        let dest = Rect::new(x0, y0, x1, y1);
+        let root = Coord::new(rng.range(0, 32), rng.range(0, 32));
+        let t = SpanningTree::for_rect(root, dest);
+        let nodes = t.nodes();
+        for c in dest.iter() {
+            assert!(nodes.contains(&c), "case {case}: {c:?} uncovered");
+        }
+        assert_eq!(t.max_link_sharing(), 1, "case {case}: congested tree");
+        assert!(t.max_fan_in() <= 4, "case {case}: fan-in {}", t.max_fan_in());
+    }
+}
+
+#[test]
+fn prop_isa_codec_roundtrip() {
+    let mut rng = Rng::new(0xC0DEC);
+    let rand_coord = |r: &mut Rng| Coord::new(r.range(0, 32), r.range(0, 32));
+    let rand_rect = |r: &mut Rng| {
+        let x0 = r.range(0, 31);
+        let y0 = r.range(0, 31);
+        Rect::new(x0, y0, x0 + 1 + r.range(0, 32 - x0 - 1), y0 + 1 + r.range(0, 32 - y0 - 1))
+    };
+    for case in 0..CASES * 5 {
+        let i = match rng.range(0, 13) {
+            0 => Instr::Broadcast {
+                root: rand_coord(&mut rng),
+                dest: rand_rect(&mut rng),
+                bytes: rng.next_u64() as u32,
+            },
+            1 => Instr::Reduce {
+                src: rand_rect(&mut rng),
+                root: rand_coord(&mut rng),
+                bytes: rng.next_u64() as u32,
+            },
+            2 => Instr::Unicast {
+                from: rand_coord(&mut rng),
+                to: rand_coord(&mut rng),
+                bytes: rng.next_u64() as u32,
+            },
+            3 => Instr::Smac { pes: rand_rect(&mut rng), passes: rng.next_u64() as u16 },
+            4 => Instr::SramMac { pes: rand_rect(&mut rng), passes: rng.next_u64() as u16 },
+            5 => Instr::Dmac { routers: rand_rect(&mut rng), macs: rng.next_u64() as u32 },
+            6 => Instr::Softmax { routers: rand_rect(&mut rng), elems: rng.next_u64() as u32 },
+            7 => Instr::SpadRead { routers: rand_rect(&mut rng), bytes: rng.next_u64() as u32 },
+            8 => Instr::SpadWrite { routers: rand_rect(&mut rng), bytes: rng.next_u64() as u32 },
+            9 => Instr::Reprogram { pes: rand_rect(&mut rng), bytes: rng.next_u64() as u32 },
+            10 => Instr::Gate { ct: rng.next_u64() as u16, off: rng.f64() < 0.5 },
+            11 => Instr::Sync,
+            _ => Instr::D2d {
+                from_ct: rng.next_u64() as u16,
+                to_ct: rng.next_u64() as u16,
+                bytes: rng.next_u64() as u32,
+                hops: rng.range(0, 16) as u16,
+            },
+        };
+        let back = decode(&encode(&i)).unwrap();
+        assert_eq!(i, back, "case {case}");
+    }
+}
+
+#[test]
+fn prop_mapping_regions_disjoint_inbounds_cover() {
+    let sys = SystemConfig::default();
+    let calib = CalibConstants::default();
+    let mut rng = Rng::new(0x3A9);
+    for case in 0..30 {
+        // Random tile-aligned shapes (256-multiples).
+        let hidden = 256 * rng.range(2, 20);
+        let heads = rng.range(1, 5) * 4;
+        let head_dim = if rng.f64() < 0.5 { 64 } else { 128 };
+        let q_dim = heads * head_dim;
+        let kv_dim = q_dim / [1, 2, 4][rng.range(0, 3)];
+        let inter = 256 * rng.range(4, 60);
+        // skip configurations too big even for shelf packing variety
+        let ms = MatrixShape::layer_matrices(hidden, q_dim, kv_dim, inter);
+        for strat in [MappingStrategy::Optimized, MappingStrategy::Naive] {
+            let packed = optimize_layer(&ms, &sys, &calib, strat);
+            // in-bounds
+            for r in &packed.regions {
+                assert!(r.rect.x1 as usize <= sys.mesh_dim, "case {case} {strat:?}");
+                assert!(r.rect.y1 as usize <= sys.mesh_dim, "case {case} {strat:?}");
+                assert!(r.rect.count() >= r.n_tiles());
+            }
+            // disjoint within a CT
+            for (i, a) in packed.regions.iter().enumerate() {
+                for b in packed.regions.iter().skip(i + 1) {
+                    if a.ct == b.ct {
+                        assert!(
+                            !a.rect.overlaps(&b.rect),
+                            "case {case} {strat:?}: overlap {a:?} {b:?}"
+                        );
+                    }
+                }
+            }
+            // exact tile cover per matrix
+            for m in &ms {
+                let tiles: usize = packed
+                    .regions
+                    .iter()
+                    .filter(|r| r.id == m.id)
+                    .map(|r| r.n_tiles())
+                    .sum();
+                assert_eq!(tiles, m.tiles(), "case {case} {strat:?} {:?}", m.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cyclic_kv_balance() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES {
+        let n = rng.range(1, 64);
+        let mut kv = CyclicKv::new(n, 256, 64 * 1024);
+        let appends = rng.range(1, kv.capacity().min(4096));
+        for _ in 0..appends {
+            kv.append().unwrap();
+            assert!(kv.imbalance() <= 1, "case {case}: imbalance {}", kv.imbalance());
+        }
+        let total: usize = (0..n).map(|r| kv.tokens_on(r)).sum();
+        assert_eq!(total, kv.len, "case {case}: token conservation");
+    }
+}
+
+#[test]
+fn prop_quantized_matmul_error_bounded() {
+    let mut rng = Rng::new(0x9A77);
+    for case in 0..20 {
+        let t = rng.range(1, 4);
+        let m = 256;
+        let k = 256 * rng.range(1, 3);
+        let x: Vec<f32> = (0..t * k).map(|_| rng.signed_f32()).collect();
+        let w: Vec<f32> = (0..m * k)
+            .map(|_| rng.signed_f32() / (k as f32).sqrt())
+            .collect();
+        let q = QuantMatrix::quantize(&w, m, k);
+        let got = pim_matmul(&x, t, &q, None);
+        let mut max_err = 0f32;
+        let mut max_mag = 0f32;
+        for ti in 0..t {
+            for mi in 0..m {
+                let mut s = 0.0f32;
+                for ki in 0..k {
+                    s += x[ti * k + ki] * w[mi * k + ki];
+                }
+                max_err = max_err.max((got[ti * m + mi] - s).abs());
+                max_mag = max_mag.max(s.abs());
+            }
+        }
+        assert!(
+            max_err / max_mag.max(1e-3) < 0.08,
+            "case {case}: rel err {}",
+            max_err / max_mag
+        );
+    }
+}
+
+#[test]
+fn prop_srpg_stall_bounds() {
+    let mut rng = Rng::new(0x560);
+    for case in 0..CASES {
+        let n_groups = rng.range(1, 48);
+        let reprog = rng.range(1, 100_000) as u64;
+        let s = SrpgSchedule {
+            n_groups,
+            cts_per_group: rng.range(1, 8),
+            reprog_cycles: reprog,
+            enabled: true,
+        };
+        // random monotone group starts
+        let mut starts = Vec::with_capacity(n_groups);
+        let mut acc = 0u64;
+        for _ in 0..n_groups {
+            starts.push(acc);
+            acc += rng.range(0, 200_000) as u64;
+        }
+        let plan = s.plan(&starts);
+        assert_eq!(plan.ttft_penalty, reprog, "case {case}");
+        assert!(
+            plan.pipeline_stalls <= reprog * (n_groups as u64).saturating_sub(1),
+            "case {case}: stalls {} exceed bound",
+            plan.pipeline_stalls
+        );
+        // events are serialized on the single write stream
+        for w in plan.events.windows(2) {
+            assert!(w[0].end <= w[1].start, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_layer_cost_monotone_in_kv() {
+    for (model, seedless_ctx) in
+        [(ModelId::Llama32_1b, 1024usize), (ModelId::Llama3_8b, 2048)]
+    {
+        let cfg = ExperimentConfig::paper_point(
+            model,
+            &[LoraTarget::Q, LoraTarget::V],
+            seedless_ctx,
+        );
+        let mapping = primal::mapping::map_model(&cfg);
+        let m = LayerCostModel::build(&cfg, &mapping.layers[0]);
+        let mut prev = 0u64;
+        for kv in (0..8192).step_by(97) {
+            let c = m.eval(kv).cycles;
+            assert!(c >= prev, "{model:?}: cost decreased at kv {kv}");
+            prev = c;
+        }
+    }
+}
+
+#[test]
+fn prop_flit_vs_analytic_band_random_unicasts() {
+    let sys = SystemConfig::default();
+    let calib = CalibConstants::default();
+    let analytic = AnalyticNoc::new(&sys, &calib);
+    let flit = FlitSim::new(Mesh::square(8), sys.fifo_bytes, sys.link_bytes_per_cycle());
+    let mut rng = Rng::new(0xF117);
+    for case in 0..40 {
+        let src = Coord::new(rng.range(0, 8), rng.range(0, 8));
+        let dst = Coord::new(rng.range(0, 8), rng.range(0, 8));
+        if src == dst {
+            continue;
+        }
+        // streaming payloads (>= 256 B) — the regime the models share
+        let bytes = 256 + rng.range(0, 4096) as u32;
+        let fr = flit.run(&[Message { src, dst, bytes, at: 0 }]);
+        let ar = analytic.unicast(src, dst, bytes as u64);
+        let ratio = ar.cycles as f64 / fr.makespan as f64;
+        assert!(
+            (0.55..=1.8).contains(&ratio),
+            "case {case}: {src:?}->{dst:?} {bytes}B ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn prop_throughput_efficiency_identities() {
+    // The derived identities hold for random experiment points.
+    let mut rng = Rng::new(0x1D);
+    for _ in 0..6 {
+        let model = [ModelId::Llama32_1b, ModelId::Llama3_8b][rng.range(0, 2)];
+        let ctx = 256 * rng.range(1, 5);
+        let cfg = ExperimentConfig::paper_point(model, &[LoraTarget::Q], ctx);
+        let r = primal::sim::Simulator::new(&cfg).run();
+        let tput = (r.input_tokens + r.output_tokens) as f64
+            / (r.ttft_s + r.output_tokens as f64 * r.itl_ms * 1e-3);
+        assert!((r.throughput_tps - tput).abs() / tput < 1e-9);
+        assert!((r.efficiency_tpj - r.throughput_tps / r.avg_power_w).abs() < 1e-9);
+        assert!(r.total_energy_j > 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration: the serving coordinator end-to-end (timing mode), plus
+//! golden functional mode when artifacts are present.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::coordinator::{
+    AdapterId, FunctionalMode, Request, Server, ServerConfig,
+};
+use primal::runtime::default_artifacts_dir;
+use std::sync::mpsc;
+
+fn make_server(model: ModelId, ctx: usize, functional: FunctionalMode) -> Server {
+    let cfg = ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], ctx);
+    Server::new(ServerConfig {
+        experiment: cfg,
+        functional,
+        artifacts_dir: default_artifacts_dir(),
+    })
+    .expect("server")
+}
+
+#[test]
+fn multi_request_multi_task_run() {
+    let mut s = make_server(ModelId::Llama32_1b, 256, FunctionalMode::TimingOnly);
+    for a in 0..3u32 {
+        s.register_adapter(AdapterId(a));
+    }
+    let pattern = [0u32, 0, 1, 1, 1, 2, 0];
+    for (i, &a) in pattern.iter().enumerate() {
+        s.submit(Request {
+            id: i as u64,
+            adapter: AdapterId(a),
+            input_tokens: 256,
+            output_tokens: 16,
+        })
+        .unwrap();
+    }
+    let (tx, rx) = mpsc::channel();
+    let results = s.run(Some(&tx)).unwrap();
+    drop(tx);
+
+    assert_eq!(results.len(), 7);
+    // Task switch positions: 0 (cold), 2, 5, 6.
+    let swaps: Vec<bool> = results.iter().map(|r| r.swap).collect();
+    assert_eq!(swaps, vec![true, false, true, false, false, true, true]);
+
+    // Token stream: 7 * 16 events, per-request monotone.
+    let events: Vec<_> = rx.iter().collect();
+    assert_eq!(events.len(), 7 * 16);
+    for req in 0..7u64 {
+        let times: Vec<f64> = events
+            .iter()
+            .filter(|e| e.request == req)
+            .map(|e| e.at_s)
+            .collect();
+        assert_eq!(times.len(), 16);
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    // The simulated clock advanced by the sum of request times.
+    let total: f64 = results.iter().map(|r| r.total_s).sum();
+    assert!((s.stats().sim_time_s - total).abs() < 1e-9);
+}
+
+#[test]
+fn swap_latency_visible_in_ttft() {
+    let mut s = make_server(ModelId::Llama3_8b, 256, FunctionalMode::TimingOnly);
+    s.register_adapter(AdapterId(0));
+    s.register_adapter(AdapterId(1));
+    for (i, a) in [(0u64, 0u32), (1, 0), (2, 1)] {
+        s.submit(Request {
+            id: i,
+            adapter: AdapterId(a),
+            input_tokens: 256,
+            output_tokens: 8,
+        })
+        .unwrap();
+    }
+    let results = s.run(None).unwrap();
+    // hit (request 1) must beat both swaps (0 and 2)
+    assert!(results[1].ttft_s < results[0].ttft_s);
+    assert!(results[1].ttft_s < results[2].ttft_s);
+    // swap cost is symmetric
+    assert!((results[0].ttft_s - results[2].ttft_s).abs() / results[0].ttft_s < 1e-6);
+}
+
+#[test]
+fn golden_mode_runs_numerics_on_request_path() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut s = make_server(ModelId::Llama32_1b, 256, FunctionalMode::Golden);
+    s.register_adapter(AdapterId(0));
+    s.submit(Request {
+        id: 0,
+        adapter: AdapterId(0),
+        input_tokens: 256,
+        output_tokens: 4,
+    })
+    .unwrap();
+    let results = s.run(None).unwrap();
+    let g = results[0].golden_exec_ms.expect("golden exec time");
+    assert!(g > 0.0, "PJRT execution must take measurable time");
+}
+
+#[test]
+fn variable_request_lengths_scale() {
+    let mut s = make_server(ModelId::Llama32_1b, 512, FunctionalMode::TimingOnly);
+    s.register_adapter(AdapterId(0));
+    s.submit(Request { id: 0, adapter: AdapterId(0), input_tokens: 128, output_tokens: 8 })
+        .unwrap();
+    s.submit(Request { id: 1, adapter: AdapterId(0), input_tokens: 512, output_tokens: 8 })
+        .unwrap();
+    let results = s.run(None).unwrap();
+    // 4x the prompt => roughly >2x the prefill time (same adapter: no swap)
+    assert!(results[1].ttft_s > results[0].ttft_s * 2.0);
+}
