@@ -6,6 +6,10 @@
 //! table, and exits non-zero if a shape check fails, so `cargo bench`
 //! doubles as a reproduction gate.
 
+// Each bench target compiles this module independently and uses only a
+// subset of the helpers; silence per-target dead-code noise.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Measure `f` with `warmup` + `iters` runs; returns (median_s, max_s).
@@ -42,7 +46,7 @@ pub struct Expect {
 impl Expect {
     pub fn check(&self) -> bool {
         let ratio = self.measured / self.paper;
-        ratio >= 1.0 / self.band && ratio <= self.band
+        (1.0 / self.band..=self.band).contains(&ratio)
     }
 }
 

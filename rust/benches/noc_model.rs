@@ -44,7 +44,7 @@ fn main() {
             let ratio = ar.cycles as f64 / fr.makespan as f64;
             worst = worst.max(ratio.max(1.0 / ratio));
             let band = if bytes <= 64 { 2.2 } else { 1.6 };
-            let pass = ratio >= 1.0 / band && ratio <= band;
+            let pass = (1.0 / band..=band).contains(&ratio);
             println!(
                 "{:>4}x{:<2} {:>10?} {:>8} {:>12} {:>12} {:>7.2}x {}",
                 dim, dim, (dst.x, dst.y), bytes, fr.makespan, ar.cycles, ratio,

@@ -153,7 +153,7 @@ mod tests {
     fn known_parameter_counts() {
         // Per-layer weights must land near the published model sizes.
         let m1 = ModelConfig::of(ModelId::Llama32_1b);
-        assert_eq!(m1.layer_weights(), 60_817_408 / 1 /* 60.8M */);
+        assert_eq!(m1.layer_weights(), 60_817_408); // 60.8M
         let total_1b = m1.total_weights();
         assert!((0.9e9..1.1e9).contains(&(total_1b as f64)),
             "1B decoder weights ~0.97B, got {total_1b}");

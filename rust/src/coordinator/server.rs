@@ -12,12 +12,13 @@
 //! request path runs real numerics without Python.
 
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
+use crate::bail;
 use crate::config::ExperimentConfig;
-use crate::runtime::GoldenRuntime;
-use crate::sim::{LayerCostModel, Simulator};
-use crate::sim::cost::program_cost;
 use crate::dataflow::{prefill_program, reprogram_program};
-use anyhow::{bail, Result};
+use crate::runtime::{Executable, GoldenRuntime};
+use crate::sim::cost::program_cost;
+use crate::sim::{LayerCostModel, Simulator};
+use crate::util::error::Result;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 
@@ -100,7 +101,7 @@ pub struct Server {
     prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
     n_layers: usize,
     golden: Option<GoldenRuntime>,
-    golden_exe: Option<xla::PjRtLoadedExecutable>,
+    golden_exe: Option<Executable>,
     stats: ServerStats,
 }
 

@@ -4,7 +4,7 @@
 //!  * [`cacti`] — a CACTI-style SRAM latency/energy/area model used for
 //!    the 32 KB scratchpad (the paper obtained these numbers from CACTI;
 //!    we re-derive them analytically and calibrate to Table IV).
-//!  * [`macros`] — per-macro power/area breakdown (paper Table IV).
+//!  * [`macros_model`] — per-macro power/area breakdown (paper Table IV).
 //!  * [`EnergyLedger`] — the simulator-facing accumulator: the sim posts
 //!    macro-busy cycles and event energies; the ledger integrates them
 //!    into joules and average watts, including SRPG gating states.

@@ -312,4 +312,82 @@ mod tests {
         assert_eq!(encode(&i).len(), 16);
         assert_eq!(encode(&i), encode(&i));
     }
+
+    /// Every one of the 13 instruction variants appears in `samples()`
+    /// (mnemonic coverage), uses a distinct opcode byte, and round-trips
+    /// encode -> decode to identity.
+    #[test]
+    fn every_variant_covered_distinct_opcodes() {
+        let s = samples();
+        let mnemonics: std::collections::BTreeSet<&'static str> =
+            s.iter().map(Instr::mnemonic).collect();
+        assert_eq!(
+            mnemonics.len(),
+            13,
+            "samples() must cover all 13 instruction forms, got {mnemonics:?}"
+        );
+        let mut op_by_mnemonic = std::collections::BTreeMap::new();
+        for i in &s {
+            let buf = encode(i);
+            assert_eq!(decode(&buf).unwrap(), *i);
+            let prev = op_by_mnemonic.insert(i.mnemonic(), buf[0]);
+            if let Some(op) = prev {
+                assert_eq!(op, buf[0], "{} opcode not stable", i.mnemonic());
+            }
+        }
+        let distinct: std::collections::BTreeSet<u8> =
+            op_by_mnemonic.values().copied().collect();
+        assert_eq!(distinct.len(), 13, "opcodes must be distinct per form");
+    }
+
+    /// Boundary operands survive the fixed-width fields: 32x32-mesh
+    /// coordinate extremes, u32::MAX payloads, u16::MAX aux values, and
+    /// the rect y1 byte limit (meshes are <= 256 wide by design).
+    #[test]
+    fn boundary_values_roundtrip() {
+        let cases = vec![
+            Instr::Unicast {
+                from: Coord { x: u16::MAX, y: u16::MAX },
+                to: Coord::new(0, 0),
+                bytes: u32::MAX,
+            },
+            Instr::Broadcast {
+                root: Coord { x: u16::MAX, y: u16::MAX },
+                dest: Rect::new(0, 0, 256, 255),
+                bytes: u32::MAX,
+            },
+            Instr::Reduce {
+                src: Rect::new(255, 254, 256, 255),
+                root: Coord::new(0, 0),
+                bytes: 0,
+            },
+            Instr::Smac { pes: Rect::new(0, 0, 32, 32), passes: u16::MAX },
+            Instr::SramMac { pes: Rect::new(31, 31, 32, 32), passes: 0 },
+            Instr::Dmac { routers: Rect::new(0, 0, 1, 1), macs: u32::MAX },
+            Instr::Softmax { routers: Rect::new(0, 0, 32, 32), elems: 0 },
+            Instr::SpadRead { routers: Rect::new(0, 0, 32, 32), bytes: u32::MAX },
+            Instr::SpadWrite { routers: Rect::new(0, 0, 32, 32), bytes: 1 },
+            Instr::Reprogram { pes: Rect::new(0, 0, 32, 32), bytes: u32::MAX },
+            Instr::Gate { ct: u16::MAX, off: true },
+            Instr::Sync,
+            Instr::D2d { from_ct: u16::MAX, to_ct: 0, bytes: u32::MAX, hops: u16::MAX },
+        ];
+        for i in cases {
+            let back = decode(&encode(&i)).unwrap();
+            assert_eq!(i, back, "boundary round-trip failed for {i:?}");
+        }
+    }
+
+    /// The reserved tail byte stays zero for every non-rect-in-aux form,
+    /// keeping the encoding forward-extensible.
+    #[test]
+    fn reserved_byte_zero_where_unused() {
+        for i in samples() {
+            let buf = encode(&i);
+            match i {
+                Instr::Broadcast { .. } | Instr::Reduce { .. } => {}
+                _ => assert_eq!(buf[15], 0, "reserved byte dirty for {i:?}"),
+            }
+        }
+    }
 }

@@ -71,7 +71,7 @@ impl Rect {
     }
 
     pub fn contains(&self, c: Coord) -> bool {
-        c.x >= self.x0 && c.x < self.x1 && c.y >= self.y0 && c.y < self.y1
+        (self.x0..self.x1).contains(&c.x) && (self.y0..self.y1).contains(&c.y)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = Coord> + '_ {

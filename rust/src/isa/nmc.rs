@@ -6,7 +6,7 @@
 //! per-group issue overhead and tracks fetch/issue statistics; the routers'
 //! execution time is modeled by the NoC + PE cost models.
 
-use super::{Program};
+use super::Program;
 use crate::config::CalibConstants;
 
 /// NMC execution statistics for one program run.

@@ -15,7 +15,9 @@
 //!   `artifacts/`. Python never runs on the request path.
 //! * **L3 (this crate)** — everything else. The simulator is the product;
 //!   [`coordinator`] wraps it in a serving front-end; [`runtime`] executes
-//!   the golden HLO modules via the `xla` PJRT CPU client.
+//!   the golden HLO modules through a backend gate: the default build is
+//!   hermetic (pure-Rust stub, zero external dependencies), and the
+//!   off-by-default `xla` feature selects the real PJRT CPU client.
 //!
 //! ## Quick start
 //!

@@ -219,7 +219,8 @@ mod tests {
 
     #[test]
     fn tables_render() {
-        let cfg = &paper_grid()[0];
+        let grid = paper_grid();
+        let cfg = &grid[0];
         let t1 = table1(cfg);
         assert!(t1.contains("IPCN Dimension") && t1.contains("32x32"));
         let t4 = table4(cfg);

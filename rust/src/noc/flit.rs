@@ -313,7 +313,7 @@ mod tests {
             at: 0,
         }]);
         // 1 flit, 7 hops + inject/eject pipeline => ~hops+2 cycles.
-        assert!(r.makespan >= 7 && r.makespan <= 12, "makespan {}", r.makespan);
+        assert!((7..=12).contains(&r.makespan), "makespan {}", r.makespan);
         assert_eq!(r.flit_hops, 7);
     }
 

@@ -132,4 +132,73 @@ mod tests {
             assert_eq!(m.id(m.coord(id)), id);
         }
     }
+
+    /// Exhaustive all-pairs invariants on small meshes: every XY route is
+    /// minimal (hop count == Manhattan distance), contiguous, stays inside
+    /// the mesh, and is symmetric in length (not in path) under swap.
+    #[test]
+    fn all_pairs_route_and_hop_invariants() {
+        for (w, h) in [(1usize, 1usize), (1, 6), (4, 4), (5, 3)] {
+            let m = Mesh::new(w, h);
+            for a in m.nodes().collect::<Vec<_>>() {
+                for b in m.nodes().collect::<Vec<_>>() {
+                    let p = xy_path(a, b);
+                    assert_eq!(p.len() as u64, a.manhattan(&b), "{a:?}->{b:?}");
+                    assert_eq!(
+                        xy_path(b, a).len(),
+                        p.len(),
+                        "hop count must be symmetric {a:?}<->{b:?}"
+                    );
+                    let mut cur = a;
+                    for l in &p {
+                        assert_eq!(l.from, cur);
+                        assert_eq!(l.from.manhattan(&l.to), 1, "non-unit hop");
+                        assert!(m.contains(l.to), "{l:?} leaves the mesh");
+                        cur = l.to;
+                    }
+                    assert_eq!(cur, b, "route must terminate at the target");
+                }
+            }
+        }
+    }
+
+    /// Neighbor relation: symmetric, degree in 2..=4, and total directed
+    /// adjacency equals 2 * (number of mesh links).
+    #[test]
+    fn neighbor_relation_consistent() {
+        for (w, h) in [(2usize, 2usize), (4, 4), (3, 5)] {
+            let m = Mesh::new(w, h);
+            let mut directed = 0usize;
+            for c in m.nodes().collect::<Vec<_>>() {
+                let ns = m.neighbors(c);
+                assert!((1..=4).contains(&ns.len()));
+                for n in &ns {
+                    assert!(m.contains(*n));
+                    assert_eq!(c.manhattan(n), 1);
+                    assert!(
+                        m.neighbors(*n).contains(&c),
+                        "neighbor relation must be symmetric"
+                    );
+                }
+                directed += ns.len();
+            }
+            let links = w * (h - 1) + h * (w - 1);
+            assert_eq!(directed, 2 * links);
+        }
+    }
+
+    /// Route hop counts match the analytic lower bound used everywhere in
+    /// the cost model: hops(a,b) = |dx| + |dy|, additive under waypoints
+    /// on monotone routes.
+    #[test]
+    fn hop_count_additivity_via_waypoint() {
+        let a = Coord::new(1, 1);
+        let mid = Coord::new(4, 3);
+        let b = Coord::new(6, 7);
+        // mid is inside the bounding box of a->b, so the leg sum is exact.
+        assert_eq!(
+            xy_path(a, mid).len() + xy_path(mid, b).len(),
+            xy_path(a, b).len()
+        );
+    }
 }

@@ -1,0 +1,138 @@
+//! Execution backend for the golden-model runtime.
+//!
+//! Two implementations behind one API:
+//!
+//!  * **default (hermetic)** — a pure-Rust stub. Manifest parsing and
+//!    tensor loading (the pure-Rust halves of the runtime) always work;
+//!    `compile` verifies the HLO text exists and returns a handle;
+//!    `execute` reports that real execution needs the PJRT client. This
+//!    keeps `cargo build --release && cargo test -q` free of any native
+//!    XLA dependency.
+//!  * **`--features xla`** — the real PJRT CPU client path. Requires
+//!    vendoring the `xla`/xla_extension crate (not part of the offline
+//!    build); the implementation below documents the exact call sequence
+//!    (`HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//!    -> `PjRtClient::compile` -> `execute` -> `decompose_tuple`) so the
+//!    port is mechanical once the crate is available.
+
+use super::HostTensor;
+use crate::util::error::Result;
+use std::path::Path;
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use super::*;
+    use crate::util::error::Context as _;
+
+    /// Stub stand-in for the PJRT CPU client.
+    #[derive(Debug, Default)]
+    pub struct Client;
+
+    /// Stub stand-in for a compiled (loaded) executable.
+    #[derive(Debug, Clone)]
+    pub struct Executable {
+        pub module: String,
+    }
+
+    impl Client {
+        pub fn new() -> Result<Self> {
+            Ok(Self)
+        }
+
+        /// "Compile" a module: verify its HLO text is present and
+        /// readable so configuration errors surface at the same point
+        /// they would with the real backend.
+        pub fn compile(&self, hlo_path: &Path, module: &str) -> Result<Executable> {
+            std::fs::metadata(hlo_path)
+                .with_context(|| format!("HLO text {} for module {module}", hlo_path.display()))?;
+            Ok(Executable { module: module.to_string() })
+        }
+    }
+
+    impl Executable {
+        pub fn execute(&self, _inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+            Err(crate::format_err!(
+                "module {}: golden execution requires the `xla` feature (PJRT CPU \
+                 client); the default build is hermetic and timing-only",
+                self.module
+            ))
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+mod imp {
+    use super::*;
+    use crate::util::error::Context as _;
+
+    // NOTE: this path needs the `xla` crate (xla_extension bindings)
+    // vendored into the workspace. Interchange is HLO *text*, not
+    // serialized protos: jax >= 0.5 emits 64-bit instruction ids that
+    // xla_extension 0.5.1 rejects, and the text parser reassigns ids.
+
+    pub struct Client {
+        client: xla::PjRtClient,
+    }
+
+    pub struct Executable {
+        pub module: String,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Client {
+        pub fn new() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn compile(&self, hlo_path: &Path, module: &str) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling module {module}"))?;
+            Ok(Executable { module: module.to_string(), exe })
+        }
+    }
+
+    impl Executable {
+        pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<Result<_>>()?;
+            // `mut`: the xla crate's decompose_tuple takes &mut self.
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing module {}", self.module))?[0][0]
+                .to_literal_sync()
+                .context("sync literal")?;
+            // aot.py lowers with return_tuple=True.
+            let elems = result.decompose_tuple().context("decompose tuple")?;
+            elems
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().context("output to f32"))
+                .collect()
+        }
+    }
+
+    /// Convert to an XLA literal of the right shape/dtype (untyped-byte
+    /// construction: the .bin files are already little-endian row-major).
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        let ty = match t.spec.dtype.as_str() {
+            "float32" => xla::ElementType::F32,
+            "int8" => xla::ElementType::S8,
+            "int32" => xla::ElementType::S32,
+            other => return Err(crate::format_err!("unsupported dtype {other}")),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.spec.shape, &t.data)
+            .with_context(|| format!("literal for {}", t.spec.name))
+    }
+}
+
+pub use imp::{Client, Executable};

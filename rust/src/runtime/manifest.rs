@@ -1,7 +1,7 @@
 //! Parser for `artifacts/manifest.json` (emitted by aot.py).
 
+use crate::util::error::{Context, Result};
 use crate::util::Json;
-use anyhow::{Context, Result};
 use std::path::Path;
 
 /// One tensor entry (parameter or output).
@@ -90,7 +90,7 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let j = Json::parse(text).map_err(|e| crate::format_err!("manifest JSON: {e}"))?;
         let cfg = j.get("config").context("config")?;
         let num = |k: &str| -> Result<usize> {
             cfg.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))

@@ -1,4 +1,5 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas modules.
+//! Golden-model runtime: load and execute the AOT-compiled JAX/Pallas
+//! modules.
 //!
 //! The L2 compile path (`python/compile/aot.py`, run once by
 //! `make artifacts`) lowers the LoRA decoder layer to **HLO text** under
@@ -8,21 +9,25 @@
 //!
 //!  * [`Manifest`] parses `artifacts/manifest.json` (hand-rolled JSON —
 //!    the build is offline, no serde);
-//!  * [`GoldenRuntime`] creates a PJRT CPU client, compiles the HLO
-//!    modules, executes them with the manifest tensors, and checks the
+//!  * [`GoldenRuntime`] loads the manifest tensors, compiles the HLO
+//!    modules through the [`backend`], executes them, and checks the
 //!    outputs against the stored goldens — the functional validation
 //!    that the fabric the simulator models computes the right numbers.
 //!
-//! Python never runs here: the HLO text and tensors are self-contained.
-//! Interchange is HLO *text*, not serialized protos (jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids — see /opt/xla-example/README.md).
+//! Execution is backend-gated: the default build uses the hermetic
+//! pure-Rust stub in [`backend`] (manifest/tensor plumbing works,
+//! execution reports unsupported); `--features xla` selects the real
+//! PJRT CPU client (requires vendoring the `xla` crate). Python never
+//! runs here: the HLO text and tensors are self-contained.
 
+mod backend;
 mod manifest;
 
+pub use backend::{Client, Executable};
 pub use manifest::{Manifest, ModuleSpec, TensorSpec};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Tolerance for golden-output comparison. The PJRT CPU client here is
@@ -73,19 +78,6 @@ impl HostTensor {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect()
     }
-
-    /// Convert to an XLA literal of the right shape/dtype (untyped-byte
-    /// construction: the .bin files are already little-endian row-major).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let ty = match self.spec.dtype.as_str() {
-            "float32" => xla::ElementType::F32,
-            "int8" => xla::ElementType::S8,
-            "int32" => xla::ElementType::S32,
-            other => bail!("unsupported dtype {other}"),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, &self.spec.shape, &self.data)
-            .with_context(|| format!("literal for {}", self.spec.name))
-    }
 }
 
 /// Result of validating one module against its goldens.
@@ -101,9 +93,9 @@ pub struct ValidationReport {
     pub exec_ms: f64,
 }
 
-/// PJRT-backed golden-model runtime.
+/// Backend-gated golden-model runtime.
 pub struct GoldenRuntime {
-    client: xla::PjRtClient,
+    client: Client,
     root: PathBuf,
     manifest: Manifest,
 }
@@ -113,7 +105,7 @@ impl GoldenRuntime {
     pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let root = artifacts_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&root.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = Client::new()?;
         Ok(Self { client, root, manifest })
     }
 
@@ -122,17 +114,10 @@ impl GoldenRuntime {
     }
 
     /// Compile one module from its HLO text.
-    pub fn compile(&self, module: &str) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile(&self, module: &str) -> Result<Executable> {
         let spec = self.module_spec(module)?;
         let path = self.root.join(&spec.hlo);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling module {module}"))
+        self.client.compile(&path, module)
     }
 
     fn module_spec(&self, module: &str) -> Result<&ModuleSpec> {
@@ -163,22 +148,8 @@ impl GoldenRuntime {
 
     /// Execute a compiled module on the given inputs; returns the output
     /// tuple elements as f32 vectors.
-    pub fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[HostTensor],
-    ) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let elems = result.decompose_tuple()?;
-        elems
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(Into::into))
-            .collect()
+    pub fn execute(&self, exe: &Executable, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        exe.execute(inputs)
     }
 
     /// Compile + execute + compare against goldens for one module.
@@ -239,6 +210,13 @@ impl GoldenRuntime {
     }
 }
 
+/// Whether this build can actually execute HLO modules (true only with
+/// the `xla` feature). Lets tests and callers skip golden execution
+/// gracefully on the hermetic default build.
+pub fn execution_supported() -> bool {
+    cfg!(feature = "xla")
+}
+
 /// Locate the artifacts directory from the current/repo dir.
 pub fn default_artifacts_dir() -> PathBuf {
     for cand in ["artifacts", "../artifacts"] {
@@ -248,4 +226,40 @@ pub fn default_artifacts_dir() -> PathBuf {
         }
     }
     PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_artifacts_fails_cleanly() {
+        let err = GoldenRuntime::open("/nonexistent/artifacts").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"), "{err}");
+    }
+
+    #[test]
+    fn host_tensor_rejects_length_mismatch() {
+        let dir = std::env::temp_dir().join(format!("primal_rt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.bin"), [0u8; 8]).unwrap();
+        let spec = TensorSpec {
+            name: "t".into(),
+            file: "t.bin".into(),
+            shape: vec![4],
+            dtype: "float32".into(),
+            sha256_prefix: String::new(),
+        };
+        let err = HostTensor::load(&dir, &spec).unwrap_err();
+        assert!(err.to_string().contains("8 bytes"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_backend_reports_unsupported_execution() {
+        let exe = Executable { module: "decode_step".into() };
+        let err = exe.execute(&[]).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
 }

@@ -1,0 +1,159 @@
+//! Minimal error plumbing (the offline build carries no `anyhow`).
+//!
+//! Mirrors the small slice of the `anyhow` API the crate uses — an opaque
+//! string-carrying [`Error`], a [`Result`] alias, the [`Context`]
+//! extension trait for `Option`/`Result`, and the [`bail!`]/[`format_err!`]
+//! macros — so call sites read identically to their `anyhow` equivalents.
+
+use std::fmt;
+
+/// An opaque error: a message plus an optional chain of causes, rendered
+/// as `context: cause: cause`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (anyhow's whole-chain form) and `{e}` both print the
+        // full flattened message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension: attach a message to the failure of
+/// an `Option` (None) or a `Result` (Err), producing [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        None::<u32>.context("missing value")
+    }
+
+    #[test]
+    fn option_context() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn result_context_chains() {
+        let r: Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<(), &str> = Err("cause");
+        let e = r.with_context(|| format!("ctx {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "ctx 7: cause");
+    }
+
+    #[test]
+    fn bail_and_format_err() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        let e = f(0).unwrap_err();
+        assert!(e.to_string().contains("zero not allowed"));
+        let e2 = format_err!("v={}", 9);
+        assert_eq!(e2.to_string(), "v=9");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read_missing() -> Result<Vec<u8>> {
+            Ok(std::fs::read("/definitely/not/a/file")?)
+        }
+        assert!(read_missing().is_err());
+    }
+
+    #[test]
+    fn alternate_formatting_matches_plain() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

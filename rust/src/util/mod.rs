@@ -1,14 +1,17 @@
 //! Dependency-free utilities: deterministic RNG, a minimal JSON
 //! parser/writer (for `artifacts/manifest.json` and experiment configs),
-//! and fixed-width table rendering for the report CLI.
+//! fixed-width table rendering for the report CLI, and the error plumbing
+//! the runtime/coordinator layers use.
 //!
-//! The build is fully offline with a small vendored crate set (no serde /
-//! rand / clap), so these are hand-rolled and tested here.
+//! The build is fully offline with zero external crates (no serde / rand /
+//! clap / anyhow), so these are hand-rolled and tested here.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod table;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
 pub use table::Table;

@@ -9,7 +9,7 @@
 //! (`make artifacts`) so `cargo test` works on a fresh checkout.
 
 use primal::pe::numerics::{pim_lora_matmul, QuantMatrix};
-use primal::runtime::{default_artifacts_dir, GoldenRuntime, HostTensor};
+use primal::runtime::{default_artifacts_dir, execution_supported, GoldenRuntime, HostTensor};
 
 fn runtime() -> Option<GoldenRuntime> {
     let dir = default_artifacts_dir();
@@ -22,6 +22,10 @@ fn runtime() -> Option<GoldenRuntime> {
 
 #[test]
 fn pjrt_reproduces_all_golden_modules() {
+    if !execution_supported() {
+        eprintln!("skipping: golden execution needs `--features xla`");
+        return;
+    }
     let Some(rt) = runtime() else { return };
     let reports = rt.validate_all().expect("validation run");
     assert_eq!(reports.len(), 3, "decode_step, prefill_block, lora_matmul");

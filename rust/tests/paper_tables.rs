@@ -15,7 +15,7 @@ fn point(model: ModelId, targets: &[LoraTarget], ctx: usize) -> primal::sim::Sim
 
 fn within(measured: f64, paper: f64, band: f64) -> bool {
     let r = measured / paper;
-    r >= 1.0 / band && r <= band
+    (1.0 / band..=band).contains(&r)
 }
 
 #[test]

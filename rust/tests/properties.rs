@@ -16,6 +16,7 @@
 //!  * flit sim vs analytic: random unicasts stay within the model band.
 
 use primal::config::{CalibConstants, ExperimentConfig, LoraTarget, ModelId, SystemConfig};
+use primal::energy::{CtPowerState, EnergyLedger};
 use primal::isa::{decode, encode, Coord, Instr, Rect};
 use primal::mapping::{optimize_layer, MappingStrategy, MatrixShape};
 use primal::noc::flit::{FlitSim, Message};
@@ -296,6 +297,113 @@ fn prop_flit_vs_analytic_band_random_unicasts() {
             "case {case}: {src:?}->{dst:?} {bytes}B ratio {ratio}"
         );
     }
+}
+
+#[test]
+fn prop_srpg_reconfiguration_energy_never_negative() {
+    // Random SRPG reconfiguration schedules (group counts, reprogramming
+    // durations, wave timings) + random decode intervals must never post
+    // a negative CT-cycle integral or a negative energy component.
+    let sys = SystemConfig::default();
+    let calib = CalibConstants::default();
+    let mut rng = Rng::new(0x1D7E);
+    for case in 0..CASES {
+        let n_groups = rng.range(1, 48);
+        let s = SrpgSchedule {
+            n_groups,
+            cts_per_group: rng.range(1, 8),
+            reprog_cycles: rng.range(0, 100_000) as u64,
+            enabled: rng.f64() < 0.5,
+        };
+        let mut starts = Vec::with_capacity(n_groups);
+        let mut acc = 0u64;
+        for _ in 0..n_groups {
+            starts.push(acc);
+            acc += rng.range(0, 150_000) as u64;
+        }
+        let plan = s.plan(&starts);
+        assert!(plan.reprog_ct_cycles >= 0.0, "case {case}");
+        for e in &plan.events {
+            assert!(e.end >= e.start, "case {case}: negative-duration event");
+        }
+
+        let sc = s.decode_interval(rng.range(1, 1_000_000) as u64);
+        assert!(sc.active >= 0.0 && sc.idle >= 0.0 && sc.reprogramming >= 0.0);
+
+        // Post the whole reconfiguration to a ledger: every component of
+        // the breakdown must stay non-negative (idle energy included).
+        let mut ledger = EnergyLedger::new(&sys, &calib);
+        ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
+        ledger.post_ct_state(s.idle_state(), sc.idle, 1);
+        ledger.post_ct_state(CtPowerState::Reprogramming, plan.reprog_ct_cycles, 1);
+        let b = ledger.breakdown;
+        for (name, v) in [
+            ("rram", b.rram_j),
+            ("sram", b.sram_j),
+            ("scratchpad", b.scratchpad_j),
+            ("router", b.router_j),
+            ("dmac", b.dmac_j),
+            ("network", b.network_j),
+            ("retention", b.retention_j),
+            ("static", b.static_j),
+        ] {
+            assert!(v >= 0.0, "case {case}: negative {name} energy {v}");
+        }
+        assert!(ledger.total_j() >= 0.0, "case {case}");
+    }
+}
+
+#[test]
+fn prop_gating_monotone_in_idle_fraction() {
+    // Fix a CT-cycle budget and sweep the idle PE fraction upward: with
+    // SRPG gating the average power must fall monotonically (gated tiles
+    // draw retention-only), and the saving over the ungated baseline must
+    // grow monotonically — the mechanism behind the paper's "up to 80%
+    // power savings" scaling with model size.
+    let sys = SystemConfig::default();
+    let calib = CalibConstants::default();
+    let span = 1_000_000u64;
+    let budget = span as f64 * 64.0; // 64 CTs' worth of cycles
+    let power = |idle_frac: f64, gated: bool| -> f64 {
+        let mut ledger = EnergyLedger::new(&sys, &calib);
+        let idle_state = if gated {
+            CtPowerState::Gated
+        } else {
+            CtPowerState::IdleUngated
+        };
+        ledger.post_ct_state(CtPowerState::Active, budget * (1.0 - idle_frac), 1);
+        ledger.post_ct_state(idle_state, budget * idle_frac, 1);
+        ledger.span_cycles = span;
+        ledger.average_power_w()
+    };
+    let fracs: Vec<f64> = (0..=20).map(|i| i as f64 / 20.0).collect();
+    let mut prev_gated = f64::INFINITY;
+    let mut prev_saving = -1.0f64;
+    for &f in &fracs {
+        let g = power(f, true);
+        let u = power(f, false);
+        assert!(g >= 0.0 && u >= 0.0, "negative power at idle fraction {f}");
+        assert!(
+            g <= prev_gated + 1e-12,
+            "gated power must fall as idle fraction grows: {g} at {f} (prev {prev_gated})"
+        );
+        assert!(
+            g <= u + 1e-12,
+            "gating must never draw more than the ungated baseline at {f}"
+        );
+        let saving = u - g;
+        assert!(
+            saving >= prev_saving - 1e-12,
+            "gating saving must grow with idle fraction: {saving} at {f}"
+        );
+        prev_gated = g;
+        prev_saving = saving;
+    }
+    // End-to-end: a fully idle fabric saves the large majority of the
+    // ungated draw (retention-only survives gating).
+    let g = power(1.0, true);
+    let u = power(1.0, false);
+    assert!(g < u * 0.2, "gated {g} W vs ungated {u} W");
 }
 
 #[test]

@@ -89,6 +89,10 @@ fn golden_mode_runs_numerics_on_request_path() {
         eprintln!("skipping: artifacts not built");
         return;
     }
+    if !primal::runtime::execution_supported() {
+        eprintln!("skipping: golden execution needs `--features xla`");
+        return;
+    }
     let mut s = make_server(ModelId::Llama32_1b, 256, FunctionalMode::Golden);
     s.register_adapter(AdapterId(0));
     s.submit(Request {

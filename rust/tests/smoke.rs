@@ -1,0 +1,63 @@
+//! Bring-up smoke test — the tier-1 gate's minimum bar: the public
+//! quick-start path (`Simulator::new(&ExperimentConfig::paper_point(..))
+//! .run()`) must produce a finite, nonzero report end-to-end for the
+//! Llama-3.2-1B rank-8 (Q,V) paper point, deterministically.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::sim::Simulator;
+
+#[test]
+fn quickstart_paper_point_produces_finite_nonzero_report() {
+    let cfg = ExperimentConfig::paper_point(
+        ModelId::Llama32_1b,
+        &[LoraTarget::Q, LoraTarget::V],
+        1024,
+    );
+    assert!(cfg.validate().is_empty(), "paper point must validate: {:?}", cfg.validate());
+
+    let report = Simulator::new(&cfg).run();
+
+    for (name, v) in [
+        ("throughput_tps", report.throughput_tps),
+        ("avg_power_w", report.avg_power_w),
+        ("efficiency_tpj", report.efficiency_tpj),
+        ("ttft_s", report.ttft_s),
+        ("itl_ms", report.itl_ms),
+        ("total_energy_j", report.total_energy_j),
+    ] {
+        assert!(v.is_finite(), "{name} must be finite, got {v}");
+        assert!(v > 0.0, "{name} must be nonzero, got {v}");
+    }
+    assert!(report.total_cycles > 0);
+    assert_eq!(report.model, "Llama 3.2 1B");
+    assert_eq!(report.lora_label, "Q, V");
+}
+
+#[test]
+fn simulation_is_deterministic_run_to_run() {
+    let cfg = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 512);
+    let a = Simulator::new(&cfg).run();
+    let b = Simulator::new(&cfg).run();
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
+    assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+}
+
+#[test]
+fn every_paper_model_simulates() {
+    for model in ModelId::all_paper() {
+        let cfg = ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], 512);
+        let r = Simulator::new(&cfg).run();
+        assert!(
+            r.throughput_tps.is_finite() && r.throughput_tps > 0.0,
+            "{model:?}: throughput {}",
+            r.throughput_tps
+        );
+        assert!(
+            r.avg_power_w.is_finite() && r.avg_power_w > 0.0,
+            "{model:?}: power {}",
+            r.avg_power_w
+        );
+    }
+}
