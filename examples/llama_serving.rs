@@ -12,21 +12,99 @@
 //!     vectors — proving the request path executes real numerics with no
 //!     Python anywhere;
 //!  2. the **serving coordinator** admits a multi-task request mix
-//!     (three LoRA adapters, Poisson-ish arrivals), swapping adapters via
-//!     SRPG-pipelined reprogramming, and streams tokens per request;
+//!     (three LoRA adapters, Poisson arrivals) through the event-driven
+//!     `ServerBuilder` API — first in the paper's serial batch-1 FCFS
+//!     mode with per-request token streams, then batched (`max_batch 4`)
+//!     under each scheduling policy to show what adapter-affinity
+//!     admission buys in SRPG swaps and throughput;
 //!  3. the **cycle simulator** provides the timing for every phase, so
 //!     the reported TTFT/ITL/throughput are the paper's Table II/III
 //!     quantities for this workload.
 //!
 //! The run is recorded in EXPERIMENTS.md ("E2E serving").
 
-use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use primal::coordinator::{
-    AdapterId, FunctionalMode, Request, Server, ServerConfig,
+    AdapterId, FunctionalMode, Request, Server, ServerBuilder,
 };
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
 use primal::util::Rng;
 use std::sync::mpsc;
+
+fn paper_cfg() -> ExperimentConfig {
+    ExperimentConfig::paper_point(
+        ModelId::Llama32_1b,
+        &[LoraTarget::Q, LoraTarget::V],
+        512,
+    )
+}
+
+/// A task-skewed Poisson request mix: consecutive same-task requests hit
+/// the resident adapter; task switches pay an SRPG reprogramming pass.
+fn request_mix(n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    let mut task = 0u32;
+    let mut arrival = 0.0;
+    let mut reqs = Vec::new();
+    for i in 0..n as u64 {
+        if rng.f64() < 0.4 {
+            task = rng.range(0, 3) as u32;
+        }
+        arrival += rng.exponential(0.05); // ~20 s mean inter-arrival
+        reqs.push(
+            Request::new(i, AdapterId(task), 256 + rng.range(0, 256), 64).at(arrival),
+        );
+    }
+    reqs
+}
+
+fn serve(
+    functional: FunctionalMode,
+    max_batch: usize,
+    policy: PolicyKind,
+    reqs: &[Request],
+    stream: bool,
+) -> primal::util::error::Result<(Server, usize)> {
+    let mut server = ServerBuilder::from_experiment(paper_cfg())
+        .functional(functional)
+        .artifacts_dir(default_artifacts_dir())
+        .max_batch(max_batch)
+        .policy_kind(policy)
+        .build()?;
+    for a in 0..3u32 {
+        server.register_adapter(AdapterId(a));
+    }
+    for r in reqs {
+        server.submit(r.clone())?;
+    }
+    let n_tokens = if stream {
+        let (tx, rx) = mpsc::channel();
+        let results = server.drain(Some(&tx))?;
+        drop(tx);
+        let tokens: Vec<_> = rx.iter().collect();
+        println!("  req  task  swap  queue_s  ttft_s  itl_ms  golden_ms");
+        for r in &results {
+            println!(
+                "  {:>3}  {:>4}  {:>4}  {:>7.3}  {:>6.3}  {:>6.3}  {:>8.1}",
+                r.request,
+                r.adapter.0,
+                if r.swap { "yes" } else { "-" },
+                r.queue_s,
+                r.ttft_s,
+                r.itl_ms,
+                r.golden_exec_ms.unwrap_or(0.0),
+            );
+        }
+        // Sanity: the stream carried every generated token.
+        let expect: usize = results.iter().map(|r| r.tokens_out).sum();
+        assert_eq!(tokens.len(), expect);
+        tokens.len()
+    } else {
+        let results = server.drain(None)?;
+        results.iter().map(|r| r.tokens_out).sum()
+    };
+    Ok((server, n_tokens))
+}
 
 fn main() -> primal::util::error::Result<()> {
     // ---- 1. functional validation via PJRT ------------------------------
@@ -57,59 +135,11 @@ fn main() -> primal::util::error::Result<()> {
         );
     }
 
-    // ---- 2. serving coordinator ------------------------------------------
-    println!("\n== serving Llama 3.2 1B, 3 LoRA tasks, 12 requests ==");
-    let cfg = ExperimentConfig::paper_point(
-        ModelId::Llama32_1b,
-        &[LoraTarget::Q, LoraTarget::V],
-        512,
-    );
-    let mut server = Server::new(ServerConfig {
-        experiment: cfg,
-        functional,
-        artifacts_dir: artifacts,
-    })?;
-    for a in 0..3u32 {
-        server.register_adapter(AdapterId(a));
-    }
+    let reqs = request_mix(16);
 
-    // A task-skewed request mix: consecutive same-task requests hit the
-    // resident adapter; task switches pay an SRPG reprogramming pass.
-    let mut rng = Rng::new(42);
-    let mut reqs = Vec::new();
-    let mut task = 0u32;
-    for i in 0..12u64 {
-        if rng.f64() < 0.4 {
-            task = rng.range(0, 3) as u32;
-        }
-        reqs.push(Request {
-            id: i,
-            adapter: AdapterId(task),
-            input_tokens: 256 + rng.range(0, 256),
-            output_tokens: 64,
-        });
-    }
-    for r in reqs {
-        server.submit(r)?;
-    }
-
-    let (tx, rx) = mpsc::channel();
-    let results = server.run(Some(&tx))?;
-    drop(tx);
-    let tokens: Vec<_> = rx.iter().collect();
-
-    println!("  req  task  swap  ttft_s  itl_ms  golden_ms");
-    for r in &results {
-        println!(
-            "  {:>3}  {:>4}  {:>4}  {:>6.3}  {:>6.3}  {:>8.1}",
-            r.request,
-            r.adapter.0,
-            if r.swap { "yes" } else { "-" },
-            r.ttft_s,
-            r.itl_ms,
-            r.golden_exec_ms.unwrap_or(0.0),
-        );
-    }
+    // ---- 2. the paper's serial model, event-driven ----------------------
+    println!("\n== serving Llama 3.2 1B, 3 LoRA tasks, 16 requests (batch 1, FCFS) ==");
+    let (server, n_tokens) = serve(functional, 1, PolicyKind::Fcfs, &reqs, true)?;
     let s = server.stats();
     println!(
         "\n  served {} requests / {} tokens in {:.2} simulated s \
@@ -123,11 +153,49 @@ fn main() -> primal::util::error::Result<()> {
         "  adapter swaps {}, hits {} — hits skip reprogramming entirely",
         s.adapter_swaps, s.adapter_hits
     );
-    println!("  token stream: {} events, monotone per request", tokens.len());
+    println!(
+        "  TTFT p50/p95/p99: {:.3}/{:.3}/{:.3} s; queue p95 {:.3} s",
+        s.ttft.p50, s.ttft.p95, s.ttft.p99, s.queue.p95
+    );
+    println!("  token stream: {n_tokens} events, monotone per request");
 
-    // Sanity: the stream carried every generated token.
-    let expect: usize = results.iter().map(|r| r.tokens_out).sum();
-    assert_eq!(tokens.len(), expect);
+    // ---- 3. batched decode under each scheduling policy ------------------
+    // Same mix, arrivals collapsed to t=0: with the whole backlog visible
+    // up front, affinity provably pays at most one SRPG pass per task.
+    let backlog: Vec<Request> = reqs.iter().map(|r| r.clone().at(0.0)).collect();
+    println!("\n== same mix as a t=0 backlog, max_batch 4, policy comparison ==");
+    println!("  policy              swaps   tok/s   TTFT p95   queue p95");
+    let mut rows = Vec::new();
+    for policy in [
+        PolicyKind::Fcfs,
+        PolicyKind::AdapterAffinity,
+        PolicyKind::ShortestJobFirst,
+    ] {
+        let (server, _) = serve(FunctionalMode::TimingOnly, 4, policy, &backlog, false)?;
+        let s = server.stats();
+        let tps = s.total_tokens as f64 / s.sim_time_s;
+        println!(
+            "  {:<18} {:>6}  {:>6.1}  {:>8.3}  {:>9.3}",
+            policy.name(),
+            s.adapter_swaps,
+            tps,
+            s.ttft.p95,
+            s.queue.p95
+        );
+        rows.push((policy, s.adapter_swaps, tps));
+    }
+    let fcfs = rows[0];
+    let affinity = rows[1];
+    assert!(
+        affinity.1 <= fcfs.1,
+        "adapter-affinity must not swap more than FCFS"
+    );
+    println!(
+        "\n  adapter-affinity amortizes SRPG reprogramming: {} swaps vs {} \
+         under FCFS on the same trace",
+        affinity.1, fcfs.1
+    );
+
     println!("\nE2E OK — all layers composed (PJRT numerics + coordinator + simulator)");
     Ok(())
 }

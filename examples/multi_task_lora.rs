@@ -43,12 +43,7 @@ fn serve_mix(srpg: bool, switch_prob: f64, n_requests: usize) -> (f64, f64) {
             task = rng.range(0, 4) as u32;
         }
         server
-            .submit(Request {
-                id: i,
-                adapter: AdapterId(task),
-                input_tokens: 512,
-                output_tokens: 64,
-            })
+            .submit(Request::new(i, AdapterId(task), 512, 64))
             .unwrap();
     }
     server.run(None).unwrap();

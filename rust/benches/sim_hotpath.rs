@@ -5,15 +5,24 @@
 //! per-token decode evaluation, full-request simulation, and the mapping
 //! shape search. The §Perf target in DESIGN.md: a full 12-point paper
 //! grid in minutes, i.e. a 13B 2048/2048 request well under a second.
+//!
+//! The wall-clock numbers are machine-sensitive, so the regression gates
+//! CI relies on are the *instruction-count proxies*: deterministic u64
+//! cost counters of the 13B decode/prefill/reprogram programs, checked
+//! exactly against `benches/baselines/sim_proxy.txt`. On first run (no
+//! baseline yet) the file is written and should be committed; any later
+//! mismatch means the cost model changed and exits non-zero.
 
 mod common;
 
 use common::{finish, measure, report};
 use primal::config::{ExperimentConfig, LoraTarget, ModelId};
-use primal::dataflow::decode_program;
+use primal::dataflow::{decode_program, prefill_program, reprogram_program};
 use primal::mapping::map_model;
 use primal::sim::cost::program_cost;
 use primal::sim::{LayerCostModel, Simulator};
+use std::collections::BTreeMap;
+use std::path::Path;
 
 fn main() {
     let cfg = ExperimentConfig::paper_point(
@@ -73,6 +82,108 @@ fn main() {
     ok &= eval_per_token_us < 5.0; // decode eval O(1), < 5 us
     if !ok {
         eprintln!("§Perf gate violated: e2e {e2e_med:.3} s, eval {eval_per_token_us:.2} us");
+    }
+
+    // ---- instruction-count proxies (deterministic CI gates) -------------
+    // Wall-clock-free u64 counters of the cost model on the 13B point.
+    let d2048 = program_cost(&decode_program(&cfg, lm0, 2048), &cfg.system, &cfg.calib);
+    let d0 = program_cost(&decode_program(&cfg, lm0, 0), &cfg.system, &cfg.calib);
+    let pre = program_cost(
+        &prefill_program(&cfg, lm0, 128, 1024),
+        &cfg.system,
+        &cfg.calib,
+    );
+    let rep = program_cost(&reprogram_program(&cfg, lm0), &cfg.system, &cfg.calib);
+    let proxies: BTreeMap<&'static str, u64> = BTreeMap::from([
+        ("decode2048_cycles", d2048.cycles),
+        ("decode2048_dmac_macs", d2048.dmac_macs),
+        ("decode2048_net_byte_hops", d2048.net_byte_hops),
+        ("decode2048_rram_passes", d2048.rram_passes),
+        ("decode2048_sram_passes", d2048.sram_passes),
+        ("decode2048_softmax_elems", d2048.softmax_elems),
+        ("decode0_cycles", d0.cycles),
+        ("prefill128_kv1024_cycles", pre.cycles),
+        ("reprogram_cycles", rep.cycles),
+    ]);
+    println!("\ninstruction-count proxies (13B):");
+    for (name, v) in &proxies {
+        println!("  {name:<28} {v}");
+    }
+
+    // Rebuild determinism: regenerating + recosting the same program must
+    // reproduce every counter exactly, and the interpolated layer model
+    // must be exact at its sample points.
+    let d2048_again =
+        program_cost(&decode_program(&cfg, lm0, 2048), &cfg.system, &cfg.calib);
+    if d2048_again != d2048 {
+        eprintln!("proxy gate: decode program cost not deterministic across rebuilds");
+        ok = false;
+    }
+    if model.eval(2048) != d2048 {
+        eprintln!("proxy gate: layer model not exact at the kv=2048 sample");
+        ok = false;
+    }
+    // The (model, mapping) build cache must hit on a repeated key.
+    let _warm = LayerCostModel::build_cached(&cfg, lm0);
+    let (hits_before, _) = LayerCostModel::cache_counters();
+    let _again = LayerCostModel::build_cached(&cfg, lm0);
+    let (hits_after, _) = LayerCostModel::cache_counters();
+    if hits_after <= hits_before {
+        eprintln!("proxy gate: second LayerCostModel::build_cached was not a cache hit");
+        ok = false;
+    }
+
+    // Exact-match gate against the committed baseline (written on first
+    // run so the working values can be blessed).
+    let baseline_path =
+        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/benches/baselines/sim_proxy.txt"));
+    if baseline_path.exists() {
+        let text = std::fs::read_to_string(baseline_path).expect("read baseline");
+        let mut baseline = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(v)) = (it.next(), it.next()) {
+                if let Ok(v) = v.parse::<u64>() {
+                    baseline.insert(k.to_string(), v);
+                }
+            }
+        }
+        for (name, &v) in &proxies {
+            match baseline.get(*name) {
+                Some(&b) if b == v => {}
+                Some(&b) => {
+                    eprintln!("proxy gate: {name} = {v}, baseline {b}");
+                    ok = false;
+                }
+                None => {
+                    eprintln!("proxy gate: {name} missing from baseline (re-bless)");
+                    ok = false;
+                }
+            }
+        }
+    } else {
+        let mut text = String::from(
+            "# Instruction-count proxy baseline (13B paper point).\n\
+             # Regenerate by deleting this file and running `cargo bench \
+             --bench sim_hotpath`.\n",
+        );
+        for (name, v) in &proxies {
+            text.push_str(&format!("{name} {v}\n"));
+        }
+        if let Some(dir) = baseline_path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        match std::fs::write(baseline_path, text) {
+            Ok(()) => println!(
+                "\nwrote {} — commit it to turn the proxies into exact CI gates",
+                baseline_path.display()
+            ),
+            Err(e) => println!("\ncould not write baseline ({e}); proxies printed only"),
+        }
     }
     finish(ok);
 }

@@ -7,11 +7,13 @@
 mod calib;
 mod lora;
 mod models;
+mod serving;
 mod system;
 
 pub use calib::CalibConstants;
 pub use lora::{LoraConfig, LoraTarget};
 pub use models::{ModelConfig, ModelId};
+pub use serving::{PolicyKind, ServingConfig};
 pub use system::{MacroParams, SystemConfig};
 
 
@@ -34,6 +36,9 @@ pub struct ExperimentConfig {
     /// cost (crossbar SMAC + in-network top-k reduction). The paper's
     /// evaluation excludes it; leave false to reproduce the tables.
     pub include_lm_head: bool,
+    /// Serving-coordinator knobs (batched decode + admission policy).
+    /// Defaults reproduce the paper's serial batch-1 FCFS model.
+    pub serving: ServingConfig,
     pub calib: CalibConstants,
 }
 
@@ -57,6 +62,7 @@ impl ExperimentConfig {
             batch: 1,
             srpg: true,
             include_lm_head: false,
+            serving: ServingConfig::default(),
             calib: CalibConstants::default(),
         }
     }
@@ -67,6 +73,9 @@ impl ExperimentConfig {
         let mut problems = Vec::new();
         if self.batch == 0 {
             problems.push("batch must be >= 1".into());
+        }
+        if self.serving.max_batch == 0 {
+            problems.push("serving.max_batch must be >= 1".into());
         }
         if self.input_tokens == 0 {
             problems.push("input_tokens must be >= 1".into());
@@ -97,11 +106,18 @@ impl ExperimentConfig {
         let ring_routers = cts_per_layer * self.system.pes_per_ct();
         let tokens = self.input_tokens + self.output_tokens;
         let kv_token_bytes = 2 * self.model.kv_dim() * 2; // K+V, fp16
-        let per_router = tokens.div_ceil(ring_routers) * kv_token_bytes;
+        // Every in-flight decode slot holds its own KV ring share, so the
+        // batched footprint scales with serving.max_batch. This is an
+        // *estimate* from the weight footprint (config cannot see the
+        // mapper); the authoritative mapping-based check lives in
+        // `coordinator::ServerBuilder::build`.
+        let slots = self.serving.max_batch.max(1);
+        let per_router = tokens.div_ceil(ring_routers) * kv_token_bytes * slots;
         if per_router > self.system.scratchpad_bytes {
             problems.push(format!(
-                "KV cache needs {per_router} B/router but the scratchpad \
-                 is {} B (context too long for this model's CT group)",
+                "KV cache needs {per_router} B/router ({slots} slot(s)) but \
+                 the scratchpad is {} B (context too long or batch too wide \
+                 for this model's CT group)",
                 self.system.scratchpad_bytes
             ));
         }

@@ -1,0 +1,91 @@
+//! Serving knobs: batched decode capacity and the admission policy.
+//!
+//! These are *configuration-level* selectors; the coordinator maps a
+//! [`PolicyKind`] to a concrete `SchedulePolicy` object. They live in
+//! `config` so experiment files and the CLI can name them without pulling
+//! in the coordinator, and so `ExperimentConfig::validate` can check the
+//! batched KV footprint against the scratchpad budget.
+
+/// Admission-policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Strict arrival order; a head-of-line adapter mismatch waits for the
+    /// current batch to drain (the paper's serving model at batch 1).
+    Fcfs,
+    /// Group same-adapter requests to amortize SRPG reprogramming: serve
+    /// everything matching the resident adapter before swapping.
+    AdapterAffinity,
+    /// Admit the shortest admissible job first (fewest output tokens).
+    ShortestJobFirst,
+}
+
+impl PolicyKind {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fcfs" => Some(PolicyKind::Fcfs),
+            "affinity" | "adapter-affinity" => Some(PolicyKind::AdapterAffinity),
+            "sjf" | "shortest-job-first" => Some(PolicyKind::ShortestJobFirst),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::AdapterAffinity => "adapter-affinity",
+            PolicyKind::ShortestJobFirst => "shortest-job-first",
+        }
+    }
+}
+
+/// Batched-decode serving configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingConfig {
+    /// Maximum in-flight decode slots. 1 reproduces the paper's serial
+    /// batch-1 model exactly; >1 interleaves requests through the
+    /// layer-pipelined decode step (see `coordinator::batch`).
+    pub max_batch: usize,
+    /// Admission policy.
+    pub policy: PolicyKind,
+    /// Extra cycles charged per decode step for every slot beyond the
+    /// first: pipeline fill/drain control and NoC contention between the
+    /// slots' activation streams. Zero-cost at batch 1 by construction.
+    pub batch_overhead_cycles: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 1,
+            policy: PolicyKind::Fcfs,
+            batch_overhead_cycles: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for k in [
+            PolicyKind::Fcfs,
+            PolicyKind::AdapterAffinity,
+            PolicyKind::ShortestJobFirst,
+        ] {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("sjf"), Some(PolicyKind::ShortestJobFirst));
+        assert_eq!(PolicyKind::parse("affinity"), Some(PolicyKind::AdapterAffinity));
+        assert_eq!(PolicyKind::parse("lifo"), None);
+    }
+
+    #[test]
+    fn default_is_paper_model() {
+        let s = ServingConfig::default();
+        assert_eq!(s.max_batch, 1);
+        assert_eq!(s.policy, PolicyKind::Fcfs);
+    }
+}

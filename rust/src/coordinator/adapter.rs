@@ -22,6 +22,15 @@ pub enum SwapOutcome {
     Swap { evicted: Option<AdapterId> },
 }
 
+/// Per-adapter admission counters (SRPG reprogramming accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdapterCounters {
+    /// Admissions that reprogrammed this adapter in.
+    pub swaps: u64,
+    /// Admissions that found it already resident.
+    pub hits: u64,
+}
+
 /// Registry + residency state.
 #[derive(Debug, Default)]
 pub struct AdapterManager {
@@ -32,6 +41,8 @@ pub struct AdapterManager {
     /// Swap statistics.
     pub swaps: u64,
     pub hits: u64,
+    /// Per-adapter breakdown of the counters above.
+    counters: BTreeMap<AdapterId, AdapterCounters>,
 }
 
 impl AdapterManager {
@@ -57,14 +68,22 @@ impl AdapterManager {
     /// (server validates admission first).
     pub fn admit(&mut self, id: AdapterId) -> SwapOutcome {
         assert!(self.is_registered(id), "adapter {id:?} not registered");
+        let by_id = self.counters.entry(id).or_default();
         if self.resident == Some(id) {
             self.hits += 1;
+            by_id.hits += 1;
             SwapOutcome::Hit
         } else {
             let evicted = self.resident.replace(id);
             self.swaps += 1;
+            by_id.swaps += 1;
             SwapOutcome::Swap { evicted }
         }
+    }
+
+    /// Per-adapter swap/hit breakdown (adapters admitted at least once).
+    pub fn counters(&self) -> &BTreeMap<AdapterId, AdapterCounters> {
+        &self.counters
     }
 
     /// Bytes to reprogram for a swap to `id` (per layer group).
@@ -85,6 +104,26 @@ mod tests {
         assert_eq!(m.admit(AdapterId(1)), SwapOutcome::Hit);
         assert_eq!(m.swaps, 1);
         assert_eq!(m.hits, 1);
+        assert_eq!(
+            m.counters().get(&AdapterId(1)),
+            Some(&AdapterCounters { swaps: 1, hits: 1 })
+        );
+    }
+
+    #[test]
+    fn per_adapter_counters_split_by_task() {
+        let mut m = AdapterManager::new();
+        m.register(AdapterId(1), 1024);
+        m.register(AdapterId(2), 1024);
+        for id in [1u32, 1, 2, 1] {
+            m.admit(AdapterId(id));
+        }
+        let c1 = m.counters()[&AdapterId(1)];
+        let c2 = m.counters()[&AdapterId(2)];
+        assert_eq!((c1.swaps, c1.hits), (2, 1));
+        assert_eq!((c2.swaps, c2.hits), (1, 0));
+        assert_eq!(m.swaps, c1.swaps + c2.swaps);
+        assert_eq!(m.hits, c1.hits + c2.hits);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Batched decode state: in-flight slots with per-slot KV positions and
+//! the layer-pipelined step-cost model.
+//!
+//! PRIMAL decodes layer-sequentially: one token visits every layer's CT
+//! group in order, leaving `n_layers - 1` groups idle at any instant. A
+//! batch of `b` in-flight tokens fills that pipeline — while slot 1's
+//! token computes on layer l+1's group, slot 2's token computes on layer
+//! l's. The makespan of one batched step is therefore the classic
+//! pipeline bound
+//!
+//!   sum_i(c_i) + (n_layers - 1) * max_i(c_i)
+//!
+//! where `c_i` is slot i's per-layer cycle cost at its own KV length
+//! (each slot reads its own KV ring share, so costs are heterogeneous).
+//! At `b = 1` this reduces *exactly* to `n_layers * c` — the paper's
+//! serial model — in integer arithmetic, which is what lets the batched
+//! engine bit-match the legacy path. Batch coordination is charged
+//! explicitly on top: `batch_overhead_cycles` per slot beyond the first
+//! (pipeline fill/drain control plus NoC contention between the slots'
+//! activation streams), zero by construction at batch 1.
+
+use super::adapter::AdapterId;
+use super::server::Request;
+
+/// One in-flight request occupying a decode slot.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub req: Request,
+    /// Tokens generated so far (the slot's KV write position is
+    /// `req.input_tokens + generated`).
+    pub generated: usize,
+    /// Simulated admission time (prefill start).
+    pub start_s: f64,
+    /// Whether admission required an adapter swap.
+    pub swap: bool,
+    /// Reprogram + prefill time charged at admission (s).
+    pub ttft_s: f64,
+    /// Pure decode compute time accumulated so far (s).
+    pub decode_s: f64,
+    /// Time this slot spent stalled behind other slots' admissions (the
+    /// layer-sequential prefill occupies every CT group) (s).
+    pub stall_s: f64,
+    /// Stall time not yet folded into an inter-token gap (s).
+    pub pending_stall_s: f64,
+    /// Golden-model decode-step wall time, if functional mode ran.
+    pub golden_exec_ms: Option<f64>,
+}
+
+impl Slot {
+    /// Current KV length seen by the next decode step.
+    pub fn kv_len(&self) -> usize {
+        self.req.input_tokens + self.generated
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.req.output_tokens
+    }
+}
+
+/// The decode batch: up to `max_batch` slots sharing one adapter.
+#[derive(Debug)]
+pub struct DecodeBatch {
+    slots: Vec<Slot>,
+    max_batch: usize,
+}
+
+impl DecodeBatch {
+    pub fn new(max_batch: usize) -> Self {
+        Self { slots: Vec::with_capacity(max_batch), max_batch }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.slots.len() < self.max_batch
+    }
+
+    /// The batch's shared adapter (slots are homogeneous by construction).
+    pub fn adapter(&self) -> Option<AdapterId> {
+        self.slots.first().map(|s| s.req.adapter)
+    }
+
+    pub fn push(&mut self, slot: Slot) {
+        debug_assert!(self.has_free_slot(), "batch overflow");
+        debug_assert!(
+            self.slots.iter().all(|s| s.req.adapter == slot.req.adapter),
+            "mixed-adapter batch"
+        );
+        self.slots.push(slot);
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn slots_mut(&mut self) -> &mut [Slot] {
+        &mut self.slots
+    }
+
+    /// Remove and return finished slots, preserving admission order.
+    pub fn take_finished(&mut self) -> Vec<Slot> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].done() {
+                out.push(self.slots.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Cycles for one batched decode step given each slot's *per-layer*
+    /// cost: pipeline makespan plus the explicit batch overhead. Exactly
+    /// `n_layers * c` when a single slot is active.
+    pub fn step_cycles(
+        per_layer: &[u64],
+        n_layers: usize,
+        batch_overhead_cycles: u64,
+    ) -> u64 {
+        debug_assert!(!per_layer.is_empty());
+        let sum: u64 = per_layer.iter().sum();
+        let max: u64 = per_layer.iter().copied().max().unwrap_or(0);
+        let b = per_layer.len() as u64;
+        sum + (n_layers as u64 - 1) * max + (b - 1) * batch_overhead_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_slot_step_is_serial_cost() {
+        // b = 1 must reduce exactly to n_layers * c, overhead-free.
+        assert_eq!(DecodeBatch::step_cycles(&[1000], 16, 64), 16 * 1000);
+        assert_eq!(DecodeBatch::step_cycles(&[7], 1, 64), 7);
+    }
+
+    #[test]
+    fn pipelined_batch_beats_serial() {
+        // 4 equal-cost tokens through 16 layers: (4 + 15) * c + 3 * ovh,
+        // far below the serial 4 * 16 * c.
+        let c = 1000u64;
+        let batched = DecodeBatch::step_cycles(&[c; 4], 16, 64);
+        assert_eq!(batched, 4 * c + 15 * c + 3 * 64);
+        assert!(batched < 4 * 16 * c);
+    }
+
+    #[test]
+    fn heterogeneous_slots_bound_by_max() {
+        let cycles = DecodeBatch::step_cycles(&[100, 300, 200], 8, 0);
+        assert_eq!(cycles, 600 + 7 * 300);
+    }
+
+    #[test]
+    fn take_finished_preserves_order() {
+        let mk = |id: u64, generated: usize, out: usize| Slot {
+            req: Request::new(id, AdapterId(1), 4, out),
+            generated,
+            start_s: 0.0,
+            swap: false,
+            ttft_s: 0.0,
+            decode_s: 0.0,
+            stall_s: 0.0,
+            pending_stall_s: 0.0,
+            golden_exec_ms: None,
+        };
+        let mut b = DecodeBatch::new(4);
+        b.push(mk(0, 2, 2)); // done
+        b.push(mk(1, 1, 2)); // running
+        b.push(mk(2, 8, 8)); // done
+        let done = b.take_finished();
+        assert_eq!(done.iter().map(|s| s.req.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.adapter(), Some(AdapterId(1)));
+    }
+}

@@ -1,20 +1,34 @@
-//! The serving coordinator: PRIMAL as an inference server.
+//! The serving coordinator: PRIMAL as an event-driven inference server.
 //!
-//! Wraps the cycle simulator in the front-end a downstream user drives:
-//! a request queue with FCFS admission, a LoRA adapter manager that
-//! tracks which task's adapters are resident in the SRAM-DCIM macros
-//! (swaps trigger SRPG reprogramming), a batch-1 decode loop matching the
-//! paper's serving model, and per-request token streams. Timing comes
+//! Wraps the cycle simulator in the front-end a downstream user drives: a
+//! discrete-event loop over arrival-timed [`Request`]s, a LoRA adapter
+//! manager that tracks which task's adapters are resident in the
+//! SRAM-DCIM macros (swaps trigger SRPG reprogramming), batched decode
+//! with per-slot KV positions through the layer pipeline (the `batch`
+//! module), and pluggable admission scheduling (the `scheduler` module:
+//! [`Fcfs`], [`AdapterAffinity`], [`ShortestJobFirst`]). Timing comes
 //! from the simulator; optionally the PJRT golden runtime executes the
 //! functional model on the same schedule (`FunctionalMode::Golden`).
 //!
-//! Everything is std-thread based (the offline build has no tokio); the
-//! engine runs on a worker thread and communicates over mpsc channels.
+//! Construction goes through [`ServerBuilder`]; the paper's serial
+//! batch-1 FCFS model is `ServerBuilder::default().max_batch(1)` (also
+//! the legacy `Server::new(ServerConfig)` shim). Drive the loop with
+//! [`Server::step`] / [`Server::run_until`] / [`Server::drain`], and read
+//! [`ServerStats`] (p50/p95/p99 TTFT/ITL, per-adapter swap accounting)
+//! at any point.
+//!
+//! Everything is std-thread based (the offline build has no tokio); token
+//! streams travel over mpsc channels.
 
 mod adapter;
+mod batch;
+mod scheduler;
 mod server;
 
-pub use adapter::{AdapterId, AdapterManager, SwapOutcome};
+pub use adapter::{AdapterCounters, AdapterId, AdapterManager, SwapOutcome};
+pub use batch::{DecodeBatch, Slot};
+pub use scheduler::{policy_of, AdapterAffinity, Fcfs, SchedulePolicy, ShortestJobFirst};
 pub use server::{
-    FunctionalMode, Request, RequestResult, Server, ServerConfig, ServerStats, TokenEvent,
+    AdapterUsage, FunctionalMode, LatencyStats, Request, RequestResult, Server,
+    ServerBuilder, ServerConfig, ServerStats, StepOutcome, TokenEvent,
 };

@@ -1,0 +1,209 @@
+//! Pluggable admission scheduling for the event-driven server.
+//!
+//! The server asks its policy which waiting request to admit whenever a
+//! decode slot is free. The policy sees the *arrived* waiting list in
+//! arrival order plus the adapter context: `batch_adapter` is the adapter
+//! of the currently decoding batch (slots always share one adapter — the
+//! SRAM-DCIM macros hold a single task's LoRA matrices), and `resident`
+//! is the adapter currently programmed into the macros.
+//!
+//! Returning `None` holds admission (e.g. the head of the queue needs a
+//! different adapter than the in-flight batch); the server then runs a
+//! decode step instead and asks again at the next step boundary. When the
+//! batch is empty and no further arrivals are pending, the server
+//! force-admits the earliest waiting request so `drain()` always
+//! terminates, whatever the policy does.
+
+use super::adapter::AdapterId;
+use super::server::Request;
+use crate::config::PolicyKind;
+use std::collections::BTreeMap;
+
+/// Admission policy: picks the next request to admit into the batch.
+pub trait SchedulePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick an index into `waiting` (all arrived, arrival-ordered) to
+    /// admit next, or `None` to hold admission until the batch drains
+    /// further. Implementations must only return indices of requests
+    /// whose adapter matches `batch_adapter` when it is `Some` (the
+    /// hardware cannot decode two tasks' LoRA sets at once).
+    fn pick(
+        &mut self,
+        waiting: &[Request],
+        batch_adapter: Option<AdapterId>,
+        resident: Option<AdapterId>,
+    ) -> Option<usize>;
+}
+
+/// Strict first-come-first-served: only ever considers the head of the
+/// queue. With `max_batch 1` this is exactly the paper's serving model;
+/// with a wider batch a head-of-line adapter mismatch blocks admission
+/// until the batch drains (the cost `AdapterAffinity` exists to avoid).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedulePolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn pick(
+        &mut self,
+        waiting: &[Request],
+        batch_adapter: Option<AdapterId>,
+        _resident: Option<AdapterId>,
+    ) -> Option<usize> {
+        let head = waiting.first()?;
+        match batch_adapter {
+            None => Some(0),
+            Some(a) if head.adapter == a => Some(0),
+            Some(_) => None,
+        }
+    }
+}
+
+/// Adapter-affinity scheduling: serve every waiting request that matches
+/// the in-flight (or resident) adapter before swapping, so one SRPG
+/// reprogramming pass is amortized over a whole same-task burst. When a
+/// swap is unavoidable, start the adapter with the most waiting requests
+/// (earliest arrival breaks ties), which greedily minimizes future swaps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdapterAffinity;
+
+impl SchedulePolicy for AdapterAffinity {
+    fn name(&self) -> &'static str {
+        "adapter-affinity"
+    }
+
+    fn pick(
+        &mut self,
+        waiting: &[Request],
+        batch_adapter: Option<AdapterId>,
+        resident: Option<AdapterId>,
+    ) -> Option<usize> {
+        if waiting.is_empty() {
+            return None;
+        }
+        if let Some(a) = batch_adapter.or(resident) {
+            if let Some(i) = waiting.iter().position(|r| r.adapter == a) {
+                return Some(i);
+            }
+            if batch_adapter.is_some() {
+                // Nothing matches the in-flight batch: drain, then regroup.
+                return None;
+            }
+        }
+        // Batch empty and residency useless: a swap is unavoidable. Pick
+        // the adapter with the deepest backlog (ties: earliest arrival).
+        let mut groups: BTreeMap<AdapterId, (usize, usize)> = BTreeMap::new();
+        for (i, r) in waiting.iter().enumerate() {
+            let e = groups.entry(r.adapter).or_insert((0, i));
+            e.0 += 1;
+        }
+        groups
+            .values()
+            .copied()
+            .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
+            .map(|(_, first)| first)
+    }
+}
+
+/// Shortest-job-first among admissible requests: fewest output tokens
+/// wins (input length, then arrival order break ties). Minimizes mean
+/// queueing delay on bursty mixes at the cost of long-job latency.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestJobFirst;
+
+impl SchedulePolicy for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "shortest-job-first"
+    }
+
+    fn pick(
+        &mut self,
+        waiting: &[Request],
+        batch_adapter: Option<AdapterId>,
+        _resident: Option<AdapterId>,
+    ) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in waiting.iter().enumerate() {
+            if let Some(a) = batch_adapter {
+                if r.adapter != a {
+                    continue;
+                }
+            }
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    let cur = &waiting[j];
+                    (r.output_tokens, r.input_tokens) < (cur.output_tokens, cur.input_tokens)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+/// Instantiate the policy object for a config-level selector.
+pub fn policy_of(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
+    match kind {
+        PolicyKind::Fcfs => Box::new(Fcfs),
+        PolicyKind::AdapterAffinity => Box::new(AdapterAffinity),
+        PolicyKind::ShortestJobFirst => Box::new(ShortestJobFirst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, adapter: u32, out: usize) -> Request {
+        Request::new(id, AdapterId(adapter), 128, out)
+    }
+
+    #[test]
+    fn fcfs_head_only() {
+        let mut p = Fcfs;
+        let w = [req(0, 1, 8), req(1, 2, 8)];
+        assert_eq!(p.pick(&w, None, None), Some(0));
+        assert_eq!(p.pick(&w, Some(AdapterId(1)), None), Some(0));
+        assert_eq!(p.pick(&w, Some(AdapterId(2)), None), None);
+        assert_eq!(p.pick(&[], None, None), None);
+    }
+
+    #[test]
+    fn affinity_prefers_matching_adapter() {
+        let mut p = AdapterAffinity;
+        let w = [req(0, 1, 8), req(1, 2, 8), req(2, 2, 8)];
+        // batch on adapter 2: skip the head, pick the first match
+        assert_eq!(p.pick(&w, Some(AdapterId(2)), None), Some(1));
+        // residency on 2 with an empty batch behaves the same
+        assert_eq!(p.pick(&w, None, Some(AdapterId(2))), Some(1));
+        // batch on adapter 3: nothing matches -> hold
+        assert_eq!(p.pick(&w, Some(AdapterId(3)), None), None);
+        // cold start: adapter 2 has the deeper backlog
+        assert_eq!(p.pick(&w, None, None), Some(1));
+    }
+
+    #[test]
+    fn affinity_backlog_tie_breaks_by_arrival() {
+        let mut p = AdapterAffinity;
+        let w = [req(0, 5, 8), req(1, 4, 8)];
+        assert_eq!(p.pick(&w, None, None), Some(0));
+    }
+
+    #[test]
+    fn sjf_picks_fewest_output_tokens() {
+        let mut p = ShortestJobFirst;
+        let w = [req(0, 1, 32), req(1, 1, 4), req(2, 1, 16)];
+        assert_eq!(p.pick(&w, None, None), Some(1));
+        // adapter-filtered
+        let w2 = [req(0, 1, 32), req(1, 2, 4), req(2, 1, 16)];
+        assert_eq!(p.pick(&w2, Some(AdapterId(1)), None), Some(2));
+        assert_eq!(p.pick(&w2, Some(AdapterId(3)), None), None);
+    }
+}

@@ -1,26 +1,41 @@
-//! The serving loop: request queue -> adapter swap -> prefill -> decode.
+//! The event-driven serving core: arrival-timed requests, batched decode,
+//! and pluggable admission scheduling.
 //!
 //! Timing is *simulated* (the paper's cycle model); wall-clock is only
 //! used for coordinator-overhead accounting. A request's lifecycle:
 //!
-//!   submit -> queue (FCFS) -> adapter residency check (swap => SRPG
-//!   reprogramming latency) -> prefill (TTFT) -> per-token decode loop
-//!   (token stream) -> completion record
+//!   submit(arrival_s) -> waiting (arrival-ordered) -> policy admission
+//!   (adapter swap => SRPG reprogramming latency) -> prefill (TTFT) ->
+//!   batched decode (per-slot KV positions, layer-pipelined step) ->
+//!   completion record
+//!
+//! The engine is a discrete-event loop: [`Server::step`] processes one
+//! event (an admission, one batched decode step, or a clock jump to the
+//! next arrival), [`Server::run_until`] advances the simulated clock to a
+//! deadline, and [`Server::drain`] runs until every submitted request has
+//! completed. [`Server::run`] is the legacy façade over `drain` and —
+//! together with `ServerBuilder::default().max_batch(1).policy(Fcfs)` —
+//! reproduces the paper's serial batch-1 FCFS model with numerically
+//! identical results (see `tests/scheduling.rs`).
 //!
 //! With `FunctionalMode::Golden` the PJRT runtime executes the reduced
-//! functional model's decode step alongside the timing loop, proving the
-//! request path runs real numerics without Python.
+//! functional model's decode step at each admission, proving the request
+//! path runs real numerics without Python.
 
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
+use super::batch::{DecodeBatch, Slot};
+use super::scheduler::{policy_of, SchedulePolicy};
 use crate::bail;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use crate::dataflow::{prefill_program, reprogram_program};
 use crate::runtime::{Executable, GoldenRuntime};
 use crate::sim::cost::program_cost;
 use crate::sim::{LayerCostModel, Simulator};
 use crate::util::error::Result;
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -29,6 +44,22 @@ pub struct Request {
     pub adapter: AdapterId,
     pub input_tokens: usize,
     pub output_tokens: usize,
+    /// Simulated arrival time (s). The request is not admissible before
+    /// it; 0.0 means "available from the start" (the legacy model).
+    pub arrival_s: f64,
+}
+
+impl Request {
+    /// A request available from simulated time zero.
+    pub fn new(id: u64, adapter: AdapterId, input_tokens: usize, output_tokens: usize) -> Self {
+        Self { id, adapter, input_tokens, output_tokens, arrival_s: 0.0 }
+    }
+
+    /// Set the arrival timestamp (builder-style).
+    pub fn at(mut self, arrival_s: f64) -> Self {
+        self.arrival_s = arrival_s;
+        self
+    }
 }
 
 /// Streamed token event (sent per generated token).
@@ -36,7 +67,8 @@ pub struct Request {
 pub struct TokenEvent {
     pub request: u64,
     pub index: usize,
-    /// Simulated emission time, seconds since the request started.
+    /// Simulated emission time, seconds since the request was admitted
+    /// (prefill + decode + any stalls behind other slots' admissions).
     pub at_s: f64,
 }
 
@@ -46,10 +78,18 @@ pub struct RequestResult {
     pub request: u64,
     pub adapter: AdapterId,
     pub swap: bool,
-    /// Simulated queueing delay before this request started (s).
+    /// Simulated arrival time (s).
+    pub arrival_s: f64,
+    /// Simulated admission time (s).
+    pub start_s: f64,
+    /// Genuine queueing delay: `start_s - arrival_s`.
     pub queue_s: f64,
     pub ttft_s: f64,
+    /// Mean inter-token latency over the request's decode compute (ms).
     pub itl_ms: f64,
+    /// Time stalled behind other slots' admissions while decoding (s).
+    pub stall_s: f64,
+    /// Admission-to-completion service time: `ttft_s + stall_s + decode`.
     pub total_s: f64,
     pub tokens_out: usize,
     /// Golden-model decode step executed on the request path (ms), if
@@ -66,15 +106,39 @@ pub enum FunctionalMode {
     Golden,
 }
 
-/// Server configuration.
+/// Legacy server configuration (kept for the pre-builder API surface;
+/// serving knobs come from `experiment.serving`).
 pub struct ServerConfig {
     pub experiment: ExperimentConfig,
     pub functional: FunctionalMode,
     /// Artifacts dir for golden mode.
-    pub artifacts_dir: std::path::PathBuf,
+    pub artifacts_dir: PathBuf,
 }
 
-/// Aggregate serving statistics.
+/// Latency distribution summary (units follow the field it describes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Per-adapter serving accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdapterUsage {
+    pub served: u64,
+    pub tokens_out: u64,
+    /// Admissions that reprogrammed this adapter in (SRPG passes paid).
+    pub swaps: u64,
+    /// Admissions that found it resident.
+    pub hits: u64,
+}
+
+/// Aggregate serving statistics. Snapshots are computed on read from
+/// running sums, so incremental stepping and repeated `run()` calls
+/// report correct means (the legacy accumulator divided already-averaged
+/// values on the second `run()`).
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub served: u64,
@@ -82,36 +146,181 @@ pub struct ServerStats {
     pub adapter_hits: u64,
     pub total_tokens: u64,
     pub sim_time_s: f64,
-    /// Mean TTFT/ITL over served requests.
+    /// Mean TTFT/ITL over served requests (requests weighted equally).
     pub mean_ttft_s: f64,
     pub mean_itl_ms: f64,
+    /// TTFT distribution over served requests (s).
+    pub ttft: LatencyStats,
+    /// Inter-token-gap distribution over *individual* emitted tokens,
+    /// stalls included (ms).
+    pub itl: LatencyStats,
+    /// Queueing-delay distribution over served requests (s).
+    pub queue: LatencyStats,
+    /// Per-adapter swap/serve accounting.
+    pub per_adapter: BTreeMap<AdapterId, AdapterUsage>,
+    /// Widest decode batch observed.
+    pub max_batch_observed: usize,
 }
 
-/// The PRIMAL inference server (batch 1, FCFS — the paper's model).
-pub struct Server {
-    cfg: ExperimentConfig,
-    adapters: AdapterManager,
-    queue: VecDeque<Request>,
-    /// Simulated clock (seconds).
-    now_s: f64,
-    /// Cached per-layer decode model + prefill/reprog costs (the mapping
-    /// is fixed per server).
-    layer_model: LayerCostModel,
-    reprog_ttft_s: f64,
-    prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
-    n_layers: usize,
-    golden: Option<GoldenRuntime>,
-    golden_exe: Option<Executable>,
-    stats: ServerStats,
+/// Running sums + samples behind [`ServerStats`].
+#[derive(Debug, Default)]
+struct StatsAccum {
+    served: u64,
+    total_tokens: u64,
+    /// Per-request decode-only ITL means (ms); distinct from the
+    /// per-token gap samples in `gaps_ms`, which include stalls.
+    sum_itl_ms: f64,
+    ttfts_s: Vec<f64>,
+    gaps_ms: Vec<f64>,
+    queues_s: Vec<f64>,
+    /// adapter -> (served, tokens_out); swap/hit counts live in the
+    /// adapter manager.
+    per_adapter: BTreeMap<AdapterId, (u64, u64)>,
+    max_batch_observed: usize,
 }
 
-impl Server {
-    pub fn new(cfg: ServerConfig) -> Result<Self> {
-        let exp = cfg.experiment;
+/// Nearest-rank percentile over an unsorted sample set.
+fn latency_stats(samples: &[f64]) -> LatencyStats {
+    if samples.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let pct = |q: f64| {
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    LatencyStats {
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        p99: pct(0.99),
+    }
+}
+
+/// What one [`Server::step`] call did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepOutcome {
+    /// A request was admitted: adapter check (+ swap) and prefill ran,
+    /// advancing the clock by its TTFT.
+    Admitted { request: u64, swap: bool },
+    /// One batched decode step: every active slot emitted a token;
+    /// `completed` of them finished.
+    Decoded { batch: usize, completed: usize },
+    /// No work was runnable; the clock jumped to the next arrival.
+    Advanced { to_s: f64 },
+    /// Nothing left to do (no waiting requests, no active slots).
+    Idle,
+}
+
+/// Builder for the event-driven server. `ServerBuilder::default()` is the
+/// paper's 1B Q+V/256 point in timing-only mode with `max_batch 1` and
+/// FCFS — i.e. exactly the legacy serving model.
+pub struct ServerBuilder {
+    experiment: ExperimentConfig,
+    functional: FunctionalMode,
+    artifacts_dir: PathBuf,
+    max_batch: usize,
+    policy: Box<dyn SchedulePolicy>,
+    batch_overhead_cycles: u64,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        Self::from_experiment(ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        ))
+    }
+}
+
+impl ServerBuilder {
+    /// Seed a builder from an experiment; the experiment's
+    /// `serving` knobs become the builder's starting values.
+    pub fn from_experiment(experiment: ExperimentConfig) -> Self {
+        let s = experiment.serving;
+        Self {
+            functional: FunctionalMode::TimingOnly,
+            artifacts_dir: PathBuf::from("artifacts"),
+            max_batch: s.max_batch,
+            policy: policy_of(s.policy),
+            batch_overhead_cycles: s.batch_overhead_cycles,
+            experiment,
+        }
+    }
+
+    /// Replace the experiment (re-seeds the serving knobs from it; call
+    /// `max_batch`/`policy` *after* this to override them).
+    pub fn experiment(self, experiment: ExperimentConfig) -> Self {
+        let functional = self.functional;
+        let artifacts_dir = self.artifacts_dir;
+        Self { functional, artifacts_dir, ..Self::from_experiment(experiment) }
+    }
+
+    pub fn functional(mut self, mode: FunctionalMode) -> Self {
+        self.functional = mode;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Decode slots (1 = the paper's serial model).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Admission policy object (e.g. `Fcfs`, `AdapterAffinity`).
+    pub fn policy(mut self, policy: impl SchedulePolicy + 'static) -> Self {
+        self.policy = Box::new(policy);
+        self
+    }
+
+    /// Admission policy by config-level selector.
+    pub fn policy_kind(mut self, kind: PolicyKind) -> Self {
+        self.policy = policy_of(kind);
+        self
+    }
+
+    /// Cycles charged per decode step per slot beyond the first.
+    pub fn batch_overhead_cycles(mut self, cycles: u64) -> Self {
+        self.batch_overhead_cycles = cycles;
+        self
+    }
+
+    pub fn build(self) -> Result<Server> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        let mut exp = self.experiment;
+        exp.serving.max_batch = self.max_batch;
+        exp.serving.batch_overhead_cycles = self.batch_overhead_cycles;
+
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
         let lm0 = &mapping.layers[0];
-        let layer_model = LayerCostModel::build(&exp, lm0);
+
+        // Batched KV pressure: every in-flight slot stripes its own KV
+        // ring over the layer group's scratchpads. This is the
+        // authoritative (mapping-based) version of the estimate in
+        // `ExperimentConfig::validate`.
+        let kv_per_router = lm0
+            .kv_bytes_per_router(exp.input_tokens + exp.output_tokens)
+            * self.max_batch;
+        if kv_per_router > exp.system.scratchpad_bytes {
+            bail!(
+                "batched KV needs {kv_per_router} B/router ({} slots) but the \
+                 scratchpad is {} B — shorten the context or narrow the batch",
+                self.max_batch,
+                exp.system.scratchpad_bytes
+            );
+        }
+
+        let layer_model = LayerCostModel::build_cached(&exp, lm0);
         let cyc = exp.system.cycle_s();
 
         // Reprogramming cost for one group (SRPG pipelines the rest).
@@ -141,28 +350,75 @@ impl Server {
             prefill_block_s.push((this_block, c.cycles as f64 * cyc));
         }
 
-        let (golden, golden_exe) = match cfg.functional {
+        let (golden, golden_exe) = match self.functional {
             FunctionalMode::TimingOnly => (None, None),
             FunctionalMode::Golden => {
-                let rt = GoldenRuntime::open(&cfg.artifacts_dir)?;
+                let rt = GoldenRuntime::open(&self.artifacts_dir)?;
                 let exe = rt.compile("decode_step")?;
                 (Some(rt), Some(exe))
             }
         };
 
-        Ok(Self {
+        Ok(Server {
             n_layers: exp.model.layers,
+            max_batch: self.max_batch,
+            batch_overhead_cycles: self.batch_overhead_cycles,
+            policy: self.policy,
             cfg: exp,
             adapters: AdapterManager::new(),
-            queue: VecDeque::new(),
+            waiting: Vec::new(),
+            batch: DecodeBatch::new(self.max_batch),
+            finished: Vec::new(),
             now_s: 0.0,
             layer_model,
             reprog_ttft_s,
             prefill_block_s,
             golden,
             golden_exe,
-            stats: ServerStats::default(),
+            acc: StatsAccum::default(),
         })
+    }
+}
+
+/// The PRIMAL inference server: a discrete-event loop over arrival-timed
+/// requests with policy-scheduled admission and batched decode.
+pub struct Server {
+    cfg: ExperimentConfig,
+    adapters: AdapterManager,
+    policy: Box<dyn SchedulePolicy>,
+    max_batch: usize,
+    batch_overhead_cycles: u64,
+    /// Submitted, not yet admitted; sorted by (arrival_s, submit order).
+    waiting: Vec<Request>,
+    batch: DecodeBatch,
+    finished: Vec<RequestResult>,
+    /// Simulated clock (seconds).
+    now_s: f64,
+    /// Cached per-layer decode model + prefill/reprog costs (the mapping
+    /// is fixed per server).
+    layer_model: Arc<LayerCostModel>,
+    reprog_ttft_s: f64,
+    prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
+    n_layers: usize,
+    golden: Option<GoldenRuntime>,
+    golden_exe: Option<Executable>,
+    acc: StatsAccum,
+}
+
+impl Server {
+    /// Entry point of the builder API.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::default()
+    }
+
+    /// Legacy constructor: the paper's batch-1 FCFS model (equivalent to
+    /// `ServerBuilder::from_experiment(..)` with the experiment's serving
+    /// knobs, which default to `max_batch 1` + FCFS).
+    pub fn new(cfg: ServerConfig) -> Result<Self> {
+        ServerBuilder::from_experiment(cfg.experiment)
+            .functional(cfg.functional)
+            .artifacts_dir(cfg.artifacts_dir)
+            .build()
     }
 
     pub fn register_adapter(&mut self, id: AdapterId) {
@@ -179,100 +435,332 @@ impl Server {
         if req.input_tokens == 0 || req.output_tokens == 0 {
             bail!("request {} has empty input or output", req.id);
         }
-        self.queue.push_back(req);
+        if !req.arrival_s.is_finite() || req.arrival_s < 0.0 {
+            bail!("request {} has invalid arrival time {}", req.id, req.arrival_s);
+        }
+        // Stable arrival-ordered insertion (FIFO among equal arrivals).
+        let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
+        self.waiting.insert(pos, req);
         Ok(())
     }
 
+    /// Requests submitted but not yet admitted.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.waiting.len()
     }
 
-    pub fn stats(&self) -> &ServerStats {
-        &self.stats
+    /// Requests currently decoding.
+    pub fn in_flight(&self) -> usize {
+        self.batch.len()
     }
 
-    /// Serve everything in the queue (batch-1 FCFS), streaming token
-    /// events into `tokens` if provided. Returns completion records.
+    /// The simulated clock (seconds).
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Earliest simulated time at which the server has work, if any.
+    pub fn next_event_s(&self) -> Option<f64> {
+        if !self.batch.is_empty() {
+            return Some(self.now_s);
+        }
+        self.waiting.first().map(|r| {
+            if r.arrival_s <= self.now_s {
+                self.now_s
+            } else {
+                r.arrival_s
+            }
+        })
+    }
+
+    /// Statistics snapshot, computed from running sums (safe to call at
+    /// any point of the event loop, any number of times).
+    pub fn stats(&self) -> ServerStats {
+        let a = &self.acc;
+        let served = a.served;
+        let mean = |sum: f64| if served > 0 { sum / served as f64 } else { 0.0 };
+        let mut per_adapter: BTreeMap<AdapterId, AdapterUsage> = BTreeMap::new();
+        for (&id, &(srv, toks)) in &a.per_adapter {
+            let u = per_adapter.entry(id).or_default();
+            u.served = srv;
+            u.tokens_out = toks;
+        }
+        for (&id, c) in self.adapters.counters() {
+            let u = per_adapter.entry(id).or_default();
+            u.swaps = c.swaps;
+            u.hits = c.hits;
+        }
+        let ttft = latency_stats(&a.ttfts_s);
+        ServerStats {
+            served,
+            adapter_swaps: self.adapters.swaps,
+            adapter_hits: self.adapters.hits,
+            total_tokens: a.total_tokens,
+            sim_time_s: self.now_s,
+            mean_ttft_s: ttft.mean,
+            mean_itl_ms: mean(a.sum_itl_ms),
+            ttft,
+            itl: latency_stats(&a.gaps_ms),
+            queue: latency_stats(&a.queues_s),
+            per_adapter,
+            max_batch_observed: a.max_batch_observed,
+        }
+    }
+
+    /// Process one event. See [`StepOutcome`].
+    pub fn step(
+        &mut self,
+        tokens: Option<&mpsc::Sender<TokenEvent>>,
+    ) -> Result<StepOutcome> {
+        // ---- admission opportunity --------------------------------------
+        if self.batch.has_free_slot() && !self.waiting.is_empty() {
+            let arrived = self
+                .waiting
+                .partition_point(|r| r.arrival_s <= self.now_s);
+            if arrived > 0 {
+                let mut pick = self.policy.pick(
+                    &self.waiting[..arrived],
+                    self.batch.adapter(),
+                    self.adapters.resident(),
+                );
+                // Progress guarantee: a policy may hold an empty batch to
+                // wait for future arrivals, but once there are none left
+                // it must take something or drain() would never finish.
+                if pick.is_none()
+                    && self.batch.is_empty()
+                    && arrived == self.waiting.len()
+                {
+                    pick = Some(0);
+                }
+                if let Some(i) = pick {
+                    if i >= arrived {
+                        bail!("policy {} picked unarrived index {i}", self.policy.name());
+                    }
+                    let req = self.waiting.remove(i);
+                    if let Some(a) = self.batch.adapter() {
+                        if a != req.adapter {
+                            bail!(
+                                "policy {} mixed adapter {:?} into a {:?} batch",
+                                self.policy.name(),
+                                req.adapter,
+                                a
+                            );
+                        }
+                    }
+                    return self.admit(req);
+                }
+            }
+        }
+
+        // ---- batched decode step ----------------------------------------
+        if !self.batch.is_empty() {
+            return Ok(self.decode_step(tokens));
+        }
+
+        // ---- clock jump to the next arrival -----------------------------
+        if let Some(next) = self
+            .waiting
+            .iter()
+            .map(|r| r.arrival_s)
+            .find(|a| *a > self.now_s)
+        {
+            self.now_s = next;
+            return Ok(StepOutcome::Advanced { to_s: next });
+        }
+        if !self.waiting.is_empty() {
+            // Unreachable: arrived requests with an empty batch always
+            // admit (forced above). Guard against policy regressions.
+            bail!("scheduler deadlock: waiting requests but no runnable event");
+        }
+        Ok(StepOutcome::Idle)
+    }
+
+    /// Run the event loop until the simulated clock reaches `t` seconds.
+    /// Events are atomic, so the final one may carry the clock past `t`;
+    /// if the server goes idle earlier, the clock is advanced to `t`.
+    /// Returns the requests completed during this call.
+    pub fn run_until(
+        &mut self,
+        t: f64,
+        tokens: Option<&mpsc::Sender<TokenEvent>>,
+    ) -> Result<Vec<RequestResult>> {
+        while let Some(e) = self.next_event_s() {
+            if e > t {
+                break;
+            }
+            self.step(tokens)?;
+        }
+        if self.now_s < t {
+            self.now_s = t;
+        }
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// Run the event loop until every submitted request has completed.
+    /// Returns completion records in completion order (equal to
+    /// submission order for FCFS at batch 1).
+    pub fn drain(
+        &mut self,
+        tokens: Option<&mpsc::Sender<TokenEvent>>,
+    ) -> Result<Vec<RequestResult>> {
+        loop {
+            if let StepOutcome::Idle = self.step(tokens)? {
+                break;
+            }
+        }
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// Take the completion records accumulated since the last
+    /// `take_completed` / `run_until` / `drain` call, *without* advancing
+    /// the event loop (the side-effect-free flush for manual `step()`
+    /// drivers).
+    pub fn take_completed(&mut self) -> Vec<RequestResult> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Legacy façade: serve everything in the queue, streaming token
+    /// events into `tokens` if provided. Identical to [`Server::drain`].
     pub fn run(
         &mut self,
         tokens: Option<&mpsc::Sender<TokenEvent>>,
     ) -> Result<Vec<RequestResult>> {
-        let cyc = self.cfg.system.cycle_s();
-        let mut results = Vec::new();
-        while let Some(req) = self.queue.pop_front() {
-            let started = self.now_s;
-            let swap = match self.adapters.admit(req.adapter) {
-                SwapOutcome::Hit => false,
-                SwapOutcome::Swap { .. } => true,
-            };
+        self.drain(tokens)
+    }
 
-            // ---- TTFT: (swap ? reprogram :) + layer-sequential prefill --
-            let mut ttft = if swap { self.reprog_ttft_s } else { 0.0 };
-            // Scale the prefill template if the request length differs
-            // from the server's configured point (simple re-blocking).
-            let prefill_per_layer: f64 = if req.input_tokens == self.cfg.input_tokens {
-                self.prefill_block_s.iter().map(|(_, s)| s).sum()
-            } else {
-                let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
-                    / self.cfg.input_tokens as f64;
-                per_tok * req.input_tokens as f64
-            };
-            ttft += prefill_per_layer * self.n_layers as f64;
+    // ---- internals ------------------------------------------------------
 
-            // ---- golden functional step (optional) ----------------------
-            let golden_exec_ms = match (&self.golden, &self.golden_exe) {
-                (Some(rt), Some(exe)) => {
-                    let inputs = rt.load_inputs("decode_step")?;
-                    let t0 = std::time::Instant::now();
-                    let _ = rt.execute(exe, &inputs)?;
-                    Some(t0.elapsed().as_secs_f64() * 1e3)
-                }
-                _ => None,
-            };
+    /// Admit `req`: residency check (+ swap), prefill, optional golden
+    /// execution. Occupies the whole accelerator (the paper's prefill is
+    /// layer-sequential across every CT group), so in-flight decode slots
+    /// stall for the duration.
+    fn admit(&mut self, req: Request) -> Result<StepOutcome> {
+        let start_s = self.now_s;
+        let swap = match self.adapters.admit(req.adapter) {
+            SwapOutcome::Hit => false,
+            SwapOutcome::Swap { .. } => true,
+        };
 
-            // ---- decode loop --------------------------------------------
-            let mut decode_s = 0.0;
-            for i in 0..req.output_tokens {
-                let kv = req.input_tokens + i;
-                let tok_s =
-                    (self.layer_model.eval(kv).cycles * self.n_layers as u64) as f64 * cyc;
-                decode_s += tok_s;
-                if let Some(tx) = tokens {
-                    let _ = tx.send(TokenEvent {
-                        request: req.id,
-                        index: i,
-                        at_s: ttft + decode_s,
-                    });
-                }
+        // ---- TTFT: (swap ? reprogram :) + layer-sequential prefill ------
+        let mut ttft = if swap { self.reprog_ttft_s } else { 0.0 };
+        // Scale the prefill template if the request length differs from
+        // the server's configured point (simple re-blocking).
+        let prefill_per_layer: f64 = if req.input_tokens == self.cfg.input_tokens {
+            self.prefill_block_s.iter().map(|(_, s)| s).sum()
+        } else {
+            let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
+                / self.cfg.input_tokens as f64;
+            per_tok * req.input_tokens as f64
+        };
+        ttft += prefill_per_layer * self.n_layers as f64;
+
+        // ---- golden functional step (optional) --------------------------
+        let golden_exec_ms = match (&self.golden, &self.golden_exe) {
+            (Some(rt), Some(exe)) => {
+                let inputs = rt.load_inputs("decode_step")?;
+                let t0 = std::time::Instant::now();
+                let _ = rt.execute(exe, &inputs)?;
+                Some(t0.elapsed().as_secs_f64() * 1e3)
             }
+            _ => None,
+        };
 
-            let total = ttft + decode_s;
-            self.now_s += total;
-            let itl_ms = decode_s / req.output_tokens as f64 * 1e3;
-            self.stats.served += 1;
-            self.stats.total_tokens += (req.input_tokens + req.output_tokens) as u64;
-            self.stats.sim_time_s = self.now_s;
-            self.stats.mean_ttft_s += ttft;
-            self.stats.mean_itl_ms += itl_ms;
-            results.push(RequestResult {
-                request: req.id,
-                adapter: req.adapter,
-                swap,
-                queue_s: started,
-                ttft_s: ttft,
-                itl_ms,
-                total_s: total,
-                tokens_out: req.output_tokens,
-                golden_exec_ms,
-            });
+        for s in self.batch.slots_mut() {
+            s.stall_s += ttft;
+            s.pending_stall_s += ttft;
         }
-        if self.stats.served > 0 {
-            self.stats.mean_ttft_s /= self.stats.served as f64;
-            self.stats.mean_itl_ms /= self.stats.served as f64;
+        self.now_s += ttft;
+
+        let id = req.id;
+        self.batch.push(Slot {
+            req,
+            generated: 0,
+            start_s,
+            swap,
+            ttft_s: ttft,
+            decode_s: 0.0,
+            stall_s: 0.0,
+            pending_stall_s: 0.0,
+            golden_exec_ms,
+        });
+        self.acc.max_batch_observed = self.acc.max_batch_observed.max(self.batch.len());
+        Ok(StepOutcome::Admitted { request: id, swap })
+    }
+
+    /// One batched decode step: every active slot emits one token; the
+    /// step takes the layer-pipelined makespan of the batch.
+    fn decode_step(&mut self, tokens: Option<&mpsc::Sender<TokenEvent>>) -> StepOutcome {
+        let cyc = self.cfg.system.cycle_s();
+        let per_layer: Vec<u64> = self
+            .batch
+            .slots()
+            .iter()
+            .map(|s| self.layer_model.eval(s.kv_len()).cycles)
+            .collect();
+        let step_cycles = DecodeBatch::step_cycles(
+            &per_layer,
+            self.n_layers,
+            self.batch_overhead_cycles,
+        );
+        let step_s = step_cycles as f64 * cyc;
+        self.now_s += step_s;
+
+        let b = self.batch.len();
+        for slot in self.batch.slots_mut() {
+            slot.decode_s += step_s;
+            slot.generated += 1;
+            let gap_ms = (step_s + slot.pending_stall_s) * 1e3;
+            slot.pending_stall_s = 0.0;
+            self.acc.gaps_ms.push(gap_ms);
+            if let Some(tx) = tokens {
+                let _ = tx.send(TokenEvent {
+                    request: slot.req.id,
+                    index: slot.generated - 1,
+                    at_s: slot.ttft_s + slot.stall_s + slot.decode_s,
+                });
+            }
         }
-        self.stats.adapter_swaps = self.adapters.swaps;
-        self.stats.adapter_hits = self.adapters.hits;
-        Ok(results)
+
+        let done = self.batch.take_finished();
+        let completed = done.len();
+        for slot in done {
+            self.retire(slot);
+        }
+        StepOutcome::Decoded { batch: b, completed }
+    }
+
+    fn retire(&mut self, s: Slot) {
+        let itl_ms = s.decode_s / s.req.output_tokens as f64 * 1e3;
+        let total = s.ttft_s + s.stall_s + s.decode_s;
+        let queue_s = s.start_s - s.req.arrival_s;
+
+        self.acc.served += 1;
+        self.acc.total_tokens += (s.req.input_tokens + s.req.output_tokens) as u64;
+        self.acc.sum_itl_ms += itl_ms;
+        self.acc.ttfts_s.push(s.ttft_s);
+        self.acc.queues_s.push(queue_s);
+        let pa = self.acc.per_adapter.entry(s.req.adapter).or_insert((0, 0));
+        pa.0 += 1;
+        pa.1 += s.req.output_tokens as u64;
+
+        self.finished.push(RequestResult {
+            request: s.req.id,
+            adapter: s.req.adapter,
+            swap: s.swap,
+            arrival_s: s.req.arrival_s,
+            start_s: s.start_s,
+            queue_s,
+            ttft_s: s.ttft_s,
+            itl_ms,
+            stall_s: s.stall_s,
+            total_s: total,
+            tokens_out: s.req.output_tokens,
+            golden_exec_ms: s.golden_exec_ms,
+        });
     }
 }
 
@@ -280,6 +768,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+    use crate::coordinator::scheduler::AdapterAffinity;
 
     fn server() -> Server {
         let exp = ExperimentConfig::paper_point(
@@ -296,7 +785,7 @@ mod tests {
     }
 
     fn req(id: u64, adapter: u32) -> Request {
-        Request { id, adapter: AdapterId(adapter), input_tokens: 256, output_tokens: 32 }
+        Request::new(id, AdapterId(adapter), 256, 32)
     }
 
     #[test]
@@ -316,6 +805,12 @@ mod tests {
         assert_eq!(s.stats().adapter_hits, 2);
         // same-task repeat must be strictly faster to first token
         assert!(results[1].ttft_s < results[0].ttft_s);
+        // per-adapter accounting
+        let st = s.stats();
+        let u1 = st.per_adapter[&AdapterId(1)];
+        let u2 = st.per_adapter[&AdapterId(2)];
+        assert_eq!((u1.served, u1.swaps, u1.hits), (3, 2, 1));
+        assert_eq!((u2.served, u2.swaps, u2.hits), (2, 1, 1));
     }
 
     #[test]
@@ -335,17 +830,14 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unregistered_and_empty() {
+    fn rejects_unregistered_empty_and_bad_arrival() {
         let mut s = server();
         assert!(s.submit(req(0, 7)).is_err());
         s.register_adapter(AdapterId(1));
-        let bad = Request {
-            id: 1,
-            adapter: AdapterId(1),
-            input_tokens: 0,
-            output_tokens: 8,
-        };
-        assert!(s.submit(bad).is_err());
+        assert!(s.submit(Request::new(1, AdapterId(1), 0, 8)).is_err());
+        assert!(s.submit(Request::new(2, AdapterId(1), 8, 0)).is_err());
+        assert!(s.submit(req(3, 1).at(f64::NAN)).is_err());
+        assert!(s.submit(req(4, 1).at(-1.0)).is_err());
     }
 
     #[test]
@@ -381,5 +873,77 @@ mod tests {
         let with = mk(true);
         let without = mk(false);
         assert!(without > with, "no-SRPG {without} must exceed SRPG {with}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_batch_and_overflowing_kv() {
+        assert!(ServerBuilder::default().max_batch(0).build().is_err());
+        // A very wide batch at a long context must trip the KV check.
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama2_13b,
+            &[LoraTarget::Q, LoraTarget::V],
+            2048,
+        );
+        let r = ServerBuilder::from_experiment(exp).max_batch(64).build();
+        assert!(r.is_err(), "64 slots of 13B 2048/2048 KV cannot fit");
+    }
+
+    #[test]
+    fn arrival_gating_holds_requests_until_their_time() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1).at(5.0)).unwrap();
+        // Nothing arrived yet: the first step jumps the clock.
+        match s.step(None).unwrap() {
+            StepOutcome::Advanced { to_s } => assert_eq!(to_s, 5.0),
+            other => panic!("expected clock jump, got {other:?}"),
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].start_s, 5.0);
+        assert_eq!(results[0].queue_s, 0.0);
+    }
+
+    #[test]
+    fn take_completed_flushes_without_stepping() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap();
+        loop {
+            match s.step(None).unwrap() {
+                StepOutcome::Decoded { completed, .. } if completed > 0 => break,
+                StepOutcome::Idle => panic!("went idle without completing"),
+                _ => {}
+            }
+        }
+        let now = s.now_s();
+        let done = s.take_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(s.now_s(), now, "flush must not advance the clock");
+        assert!(s.take_completed().is_empty());
+    }
+
+    #[test]
+    fn affinity_batches_share_one_adapter() {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(3)
+            .policy(AdapterAffinity)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        s.register_adapter(AdapterId(2));
+        for (i, a) in [(0u64, 1u32), (1, 2), (2, 1), (3, 2), (4, 1)] {
+            s.submit(req(i, a)).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 5);
+        // One swap per adapter group: 1 (cold) then 2.
+        assert_eq!(s.stats().adapter_swaps, 2);
+        assert!(s.stats().max_batch_observed >= 2);
     }
 }

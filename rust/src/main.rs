@@ -11,10 +11,8 @@
 //! Argument parsing is hand-rolled (the offline build carries no clap);
 //! every flag is `--key value` or a boolean `--flag`.
 
-use primal::config::{ExperimentConfig, LoraTarget, ModelId};
-use primal::coordinator::{
-    AdapterId, FunctionalMode, Request, Server, ServerConfig,
-};
+use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+use primal::coordinator::{AdapterId, FunctionalMode, Request, ServerBuilder};
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
 use primal::sim::Simulator;
@@ -30,14 +28,16 @@ fn usage() -> ! {
 commands:
   simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--no-srpg] [--trace]
   report     --table <1|2|3|4|h100|srpg>
-  serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N] [--golden]
+  serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
+             [--batch N] [--policy fcfs|affinity|sjf] [--rate R] [--golden]
+             (--rate R: Poisson arrivals at R req/s; 0 = all at t=0)
   sweep      --model <1b|8b|13b> [--from N] [--to N]
   validate   [--artifacts DIR]
 
 examples:
   primal simulate --model 13b --ctx 2048 --lora qv
   primal report --table 2
-  primal serve --model 1b --requests 8 --adapters 3
+  primal serve --model 1b --requests 16 --adapters 3 --batch 4 --policy affinity
   primal validate"
     );
     std::process::exit(2)
@@ -173,17 +173,34 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     let ctx = num_flag(&flags, "ctx", 512);
     let n_requests = num_flag(&flags, "requests", 8);
     let n_adapters = num_flag(&flags, "adapters", 3);
+    let batch = num_flag(&flags, "batch", 1);
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("fcfs");
+    let Some(policy) = PolicyKind::parse(policy_name) else {
+        eprintln!("unknown policy '{policy_name}' (try fcfs, affinity, sjf)");
+        usage()
+    };
+    let rate: f64 = flags
+        .get("rate")
+        .map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("--rate expects a number, got '{v}'");
+                usage()
+            })
+        })
+        .unwrap_or(0.0);
     let cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     let functional = if flags.contains_key("golden") {
         FunctionalMode::Golden
     } else {
         FunctionalMode::TimingOnly
     };
-    let mut server = match Server::new(ServerConfig {
-        experiment: cfg,
-        functional,
-        artifacts_dir: default_artifacts_dir(),
-    }) {
+    let mut server = match ServerBuilder::from_experiment(cfg)
+        .functional(functional)
+        .artifacts_dir(default_artifacts_dir())
+        .max_batch(batch)
+        .policy_kind(policy)
+        .build()
+    {
         Ok(s) => s,
         Err(e) => {
             eprintln!("server init failed: {e:#}");
@@ -194,25 +211,28 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
         server.register_adapter(AdapterId(a as u32));
     }
     let mut rng = Rng::new(7);
+    let mut arrival = 0.0f64;
     for i in 0..n_requests {
         let adapter = AdapterId(rng.range(0, n_adapters) as u32);
-        let req = Request {
-            id: i as u64,
-            adapter,
-            input_tokens: ctx,
-            output_tokens: ctx.min(128),
-        };
+        if rate > 0.0 {
+            arrival += rng.exponential(rate);
+        }
+        let req =
+            Request::new(i as u64, adapter, ctx, ctx.min(128)).at(arrival);
         server.submit(req).unwrap();
     }
-    match server.run(None) {
+    match server.drain(None) {
         Ok(results) => {
-            println!("req  adapter  swap   queue_s   ttft_s   itl_ms  golden_ms");
+            println!(
+                "req  adapter  swap  arrive_s   queue_s   ttft_s   itl_ms  golden_ms"
+            );
             for r in &results {
                 println!(
-                    "{:>3}  {:>7}  {:>4}  {:>8.3}  {:>7.3}  {:>7.3}  {}",
+                    "{:>3}  {:>7}  {:>4}  {:>8.3}  {:>8.3}  {:>7.3}  {:>7.3}  {}",
                     r.request,
                     r.adapter.0,
                     if r.swap { "yes" } else { "-" },
+                    r.arrival_s,
                     r.queue_s,
                     r.ttft_s,
                     r.itl_ms,
@@ -223,11 +243,37 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             }
             let s = server.stats();
             println!(
-                "\nserved {} requests, {} tokens, {:.2} simulated s; \
-                 swaps {}, hits {}; mean TTFT {:.3} s, mean ITL {:.3} ms",
-                s.served, s.total_tokens, s.sim_time_s,
-                s.adapter_swaps, s.adapter_hits, s.mean_ttft_s, s.mean_itl_ms
+                "\npolicy {} / batch {} (widest observed {}): served {} requests, \
+                 {} tokens, {:.2} simulated s ({:.1} tok/s); swaps {}, hits {}",
+                server.policy_name(),
+                batch,
+                s.max_batch_observed,
+                s.served,
+                s.total_tokens,
+                s.sim_time_s,
+                s.total_tokens as f64 / s.sim_time_s.max(1e-12),
+                s.adapter_swaps,
+                s.adapter_hits,
             );
+            println!(
+                "TTFT  mean {:.3} s   p50 {:.3}  p95 {:.3}  p99 {:.3}",
+                s.ttft.mean, s.ttft.p50, s.ttft.p95, s.ttft.p99
+            );
+            println!(
+                "ITL   mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+                s.itl.mean, s.itl.p50, s.itl.p95, s.itl.p99
+            );
+            println!(
+                "queue mean {:.3} s   p50 {:.3}  p95 {:.3}  p99 {:.3}",
+                s.queue.mean, s.queue.p50, s.queue.p95, s.queue.p99
+            );
+            println!("\nadapter  served  tokens_out  swaps  hits");
+            for (id, u) in &s.per_adapter {
+                println!(
+                    "{:>7}  {:>6}  {:>10}  {:>5}  {:>4}",
+                    id.0, u.served, u.tokens_out, u.swaps, u.hits
+                );
+            }
             ExitCode::SUCCESS
         }
         Err(e) => {

@@ -180,7 +180,7 @@ impl Simulator {
         ledger.post_ct_state(CtPowerState::Reprogramming, reprog_cycles_total, 1);
 
         // ---- decode loop ---------------------------------------------------
-        let layer_model = LayerCostModel::build(cfg, lm0);
+        let layer_model = LayerCostModel::build_cached(cfg, lm0);
         // Extension: LM-head projection per decode token (off by default;
         // paper tables exclude it — see sim::lm_head).
         let lm_head = if cfg.include_lm_head {

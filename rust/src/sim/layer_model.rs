@@ -15,9 +15,31 @@ use super::cost::{program_cost, PhaseCost};
 use crate::config::ExperimentConfig;
 use crate::dataflow::decode_program;
 use crate::mapping::LayerMapping;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// kv sample grid (covers the paper's contexts with margin).
 const KV_SAMPLES: [usize; 10] = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096, 8192];
+
+/// Process-wide build cache: grid sweeps and repeated `Server` construction
+/// hit the same (model, mapping) key over and over, and each uncached build
+/// generates + costs ten decode programs.
+static CACHE: OnceLock<Mutex<BTreeMap<String, Arc<LayerCostModel>>>> = OnceLock::new();
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Everything the sampled decode cost depends on: the hardware, the model
+/// shape, the LoRA configuration, the calibration constants, and the layer
+/// mapping itself. Deliberately excludes input/output lengths, batch, and
+/// SRPG (the decode program is kv-parameterized and SRPG only affects
+/// reprogramming/power, not the decode instruction stream).
+fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping) -> String {
+    format!(
+        "{:?}|{:?}|{:?}|{:?}|{:?}",
+        cfg.system, cfg.model, cfg.lora, cfg.calib, lm
+    )
+}
 
 /// Piecewise-linear per-layer decode model.
 #[derive(Debug, Clone)]
@@ -34,6 +56,36 @@ impl LayerCostModel {
             })
             .collect();
         Self { samples }
+    }
+
+    /// Cached [`LayerCostModel::build`]: returns a shared model for the
+    /// (system, model, LoRA, calib, mapping) key, building at most once
+    /// per key per process. This is the hot-path fix for grid sweeps and
+    /// repeated `Server` construction.
+    pub fn build_cached(cfg: &ExperimentConfig, lm: &LayerMapping) -> Arc<LayerCostModel> {
+        let key = cache_key(cfg, lm);
+        let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+        {
+            let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(hit) = guard.get(&key) {
+                CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(hit);
+            }
+        }
+        // Build outside the lock (it is the expensive part); a racing
+        // builder for the same key keeps the first insertion.
+        let built = Arc::new(Self::build(cfg, lm));
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(guard.entry(key).or_insert(built))
+    }
+
+    /// Global (hits, misses) counters of [`LayerCostModel::build_cached`].
+    pub fn cache_counters() -> (u64, u64) {
+        (
+            CACHE_HITS.load(Ordering::Relaxed),
+            CACHE_MISSES.load(Ordering::Relaxed),
+        )
     }
 
     /// Evaluate at a kv length (linear interpolation; clamped extrapolation
@@ -63,6 +115,13 @@ impl LayerCostModel {
             reprog_bytes: lerp(c0.reprog_bytes, c1.reprog_bytes),
             d2d_bytes: lerp(c0.d2d_bytes, c1.d2d_bytes),
         }
+    }
+
+    /// Cycles for one decode token at `kv_len` across the whole model
+    /// (all layer groups, layer-sequential). This is the per-token cost
+    /// hook the serving coordinator's batched decode builds on.
+    pub fn token_cycles(&self, kv_len: usize, n_layers: usize) -> u64 {
+        self.eval(kv_len).cycles * n_layers as u64
     }
 
     /// Mean cycles-per-kv-token slope over [1024, 2048] (diagnostics).
@@ -133,5 +192,34 @@ mod tests {
     fn extrapolates_beyond_last_sample() {
         let (_, m) = model_for(ModelId::Llama32_1b);
         assert!(m.eval(10_000).cycles > m.eval(8192).cycles);
+    }
+
+    #[test]
+    fn token_cycles_scales_by_layers() {
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        let per_layer = m.eval(1024).cycles;
+        assert_eq!(m.token_cycles(1024, 16), per_layer * 16);
+        assert_eq!(m.token_cycles(1024, 1), per_layer);
+    }
+
+    #[test]
+    fn second_cached_build_is_a_hit() {
+        // A context length no other test uses keeps the key unique; the
+        // counters are global, so assert deltas with >=.
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            384,
+        );
+        let mapping = map_model(&cfg);
+        let a = LayerCostModel::build_cached(&cfg, &mapping.layers[0]);
+        let (hits_before, _) = LayerCostModel::cache_counters();
+        let b = LayerCostModel::build_cached(&cfg, &mapping.layers[0]);
+        let (hits_after, _) = LayerCostModel::cache_counters();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same key must share one model");
+        assert!(hits_after > hits_before, "second build for the key must be a cache hit");
+        // cached and uncached agree exactly
+        let fresh = LayerCostModel::build(&cfg, &mapping.layers[0]);
+        assert_eq!(a.eval(2048), fresh.eval(2048));
     }
 }

@@ -26,13 +26,7 @@ fn multi_request_multi_task_run() {
     }
     let pattern = [0u32, 0, 1, 1, 1, 2, 0];
     for (i, &a) in pattern.iter().enumerate() {
-        s.submit(Request {
-            id: i as u64,
-            adapter: AdapterId(a),
-            input_tokens: 256,
-            output_tokens: 16,
-        })
-        .unwrap();
+        s.submit(Request::new(i as u64, AdapterId(a), 256, 16)).unwrap();
     }
     let (tx, rx) = mpsc::channel();
     let results = s.run(Some(&tx)).unwrap();
@@ -67,13 +61,7 @@ fn swap_latency_visible_in_ttft() {
     s.register_adapter(AdapterId(0));
     s.register_adapter(AdapterId(1));
     for (i, a) in [(0u64, 0u32), (1, 0), (2, 1)] {
-        s.submit(Request {
-            id: i,
-            adapter: AdapterId(a),
-            input_tokens: 256,
-            output_tokens: 8,
-        })
-        .unwrap();
+        s.submit(Request::new(i, AdapterId(a), 256, 8)).unwrap();
     }
     let results = s.run(None).unwrap();
     // hit (request 1) must beat both swaps (0 and 2)
@@ -95,13 +83,7 @@ fn golden_mode_runs_numerics_on_request_path() {
     }
     let mut s = make_server(ModelId::Llama32_1b, 256, FunctionalMode::Golden);
     s.register_adapter(AdapterId(0));
-    s.submit(Request {
-        id: 0,
-        adapter: AdapterId(0),
-        input_tokens: 256,
-        output_tokens: 4,
-    })
-    .unwrap();
+    s.submit(Request::new(0, AdapterId(0), 256, 4)).unwrap();
     let results = s.run(None).unwrap();
     let g = results[0].golden_exec_ms.expect("golden exec time");
     assert!(g > 0.0, "PJRT execution must take measurable time");
@@ -111,10 +93,8 @@ fn golden_mode_runs_numerics_on_request_path() {
 fn variable_request_lengths_scale() {
     let mut s = make_server(ModelId::Llama32_1b, 512, FunctionalMode::TimingOnly);
     s.register_adapter(AdapterId(0));
-    s.submit(Request { id: 0, adapter: AdapterId(0), input_tokens: 128, output_tokens: 8 })
-        .unwrap();
-    s.submit(Request { id: 1, adapter: AdapterId(0), input_tokens: 512, output_tokens: 8 })
-        .unwrap();
+    s.submit(Request::new(0, AdapterId(0), 128, 8)).unwrap();
+    s.submit(Request::new(1, AdapterId(0), 512, 8)).unwrap();
     let results = s.run(None).unwrap();
     // 4x the prompt => roughly >2x the prefill time (same adapter: no swap)
     assert!(results[1].ttft_s > results[0].ttft_s * 2.0);
