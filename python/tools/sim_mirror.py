@@ -1,0 +1,1345 @@
+#!/usr/bin/env python3
+"""Python mirror of the Rust cost pipeline and serving event loop.
+
+This container ships no Rust toolchain, so numeric changes to the crate
+are cross-validated against this mirror (the same approach PR 1/PR 2
+used). It reproduces, operation-for-operation (IEEE-754 doubles and exact
+integer arithmetic, same order of operations):
+
+  * config defaults (SystemConfig, CalibConstants, models, LoRA)
+  * mapping::optimize_layer / map_model (shape search + shelf packing)
+  * noc closed-form spanning-tree metrics + AnalyticNoc
+  * isa program structures and sim::cost::{instr,phase,program}_cost
+  * dataflow::{decode,prefill,reprogram}_program
+  * sim::LayerCostModel (geometric kv sampling + lerp)
+  * sim::engine::Simulator::run_batched (cycles + energy ledger)
+  * coordinator::Server event loop — monolithic AND chunked prefill,
+    batched decode, Fcfs / AdapterAffinity(/max_run_len) / SJF policies
+
+Running it regenerates the instruction-count proxy values committed in
+rust/benches/baselines/sim_proxy.txt and re-checks the serving gates the
+new benches/tests assert (chunked-prefill stall/ITL reductions, batch-1
+bit-matches, conservation, starvation bound).
+
+Usage:  python3 python/tools/sim_mirror.py [--check]
+"""
+
+import math
+import sys
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# config mirrors
+# ---------------------------------------------------------------------------
+
+MESH = 32
+TILE = 256
+
+SYS = dict(
+    freq_hz=1.0e9,
+    link_bits=64,
+    mesh_dim=32,
+    rram_rows=256,
+    rram_cols=256,
+    sram_rows=256,
+    sram_cols=64,
+    scratchpad_bytes=32 * 1024,
+    fifo_bytes=128,
+    dmac_per_router=16,
+    io_pairs=6,
+    weight_bits=8,
+    rram_uw=120.0,
+    sram_uw=950.0,
+    spad_uw=42.0,
+    router_uw=103.0,
+)
+
+CAL = dict(
+    rram_pass_cycles=96,
+    sram_pass_cycles=24,
+    hop_cycles=2,
+    link_efficiency=0.80,
+    scratchpad_latency_cycles=3,
+    dmac_macs_per_cycle=1.0,
+    softmax_cycles_per_elem=2.0,
+    sram_write_bytes_per_cycle=4.0,
+    collective_congestion=1.15,
+    nmc_issue_cycles=4,
+    d2d_latency_cycles=40,
+    d2d_bytes_per_cycle=16.0,
+    d2d_sf_bytes_per_cycle=4.0,
+    retention_frac=0.010,
+    router_idle_frac=0.05,
+    idle_ungated_frac=0.20,
+    hop_energy_pj_per_byte=0.35,
+    dmac_energy_pj_per_mac=0.08,
+    rram_pass_energy_nj=11.5,
+    sram_pass_energy_nj=1.9,
+    scratchpad_pj_per_byte=0.45,
+    ct_static_w=0.05,
+)
+
+PES_PER_CT = MESH * MESH
+LINK_BPC = SYS["link_bits"] // 8
+EFF_BW = CAL["link_efficiency"] * float(LINK_BPC)
+CYCLE_S = 1.0 / SYS["freq_hz"]
+
+MODELS = {
+    "1b": dict(layers=16, hidden=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+               intermediate=8192),
+    "8b": dict(layers=32, hidden=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+               intermediate=14336),
+    "13b": dict(layers=40, hidden=5120, n_heads=40, n_kv_heads=40, head_dim=128,
+                intermediate=13824),
+}
+
+
+def q_dim(m):
+    return m["n_heads"] * m["head_dim"]
+
+
+def kv_dim(m):
+    return m["n_kv_heads"] * m["head_dim"]
+
+
+def lora_layer_params(m, targets, rank=8):
+    total = 0
+    for t in targets:
+        if t == "Q":
+            mm, kk = q_dim(m), m["hidden"]
+        elif t in ("K", "V"):
+            mm, kk = kv_dim(m), m["hidden"]
+        else:
+            mm, kk = m["hidden"], q_dim(m)
+        total += rank * (mm + kk)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# geometry + spanning-tree closed forms
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Rect:
+    x0: int
+    y0: int
+    x1: int
+    y1: int
+
+    def width(self):
+        return self.x1 - self.x0
+
+    def height(self):
+        return self.y1 - self.y0
+
+    def count(self):
+        return self.width() * self.height()
+
+    def center(self):
+        return ((self.x0 + self.x1) // 2, (self.y0 + self.y1) // 2)
+
+
+GROUP = Rect(0, 0, MESH, MESH)
+ENTRY = (0, 0)
+
+
+def manhattan(a, b):
+    return abs(a[0] - b[0]) + abs(a[1] - b[1])
+
+
+def _entry(root, dest):
+    return (min(max(root[0], dest.x0), dest.x1 - 1),
+            min(max(root[1], dest.y0), dest.y1 - 1))
+
+
+def tree_depth(root, dest):
+    e = _entry(root, dest)
+    trunk = manhattan(root, e)
+    dx = max(e[0] - dest.x0, dest.x1 - 1 - e[0])
+    dy = max(e[1] - dest.y0, dest.y1 - 1 - e[1])
+    return trunk + dx + dy
+
+
+def tree_edges(root, dest):
+    e = _entry(root, dest)
+    trunk = manhattan(root, e)
+    return dest.count() + trunk - 1
+
+
+def tree_fan_in(root, dest):
+    e = _entry(root, dest)
+    horiz = int(e[0] > dest.x0) + int(e[0] + 1 < dest.x1)
+    vert = int(e[1] > dest.y0) + int(e[1] + 1 < dest.y1)
+    spine = 1 + vert
+    return max(horiz + vert, spine, 1)
+
+
+def noc_stream(bytes_):
+    return math.ceil(bytes_ / EFF_BW)
+
+
+def noc_unicast(frm, to, bytes_):
+    dist = manhattan(frm, to)
+    return (CAL["hop_cycles"] * dist + noc_stream(bytes_), bytes_ * dist)
+
+
+def noc_broadcast(root, dest, bytes_):
+    depth = tree_depth(root, dest)
+    edges = tree_edges(root, dest)
+    cycles = CAL["hop_cycles"] * depth + math.ceil(
+        float(noc_stream(bytes_)) * CAL["collective_congestion"])
+    return (cycles, bytes_ * edges)
+
+
+def noc_reduce(src, root, bytes_):
+    depth = tree_depth(root, src)
+    edges = tree_edges(root, src)
+    fan = float(max(tree_fan_in(root, src), 1))
+    cycles = CAL["hop_cycles"] * depth + math.ceil(
+        float(noc_stream(bytes_)) * fan * CAL["collective_congestion"])
+    return (cycles, bytes_ * edges)
+
+
+# ---------------------------------------------------------------------------
+# mapping mirror
+# ---------------------------------------------------------------------------
+
+MATRICES = ["WQ", "WK", "WV", "WO", "WGate", "WUp", "WDown"]
+ATTN = {"WQ", "WK", "WV", "WO"}
+
+
+@dataclass
+class Shape:
+    id: str
+    m: int
+    k: int
+
+    def n_mt(self):
+        return -(-self.m // TILE)
+
+    def n_kt(self):
+        return -(-self.k // TILE)
+
+    def tiles(self):
+        return self.n_mt() * self.n_kt()
+
+
+@dataclass
+class Region:
+    id: str
+    ct: int
+    rect: Rect
+    mt0: int
+    mt1: int
+    kt0: int
+    kt1: int
+
+    def n_kt(self):
+        return self.kt1 - self.kt0
+
+    def n_mt(self):
+        return self.mt1 - self.mt0
+
+
+def layer_matrices(m):
+    h, q, kv, it = m["hidden"], q_dim(m), kv_dim(m), m["intermediate"]
+    return [Shape("WQ", q, h), Shape("WK", kv, h), Shape("WV", kv, h),
+            Shape("WO", h, q), Shape("WGate", it, h), Shape("WUp", it, h),
+            Shape("WDown", h, it)]
+
+
+class ShelfPacker:
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.ct = 0
+        self.shelf_y = 0
+        self.shelf_h = 0
+        self.cursor_x = 0
+
+    def place(self, w, h):
+        if w > self.mesh or h > self.mesh:
+            return None
+        if self.cursor_x + w <= self.mesh and self.shelf_y + h <= self.mesh:
+            rect = Rect(self.cursor_x, self.shelf_y, self.cursor_x + w,
+                        self.shelf_y + h)
+            self.cursor_x += w
+            self.shelf_h = max(self.shelf_h, h)
+            return (self.ct, rect)
+        if self.shelf_y + self.shelf_h + h <= self.mesh:
+            self.shelf_y += self.shelf_h
+            self.cursor_x = 0
+            self.shelf_h = h
+            rect = Rect(0, self.shelf_y, w, self.shelf_y + h)
+            self.cursor_x = w
+            return (self.ct, rect)
+        self.ct += 1
+        self.shelf_y = 0
+        self.cursor_x = 0
+        self.shelf_h = h
+        rect = Rect(0, 0, w, h)
+        self.cursor_x = w
+        return (self.ct, rect)
+
+
+def place_matrix(shape, region_w, packer, out):
+    n_mt, n_kt = shape.n_mt(), shape.n_kt()
+    w = max(min(region_w, n_kt), 1)
+    rows_per_mt = -(-n_kt // w)
+    max_mt_per_slab = max(packer.mesh // rows_per_mt, 1)
+    mt0 = 0
+    while mt0 < n_mt:
+        mt1 = min(mt0 + max_mt_per_slab, n_mt)
+        h = (mt1 - mt0) * rows_per_mt
+        placed = packer.place(w, h)
+        if placed is None:
+            return False
+        ct, rect = placed
+        out.append(Region(shape.id, ct, rect, mt0, mt1, 0, n_kt))
+        mt0 = mt1
+    return True
+
+
+def layout_comm_cost(regions):
+    cost = 0
+    for r in regions:
+        bcast = (r.n_kt() * TILE * 4)
+        cost += noc_broadcast(ENTRY, r.rect, bcast)[0]
+        red = (r.n_mt() * TILE * 4)
+        cost += noc_reduce(r.rect, r.rect.center(), red)[0]
+    return cost
+
+
+def optimize_layer(matrices):
+    orderings = [list(range(len(matrices)))]
+    idx = sorted(range(len(matrices)),
+                 key=lambda i: (matrices[i].id not in ATTN, matrices[i].tiles()))
+    orderings.append(idx)
+    best = None
+    for ordering in orderings:
+        for w_div in (1, 2, 4, 8):
+            packer = ShelfPacker(MESH)
+            regions = []
+            ok = True
+            for i in ordering:
+                mshape = matrices[i]
+                w = min(max(-(-mshape.n_kt() // w_div), 1), MESH)
+                if not place_matrix(mshape, w, packer, regions):
+                    ok = False
+                    break
+            if not ok:
+                continue
+            n_cts = max(r.ct for r in regions) + 1
+            cost = layout_comm_cost(regions) + n_cts * 1_000_000
+            if best is None or cost < best[0]:
+                best = (cost, regions, n_cts)
+    return best[1], best[2]
+
+
+@dataclass
+class LayerMapping:
+    ct_base: int
+    n_cts: int
+    regions: list
+    kv_ring_routers: int
+    kv_token_bytes: int
+    lora_bytes: int
+
+
+def map_model(model, targets):
+    m = MODELS[model]
+    regions, n_cts = optimize_layer(layer_matrices(m))
+    kv_ring = n_cts * PES_PER_CT
+    kv_tok = 2 * kv_dim(m) * 2
+    lora_bytes = lora_layer_params(m, targets) * 4
+    return LayerMapping(0, n_cts, regions, max(kv_ring, 1), kv_tok, lora_bytes)
+
+
+# ---------------------------------------------------------------------------
+# program generation + costing mirror
+# ---------------------------------------------------------------------------
+
+U16 = 0xFFFF
+U32 = 0xFFFFFFFF
+
+
+@dataclass
+class Cost:
+    cycles: int = 0
+    rram_passes: int = 0
+    sram_passes: int = 0
+    dmac_macs: int = 0
+    softmax_elems: int = 0
+    spad_bytes: int = 0
+    net_byte_hops: int = 0
+    reprog_bytes: int = 0
+    d2d_bytes: int = 0
+
+    def merge_parallel(self, o):
+        self.cycles = max(self.cycles, o.cycles)
+        self._merge_events(o)
+
+    def _merge_events(self, o):
+        self.rram_passes += o.rram_passes
+        self.sram_passes += o.sram_passes
+        self.dmac_macs += o.dmac_macs
+        self.softmax_elems += o.softmax_elems
+        self.spad_bytes += o.spad_bytes
+        self.net_byte_hops += o.net_byte_hops
+        self.reprog_bytes += o.reprog_bytes
+        self.d2d_bytes += o.d2d_bytes
+
+
+def instr_cost(i):
+    c = Cost()
+    kind = i[0]
+    if kind == "bcast":
+        _, root, dest, bytes_ = i
+        cyc, bh = noc_broadcast(root, dest, bytes_)
+        c.cycles, c.net_byte_hops = cyc, bh
+    elif kind == "reduce":
+        _, src, root, bytes_ = i
+        cyc, bh = noc_reduce(src, root, bytes_)
+        c.cycles, c.net_byte_hops = cyc, bh
+    elif kind == "ucast":
+        _, frm, to, bytes_ = i
+        cyc, bh = noc_unicast(frm, to, bytes_)
+        c.cycles, c.net_byte_hops = cyc, bh
+    elif kind == "smac":
+        _, pes, passes = i
+        c.cycles = passes * CAL["rram_pass_cycles"] + CAL["scratchpad_latency_cycles"]
+        c.rram_passes = pes.count() * passes
+    elif kind == "srmac":
+        _, pes, passes = i
+        c.cycles = passes * CAL["sram_pass_cycles"]
+        c.sram_passes = pes.count() * passes
+    elif kind == "dmac":
+        _, routers, macs = i
+        units = float(routers.count() * SYS["dmac_per_router"])
+        c.cycles = math.ceil(float(macs) / (units * CAL["dmac_macs_per_cycle"]))
+        c.dmac_macs = macs
+    elif kind == "softmax":
+        _, routers, elems = i
+        c.cycles = math.ceil(float(elems) * CAL["softmax_cycles_per_elem"]
+                             / float(routers.count())) \
+            + CAL["hop_cycles"] * (routers.width() + routers.height())
+        c.softmax_elems = elems
+    elif kind in ("sprd", "spwr"):
+        _, routers, bytes_ = i
+        per_router = math.ceil(float(bytes_) / float(routers.count()))
+        c.cycles = CAL["scratchpad_latency_cycles"] + math.ceil(
+            float(per_router) / float(LINK_BPC))
+        c.spad_bytes = bytes_
+    elif kind == "reprog":
+        _, pes, bytes_ = i
+        per_macro = math.ceil(float(bytes_) / float(pes.count()))
+        c.cycles = math.ceil(float(per_macro) / CAL["sram_write_bytes_per_cycle"])
+        c.reprog_bytes = bytes_
+    elif kind == "d2d":
+        _, bytes_, hops = i
+        if hops >= 1:
+            c.cycles = hops * (CAL["d2d_latency_cycles"]
+                               + math.ceil(float(bytes_) / CAL["d2d_sf_bytes_per_cycle"]))
+        else:
+            c.cycles = CAL["d2d_latency_cycles"] + math.ceil(
+                float(bytes_) / CAL["d2d_bytes_per_cycle"])
+        c.d2d_bytes = bytes_ * max(hops, 1)
+    else:
+        raise ValueError(kind)
+    return c
+
+
+def program_cost(prog):
+    """prog: list of (overlaps_prev, [instr...])."""
+    total = Cost()
+    prev_cycles = 0
+    for overlaps, instrs in prog:
+        c = Cost()
+        for i in instrs:
+            c.merge_parallel(instr_cost(i))
+        if overlaps:
+            extra = max(c.cycles - prev_cycles, 0)
+            total.cycles += extra
+            prev_cycles += extra
+        else:
+            total.cycles += c.cycles + CAL["nmc_issue_cycles"]
+            prev_cycles = c.cycles
+        total._merge_events(Cost(**{**c.__dict__, "cycles": 0}))
+    return total
+
+
+def _region_rect(lm, mid, ct):
+    out = None
+    for r in lm.regions:
+        if r.id == mid and r.ct == ct:
+            if out is None:
+                out = r.rect
+            else:
+                out = Rect(min(out.x0, r.rect.x0), min(out.y0, r.rect.y0),
+                           max(out.x1, r.rect.x1), max(out.y1, r.rect.y1))
+    return out
+
+
+def _each_ct(lm, mid):
+    out = []
+    for ct in range(lm.n_cts):
+        r = _region_rect(lm, mid, ct)
+        if r is not None:
+            out.append((ct, r))
+    return out
+
+
+def _kt_of(lm, mid):
+    kts = [r.n_kt() for r in lm.regions if r.id == mid]
+    return max(kts) if kts else 0
+
+
+def layer_program(model, targets, lm, tokens, kv_len):
+    m = MODELS[model]
+    t = tokens
+    decode = tokens == 1
+    f32b = 4
+    prog = []
+
+    def delivery(bytes_, rects):
+        v = []
+        hops = max(lm.n_cts, 1) if decode else 0
+        v.append(("d2d", bytes_, hops))
+        for _ct, rect in rects:
+            v.append(("bcast", ENTRY, rect, bytes_))
+        return v
+
+    def smac_passes(mid):
+        return min(max(_kt_of(lm, mid), 1) * t, U16)
+
+    def reduce_phase(mid):
+        return [("reduce", rect, rect.center(), min(TILE * 4 * t, U32))
+                for _ct, rect in _each_ct(lm, mid)]
+
+    qkv_rects = []
+    for mid in ("WQ", "WK", "WV"):
+        qkv_rects.extend(_each_ct(lm, mid))
+    in_bytes = m["hidden"] * f32b * t
+    prog.append((False, delivery(in_bytes, qkv_rects)))
+
+    instrs = []
+    for mid in ("WQ", "WK", "WV"):
+        passes = smac_passes(mid)
+        for _ct, rect in _each_ct(lm, mid):
+            instrs.append(("smac", rect, passes))
+    prog.append((True, instrs))
+
+    if targets:
+        instrs = []
+        for tgt in targets:
+            mid = {"Q": "WQ", "K": "WK", "V": "WV", "O": "WO"}[tgt]
+            passes = min(2 * t, U16)
+            for _ct, rect in _each_ct(lm, mid):
+                instrs.append(("srmac", rect, passes))
+        prog.append((True, instrs))
+
+    instrs = []
+    for mid in ("WQ", "WK", "WV"):
+        instrs.extend(reduce_phase(mid))
+    prog.append((False, instrs))
+
+    kv_bytes = min(lm.kv_token_bytes * t, U32)
+    prog.append((False, [("ucast", ENTRY, GROUP.center(), kv_bytes),
+                         ("spwr", GROUP, kv_bytes)]))
+
+    kv64 = kv_len
+    score_macs = min(m["n_heads"] * m["head_dim"] * kv64 * tokens, U32)
+    if decode:
+        gather_bytes = min(m["n_heads"] * 4 * kv64, U32)
+    else:
+        clusters = -(-lm.n_cts // 2)
+        gather_bytes = min(m["n_heads"] * 2 * kv64 * tokens // clusters, U32)
+    kv_read_bytes = min(kv64 * kv_dim(m) * 2, U32)
+    prog.append((False, [
+        ("bcast", ENTRY, GROUP, q_dim(m) * f32b * t),
+        ("sprd", GROUP, kv_read_bytes),
+        ("dmac", GROUP, score_macs),
+        ("ucast", ENTRY, GROUP.center(), gather_bytes),
+    ]))
+
+    elems = min(m["n_heads"] * kv64 * tokens, U32)
+    prog.append((False, [("softmax", GROUP, elems)]))
+
+    prog.append((False, [
+        ("sprd", GROUP, kv_read_bytes),
+        ("dmac", GROUP, score_macs),
+        ("ucast", GROUP.center(), ENTRY, gather_bytes),
+        ("ucast", GROUP.center(), ENTRY, q_dim(m) * f32b * t),
+    ]))
+
+    o_rects = _each_ct(lm, "WO")
+    prog.append((False, delivery(q_dim(m) * f32b * t, o_rects)))
+    instrs = [("smac", rect, smac_passes("WO")) for _ct, rect in o_rects]
+    instrs.extend(reduce_phase("WO"))
+    prog.append((True, instrs))
+
+    mlp_rects = []
+    for mid in ("WGate", "WUp"):
+        mlp_rects.extend(_each_ct(lm, mid))
+    prog.append((False, delivery(m["hidden"] * f32b * t, mlp_rects)))
+    instrs = []
+    for mid in ("WGate", "WUp"):
+        for _ct, rect in _each_ct(lm, mid):
+            instrs.append(("smac", rect, smac_passes(mid)))
+        instrs.extend(reduce_phase(mid))
+    prog.append((True, instrs))
+
+    prog.append((False, [("softmax", GROUP, min(m["intermediate"] * tokens, U32))]))
+
+    down_rects = _each_ct(lm, "WDown")
+    prog.append((False, delivery(m["intermediate"] * f32b * t, down_rects)))
+    instrs = [("smac", rect, smac_passes("WDown")) for _ct, rect in down_rects]
+    instrs.extend(reduce_phase("WDown"))
+    prog.append((True, instrs))
+
+    prog.append((False, [("d2d", m["hidden"] * f32b * t, 1 if decode else 0)]))
+    return prog
+
+
+def decode_program(model, targets, lm, kv_len):
+    return layer_program(model, targets, lm, 1, kv_len)
+
+
+def prefill_program(model, targets, lm, block, kv_len):
+    return layer_program(model, targets, lm, block, kv_len)
+
+
+def reprogram_program(lm):
+    bytes_ = min(lm.lora_bytes, U32)
+    return [(False, [("d2d", bytes_, 0),
+                     ("bcast", ENTRY, GROUP, bytes_),
+                     ("reprog", GROUP, bytes_)])]
+
+
+# ---------------------------------------------------------------------------
+# layer cost model mirror
+# ---------------------------------------------------------------------------
+
+KV_SAMPLES = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096, 8192]
+
+
+class LayerCostModel:
+    def __init__(self, model, targets, lm):
+        self.samples = [(kv, program_cost(decode_program(model, targets, lm, kv)))
+                        for kv in KV_SAMPLES]
+
+    def eval_cycles(self, kv_len):
+        pts = self.samples
+        idx = None
+        for i, (k, _) in enumerate(pts):
+            if k >= kv_len:
+                idx = i
+                break
+        if idx == 0:
+            return pts[0][1].cycles
+        if idx is None:
+            lo, hi = pts[-2], pts[-1]
+        else:
+            lo, hi = pts[idx - 1], pts[idx]
+        k0, c0 = lo
+        k1, c1 = hi
+        f = (float(kv_len) - float(k0)) / (float(k1) - float(k0))
+        v = float(c0.cycles) + (float(c1.cycles) - float(c0.cycles)) * f
+        # Rust f64::round = round half away from zero; values are >= 0.
+        return int(math.floor(v + 0.5))
+
+
+# ---------------------------------------------------------------------------
+# engine mirror (run_batched: cycles + energy)
+# ---------------------------------------------------------------------------
+
+def srpg_plan(n_groups, reprog_cycles, group_start, enabled):
+    reprog_ct_cycles = float(reprog_cycles * n_groups) * 0.0  # set below
+    if not enabled:
+        total = reprog_cycles * n_groups
+        return total, 0
+    ttft_penalty = reprog_cycles
+    stalls = 0
+    reprog_done = reprog_cycles
+    for g in range(1, n_groups):
+        end = reprog_done + reprog_cycles
+        wave = ttft_penalty + group_start[g] + stalls
+        if end > wave:
+            stalls += end - wave
+        reprog_done = end
+    return ttft_penalty, stalls
+
+
+def step_cycles(per_layer_list, n_layers, overhead):
+    s = sum(per_layer_list)
+    mx = max(per_layer_list)
+    b = len(per_layer_list)
+    return s + (n_layers - 1) * mx + (b - 1) * overhead
+
+
+class Ledger:
+    def __init__(self):
+        self.rram = self.sram = self.spad = self.router = 0.0
+        self.dmac = self.net = self.ret = self.static = 0.0
+        self.span_cycles = 0
+
+    def post_cost_events(self, c):
+        self.rram += float(c.rram_passes) * CAL["rram_pass_energy_nj"] * 1e-9
+        self.sram += float(c.sram_passes) * CAL["sram_pass_energy_nj"] * 1e-9
+        self.dmac += float(c.dmac_macs + c.softmax_elems * 4) \
+            * CAL["dmac_energy_pj_per_mac"] * 1e-12
+        self.spad += float(c.spad_bytes) * CAL["scratchpad_pj_per_byte"] * 1e-12
+        self.net += float(c.net_byte_hops) * CAL["hop_energy_pj_per_byte"] * 1e-12
+        self.sram += float(c.reprog_bytes) * CAL["scratchpad_pj_per_byte"] * 1e-12
+        self.net += float(c.d2d_bytes * 4) * CAL["hop_energy_pj_per_byte"] * 1e-12
+
+    def post_sram_writes(self, bytes_):
+        self.sram += float(bytes_) * CAL["scratchpad_pj_per_byte"] * 1e-12
+
+    def post_state(self, state, n_cts, cycles):
+        dt = float(cycles) * CYCLE_S * n_cts
+        pairs = float(PES_PER_CT)
+        sram_w = SYS["sram_uw"] * 1e-6
+        spad_w = SYS["spad_uw"] * 1e-6
+        rram_w = SYS["rram_uw"] * 1e-6
+        rtr_w = SYS["router_uw"] * 1e-6
+        ret = CAL["retention_frac"]
+        if state == "active":
+            self.ret += dt * pairs * (sram_w + spad_w) * ret
+            self.router += dt * pairs * rtr_w * CAL["router_idle_frac"]
+            self.rram += dt * pairs * rram_w * CAL["router_idle_frac"]
+            self.static += dt * CAL["ct_static_w"]
+        elif state == "gated":
+            self.ret += dt * pairs * (sram_w + spad_w) * ret
+        elif state == "idle_ungated":
+            idle = CAL["idle_ungated_frac"]
+            self.ret += dt * pairs * (sram_w + spad_w) * ret
+            self.router += dt * pairs * rtr_w * idle
+            self.rram += dt * pairs * rram_w * idle
+            self.sram += dt * pairs * sram_w * idle
+            self.spad += dt * pairs * spad_w * idle
+            self.static += dt * CAL["ct_static_w"]
+        elif state == "reprogramming":
+            self.ret += dt * pairs * spad_w * ret
+            self.sram += dt * pairs * sram_w * 0.6
+            self.static += dt * CAL["ct_static_w"] * 0.5
+
+    def total_j(self):
+        return (self.rram + self.sram + self.spad + self.router + self.dmac
+                + self.net + self.ret + self.static)
+
+    def avg_power_w(self):
+        t = float(self.span_cycles) * CYCLE_S
+        return self.total_j() / t if t > 0 else 0.0
+
+
+def run_batched(model, targets, ctx, batch=1, srpg=True, overhead=64):
+    m = MODELS[model]
+    lm = map_model(model, targets)
+    b = max(batch, 1)
+    ledger = Ledger()
+    n_groups = m["layers"]
+    cts_per_group = lm.n_cts
+    total_cts = n_groups * cts_per_group
+
+    reprog = program_cost(reprogram_program(lm))
+    block = min(128, max(ctx, 1))
+    n_blocks = -(-ctx // block)
+    stage_cost = []
+    stage_events = []
+    for bi in range(n_blocks):
+        this_block = ctx - bi * block if bi + 1 == n_blocks else block
+        kvv = bi * block + this_block // 2
+        c = program_cost(prefill_program(model, targets, lm, this_block, max(kvv, 1)))
+        stage_cost.append(c.cycles)
+        stage_events.append(c)
+    layer_prefill_cycles = sum(stage_cost)
+    group_start = [l * layer_prefill_cycles for l in range(n_groups)]
+    prefill_makespan = layer_prefill_cycles * n_groups * b
+    ttft_penalty, stalls = srpg_plan(n_groups, reprog.cycles, group_start, srpg)
+    ttft_cycles = ttft_penalty + prefill_makespan + stalls
+
+    for c in stage_events:
+        for _ in range(n_groups * b):
+            ledger.post_cost_events(c)
+    ledger.post_sram_writes(reprog.reprog_bytes * n_groups)
+
+    active_ct = float(layer_prefill_cycles) * float(n_groups * cts_per_group * b)
+    total_ct = float(ttft_cycles) * float(total_cts)
+    reprog_ct = float(reprog.cycles * n_groups) * float(cts_per_group)
+    idle_ct = max(total_ct - active_ct - reprog_ct, 0.0)
+    idle_state = "gated" if srpg else "idle_ungated"
+    ledger.post_state("active", active_ct, 1)
+    ledger.post_state(idle_state, idle_ct, 1)
+    ledger.post_state("reprogramming", reprog_ct, 1)
+
+    model_lcm = LayerCostModel(model, targets, lm)
+    decode_total = 0
+    out = ctx
+    for i in range(out):
+        kvv = ctx + i
+        c_cycles = model_lcm.eval_cycles(kvv)
+        tok_cycles = step_cycles([c_cycles] * b, n_groups, overhead)
+        decode_total += tok_cycles
+        # dynamic decode energy: eval full cost at kv (lerped counters).
+        ev = lerped_cost(model_lcm, kvv)
+        for _ in range(n_groups * b):
+            ledger.post_cost_events(ev)
+        if b == 1:
+            active = float(tok_cycles) * float(cts_per_group)
+            idle = float(tok_cycles) * float((n_groups - 1) * cts_per_group)
+        else:
+            active = float(b * n_groups * c_cycles) * float(cts_per_group)
+            total = float(tok_cycles) * float(n_groups * cts_per_group)
+            idle = max(total - active, 0.0)
+        ledger.post_state("active", active, 1)
+        ledger.post_state(idle_state, idle, 1)
+
+    total_cycles = ttft_cycles + decode_total
+    ledger.span_cycles = total_cycles
+    ttft_s = float(ttft_cycles) * CYCLE_S
+    itl_ms = float(decode_total) / float(out) * CYCLE_S * 1e3 if out else 0.0
+    total_s = ttft_s + float(decode_total) * CYCLE_S
+    tokens = float((ctx + out) * b)
+    tput = tokens / total_s
+    power = ledger.avg_power_w()
+    return dict(ttft_s=ttft_s, itl_ms=itl_ms, throughput=tput, power=power,
+                eff=tput / max(power, 1e-12), energy=ledger.total_j(),
+                cycles=total_cycles)
+
+
+def lerped_cost(lcm, kv_len):
+    """Full PhaseCost lerp (mirrors LayerCostModel::eval all fields)."""
+    pts = lcm.samples
+    idx = None
+    for i, (k, _) in enumerate(pts):
+        if k >= kv_len:
+            idx = i
+            break
+    if idx == 0:
+        return pts[0][1]
+    if idx is None:
+        lo, hi = pts[-2], pts[-1]
+    else:
+        lo, hi = pts[idx - 1], pts[idx]
+    k0, c0 = lo
+    k1, c1 = hi
+    f = (float(kv_len) - float(k0)) / (float(k1) - float(k0))
+
+    def lerp(a, bb):
+        return int(math.floor(max(float(a) + (float(bb) - float(a)) * f, 0.0) + 0.5))
+
+    out = Cost()
+    for fld in ("cycles", "rram_passes", "sram_passes", "dmac_macs",
+                "softmax_elems", "spad_bytes", "net_byte_hops", "reprog_bytes",
+                "d2d_bytes"):
+        setattr(out, fld, lerp(getattr(c0, fld), getattr(c1, fld)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serving event-loop mirror (monolithic + chunked prefill)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Req:
+    id: int
+    adapter: int
+    inp: int
+    out: int
+    arrival: float = 0.0
+
+
+@dataclass
+class Slot:
+    req: Req
+    generated: int = 0
+    start_s: float = 0.0
+    swap: bool = False
+    ttft_s: float = 0.0
+    decode_s: float = 0.0
+    stall_s: float = 0.0
+    pending_stall_s: float = 0.0
+
+
+@dataclass
+class Job:
+    req: Req
+    swap: bool
+    start_s: float
+    reprog_s: float
+    cum: list
+    done: int = 0
+    external_s: float = 0.0
+
+    def advance(self):
+        end = self.start_s + self.external_s + (self.reprog_s + self.cum[self.done])
+        self.done += 1
+        return end
+
+    def is_done(self):
+        return self.done >= len(self.cum)
+
+    def ttft(self):
+        return (self.reprog_s + self.cum[-1]) + self.external_s
+
+    def to_slot(self):
+        return Slot(self.req, 0, self.start_s, self.swap, self.ttft())
+
+
+class Policy:
+    def __init__(self, kind, max_run_len=None):
+        self.kind = kind
+        self.max_run_len = max_run_len
+        self.run_adapter = None
+        self.run_len = 0
+
+    def _note(self, waiting, pick):
+        if pick is not None:
+            a = waiting[pick].adapter
+            if self.run_adapter == a:
+                self.run_len += 1
+            else:
+                self.run_adapter = a
+                self.run_len = 1
+        return pick
+
+    def pick(self, waiting, active, resident):
+        if self.kind == "fcfs":
+            if not waiting:
+                return None
+            if active is None or waiting[0].adapter == active:
+                return 0
+            return None
+        if self.kind == "sjf":
+            best = None
+            for i, r in enumerate(waiting):
+                if active is not None and r.adapter != active:
+                    continue
+                if best is None or (r.out, r.inp) < (waiting[best].out, waiting[best].inp):
+                    best = i
+            return best
+        # affinity
+        if not waiting:
+            return None
+        anchor = active if active is not None else resident
+        if (self.max_run_len is not None and anchor is not None
+                and self.run_adapter == anchor and self.run_len >= self.max_run_len
+                and any(r.adapter != anchor for r in waiting)):
+            if active is not None:
+                return None
+            return self._note(waiting, self._deepest(waiting, exclude=anchor))
+        if anchor is not None:
+            for i, r in enumerate(waiting):
+                if r.adapter == anchor:
+                    return self._note(waiting, i)
+            if active is not None:
+                return None
+        return self._note(waiting, self._deepest(waiting, exclude=None))
+
+    @staticmethod
+    def _deepest(waiting, exclude):
+        groups = {}
+        for i, r in enumerate(waiting):
+            if exclude is not None and r.adapter == exclude:
+                continue
+            if r.adapter not in groups:
+                groups[r.adapter] = [0, i]
+            groups[r.adapter][0] += 1
+        if not groups:
+            return None
+        best = None
+        for cnt, first in groups.values():
+            if best is None or cnt > best[0] or (cnt == best[0] and first < best[1]):
+                best = (cnt, first)
+        return best[1]
+
+
+class Server:
+    """Mirror of coordinator::Server (timing only, no energy)."""
+
+    def __init__(self, model, targets, ctx, max_batch=1, policy="fcfs",
+                 prefill_chunk=None, srpg=True, overhead=64, max_run_len=None):
+        self.m = MODELS[model]
+        self.lm = map_model(model, targets)
+        self.ctx = ctx
+        self.n_layers = self.m["layers"]
+        self.max_batch = max_batch
+        self.overhead = overhead
+        self.prefill_chunk = prefill_chunk
+        self.policy = Policy(policy, max_run_len)
+        reprog = program_cost(reprogram_program(self.lm))
+        if srpg:
+            self.reprog_s = float(reprog.cycles) * CYCLE_S
+        else:
+            self.reprog_s = float(reprog.cycles * self.n_layers) * CYCLE_S
+        block = min(128, max(ctx, 1))
+        n_blocks = -(-ctx // block)
+        self.blocks = []
+        for bi in range(n_blocks):
+            this_block = ctx - bi * block if bi + 1 == n_blocks else block
+            kvv = max(bi * block + this_block // 2, 1)
+            c = program_cost(prefill_program(model, targets, self.lm, this_block, kvv))
+            self.blocks.append((this_block, float(c.cycles) * CYCLE_S))
+        self.lcm = LayerCostModel(model, targets, self.lm)
+        self.resident = None
+        self.now = 0.0
+        self.waiting = []
+        self.batch = []
+        self.jobs = []
+        self.prefill_turn = False
+        self.finished = []
+        self.swaps = 0
+        self.hits = 0
+        self.gaps_ms = []
+        self.per_adapter = {}
+
+    def submit(self, req):
+        pos = 0
+        while pos < len(self.waiting) and self.waiting[pos].arrival <= req.arrival:
+            pos += 1
+        self.waiting.insert(pos, req)
+
+    def active_adapter(self):
+        if self.batch:
+            return self.batch[0].req.adapter
+        if self.jobs:
+            return self.jobs[0].req.adapter
+        return None
+
+    def chunk_schedule(self, inp, chunk):
+        nl = float(self.n_layers)
+        if inp == self.ctx:
+            block_tokens = max(self.blocks[0][0], 1) if self.blocks else 1
+            per_chunk = max(-(-chunk // block_tokens), 1)
+            cum = []
+            k = 0
+            while k < len(self.blocks):
+                k1 = min(k + per_chunk, len(self.blocks))
+                # plain left-to-right sum: mirrors Rust's iterator Sum order
+                s = 0.0
+                for _t, sec in self.blocks[:k1]:
+                    s += sec
+                cum.append(s * nl)
+                k = k1
+            return cum
+        per_tok = 0.0
+        for _t, sec in self.blocks:
+            per_tok += sec
+        per_tok = per_tok / float(self.ctx)
+        n_chunks = max(-(-inp // chunk), 1)
+        return [(per_tok * float(min(j * chunk, inp))) * nl
+                for j in range(1, n_chunks + 1)]
+
+    def monolithic_prefill_s(self, inp):
+        if inp == self.ctx:
+            s = 0.0
+            for _t, sec in self.blocks:
+                s += sec
+        else:
+            tot = 0.0
+            for _t, sec in self.blocks:
+                tot += sec
+            s = tot / float(self.ctx) * float(inp)
+        return s * float(self.n_layers)
+
+    def admit(self, req):
+        swap = self.resident != req.adapter
+        self.resident = req.adapter
+        if swap:
+            self.swaps += 1
+        else:
+            self.hits += 1
+        pa = self.per_adapter.setdefault(req.adapter, dict(served=0, swaps=0, hits=0))
+        pa["swaps" if swap else "hits"] += 1
+        if self.prefill_chunk is None:
+            start = self.now
+            ttft = (self.reprog_s if swap else 0.0)
+            ttft += self.monolithic_prefill_s(req.inp)
+            for s in self.batch:
+                s.stall_s += ttft
+                s.pending_stall_s += ttft
+            self.now += ttft
+            self.batch.append(Slot(req, 0, start, swap, ttft))
+        else:
+            cum = self.chunk_schedule(req.inp, self.prefill_chunk)
+            self.jobs.append(Job(req, swap, self.now,
+                                 self.reprog_s if swap else 0.0, cum))
+        return True
+
+    def chunk_step(self):
+        job = self.jobs[0]
+        old = self.now
+        end = job.advance()
+        new_now = end if end > old else old
+        stall = new_now - old
+        self.now = new_now
+        for s in self.batch:
+            s.stall_s += stall
+            s.pending_stall_s += stall
+        for j in self.jobs[1:]:
+            j.external_s += stall
+        if job.is_done():
+            self.jobs.pop(0)
+            self.batch.append(job.to_slot())
+
+    def decode_step(self):
+        per = [self.lcm.eval_cycles(s.req.inp + s.generated) for s in self.batch]
+        sc = step_cycles(per, self.n_layers, self.overhead)
+        step_s = float(sc) * CYCLE_S
+        self.now += step_s
+        for j in self.jobs:
+            j.external_s += step_s
+        done = []
+        for s in self.batch:
+            s.decode_s += step_s
+            s.generated += 1
+            self.gaps_ms.append((step_s + s.pending_stall_s) * 1e3)
+            s.pending_stall_s = 0.0
+            if s.generated >= s.req.out:
+                done.append(s)
+        for s in done:
+            self.batch.remove(s)
+            self.retire(s)
+
+    def retire(self, s):
+        itl_ms = s.decode_s / float(s.req.out) * 1e3
+        self.per_adapter[s.req.adapter]["served"] += 1
+        self.finished.append(dict(
+            id=s.req.id, adapter=s.req.adapter, swap=s.swap,
+            arrival=s.req.arrival, start=s.start_s,
+            queue=s.start_s - s.req.arrival, ttft=s.ttft_s, itl_ms=itl_ms,
+            stall=s.stall_s, total=s.ttft_s + s.stall_s + s.decode_s,
+            out=s.req.out))
+
+    def step(self):
+        cap = len(self.batch) + len(self.jobs) < self.max_batch
+        if cap and self.waiting:
+            arrived = 0
+            while arrived < len(self.waiting) and self.waiting[arrived].arrival <= self.now:
+                arrived += 1
+            if arrived > 0:
+                pick = self.policy.pick(self.waiting[:arrived],
+                                        self.active_adapter(), self.resident)
+                if pick is None and not self.batch and not self.jobs \
+                        and arrived == len(self.waiting):
+                    pick = 0
+                if pick is not None:
+                    req = self.waiting.pop(pick)
+                    self.admit(req)
+                    return "admitted"
+        if self.jobs and (self.prefill_turn or not self.batch):
+            self.prefill_turn = False
+            self.chunk_step()
+            return "chunk"
+        if self.batch:
+            self.prefill_turn = True
+            self.decode_step()
+            return "decoded"
+        nxt = None
+        for r in self.waiting:
+            if r.arrival > self.now:
+                nxt = r.arrival
+                break
+        if nxt is not None:
+            self.now = nxt
+            return "advanced"
+        if self.waiting:
+            raise RuntimeError("deadlock")
+        return "idle"
+
+    def drain(self):
+        while self.step() != "idle":
+            pass
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# proxy baseline + checks
+# ---------------------------------------------------------------------------
+
+def proxies_13b():
+    targets = ["Q", "V"]
+    lm = map_model("13b", targets)
+    d2048 = program_cost(decode_program("13b", targets, lm, 2048))
+    d0 = program_cost(decode_program("13b", targets, lm, 0))
+    pre = program_cost(prefill_program("13b", targets, lm, 128, 1024))
+    rep = program_cost(reprogram_program(lm))
+    return {
+        "decode0_cycles": d0.cycles,
+        "decode2048_cycles": d2048.cycles,
+        "decode2048_dmac_macs": d2048.dmac_macs,
+        "decode2048_net_byte_hops": d2048.net_byte_hops,
+        "decode2048_rram_passes": d2048.rram_passes,
+        "decode2048_softmax_elems": d2048.softmax_elems,
+        "decode2048_sram_passes": d2048.sram_passes,
+        "prefill128_kv1024_cycles": pre.cycles,
+        "reprogram_cycles": rep.cycles,
+    }, lm
+
+
+def main():
+    check = "--check" in sys.argv
+
+    px, lm13 = proxies_13b()
+    print(f"# 13B mapping: {lm13.n_cts} CTs/layer")
+    print("# instruction-count proxies (13B Q+V 2048 point):")
+    for k in sorted(px):
+        print(f"{k} {px[k]}")
+
+    if not check:
+        return
+
+    failures = []
+
+    def gate(name, cond, detail=""):
+        print(f"  {'PASS' if cond else 'FAIL'}  {name} {detail}")
+        if not cond:
+            failures.append(name)
+
+    # ---- engine: batch-1 bit-match + batch-4 shape -----------------------
+    print("\n== Simulator::run_batched checks (1B Q+V 1024) ==")
+    b1 = run_batched("1b", ["Q", "V"], 1024, batch=1)
+    b1b = run_batched("1b", ["Q", "V"], 1024, batch=1)
+    gate("batch1 deterministic", b1 == b1b)
+    b4 = run_batched("1b", ["Q", "V"], 1024, batch=4)
+    gate("b4 throughput > 1.1x b1", b4["throughput"] > b1["throughput"] * 1.1,
+         f"({b4['throughput']:.1f} vs {b1['throughput']:.1f})")
+    gate("b4 throughput < 4x b1", b4["throughput"] < b1["throughput"] * 4.0)
+    gate("b4 itl in (1, 2)x b1",
+         b1["itl_ms"] < b4["itl_ms"] < 2.0 * b1["itl_ms"],
+         f"({b4['itl_ms']:.3f} vs {b1['itl_ms']:.3f})")
+    gate("b4 power > b1", b4["power"] > b1["power"],
+         f"({b4['power']:.2f} vs {b1['power']:.2f})")
+    gate("b4 efficiency > b1", b4["eff"] > b1["eff"],
+         f"({b4['eff']:.1f} vs {b1['eff']:.1f})")
+    gate("b4 energy > b1", b4["energy"] > b1["energy"])
+    for mdl in ("1b", "8b", "13b"):
+        for ctx in (1024, 2048):
+            s1 = run_batched(mdl, ["Q", "V"], ctx, batch=1)
+            s4 = run_batched(mdl, ["Q", "V"], ctx, batch=4)
+            gate(f"{mdl}/{ctx} b4 tput above b1",
+                 s4["throughput"] > s1["throughput"],
+                 f"({s4['throughput']:.1f} vs {s1['throughput']:.1f})")
+
+    # ---- serving: chunk >= prompt bit-matches monolithic ------------------
+    print("\n== chunked prefill property checks (1B Q+V) ==")
+
+    def run_server(ctx, batch, policy, chunk, trace, max_run_len=None):
+        s = Server("1b", ["Q", "V"], ctx, max_batch=batch, policy=policy,
+                   prefill_chunk=chunk, max_run_len=max_run_len)
+        for r in trace:
+            s.submit(Req(*r))
+        res = s.drain()
+        return s, res
+
+    trace = [(0, 0, 256, 16, 0.0), (1, 1, 256, 16, 0.0), (2, 0, 128, 8, 0.0),
+             (3, 1, 320, 12, 0.0)]
+    _, mono = run_server(256, 1, "fcfs", None, trace)
+    _, big = run_server(256, 1, "fcfs", 4096, trace)
+    gate("chunk>=prompt bit-matches monolithic (batch1)",
+         all(a["ttft"] == b["ttft"] and a["total"] == b["total"]
+             and a["start"] == b["start"] for a, b in zip(mono, big)))
+    _, small = run_server(256, 1, "fcfs", 128, trace)
+    gate("batch1 chunked bit-matches monolithic",
+         all(a["ttft"] == b["ttft"] and a["total"] == b["total"]
+             and a["start"] == b["start"] for a, b in zip(mono, small)))
+    _, c64 = run_server(256, 1, "fcfs", 64, trace)
+    gate("prefill conserved across chunk sizes",
+         all(a["ttft"] == b["ttft"] for a, b in zip(small, c64)))
+
+    # ---- stall monotonicity ----------------------------------------------
+    probe_s, probe = run_server(512, 1, "fcfs", None, [(0, 0, 512, 2, 0.0)])
+    t_admit = probe[0]["ttft"] * 1.001  # B arrives just after A's prefill
+    stalls = []
+    for chunk in (None, 512, 256, 128):
+        s, res = run_server(512, 2, "fcfs", chunk,
+                            [(0, 0, 512, 2, 0.0), (1, 0, 512, 2, t_admit)])
+        a = next(r for r in res if r["id"] == 0)
+        stalls.append(a["stall"])
+    print(f"  stalls by chunk [mono,512,256,128]: {[f'{x:.4f}' for x in stalls]}")
+    gate("stall monotone non-increasing as chunk shrinks",
+         all(stalls[i] >= stalls[i + 1] - 1e-15 for i in range(len(stalls) - 1)))
+    gate("chunk 128 strictly reduces stall", stalls[-1] < stalls[0] * 0.999)
+
+    # ---- serving_policies bench scenario ---------------------------------
+    # Prefill-heavy mix (512-token prompts, 4-token outputs): the regime
+    # the ISSUE motivates — admissions dominate, every monolithic prefill
+    # stalls the whole in-flight batch. Decode-heavy mixes trade the other
+    # way (continuous admission keeps more slots exposed); see DESIGN.md.
+    print("\n== serving_policies chunked-vs-monolithic gate (the bench trace) ==")
+    n_adapters, n_requests = 4, 24
+    bench_trace = [(i, i % n_adapters, 512, 4, 0.0) for i in range(n_requests)]
+    sm, rm = run_server(512, 4, "affinity", None, bench_trace)
+    sc_, rc = run_server(512, 4, "affinity", 128, bench_trace)
+    mean_stall_m = sum(r["stall"] for r in rm) / len(rm)
+    mean_stall_c = sum(r["stall"] for r in rc) / len(rc)
+    p95 = lambda xs: sorted(xs)[min(int(round((len(xs) - 1) * 0.95)), len(xs) - 1)]
+    p95_itl_m = p95(sm.gaps_ms)
+    p95_itl_c = p95(sc_.gaps_ms)
+    print(f"  mean stall mono {mean_stall_m:.4f} s vs chunked {mean_stall_c:.4f} s")
+    print(f"  p95 ITL   mono {p95_itl_m:.2f} ms vs chunked {p95_itl_c:.2f} ms")
+    gate("chunked mean stall strictly below monolithic",
+         mean_stall_c < mean_stall_m)
+    gate("chunked p95 ITL strictly below monolithic", p95_itl_c < p95_itl_m)
+    gate("same tokens served", sum(r["out"] for r in rm) == sum(r["out"] for r in rc))
+    thr_m = sum(r["out"] + 512 for r in rm) / sm.now
+    thr_c = sum(r["out"] + 512 for r in rc) / sc_.now
+    print(f"  tok/s mono {thr_m:.1f} vs chunked {thr_c:.1f}")
+    gate("chunked throughput within 10% of monolithic", thr_c > thr_m * 0.9)
+
+    # ---- fuzz invariants --------------------------------------------------
+    print("\n== randomized scheduling invariants ==")
+    rng_state = [0x9E3779B97F4A7C15]
+
+    def rnd(n):
+        rng_state[0] = (rng_state[0] * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        return (rng_state[0] >> 33) % n
+
+    ok_all = True
+    for policy in ("fcfs", "affinity", "sjf"):
+        for batch in (1, 4):
+            for chunk in (None, 128):
+                trace = []
+                t = 0.0
+                for i in range(12):
+                    t += rnd(100) / 100.0
+                    trace.append((i, rnd(3), 64 + rnd(256), 4 + rnd(20), t))
+                s, res = run_server(256, batch, policy, chunk, trace)
+                ok = len(res) == 12
+                ok &= all(r["start"] >= r["arrival"] for r in res)
+                ok &= all(r["queue"] >= 0 and r["stall"] >= -1e-15 for r in res)
+                ok &= all(r["total"] >= r["ttft"] for r in res)
+                for a, pa in s.per_adapter.items():
+                    ok &= pa["swaps"] + pa["hits"] >= pa["served"] > 0 or pa["served"] == 0
+                # determinism
+                s2, res2 = run_server(256, batch, policy, chunk, trace)
+                ok &= res == res2 and s.now == s2.now
+                ok_all &= ok
+                if not ok:
+                    print(f"  FAIL {policy}/b{batch}/chunk{chunk}")
+    gate("fuzz invariants (3 policies x 2 batch x 2 chunk)", ok_all)
+
+    # ---- affinity starvation bound ---------------------------------------
+    print("\n== affinity max_run_len starvation bound ==")
+    star_trace = [(i, 0, 256, 8, 0.0) for i in range(8)] + [(8, 1, 256, 8, 0.0)]
+    _, unbounded = run_server(256, 1, "affinity", None, star_trace)
+    _, bounded = run_server(256, 1, "affinity", None, star_trace, max_run_len=2)
+    pos_u = [r["id"] for r in unbounded].index(8)
+    pos_b = [r["id"] for r in bounded].index(8)
+    q_u = next(r for r in unbounded if r["id"] == 8)["queue"]
+    q_b = next(r for r in bounded if r["id"] == 8)["queue"]
+    print(f"  minority served at position {pos_u} (queue {q_u:.2f} s) unbounded, "
+          f"{pos_b} (queue {q_b:.2f} s) bounded")
+    gate("bounded affinity serves minority earlier", pos_b < pos_u and q_b < q_u)
+    gate("unbounded affinity starves to the end", pos_u == len(star_trace) - 1)
+    gate("bounded run length respected", pos_b <= 2)
+
+    print()
+    if failures:
+        print(f"{len(failures)} FAILURES: {failures}")
+        sys.exit(1)
+    print("all mirror checks passed")
+
+
+if __name__ == "__main__":
+    main()

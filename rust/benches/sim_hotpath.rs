@@ -9,9 +9,11 @@
 //! The wall-clock numbers are machine-sensitive, so the regression gates
 //! CI relies on are the *instruction-count proxies*: deterministic u64
 //! cost counters of the 13B decode/prefill/reprogram programs, checked
-//! exactly against `benches/baselines/sim_proxy.txt`. On first run (no
-//! baseline yet) the file is written and should be committed; any later
-//! mismatch means the cost model changed and exits non-zero.
+//! exactly against the committed `benches/baselines/sim_proxy.txt`. On a
+//! local first run (no baseline) the file is written for blessing; under
+//! CI (`CI` env var set) a missing baseline FAILS instead of self-blessing
+//! so the exact-match gates actually bite. Any mismatch means the cost
+//! model changed and exits non-zero; re-bless deliberately.
 
 mod common;
 
@@ -165,6 +167,15 @@ fn main() {
                 }
             }
         }
+    } else if std::env::var_os("CI").is_some() {
+        // Under CI a missing baseline must FAIL, not self-bless: a silent
+        // rewrite would make the exact-match gates vacuously green.
+        eprintln!(
+            "proxy gate: {} missing under CI — run `cargo bench --bench \
+             sim_hotpath` locally and commit the blessed file",
+            baseline_path.display()
+        );
+        ok = false;
     } else {
         let mut text = String::from(
             "# Instruction-count proxy baseline (13B paper point).\n\

@@ -10,7 +10,7 @@
 mod common;
 
 use common::{check_expectations, finish, measure, report, Expect};
-use primal::metrics::{paper_grid, run_point, table2};
+use primal::metrics::{paper_grid, run_point, run_point_batched, table2};
 
 /// Paper Table II values: (model, lora, ctx) -> (tput, power, eff).
 const PAPER: &[(&str, &str, usize, f64, f64, f64)] = &[
@@ -91,5 +91,56 @@ fn main() {
     let p1 = reports.iter().find(|r| r.model == "Llama 3.2 1B").unwrap().avg_power_w;
     let p13 = reports.iter().find(|r| r.model == "Llama 2 13B").unwrap().avg_power_w;
     ok &= p13 / p1 < 12.9 / 2.0;
+
+    // ---- batched-decode Table II path ------------------------------------
+    // The batch column must be an extension, not a fork: run_batched(1)
+    // bit-matches the serial run() on every grid point (the paper
+    // numbers), and wherever batch 4 physically fits (KV rings hold 4
+    // slots per router — all 1B/8B points; 13B does not and is skipped
+    // loudly), it strictly raises aggregate throughput by filling the
+    // layer pipeline while per-step latency stays bounded.
+    let mut b4_reports = Vec::new();
+    for (cfg, serial) in grid.iter().zip(&reports) {
+        let b1 = run_point_batched(cfg, 1);
+        if b1.throughput_tps.to_bits() != serial.throughput_tps.to_bits()
+            || b1.avg_power_w.to_bits() != serial.avg_power_w.to_bits()
+            || b1.efficiency_tpj.to_bits() != serial.efficiency_tpj.to_bits()
+            || b1.total_cycles != serial.total_cycles
+        {
+            eprintln!(
+                "GATE: batch-1 report diverges from the serial path at {} {} {}",
+                serial.model, serial.lora_label, serial.input_tokens
+            );
+            ok = false;
+        }
+        let mut at4 = cfg.clone();
+        at4.serving.max_batch = 4;
+        if !at4.validate().is_empty() {
+            println!(
+                "batch 4 infeasible at {} {} {} (KV rings cannot hold 4 slots) — skipped",
+                serial.model, serial.lora_label, serial.input_tokens
+            );
+            continue;
+        }
+        let b4 = run_point_batched(cfg, 4);
+        if !(b4.throughput_tps > serial.throughput_tps) {
+            eprintln!(
+                "GATE: batch-4 throughput {:.1} not above batch-1 {:.1} at {} {} {}",
+                b4.throughput_tps,
+                serial.throughput_tps,
+                serial.model,
+                serial.lora_label,
+                serial.input_tokens
+            );
+            ok = false;
+        }
+        ok &= b4.batch == 4 && b4.itl_ms > serial.itl_ms && b4.itl_ms < serial.itl_ms * 2.0;
+        b4_reports.push(b4);
+    }
+    if b4_reports.is_empty() {
+        eprintln!("GATE: no grid point was feasible at batch 4");
+        ok = false;
+    }
+    println!("\n{}", table2(&b4_reports));
     finish(ok);
 }

@@ -52,6 +52,24 @@ pub struct ServingConfig {
     /// first: pipeline fill/drain control and NoC contention between the
     /// slots' activation streams. Zero-cost at batch 1 by construction.
     pub batch_overhead_cycles: u64,
+    /// Chunked prefill: split each admission's prefill into chunks of this
+    /// many prompt tokens (rounded up to the 128-token prefill block) and
+    /// interleave one batched decode step between chunks, so an admission
+    /// stalls in-flight slots only for a chunk's makespan instead of the
+    /// whole prompt. `None` keeps the paper's monolithic layer-sequential
+    /// admission (the backward-compatible default). A chunk at or above
+    /// the prompt length yields a single-chunk schedule that is
+    /// numerically identical to `None` whenever nothing interleaves
+    /// (batch 1, or an empty decode batch); with slots in flight the
+    /// event *ordering* may still differ — chunked admission is
+    /// zero-time, so a decode step can slip in before the chunk runs.
+    pub prefill_chunk: Option<usize>,
+    /// Starvation bound for `PolicyKind::AdapterAffinity`: after this many
+    /// consecutive same-adapter admissions while requests for a different
+    /// adapter are waiting, the policy forces a regroup (drains the batch
+    /// and switches to the deepest other backlog). `None` = unbounded
+    /// affinity runs (the original greedy behavior).
+    pub affinity_max_run_len: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -60,6 +78,8 @@ impl Default for ServingConfig {
             max_batch: 1,
             policy: PolicyKind::Fcfs,
             batch_overhead_cycles: 64,
+            prefill_chunk: None,
+            affinity_max_run_len: None,
         }
     }
 }
@@ -87,5 +107,7 @@ mod tests {
         let s = ServingConfig::default();
         assert_eq!(s.max_batch, 1);
         assert_eq!(s.policy, PolicyKind::Fcfs);
+        assert_eq!(s.prefill_chunk, None, "monolithic prefill by default");
+        assert_eq!(s.affinity_max_run_len, None);
     }
 }

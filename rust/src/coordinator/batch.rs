@@ -22,6 +22,125 @@
 use super::adapter::AdapterId;
 use super::server::Request;
 
+/// A chunked prefill in flight: the admission-side state machine that
+/// replaces the monolithic prefill event when
+/// `ServingConfig::prefill_chunk` is set.
+///
+/// The job carries a *cumulative* chunk schedule: `cum_prefill_s[j]` is
+/// the prefill compute after chunks `0..=j`, measured from the moment the
+/// job's own compute starts. Each chunk event sets the server clock
+/// *absolutely* to `start_s + external_s + (reprog_s + cum_prefill_s[j])`
+/// rather than accumulating per-chunk increments — float addition is not
+/// associative, and the absolute form makes the job's completion clock
+/// (and hence its TTFT and every downstream admission time) bit-identical
+/// to the monolithic admission path whenever no decode work interleaves
+/// (the last cumulative entry is computed with the exact monolithic
+/// prefill expression). `external_s` accounts simulated time that elapsed
+/// mid-job for reasons other than this job's own chunks: interleaved
+/// decode steps and, for queued jobs, the chunks of jobs ahead of them.
+#[derive(Debug, Clone)]
+pub struct PrefillJob {
+    pub req: Request,
+    /// Whether admission required an adapter swap.
+    pub swap: bool,
+    /// Simulated admission time (s); also the clock base of the absolute
+    /// chunk schedule (chunked admission itself advances no time).
+    pub start_s: f64,
+    /// SRPG reprogramming seconds paid before the first chunk (swap only).
+    reprog_s: f64,
+    /// Cumulative prefill seconds after each chunk; the last entry equals
+    /// the monolithic prefill expression bit-for-bit.
+    cum_prefill_s: Vec<f64>,
+    /// Chunks completed so far.
+    done: usize,
+    /// Simulated time that elapsed during the job from interleaved decode
+    /// steps and preceding jobs' chunks (folded into the TTFT).
+    external_s: f64,
+    /// Golden-model decode-step wall time, if functional mode ran.
+    pub golden_exec_ms: Option<f64>,
+}
+
+impl PrefillJob {
+    pub fn new(
+        req: Request,
+        swap: bool,
+        start_s: f64,
+        reprog_s: f64,
+        cum_prefill_s: Vec<f64>,
+        golden_exec_ms: Option<f64>,
+    ) -> Self {
+        debug_assert!(!cum_prefill_s.is_empty(), "chunk schedule cannot be empty");
+        Self {
+            req,
+            swap,
+            start_s,
+            reprog_s,
+            cum_prefill_s,
+            done: 0,
+            external_s: 0.0,
+            golden_exec_ms,
+        }
+    }
+
+    pub fn adapter(&self) -> AdapterId {
+        self.req.adapter
+    }
+
+    /// Total chunks in the schedule.
+    pub fn chunks(&self) -> usize {
+        self.cum_prefill_s.len()
+    }
+
+    /// Chunks completed so far.
+    pub fn chunks_done(&self) -> usize {
+        self.done
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done >= self.cum_prefill_s.len()
+    }
+
+    /// Run the next chunk; returns the absolute simulated clock at which
+    /// it completes.
+    pub fn advance(&mut self) -> f64 {
+        debug_assert!(!self.is_done(), "advancing a finished prefill job");
+        let end =
+            self.start_s + self.external_s + (self.reprog_s + self.cum_prefill_s[self.done]);
+        self.done += 1;
+        end
+    }
+
+    /// Account simulated time that passed for reasons other than this
+    /// job's own chunks (decode steps, preceding jobs' chunks).
+    pub fn note_external(&mut self, dt: f64) {
+        self.external_s += dt;
+    }
+
+    /// Reprogram + prefill + interleaved-wait time from admission to the
+    /// first token (the request's TTFT).
+    pub fn ttft_s(&self) -> f64 {
+        (self.reprog_s + *self.cum_prefill_s.last().expect("non-empty schedule"))
+            + self.external_s
+    }
+
+    /// Convert the finished job into a decode slot.
+    pub fn into_slot(self) -> Slot {
+        debug_assert!(self.is_done(), "job must finish prefill before decoding");
+        let ttft_s = self.ttft_s();
+        Slot {
+            req: self.req,
+            generated: 0,
+            start_s: self.start_s,
+            swap: self.swap,
+            ttft_s,
+            decode_s: 0.0,
+            stall_s: 0.0,
+            pending_stall_s: 0.0,
+            golden_exec_ms: self.golden_exec_ms,
+        }
+    }
+}
+
 /// One in-flight request occupying a decode slot.
 #[derive(Debug, Clone)]
 pub struct Slot {
@@ -119,17 +238,15 @@ impl DecodeBatch {
 
     /// Cycles for one batched decode step given each slot's *per-layer*
     /// cost: pipeline makespan plus the explicit batch overhead. Exactly
-    /// `n_layers * c` when a single slot is active.
+    /// `n_layers * c` when a single slot is active. Thin façade over
+    /// [`crate::sim::cost::pipelined_step_cycles`], the single source of
+    /// truth this model shares with `Simulator::run_batched`.
     pub fn step_cycles(
         per_layer: &[u64],
         n_layers: usize,
         batch_overhead_cycles: u64,
     ) -> u64 {
-        debug_assert!(!per_layer.is_empty());
-        let sum: u64 = per_layer.iter().sum();
-        let max: u64 = per_layer.iter().copied().max().unwrap_or(0);
-        let b = per_layer.len() as u64;
-        sum + (n_layers as u64 - 1) * max + (b - 1) * batch_overhead_cycles
+        crate::sim::cost::pipelined_step_cycles(per_layer, n_layers, batch_overhead_cycles)
     }
 }
 
@@ -158,6 +275,46 @@ mod tests {
     fn heterogeneous_slots_bound_by_max() {
         let cycles = DecodeBatch::step_cycles(&[100, 300, 200], 8, 0);
         assert_eq!(cycles, 600 + 7 * 300);
+    }
+
+    #[test]
+    fn prefill_job_walks_its_schedule() {
+        let req = Request::new(7, AdapterId(2), 256, 4);
+        let mut j = PrefillJob::new(req, true, 10.0, 0.5, vec![1.0, 2.0, 3.5], None);
+        assert_eq!(j.chunks(), 3);
+        assert_eq!(j.chunks_done(), 0);
+        assert!(!j.is_done());
+        assert_eq!(j.advance(), 10.0 + 0.0 + (0.5 + 1.0));
+        j.note_external(0.25); // a decode step ran in between
+        assert_eq!(j.advance(), 10.0 + 0.25 + (0.5 + 2.0));
+        assert_eq!(j.advance(), 10.0 + 0.25 + (0.5 + 3.5));
+        assert!(j.is_done());
+        let ttft = j.ttft_s();
+        assert_eq!(ttft, (0.5 + 3.5) + 0.25);
+        let slot = j.into_slot();
+        assert_eq!(slot.req.id, 7);
+        assert!(slot.swap);
+        assert_eq!(slot.ttft_s, ttft);
+        assert_eq!(slot.start_s, 10.0);
+        assert_eq!(slot.generated, 0);
+        assert_eq!(slot.stall_s, 0.0);
+    }
+
+    #[test]
+    fn undisturbed_job_ttft_is_the_monolithic_expression() {
+        // With no external time, the TTFT must be bit-identical to the
+        // monolithic `reprog + prefill` expression (x + 0.0 == x).
+        let reprog = 0.375f64;
+        let prefill = 0.1f64; // deliberately not exactly representable
+        let j = PrefillJob::new(
+            Request::new(0, AdapterId(1), 128, 1),
+            true,
+            3.0,
+            reprog,
+            vec![0.04, prefill],
+            None,
+        );
+        assert_eq!(j.ttft_s().to_bits(), (reprog + prefill).to_bits());
     }
 
     #[test]

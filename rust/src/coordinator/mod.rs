@@ -5,10 +5,13 @@
 //! manager that tracks which task's adapters are resident in the
 //! SRAM-DCIM macros (swaps trigger SRPG reprogramming), batched decode
 //! with per-slot KV positions through the layer pipeline (the `batch`
-//! module), and pluggable admission scheduling (the `scheduler` module:
-//! [`Fcfs`], [`AdapterAffinity`], [`ShortestJobFirst`]). Timing comes
-//! from the simulator; optionally the PJRT golden runtime executes the
-//! functional model on the same schedule (`FunctionalMode::Golden`).
+//! module), chunked prefill interleaved with decode steps
+//! (`ServingConfig::prefill_chunk`, the [`PrefillJob`] state machine),
+//! and pluggable admission scheduling (the `scheduler` module: [`Fcfs`],
+//! [`AdapterAffinity`], [`ShortestJobFirst`], each consulted with a
+//! [`SchedContext`]). Timing comes from the simulator; optionally the
+//! PJRT golden runtime executes the functional model on the same schedule
+//! (`FunctionalMode::Golden`).
 //!
 //! Construction goes through [`ServerBuilder`]; the paper's serial
 //! batch-1 FCFS model is `ServerBuilder::default().max_batch(1)` (also
@@ -26,8 +29,10 @@ mod scheduler;
 mod server;
 
 pub use adapter::{AdapterCounters, AdapterId, AdapterManager, SwapOutcome};
-pub use batch::{DecodeBatch, Slot};
-pub use scheduler::{policy_of, AdapterAffinity, Fcfs, SchedulePolicy, ShortestJobFirst};
+pub use batch::{DecodeBatch, PrefillJob, Slot};
+pub use scheduler::{
+    policy_of, AdapterAffinity, Fcfs, SchedContext, SchedulePolicy, ShortestJobFirst,
+};
 pub use server::{
     AdapterUsage, FunctionalMode, LatencyStats, Request, RequestResult, Server,
     ServerBuilder, ServerConfig, ServerStats, StepOutcome, TokenEvent,

@@ -1,39 +1,58 @@
 //! Pluggable admission scheduling for the event-driven server.
 //!
 //! The server asks its policy which waiting request to admit whenever a
-//! decode slot is free. The policy sees the *arrived* waiting list in
-//! arrival order plus the adapter context: `batch_adapter` is the adapter
-//! of the currently decoding batch (slots always share one adapter — the
-//! SRAM-DCIM macros hold a single task's LoRA matrices), and `resident`
-//! is the adapter currently programmed into the macros.
+//! slot is free (counting both decoding slots and chunked prefills in
+//! flight). The policy sees the *arrived* waiting list in arrival order
+//! plus a [`SchedContext`]: `active_adapter` is the adapter bound to the
+//! in-flight work — the decode batch's adapter, or, when the batch is
+//! empty, the adapter of the prefill job(s) in flight (slots always share
+//! one adapter — the SRAM-DCIM macros hold a single task's LoRA
+//! matrices); `resident` is the adapter currently programmed into the
+//! macros. With chunked prefill enabled the server consults the policy
+//! *between chunks* too, so `prefill_in_flight` lets a policy admit a
+//! follow-up request whose prefill queues behind the current one instead
+//! of waiting for it to finish.
 //!
 //! Returning `None` holds admission (e.g. the head of the queue needs a
 //! different adapter than the in-flight batch); the server then runs a
-//! decode step instead and asks again at the next step boundary. When the
-//! batch is empty and no further arrivals are pending, the server
-//! force-admits the earliest waiting request so `drain()` always
-//! terminates, whatever the policy does.
+//! prefill chunk or a decode step instead and asks again at the next
+//! event boundary. When nothing is in flight and no further arrivals are
+//! pending, the server force-admits the earliest waiting request so
+//! `drain()` always terminates, whatever the policy does.
 
 use super::adapter::AdapterId;
 use super::server::Request;
-use crate::config::PolicyKind;
+use crate::config::{PolicyKind, ServingConfig};
 use std::collections::BTreeMap;
+
+/// Admission context the server hands the policy at each decision point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedContext {
+    /// Adapter bound to the in-flight work (decode batch, or prefill jobs
+    /// when the batch is empty). `Some` means only matching requests are
+    /// admissible right now.
+    pub active_adapter: Option<AdapterId>,
+    /// Adapter currently programmed into the SRAM-DCIM macros (admitting
+    /// a match skips SRPG reprogramming even when nothing is in flight).
+    pub resident: Option<AdapterId>,
+    /// Occupied capacity: decoding slots plus prefills in flight.
+    pub in_flight: usize,
+    /// Whether a chunked prefill is currently in flight: an admission now
+    /// queues its prefill behind the running one (chunk-aware admission)
+    /// rather than stalling the decode batch for a whole prompt.
+    pub prefill_in_flight: bool,
+}
 
 /// Admission policy: picks the next request to admit into the batch.
 pub trait SchedulePolicy {
     fn name(&self) -> &'static str;
 
     /// Pick an index into `waiting` (all arrived, arrival-ordered) to
-    /// admit next, or `None` to hold admission until the batch drains
-    /// further. Implementations must only return indices of requests
-    /// whose adapter matches `batch_adapter` when it is `Some` (the
-    /// hardware cannot decode two tasks' LoRA sets at once).
-    fn pick(
-        &mut self,
-        waiting: &[Request],
-        batch_adapter: Option<AdapterId>,
-        resident: Option<AdapterId>,
-    ) -> Option<usize>;
+    /// admit next, or `None` to hold admission until the in-flight work
+    /// drains further. Implementations must only return indices of
+    /// requests whose adapter matches `ctx.active_adapter` when it is
+    /// `Some` (the hardware cannot decode two tasks' LoRA sets at once).
+    fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize>;
 }
 
 /// Strict first-come-first-served: only ever considers the head of the
@@ -48,14 +67,9 @@ impl SchedulePolicy for Fcfs {
         "fcfs"
     }
 
-    fn pick(
-        &mut self,
-        waiting: &[Request],
-        batch_adapter: Option<AdapterId>,
-        _resident: Option<AdapterId>,
-    ) -> Option<usize> {
+    fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         let head = waiting.first()?;
-        match batch_adapter {
+        match ctx.active_adapter {
             None => Some(0),
             Some(a) if head.adapter == a => Some(0),
             Some(_) => None,
@@ -68,44 +82,105 @@ impl SchedulePolicy for Fcfs {
 /// reprogramming pass is amortized over a whole same-task burst. When a
 /// swap is unavoidable, start the adapter with the most waiting requests
 /// (earliest arrival breaks ties), which greedily minimizes future swaps.
+///
+/// `max_run_len` bounds starvation: after that many consecutive
+/// same-adapter admissions while a different adapter waits, the policy
+/// stops extending the run (holds until the in-flight work drains, then
+/// regroups on the deepest *other* backlog), so a minority adapter's
+/// queue delay is bounded by `max_run_len` service times plus one drain
+/// instead of the whole majority backlog.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct AdapterAffinity;
+pub struct AdapterAffinity {
+    /// Maximum consecutive same-adapter admissions while another adapter
+    /// waits; `None` = unbounded (the original greedy behavior).
+    pub max_run_len: Option<usize>,
+    run_adapter: Option<AdapterId>,
+    run_len: usize,
+}
+
+impl AdapterAffinity {
+    /// Unbounded affinity (equivalent to `AdapterAffinity::default()`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Affinity with a starvation bound of `n` consecutive admissions.
+    pub fn with_max_run_len(n: usize) -> Self {
+        Self { max_run_len: Some(n.max(1)), ..Self::default() }
+    }
+
+    /// Record an admission in the run counters and pass the pick through.
+    fn note(&mut self, waiting: &[Request], pick: Option<usize>) -> Option<usize> {
+        if let Some(i) = pick {
+            let a = waiting[i].adapter;
+            if self.run_adapter == Some(a) {
+                self.run_len += 1;
+            } else {
+                self.run_adapter = Some(a);
+                self.run_len = 1;
+            }
+        }
+        pick
+    }
+}
+
+/// First index of the adapter with the deepest backlog (ties broken by
+/// earliest arrival), optionally excluding one adapter.
+fn deepest_backlog(waiting: &[Request], exclude: Option<AdapterId>) -> Option<usize> {
+    let mut groups: BTreeMap<AdapterId, (usize, usize)> = BTreeMap::new();
+    for (i, r) in waiting.iter().enumerate() {
+        if Some(r.adapter) == exclude {
+            continue;
+        }
+        let e = groups.entry(r.adapter).or_insert((0, i));
+        e.0 += 1;
+    }
+    groups
+        .values()
+        .copied()
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
+        .map(|(_, first)| first)
+}
 
 impl SchedulePolicy for AdapterAffinity {
     fn name(&self) -> &'static str {
         "adapter-affinity"
     }
 
-    fn pick(
-        &mut self,
-        waiting: &[Request],
-        batch_adapter: Option<AdapterId>,
-        resident: Option<AdapterId>,
-    ) -> Option<usize> {
+    fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         if waiting.is_empty() {
             return None;
         }
-        if let Some(a) = batch_adapter.or(resident) {
-            if let Some(i) = waiting.iter().position(|r| r.adapter == a) {
-                return Some(i);
+        let anchor = ctx.active_adapter.or(ctx.resident);
+        // Starvation bound: once the run is exhausted and someone else is
+        // waiting, refuse to extend it.
+        if let (Some(limit), Some(a)) = (self.max_run_len, anchor) {
+            if self.run_adapter == Some(a)
+                && self.run_len >= limit
+                && waiting.iter().any(|r| r.adapter != a)
+            {
+                if ctx.active_adapter.is_some() {
+                    // Drain the in-flight same-adapter work, then regroup.
+                    return None;
+                }
+                let pick = deepest_backlog(waiting, Some(a));
+                return self.note(waiting, pick);
             }
-            if batch_adapter.is_some() {
-                // Nothing matches the in-flight batch: drain, then regroup.
+        }
+        if let Some(a) = anchor {
+            if let Some(i) = waiting.iter().position(|r| r.adapter == a) {
+                return self.note(waiting, Some(i));
+            }
+            if ctx.active_adapter.is_some() {
+                // Nothing matches the in-flight work: drain, then regroup.
                 return None;
             }
         }
-        // Batch empty and residency useless: a swap is unavoidable. Pick
-        // the adapter with the deepest backlog (ties: earliest arrival).
-        let mut groups: BTreeMap<AdapterId, (usize, usize)> = BTreeMap::new();
-        for (i, r) in waiting.iter().enumerate() {
-            let e = groups.entry(r.adapter).or_insert((0, i));
-            e.0 += 1;
-        }
-        groups
-            .values()
-            .copied()
-            .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
-            .map(|(_, first)| first)
+        // Nothing in flight and residency useless: a swap is unavoidable.
+        // Pick the adapter with the deepest backlog (ties: earliest
+        // arrival).
+        let pick = deepest_backlog(waiting, None);
+        self.note(waiting, pick)
     }
 }
 
@@ -120,15 +195,10 @@ impl SchedulePolicy for ShortestJobFirst {
         "shortest-job-first"
     }
 
-    fn pick(
-        &mut self,
-        waiting: &[Request],
-        batch_adapter: Option<AdapterId>,
-        _resident: Option<AdapterId>,
-    ) -> Option<usize> {
+    fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, r) in waiting.iter().enumerate() {
-            if let Some(a) = batch_adapter {
+            if let Some(a) = ctx.active_adapter {
                 if r.adapter != a {
                     continue;
                 }
@@ -148,11 +218,15 @@ impl SchedulePolicy for ShortestJobFirst {
     }
 }
 
-/// Instantiate the policy object for a config-level selector.
-pub fn policy_of(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
+/// Instantiate the policy object for a config-level selector, applying
+/// the serving knobs that parameterize it (`affinity_max_run_len`).
+pub fn policy_of(kind: PolicyKind, serving: &ServingConfig) -> Box<dyn SchedulePolicy> {
     match kind {
         PolicyKind::Fcfs => Box::new(Fcfs),
-        PolicyKind::AdapterAffinity => Box::new(AdapterAffinity),
+        PolicyKind::AdapterAffinity => Box::new(AdapterAffinity {
+            max_run_len: serving.affinity_max_run_len,
+            ..AdapterAffinity::default()
+        }),
         PolicyKind::ShortestJobFirst => Box::new(ShortestJobFirst),
     }
 }
@@ -165,45 +239,82 @@ mod tests {
         Request::new(id, AdapterId(adapter), 128, out)
     }
 
+    fn ctx(active: Option<u32>, resident: Option<u32>) -> SchedContext {
+        SchedContext {
+            active_adapter: active.map(AdapterId),
+            resident: resident.map(AdapterId),
+            in_flight: usize::from(active.is_some()),
+            prefill_in_flight: false,
+        }
+    }
+
     #[test]
     fn fcfs_head_only() {
         let mut p = Fcfs;
         let w = [req(0, 1, 8), req(1, 2, 8)];
-        assert_eq!(p.pick(&w, None, None), Some(0));
-        assert_eq!(p.pick(&w, Some(AdapterId(1)), None), Some(0));
-        assert_eq!(p.pick(&w, Some(AdapterId(2)), None), None);
-        assert_eq!(p.pick(&[], None, None), None);
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(0));
+        assert_eq!(p.pick(&w, &ctx(Some(1), None)), Some(0));
+        assert_eq!(p.pick(&w, &ctx(Some(2), None)), None);
+        assert_eq!(p.pick(&[], &ctx(None, None)), None);
     }
 
     #[test]
     fn affinity_prefers_matching_adapter() {
-        let mut p = AdapterAffinity;
+        let mut p = AdapterAffinity::default();
         let w = [req(0, 1, 8), req(1, 2, 8), req(2, 2, 8)];
         // batch on adapter 2: skip the head, pick the first match
-        assert_eq!(p.pick(&w, Some(AdapterId(2)), None), Some(1));
-        // residency on 2 with an empty batch behaves the same
-        assert_eq!(p.pick(&w, None, Some(AdapterId(2))), Some(1));
+        assert_eq!(p.pick(&w, &ctx(Some(2), None)), Some(1));
+        // residency on 2 with nothing in flight behaves the same
+        assert_eq!(p.pick(&w, &ctx(None, Some(2))), Some(1));
         // batch on adapter 3: nothing matches -> hold
-        assert_eq!(p.pick(&w, Some(AdapterId(3)), None), None);
+        assert_eq!(p.pick(&w, &ctx(Some(3), None)), None);
         // cold start: adapter 2 has the deeper backlog
-        assert_eq!(p.pick(&w, None, None), Some(1));
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(1));
     }
 
     #[test]
     fn affinity_backlog_tie_breaks_by_arrival() {
-        let mut p = AdapterAffinity;
+        let mut p = AdapterAffinity::default();
         let w = [req(0, 5, 8), req(1, 4, 8)];
-        assert_eq!(p.pick(&w, None, None), Some(0));
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(0));
+    }
+
+    #[test]
+    fn affinity_run_bound_forces_regroup() {
+        let mut p = AdapterAffinity::with_max_run_len(2);
+        let w = [req(0, 1, 8), req(1, 1, 8), req(2, 2, 8), req(3, 1, 8)];
+        // Two same-adapter admissions are fine...
+        assert_eq!(p.pick(&w, &ctx(None, Some(1))), Some(0));
+        assert_eq!(p.pick(&w[1..], &ctx(Some(1), None)), Some(0));
+        // ...the third is refused while adapter 2 waits and work is in
+        // flight, then regroups on the other backlog once drained.
+        assert_eq!(p.pick(&w[2..], &ctx(Some(1), None)), None);
+        assert_eq!(p.pick(&w[2..], &ctx(None, Some(1))), Some(0)); // -> adapter 2
+        // With nobody else waiting the run may continue unboundedly.
+        let only1 = [req(9, 1, 8)];
+        let mut q = AdapterAffinity::with_max_run_len(1);
+        assert_eq!(q.pick(&only1, &ctx(None, Some(1))), Some(0));
+        assert_eq!(q.pick(&only1, &ctx(Some(1), None)), Some(0));
     }
 
     #[test]
     fn sjf_picks_fewest_output_tokens() {
         let mut p = ShortestJobFirst;
         let w = [req(0, 1, 32), req(1, 1, 4), req(2, 1, 16)];
-        assert_eq!(p.pick(&w, None, None), Some(1));
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(1));
         // adapter-filtered
         let w2 = [req(0, 1, 32), req(1, 2, 4), req(2, 1, 16)];
-        assert_eq!(p.pick(&w2, Some(AdapterId(1)), None), Some(2));
-        assert_eq!(p.pick(&w2, Some(AdapterId(3)), None), None);
+        assert_eq!(p.pick(&w2, &ctx(Some(1), None)), Some(2));
+        assert_eq!(p.pick(&w2, &ctx(Some(3), None)), None);
+    }
+
+    #[test]
+    fn policy_of_wires_the_affinity_bound() {
+        let serving =
+            ServingConfig { affinity_max_run_len: Some(3), ..ServingConfig::default() };
+        let p = policy_of(PolicyKind::AdapterAffinity, &serving);
+        assert_eq!(p.name(), "adapter-affinity");
+        let f = policy_of(PolicyKind::Fcfs, &serving);
+        assert_eq!(f.name(), "fcfs");
     }
 }

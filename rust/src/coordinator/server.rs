@@ -5,26 +5,38 @@
 //! used for coordinator-overhead accounting. A request's lifecycle:
 //!
 //!   submit(arrival_s) -> waiting (arrival-ordered) -> policy admission
-//!   (adapter swap => SRPG reprogramming latency) -> prefill (TTFT) ->
+//!   (adapter swap => SRPG reprogramming latency) -> prefill (TTFT;
+//!   monolithic, or chunked and interleaved with decode steps) ->
 //!   batched decode (per-slot KV positions, layer-pipelined step) ->
 //!   completion record
 //!
 //! The engine is a discrete-event loop: [`Server::step`] processes one
-//! event (an admission, one batched decode step, or a clock jump to the
-//! next arrival), [`Server::run_until`] advances the simulated clock to a
-//! deadline, and [`Server::drain`] runs until every submitted request has
-//! completed. [`Server::run`] is the legacy façade over `drain` and —
-//! together with `ServerBuilder::default().max_batch(1).policy(Fcfs)` —
-//! reproduces the paper's serial batch-1 FCFS model with numerically
-//! identical results (see `tests/scheduling.rs`).
+//! event (an admission, one prefill chunk, one batched decode step, or a
+//! clock jump to the next arrival), [`Server::run_until`] advances the
+//! simulated clock to a deadline, and [`Server::drain`] runs until every
+//! submitted request has completed. [`Server::run`] is the legacy façade
+//! over `drain` and — together with
+//! `ServerBuilder::default().max_batch(1).policy(Fcfs)` — reproduces the
+//! paper's serial batch-1 FCFS model with numerically identical results
+//! (see `tests/scheduling.rs`).
+//!
+//! With `ServingConfig::prefill_chunk` set, an admission's prefill is
+//! split into chunks on the 128-token prefill block decomposition; the
+//! event loop alternates one chunk and one batched decode step, so
+//! in-flight slots stall only for a chunk's makespan at a time instead of
+//! the whole prompt (the serialization the ROADMAP flagged as the
+//! dominant tail-latency term). Total prefill time is conserved
+//! bit-for-bit across chunk sizes, and with nothing to interleave the
+//! chunked path is numerically identical to monolithic admission
+//! (`tests/chunked_prefill.rs`).
 //!
 //! With `FunctionalMode::Golden` the PJRT runtime executes the reduced
 //! functional model's decode step at each admission, proving the request
 //! path runs real numerics without Python.
 
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
-use super::batch::{DecodeBatch, Slot};
-use super::scheduler::{policy_of, SchedulePolicy};
+use super::batch::{DecodeBatch, PrefillJob, Slot};
+use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use crate::dataflow::{prefill_program, reprogram_program};
@@ -32,7 +44,7 @@ use crate::runtime::{Executable, GoldenRuntime};
 use crate::sim::cost::program_cost;
 use crate::sim::{LayerCostModel, Simulator};
 use crate::util::error::Result;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -201,9 +213,17 @@ fn latency_stats(samples: &[f64]) -> LatencyStats {
 /// What one [`Server::step`] call did.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum StepOutcome {
-    /// A request was admitted: adapter check (+ swap) and prefill ran,
-    /// advancing the clock by its TTFT.
+    /// A request was admitted. With monolithic prefill (the default) the
+    /// adapter check (+ swap) and the whole prefill ran, advancing the
+    /// clock by the request's TTFT; with chunked prefill only the adapter
+    /// check ran and a [`PrefillJob`] was queued — its chunks execute as
+    /// subsequent `PrefillChunk` events and advance the clock then.
     Admitted { request: u64, swap: bool },
+    /// One prefill chunk of an in-flight chunked admission ran (clock
+    /// advanced by the chunk makespan, charged to in-flight decode slots
+    /// as stall). `completed` means the prefill finished and the request
+    /// joined the decode batch.
+    PrefillChunk { request: u64, chunk: usize, of: usize, completed: bool },
     /// One batched decode step: every active slot emitted a token;
     /// `completed` of them finished.
     Decoded { batch: usize, completed: usize },
@@ -223,6 +243,7 @@ pub struct ServerBuilder {
     max_batch: usize,
     policy: Box<dyn SchedulePolicy>,
     batch_overhead_cycles: u64,
+    prefill_chunk: Option<usize>,
 }
 
 impl Default for ServerBuilder {
@@ -244,8 +265,9 @@ impl ServerBuilder {
             functional: FunctionalMode::TimingOnly,
             artifacts_dir: PathBuf::from("artifacts"),
             max_batch: s.max_batch,
-            policy: policy_of(s.policy),
+            policy: policy_of(s.policy, &s),
             batch_overhead_cycles: s.batch_overhead_cycles,
+            prefill_chunk: s.prefill_chunk,
             experiment,
         }
     }
@@ -282,7 +304,7 @@ impl ServerBuilder {
 
     /// Admission policy by config-level selector.
     pub fn policy_kind(mut self, kind: PolicyKind) -> Self {
-        self.policy = policy_of(kind);
+        self.policy = policy_of(kind, &self.experiment.serving);
         self
     }
 
@@ -292,13 +314,26 @@ impl ServerBuilder {
         self
     }
 
+    /// Chunked prefill: `Some(tokens)` splits each admission's prefill
+    /// into chunks of that many prompt tokens (rounded up to the
+    /// 128-token prefill block) interleaved with decode steps; `None`
+    /// keeps the monolithic layer-sequential admission.
+    pub fn prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        self.prefill_chunk = chunk;
+        self
+    }
+
     pub fn build(self) -> Result<Server> {
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
         }
+        if self.prefill_chunk == Some(0) {
+            bail!("prefill_chunk must be >= 1 token (or None for monolithic)");
+        }
         let mut exp = self.experiment;
         exp.serving.max_batch = self.max_batch;
         exp.serving.batch_overhead_cycles = self.batch_overhead_cycles;
+        exp.serving.prefill_chunk = self.prefill_chunk;
 
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
@@ -363,11 +398,14 @@ impl ServerBuilder {
             n_layers: exp.model.layers,
             max_batch: self.max_batch,
             batch_overhead_cycles: self.batch_overhead_cycles,
+            prefill_chunk: self.prefill_chunk,
             policy: self.policy,
             cfg: exp,
             adapters: AdapterManager::new(),
             waiting: Vec::new(),
             batch: DecodeBatch::new(self.max_batch),
+            jobs: VecDeque::new(),
+            prefill_turn: false,
             finished: Vec::new(),
             now_s: 0.0,
             layer_model,
@@ -388,9 +426,20 @@ pub struct Server {
     policy: Box<dyn SchedulePolicy>,
     max_batch: usize,
     batch_overhead_cycles: u64,
+    /// Chunk size (prompt tokens) for chunked prefill; `None` = the
+    /// paper's monolithic layer-sequential admission.
+    prefill_chunk: Option<usize>,
     /// Submitted, not yet admitted; sorted by (arrival_s, submit order).
     waiting: Vec<Request>,
     batch: DecodeBatch,
+    /// Chunked prefills in flight (FIFO; the head job runs chunks). Each
+    /// occupies a slot of `max_batch` capacity until it finishes and
+    /// moves into `batch`. Always empty with monolithic prefill.
+    jobs: VecDeque<PrefillJob>,
+    /// Alternation flag: after a decode step the next runnable event is a
+    /// prefill chunk (when a job is in flight), and vice versa, so chunks
+    /// and decode steps interleave one-for-one.
+    prefill_turn: bool,
     finished: Vec<RequestResult>,
     /// Simulated clock (seconds).
     now_s: f64,
@@ -454,6 +503,11 @@ impl Server {
         self.batch.len()
     }
 
+    /// Chunked prefills currently in flight (0 with monolithic prefill).
+    pub fn prefilling(&self) -> usize {
+        self.jobs.len()
+    }
+
     /// The simulated clock (seconds).
     pub fn now_s(&self) -> f64 {
         self.now_s
@@ -463,9 +517,22 @@ impl Server {
         self.policy.name()
     }
 
+    /// Whether a new admission fits: decoding slots plus in-flight
+    /// prefills are bounded by `max_batch`.
+    fn has_capacity(&self) -> bool {
+        self.batch.len() + self.jobs.len() < self.max_batch
+    }
+
+    /// Adapter bound to the in-flight work: the decode batch's adapter,
+    /// or the queued prefills' when the batch is empty (slots and jobs
+    /// always share one adapter by construction).
+    fn active_adapter(&self) -> Option<AdapterId> {
+        self.batch.adapter().or_else(|| self.jobs.front().map(|j| j.adapter()))
+    }
+
     /// Earliest simulated time at which the server has work, if any.
     pub fn next_event_s(&self) -> Option<f64> {
-        if !self.batch.is_empty() {
+        if !self.batch.is_empty() || !self.jobs.is_empty() {
             return Some(self.now_s);
         }
         self.waiting.first().map(|r| {
@@ -517,21 +584,24 @@ impl Server {
         tokens: Option<&mpsc::Sender<TokenEvent>>,
     ) -> Result<StepOutcome> {
         // ---- admission opportunity --------------------------------------
-        if self.batch.has_free_slot() && !self.waiting.is_empty() {
+        if self.has_capacity() && !self.waiting.is_empty() {
             let arrived = self
                 .waiting
                 .partition_point(|r| r.arrival_s <= self.now_s);
             if arrived > 0 {
-                let mut pick = self.policy.pick(
-                    &self.waiting[..arrived],
-                    self.batch.adapter(),
-                    self.adapters.resident(),
-                );
-                // Progress guarantee: a policy may hold an empty batch to
+                let ctx = SchedContext {
+                    active_adapter: self.active_adapter(),
+                    resident: self.adapters.resident(),
+                    in_flight: self.batch.len() + self.jobs.len(),
+                    prefill_in_flight: !self.jobs.is_empty(),
+                };
+                let mut pick = self.policy.pick(&self.waiting[..arrived], &ctx);
+                // Progress guarantee: a policy may hold an idle server to
                 // wait for future arrivals, but once there are none left
                 // it must take something or drain() would never finish.
                 if pick.is_none()
                     && self.batch.is_empty()
+                    && self.jobs.is_empty()
                     && arrived == self.waiting.len()
                 {
                     pick = Some(0);
@@ -541,7 +611,7 @@ impl Server {
                         bail!("policy {} picked unarrived index {i}", self.policy.name());
                     }
                     let req = self.waiting.remove(i);
-                    if let Some(a) = self.batch.adapter() {
+                    if let Some(a) = self.active_adapter() {
                         if a != req.adapter {
                             bail!(
                                 "policy {} mixed adapter {:?} into a {:?} batch",
@@ -556,8 +626,17 @@ impl Server {
             }
         }
 
+        // ---- one prefill chunk (chunked admissions only) ----------------
+        // Chunks alternate one-for-one with decode steps while both kinds
+        // of work exist; with an empty batch the chunks run back-to-back.
+        if !self.jobs.is_empty() && (self.prefill_turn || self.batch.is_empty()) {
+            self.prefill_turn = false;
+            return Ok(self.prefill_chunk_step());
+        }
+
         // ---- batched decode step ----------------------------------------
         if !self.batch.is_empty() {
+            self.prefill_turn = true;
             return Ok(self.decode_step(tokens));
         }
 
@@ -572,7 +651,7 @@ impl Server {
             return Ok(StepOutcome::Advanced { to_s: next });
         }
         if !self.waiting.is_empty() {
-            // Unreachable: arrived requests with an empty batch always
+            // Unreachable: arrived requests with an idle server always
             // admit (forced above). Guard against policy regressions.
             bail!("scheduler deadlock: waiting requests but no runnable event");
         }
@@ -634,11 +713,33 @@ impl Server {
 
     // ---- internals ------------------------------------------------------
 
-    /// Admit `req`: residency check (+ swap), prefill, optional golden
-    /// execution. Occupies the whole accelerator (the paper's prefill is
-    /// layer-sequential across every CT group), so in-flight decode slots
-    /// stall for the duration.
+    /// Admit `req`: monolithic (the paper's model) or chunked, depending
+    /// on `prefill_chunk`.
     fn admit(&mut self, req: Request) -> Result<StepOutcome> {
+        match self.prefill_chunk {
+            None => self.admit_monolithic(req),
+            Some(chunk) => self.admit_chunked(req, chunk),
+        }
+    }
+
+    /// Golden functional decode step on the request path (optional).
+    fn golden_step_ms(&self) -> Result<Option<f64>> {
+        match (&self.golden, &self.golden_exe) {
+            (Some(rt), Some(exe)) => {
+                let inputs = rt.load_inputs("decode_step")?;
+                let t0 = std::time::Instant::now();
+                let _ = rt.execute(exe, &inputs)?;
+                Ok(Some(t0.elapsed().as_secs_f64() * 1e3))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Monolithic admission: residency check (+ swap), the whole prefill,
+    /// optional golden execution — one atomic event. Prefill occupies the
+    /// whole accelerator (the paper's prefill is layer-sequential across
+    /// every CT group), so in-flight decode slots stall for the duration.
+    fn admit_monolithic(&mut self, req: Request) -> Result<StepOutcome> {
         let start_s = self.now_s;
         let swap = match self.adapters.admit(req.adapter) {
             SwapOutcome::Hit => false,
@@ -658,16 +759,7 @@ impl Server {
         };
         ttft += prefill_per_layer * self.n_layers as f64;
 
-        // ---- golden functional step (optional) --------------------------
-        let golden_exec_ms = match (&self.golden, &self.golden_exe) {
-            (Some(rt), Some(exe)) => {
-                let inputs = rt.load_inputs("decode_step")?;
-                let t0 = std::time::Instant::now();
-                let _ = rt.execute(exe, &inputs)?;
-                Some(t0.elapsed().as_secs_f64() * 1e3)
-            }
-            _ => None,
-        };
+        let golden_exec_ms = self.golden_step_ms()?;
 
         for s in self.batch.slots_mut() {
             s.stall_s += ttft;
@@ -691,6 +783,98 @@ impl Server {
         Ok(StepOutcome::Admitted { request: id, swap })
     }
 
+    /// Chunked admission: residency check (+ swap) only; the prefill is
+    /// queued as a [`PrefillJob`] whose chunks run as separate events
+    /// interleaved with decode steps. The admission event itself advances
+    /// no simulated time (the swap's reprogramming latency is folded into
+    /// the job's first chunk — with an adapter mismatch the batch is
+    /// necessarily empty, so there is nobody to stall).
+    fn admit_chunked(&mut self, req: Request, chunk: usize) -> Result<StepOutcome> {
+        let start_s = self.now_s;
+        let swap = match self.adapters.admit(req.adapter) {
+            SwapOutcome::Hit => false,
+            SwapOutcome::Swap { .. } => true,
+        };
+        let reprog_s = if swap { self.reprog_ttft_s } else { 0.0 };
+        let cum = self.chunk_schedule(req.input_tokens, chunk);
+        let golden_exec_ms = self.golden_step_ms()?;
+        let id = req.id;
+        self.jobs
+            .push_back(PrefillJob::new(req, swap, start_s, reprog_s, cum, golden_exec_ms));
+        Ok(StepOutcome::Admitted { request: id, swap })
+    }
+
+    /// Cumulative chunk schedule for a prompt of `input` tokens at chunk
+    /// size `chunk`: entry `j` is the prefill compute (seconds, all
+    /// layers) after chunks `0..=j`.
+    ///
+    /// Chunks are realized on the prefill block decomposition the
+    /// monolithic path costs (blocks of <= 128 tokens via
+    /// `dataflow::prefill_program`, causal KV at mid-block), so the chunk
+    /// boundary rounds up to whole blocks and the *last* cumulative entry
+    /// is computed with the exact monolithic expression — total prefill
+    /// time is conserved bit-for-bit across every chunk size.
+    fn chunk_schedule(&self, input: usize, chunk: usize) -> Vec<f64> {
+        let nl = self.n_layers as f64;
+        if input == self.cfg.input_tokens {
+            let blocks = &self.prefill_block_s;
+            let block_tokens = blocks.first().map(|(t, _)| *t).unwrap_or(1).max(1);
+            let per_chunk = chunk.div_ceil(block_tokens).max(1);
+            let mut cum = Vec::new();
+            let mut k = 0usize;
+            while k < blocks.len() {
+                let k1 = (k + per_chunk).min(blocks.len());
+                let sum: f64 = blocks[..k1].iter().map(|(_, s)| s).sum();
+                cum.push(sum * nl);
+                k = k1;
+            }
+            cum
+        } else {
+            // Off-template lengths use the same per-token scaling as the
+            // monolithic path, cut at exact chunk boundaries.
+            let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
+                / self.cfg.input_tokens as f64;
+            let n_chunks = input.div_ceil(chunk).max(1);
+            (1..=n_chunks)
+                .map(|j| (per_tok * ((j * chunk).min(input)) as f64) * nl)
+                .collect()
+        }
+    }
+
+    /// Run one prefill chunk of the head job: advance the clock by the
+    /// chunk makespan (computed against the job's absolute schedule),
+    /// charge in-flight decode slots the stall, and account the elapsed
+    /// time to the queued jobs behind it. When the job's last chunk
+    /// completes, the request joins the decode batch.
+    fn prefill_chunk_step(&mut self) -> StepOutcome {
+        let old_now = self.now_s;
+        let job = self.jobs.front_mut().expect("prefill step without a job");
+        let request = job.req.id;
+        let of = job.chunks();
+        let end = job.advance();
+        let chunk = job.chunks_done();
+        let completed = job.is_done();
+        // The absolute schedule may trail the interleaved clock by ulps
+        // (float accumulation order); never run the clock backwards.
+        let new_now = if end > old_now { end } else { old_now };
+        let stall = new_now - old_now;
+        self.now_s = new_now;
+        for s in self.batch.slots_mut() {
+            s.stall_s += stall;
+            s.pending_stall_s += stall;
+        }
+        for j in self.jobs.iter_mut().skip(1) {
+            j.note_external(stall);
+        }
+        if completed {
+            let done = self.jobs.pop_front().expect("completed job");
+            self.batch.push(done.into_slot());
+            self.acc.max_batch_observed =
+                self.acc.max_batch_observed.max(self.batch.len());
+        }
+        StepOutcome::PrefillChunk { request, chunk, of, completed }
+    }
+
     /// One batched decode step: every active slot emits one token; the
     /// step takes the layer-pipelined makespan of the batch.
     fn decode_step(&mut self, tokens: Option<&mpsc::Sender<TokenEvent>>) -> StepOutcome {
@@ -708,6 +892,10 @@ impl Server {
         );
         let step_s = step_cycles as f64 * cyc;
         self.now_s += step_s;
+        // Prefills in flight wait out the decode step (their TTFT grows).
+        for j in self.jobs.iter_mut() {
+            j.note_external(step_s);
+        }
 
         let b = self.batch.len();
         for slot in self.batch.slots_mut() {
@@ -924,6 +1112,85 @@ mod tests {
     }
 
     #[test]
+    fn chunked_admission_emits_chunk_events_then_decodes() {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        let mut s = ServerBuilder::from_experiment(exp)
+            .prefill_chunk(Some(128))
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap();
+        // Admission creates the job without advancing the clock.
+        match s.step(None).unwrap() {
+            StepOutcome::Admitted { request: 0, swap: true } => {}
+            other => panic!("expected admission, got {other:?}"),
+        }
+        assert_eq!(s.now_s(), 0.0, "chunked admission is a zero-time event");
+        assert_eq!(s.prefilling(), 1);
+        assert_eq!(s.in_flight(), 0);
+        // A 256-token prompt at chunk 128 = two chunk events.
+        match s.step(None).unwrap() {
+            StepOutcome::PrefillChunk { request: 0, chunk: 1, of: 2, completed: false } => {}
+            other => panic!("expected first chunk, got {other:?}"),
+        }
+        assert!(s.now_s() > 0.0, "chunks advance the clock");
+        match s.step(None).unwrap() {
+            StepOutcome::PrefillChunk { request: 0, chunk: 2, of: 2, completed: true } => {}
+            other => panic!("expected final chunk, got {other:?}"),
+        }
+        assert_eq!(s.prefilling(), 0);
+        assert_eq!(s.in_flight(), 1, "finished prefill joins the decode batch");
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].ttft_s > 0.0);
+    }
+
+    #[test]
+    fn admission_allowed_while_prefill_in_flight() {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(2)
+            .prefill_chunk(Some(128))
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap();
+        s.submit(req(1, 1)).unwrap();
+        // First step admits request 0 (job); second step admits request 1
+        // behind it — the prefill in flight no longer blocks admission.
+        assert!(matches!(
+            s.step(None).unwrap(),
+            StepOutcome::Admitted { request: 0, .. }
+        ));
+        assert!(matches!(
+            s.step(None).unwrap(),
+            StepOutcome::Admitted { request: 1, .. }
+        ));
+        assert_eq!(s.prefilling(), 2);
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 2);
+        // Request 1 waited out request 0's chunks: its TTFT must be larger.
+        assert!(results.iter().any(|r| r.request == 1));
+        let t0 = results.iter().find(|r| r.request == 0).unwrap().ttft_s;
+        let t1 = results.iter().find(|r| r.request == 1).unwrap().ttft_s;
+        assert!(t1 > t0, "queued prefill {t1} must exceed head prefill {t0}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_chunk() {
+        assert!(ServerBuilder::default().prefill_chunk(Some(0)).build().is_err());
+        assert!(ServerBuilder::default().prefill_chunk(Some(1)).build().is_ok());
+    }
+
+    #[test]
     fn affinity_batches_share_one_adapter() {
         let exp = ExperimentConfig::paper_point(
             ModelId::Llama32_1b,
@@ -932,7 +1199,7 @@ mod tests {
         );
         let mut s = ServerBuilder::from_experiment(exp)
             .max_batch(3)
-            .policy(AdapterAffinity)
+            .policy(AdapterAffinity::default())
             .build()
             .unwrap();
         s.register_adapter(AdapterId(1));

@@ -26,18 +26,24 @@ fn usage() -> ! {
         "usage: primal <command> [flags]
 
 commands:
-  simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--no-srpg] [--trace]
-  report     --table <1|2|3|4|h100|srpg>
+  simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--batch N]
+             [--no-srpg] [--trace]
+  report     --table <1|2|3|4|h100|srpg> [--batch N] (tables 2/3 only)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
-             [--batch N] [--policy fcfs|affinity|sjf] [--rate R] [--golden]
-             (--rate R: Poisson arrivals at R req/s; 0 = all at t=0)
+             [--batch N] [--policy fcfs|affinity|sjf] [--rate R]
+             [--prefill-chunk N] [--max-run-len N] [--golden]
+             (--rate R: Poisson arrivals at R req/s; 0 = all at t=0;
+              --prefill-chunk N: chunk admissions into N-token prefill
+              pieces interleaved with decode steps;
+              --max-run-len N: affinity starvation bound)
   sweep      --model <1b|8b|13b> [--from N] [--to N]
   validate   [--artifacts DIR]
 
 examples:
   primal simulate --model 13b --ctx 2048 --lora qv
-  primal report --table 2
-  primal serve --model 1b --requests 16 --adapters 3 --batch 4 --policy affinity
+  primal report --table 2 --batch 4
+  primal serve --model 1b --requests 16 --adapters 3 --batch 4 \\
+               --policy affinity --prefill-chunk 128
   primal validate"
     );
     std::process::exit(2)
@@ -101,6 +107,7 @@ fn num_flag(flags: &BTreeMap<String, String>, key: &str, default: usize) -> usiz
 fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     let ctx = num_flag(&flags, "ctx", 1024);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
+    cfg.serving.max_batch = num_flag(&flags, "batch", 1).max(1);
     if flags.contains_key("no-srpg") {
         cfg.srpg = false;
     }
@@ -120,6 +127,7 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     println!("model        : {}", r.model);
     println!("LoRA         : rank 8 ({})", r.lora_label);
     println!("context      : {}/{}", r.input_tokens, r.output_tokens);
+    println!("batch        : {}", r.batch);
     println!("SRPG         : {}", if r.srpg { "on" } else { "off" });
     println!("CTs          : {} ({} per layer)", r.total_cts, r.cts_per_layer);
     println!("TTFT         : {:.3} s", r.ttft_s);
@@ -138,14 +146,39 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
 
 fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let which = flags.get("table").map(String::as_str).unwrap_or("2");
+    let batch = num_flag(&flags, "batch", 1).max(1);
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
         "2" | "3" => {
-            eprintln!("running the 12-point paper grid (three models x two LoRA sets x two contexts)...");
-            let reports: Vec<_> = metrics::paper_grid()
-                .iter()
-                .map(metrics::run_point)
-                .collect();
+            eprintln!(
+                "running the 12-point paper grid (three models x two LoRA sets x \
+                 two contexts){}...",
+                if batch > 1 { format!(" at batch {batch}") } else { String::new() }
+            );
+            let mut reports = Vec::new();
+            for cfg in &metrics::paper_grid() {
+                // Re-validate at the requested batch: the KV-capacity check
+                // scales with serving.max_batch, so a physically infeasible
+                // batch is skipped loudly (e.g. 13B KV rings cannot hold 4
+                // slots per router) rather than tabulated as if it fit.
+                let mut cfg = cfg.clone();
+                cfg.serving.max_batch = batch;
+                let problems = cfg.validate();
+                if !problems.is_empty() {
+                    for p in &problems {
+                        eprintln!(
+                            "skipping {} ctx {} at batch {batch}: {p}",
+                            cfg.model.id, cfg.input_tokens
+                        );
+                    }
+                    continue;
+                }
+                reports.push(metrics::run_point_batched(&cfg, batch));
+            }
+            if reports.is_empty() {
+                eprintln!("no grid point is feasible at batch {batch}");
+                return ExitCode::FAILURE;
+            }
             if which == "2" {
                 println!("{}", metrics::table2(&reports));
             } else {
@@ -188,7 +221,19 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             })
         })
         .unwrap_or(0.0);
-    let cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
+    let positive_flag = |key: &str| -> Option<usize> {
+        flags.get(key)?;
+        let n = num_flag(&flags, key, 0);
+        if n == 0 {
+            eprintln!("--{key} expects a count >= 1");
+            usage()
+        }
+        Some(n)
+    };
+    let prefill_chunk = positive_flag("prefill-chunk");
+    let max_run_len = positive_flag("max-run-len");
+    let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
+    cfg.serving.affinity_max_run_len = max_run_len;
     let functional = if flags.contains_key("golden") {
         FunctionalMode::Golden
     } else {
@@ -199,6 +244,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
         .artifacts_dir(default_artifacts_dir())
         .max_batch(batch)
         .policy_kind(policy)
+        .prefill_chunk(prefill_chunk)
         .build()
     {
         Ok(s) => s,
@@ -242,11 +288,16 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                 );
             }
             let s = server.stats();
+            let mean_stall =
+                results.iter().map(|r| r.stall_s).sum::<f64>() / results.len().max(1) as f64;
             println!(
-                "\npolicy {} / batch {} (widest observed {}): served {} requests, \
+                "\npolicy {} / batch {}{} (widest observed {}): served {} requests, \
                  {} tokens, {:.2} simulated s ({:.1} tok/s); swaps {}, hits {}",
                 server.policy_name(),
                 batch,
+                prefill_chunk
+                    .map(|c| format!(" / prefill-chunk {c}"))
+                    .unwrap_or_default(),
                 s.max_batch_observed,
                 s.served,
                 s.total_tokens,
@@ -267,6 +318,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                 "queue mean {:.3} s   p50 {:.3}  p95 {:.3}  p99 {:.3}",
                 s.queue.mean, s.queue.p50, s.queue.p95, s.queue.p99
             );
+            println!("stall mean {mean_stall:.3} s (in-flight time lost to admissions)");
             println!("\nadapter  served  tokens_out  swaps  hits");
             for (id, u) in &s.per_adapter {
                 println!(

@@ -30,6 +30,12 @@ pub fn run_point(cfg: &ExperimentConfig) -> SimReport {
     Simulator::new(cfg).run()
 }
 
+/// Run one grid point at an explicit decode batch (Table II's batch
+/// column; `batch == 1` bit-matches [`run_point`]).
+pub fn run_point_batched(cfg: &ExperimentConfig, batch: usize) -> SimReport {
+    Simulator::new(cfg).run_batched(batch)
+}
+
 /// Table I — system parameters (prints the active configuration).
 pub fn table1(cfg: &ExperimentConfig) -> String {
     let s = &cfg.system;
@@ -53,10 +59,15 @@ pub fn table1(cfg: &ExperimentConfig) -> String {
 }
 
 /// Table II — throughput, average power, energy efficiency over the grid.
-/// Returns (rendered table, reports) so benches can assert on values.
+///
+/// The `Batch` column reports simultaneous identical requests decoded in
+/// lockstep through the layer pipeline: throughput and efficiency count
+/// every request's tokens over the shared wall time, power integrates
+/// the fuller pipeline, and batch 1 reproduces the paper's serial
+/// numbers exactly.
 pub fn table2(reports: &[SimReport]) -> String {
     let mut t = Table::new(&[
-        "Model", "LoRA", "Context (In/Out)", "Throughput (tok/s)",
+        "Model", "LoRA", "Context (In/Out)", "Batch", "Throughput (tok/s)",
         "Avg Power (W)", "Efficiency (tok/J)",
     ])
     .align(0, Align::Left)
@@ -67,6 +78,7 @@ pub fn table2(reports: &[SimReport]) -> String {
             r.model.clone(),
             r.lora_label.clone(),
             format!("{}/{}", r.input_tokens, r.output_tokens),
+            r.batch.to_string(),
             fnum(r.throughput_tps, 2),
             fnum(r.avg_power_w, 2),
             fnum(r.efficiency_tpj, 2),
@@ -239,6 +251,21 @@ mod tests {
         let t3 = table3(&reports);
         assert_eq!(t2.matches("Llama 3.2 1B").count(), 4);
         assert!(t3.contains("1024/1024") && t3.contains("2048/2048"));
+    }
+
+    #[test]
+    fn batched_point_bitmatches_serial_at_batch_1() {
+        let grid = paper_grid();
+        let cfg = &grid[0];
+        let serial = run_point(cfg);
+        let batched = run_point_batched(cfg, 1);
+        assert_eq!(serial.throughput_tps.to_bits(), batched.throughput_tps.to_bits());
+        assert_eq!(serial.avg_power_w.to_bits(), batched.avg_power_w.to_bits());
+        let b4 = run_point_batched(cfg, 4);
+        assert_eq!(b4.batch, 4);
+        assert!(b4.throughput_tps > serial.throughput_tps);
+        let t2 = table2(&[serial, b4]);
+        assert!(t2.contains("Batch"), "table II must carry the batch column");
     }
 
     #[test]

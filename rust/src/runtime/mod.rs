@@ -210,11 +210,13 @@ impl GoldenRuntime {
     }
 }
 
-/// Whether this build can actually execute HLO modules (true only with
-/// the `xla` feature). Lets tests and callers skip golden execution
-/// gracefully on the hermetic default build.
+/// Whether this build can actually execute HLO modules. Lets tests and
+/// callers skip golden execution gracefully: false on the hermetic
+/// default build, and also false under `--features xla` while the `xla`
+/// dependency is the vendored API stub (`rust/xla-stub`) — only a real
+/// xla_extension backend answers true.
 pub fn execution_supported() -> bool {
-    cfg!(feature = "xla")
+    backend::execution_supported()
 }
 
 /// Locate the artifacts directory from the current/repo dir.

@@ -63,6 +63,26 @@ impl PhaseCost {
     }
 }
 
+/// Cycles for one batched decode step through the layer pipeline, given
+/// each slot's *per-layer* cost: the classic pipeline bound
+/// `sum(c_i) + (n_layers - 1) * max(c_i)` plus an explicit coordination
+/// charge of `batch_overhead_cycles` per slot beyond the first. Exactly
+/// `n_layers * c` for a single slot in integer arithmetic — which is what
+/// lets every batched path bit-match the serial model. Single source of
+/// truth shared by `coordinator::batch::DecodeBatch::step_cycles` (the
+/// serving engine) and `Simulator::run_batched` (the paper-table path).
+pub fn pipelined_step_cycles(
+    per_layer: &[u64],
+    n_layers: usize,
+    batch_overhead_cycles: u64,
+) -> u64 {
+    debug_assert!(!per_layer.is_empty());
+    let sum: u64 = per_layer.iter().sum();
+    let max: u64 = per_layer.iter().copied().max().unwrap_or(0);
+    let b = per_layer.len() as u64;
+    sum + (n_layers as u64 - 1) * max + (b - 1) * batch_overhead_cycles
+}
+
 /// Cost of one instruction.
 pub fn instr_cost(
     i: &Instr,

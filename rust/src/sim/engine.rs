@@ -5,7 +5,7 @@
 //! the Table II/III quantities. See DESIGN.md for the timing-model
 //! derivation and EXPERIMENTS.md for calibration.
 
-use super::cost::program_cost;
+use super::cost::{pipelined_step_cycles, program_cost};
 use super::layer_model::LayerCostModel;
 use crate::config::ExperimentConfig;
 use crate::dataflow::{prefill_program, reprogram_program};
@@ -14,7 +14,8 @@ use crate::mapping::{map_model, map_model_naive, ModelMapping};
 use crate::srpg::SrpgSchedule;
 use crate::trace::{Trace, TraceEvent, TraceKind};
 
-/// Everything a paper table needs about one simulated request.
+/// Everything a paper table needs about one simulated request (or batch
+/// of identical requests — see [`Simulator::run_batched`]).
 #[derive(Debug, Clone)]
 pub struct SimReport {
     // ---- identity -------------------------------------------------------
@@ -22,6 +23,11 @@ pub struct SimReport {
     pub lora_label: String,
     pub input_tokens: usize,
     pub output_tokens: usize,
+    /// Simultaneous identical requests decoded in lockstep through the
+    /// layer pipeline. 1 = the paper's serial benchmarking unit; per-token
+    /// latencies (`itl_ms`) stay per *step*, while `throughput_tps` and
+    /// the energy totals count all `batch` requests' tokens.
+    pub batch: usize,
     pub srpg: bool,
     // ---- Table III ------------------------------------------------------
     /// Time to first token, seconds (reprogram CT0 + prefill).
@@ -82,8 +88,25 @@ impl Simulator {
         &self.mapping
     }
 
-    /// Simulate one request (batch 1).
+    /// Simulate one serving point at the experiment's configured batch
+    /// (`serving.max_batch`, default 1 = the paper's benchmarking unit).
     pub fn run(&self) -> SimReport {
+        self.run_batched(self.cfg.serving.max_batch)
+    }
+
+    /// Simulate `batch` identical requests served together: each request
+    /// prefills layer-sequentially in turn (prefill occupies every CT
+    /// group), then all decode in lockstep through the layer pipeline —
+    /// one batched step per output token, costed with the same pipeline
+    /// bound as the serving coordinator
+    /// (`sim::cost::pipelined_step_cycles`, which
+    /// `coordinator::batch::DecodeBatch::step_cycles` also delegates to:
+    /// `sum + (n_layers-1)*max + (b-1)*overhead`). At `batch == 1` every
+    /// arithmetic step reduces to the serial model, so the report
+    /// bit-matches the paper-table path (gated in `benches/table2.rs`).
+    pub fn run_batched(&self, batch: usize) -> SimReport {
+        let b = batch.max(1);
+        let bu = b as u64;
         let cfg = &self.cfg;
         let m = &cfg.model;
         let mut ledger = EnergyLedger::new(&cfg.system, &cfg.calib);
@@ -135,7 +158,11 @@ impl Simulator {
         for (l, gs) in group_start.iter_mut().enumerate() {
             *gs = l as u64 * layer_prefill_cycles;
         }
-        let prefill_makespan = layer_prefill_cycles * n_groups as u64;
+        // Batched serving admits the b requests back-to-back: prefill is
+        // layer-sequential and occupies the whole accelerator, so the
+        // prompts process one after another (`* bu`; the SRPG
+        // reprogramming plan below overlaps only the first wave).
+        let prefill_makespan = layer_prefill_cycles * n_groups as u64 * bu;
 
         // ---- SRPG reprogramming plan --------------------------------------
         let plan = srpg.plan(&group_start);
@@ -156,19 +183,20 @@ impl Simulator {
         }
         let ttft_cycles = plan.ttft_penalty + prefill_makespan + plan.pipeline_stalls;
 
-        // Prefill energy: dynamic events per (layer, block).
+        // Prefill energy: dynamic events per (request, layer, block).
         for c in &stage_events {
             let mut ev = *c;
             ev.cycles = 0;
-            for _ in 0..n_groups {
+            for _ in 0..n_groups * b {
                 ev.post(&mut ledger);
             }
         }
         ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
 
-        // Prefill state energy: layer-sequential — one group busy at a time.
+        // Prefill state energy: layer-sequential — one group busy at a
+        // time, for b prompts in turn.
         let active_ct_cycles =
-            layer_prefill_cycles as f64 * (n_groups * cts_per_group) as f64;
+            layer_prefill_cycles as f64 * (n_groups * cts_per_group * b) as f64;
         let total_ct_cycles = ttft_cycles as f64 * total_cts as f64;
         let reprog_cycles_total = plan.reprog_ct_cycles;
         let idle_ct_cycles =
@@ -194,15 +222,30 @@ impl Simulator {
         let mut itl_first = 0u64;
         let mut itl_last = 0u64;
         let out = cfg.output_tokens;
+        // Reusable slot-cost buffer: every slot decodes in lockstep at the
+        // same kv, so only the value changes per token, not the width.
+        let mut per_slot = vec![0u64; b];
         for i in 0..out {
             let kv = cfg.input_tokens + i;
             let per_layer = layer_model.eval(kv);
-            let mut tok_cycles = per_layer.cycles * n_groups as u64;
+            // Batched decode: b tokens in flight through the layer
+            // pipeline in lockstep, costed with the same pipeline bound as
+            // the serving coordinator (`DecodeBatch::step_cycles` shares
+            // this function). At b = 1 the bound collapses to the serial
+            // `n_groups * cycles` in integer arithmetic.
+            per_slot.fill(per_layer.cycles);
+            let mut tok_cycles = pipelined_step_cycles(
+                &per_slot,
+                n_groups,
+                cfg.serving.batch_overhead_cycles,
+            );
             if let Some((_, head_cost)) = &lm_head {
-                tok_cycles += head_cost.cycles;
-                let mut ev = *head_cost;
-                ev.cycles = 0;
-                ev.post(&mut ledger);
+                tok_cycles += head_cost.cycles * bu;
+                for _ in 0..b {
+                    let mut ev = *head_cost;
+                    ev.cycles = 0;
+                    ev.post(&mut ledger);
+                }
             }
             if i == 0 {
                 itl_first = tok_cycles;
@@ -211,18 +254,30 @@ impl Simulator {
                 itl_last = tok_cycles;
             }
             decode_cycles_total += tok_cycles;
-            // dynamic energy per layer
+            // dynamic energy per (slot, layer)
             let mut ev = per_layer;
             ev.cycles = 0;
-            for _ in 0..n_groups {
+            for _ in 0..n_groups * b {
                 ev.post(&mut ledger);
             }
-            // State energy: at any instant exactly one group computes and
-            // the rest are gated/idle, so integrating "one active group"
-            // over the whole token interval gives the exact CT-cycle split.
-            let sc = srpg.decode_interval(tok_cycles);
-            ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
-            ledger.post_ct_state(srpg.idle_state(), sc.idle, 1);
+            // State energy. Serial: at any instant exactly one group
+            // computes and the rest are gated/idle, so integrating "one
+            // active group" over the whole token interval gives the exact
+            // CT-cycle split. Batched: the pipeline holds up to b busy
+            // groups, so the active integral is the b slots' compute and
+            // the idle integral is the remainder of the step.
+            if b == 1 {
+                let sc = srpg.decode_interval(tok_cycles);
+                ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
+                ledger.post_ct_state(srpg.idle_state(), sc.idle, 1);
+            } else {
+                let active = (bu * n_groups as u64 * per_layer.cycles) as f64
+                    * cts_per_group as f64;
+                let total = tok_cycles as f64 * (n_groups * cts_per_group) as f64;
+                let idle = (total - active).max(0.0);
+                ledger.post_ct_state(CtPowerState::Active, active, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle, 1);
+            }
             // decode trace: only the first few tokens (diagram readability)
             if self.trace_enabled && i < 4 {
                 let t0 = ttft_cycles + decode_cycles_total - tok_cycles;
@@ -248,7 +303,7 @@ impl Simulator {
             0.0
         };
         let total_s = ttft_s + decode_cycles_total as f64 * cyc;
-        let tokens = (cfg.input_tokens + out) as f64;
+        let tokens = ((cfg.input_tokens + out) * b) as f64;
         let throughput = tokens / total_s;
         let avg_power = ledger.average_power_w();
         let energy_j = ledger.total_j();
@@ -258,6 +313,7 @@ impl Simulator {
             lora_label: crate::config::LoraTarget::label(&cfg.lora.targets),
             input_tokens: cfg.input_tokens,
             output_tokens: out,
+            batch: b,
             srpg: cfg.srpg,
             ttft_s,
             itl_ms,
@@ -320,6 +376,68 @@ mod tests {
     fn itl_increases_within_sweep() {
         let r = run(ModelId::Llama32_1b, 1024);
         assert!(r.itl_last_ms > r.itl_first_ms);
+    }
+
+    #[test]
+    fn batched_report_bitmatches_serial_at_batch_1() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let sim = Simulator::new(&cfg);
+        let a = sim.run();
+        let b = sim.run_batched(1);
+        assert_eq!(a.batch, 1);
+        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+        assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+        assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
+        assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits());
+        assert_eq!(a.efficiency_tpj.to_bits(), b.efficiency_tpj.to_bits());
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn batched_decode_pipelines_throughput() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let sim = Simulator::new(&cfg);
+        let b1 = sim.run_batched(1);
+        let b4 = sim.run_batched(4);
+        assert_eq!(b4.batch, 4);
+        // 4x the tokens in well under 4x the time (prefills serialize but
+        // the decode pipeline fills).
+        assert!(
+            b4.throughput_tps > b1.throughput_tps * 1.1,
+            "batch 4 {} vs batch 1 {}",
+            b4.throughput_tps,
+            b1.throughput_tps
+        );
+        assert!(b4.throughput_tps < b1.throughput_tps * 4.0);
+        // The batched step is longer than a serial token (pipeline fill +
+        // coordination) but far below b serial tokens.
+        assert!(b4.itl_ms > b1.itl_ms);
+        assert!(b4.itl_ms < b1.itl_ms * 2.0, "{} vs {}", b4.itl_ms, b1.itl_ms);
+        // More of the pipeline is busy: power rises, and the extra tokens
+        // more than pay for it.
+        assert!(b4.avg_power_w > b1.avg_power_w);
+        assert!(b4.efficiency_tpj > b1.efficiency_tpj);
+        assert!(b4.total_energy_j > b1.total_energy_j);
+    }
+
+    #[test]
+    fn run_respects_serving_batch_config() {
+        let mut cfg =
+            ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 256);
+        cfg.serving.max_batch = 2;
+        let sim = Simulator::new(&cfg);
+        let r = sim.run();
+        assert_eq!(r.batch, 2);
+        assert_eq!(r.throughput_tps.to_bits(), sim.run_batched(2).throughput_tps.to_bits());
     }
 
     #[test]

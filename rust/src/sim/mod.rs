@@ -18,7 +18,7 @@ pub mod engine;
 pub mod layer_model;
 pub mod lm_head;
 
-pub use cost::{phase_cost, program_cost, PhaseCost};
+pub use cost::{phase_cost, pipelined_step_cycles, program_cost, PhaseCost};
 pub use engine::{SimReport, Simulator};
 pub use layer_model::LayerCostModel;
 pub use lm_head::LmHead;

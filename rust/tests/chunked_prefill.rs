@@ -1,0 +1,208 @@
+//! Property tests for chunked prefill (`ServingConfig::prefill_chunk`):
+//! equivalence with monolithic admission, conservation of prefill time
+//! across chunk sizes, and monotone stall reduction as chunks shrink.
+//!
+//! The contracts defended here are what lets chunked prefill be the
+//! default-off knob it is: turning it on must never change *what* is
+//! computed (same prefill cycles, bit-identical batch-1 results), only
+//! *when* in-flight slots pay for it.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+use primal::coordinator::{AdapterId, Request, RequestResult, Server, ServerBuilder};
+
+fn exp_1b(ctx: usize) -> ExperimentConfig {
+    ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], ctx)
+}
+
+fn server(ctx: usize, max_batch: usize, chunk: Option<usize>, adapters: u32) -> Server {
+    let mut s = ServerBuilder::from_experiment(exp_1b(ctx))
+        .max_batch(max_batch)
+        .policy_kind(PolicyKind::Fcfs)
+        .prefill_chunk(chunk)
+        .build()
+        .expect("server");
+    for a in 0..adapters {
+        s.register_adapter(AdapterId(a));
+    }
+    s
+}
+
+/// Mixed-length, mixed-adapter batch-1 trace (exercises both the
+/// template-length and the scaled-length chunk schedules).
+fn trace() -> Vec<Request> {
+    vec![
+        Request::new(0, AdapterId(0), 256, 16),
+        Request::new(1, AdapterId(1), 256, 16),
+        Request::new(2, AdapterId(0), 128, 8),
+        Request::new(3, AdapterId(1), 320, 12),
+    ]
+}
+
+fn drain(mut s: Server, reqs: &[Request]) -> (Vec<RequestResult>, f64) {
+    for r in reqs {
+        s.submit(r.clone()).unwrap();
+    }
+    let res = s.drain(None).unwrap();
+    let t = s.stats().sim_time_s;
+    (res, t)
+}
+
+fn assert_bit_identical(a: &[RequestResult], b: &[RequestResult], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: result counts");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.request, y.request, "{label}: completion order");
+        assert_eq!(x.swap, y.swap, "{label}: swap of {}", x.request);
+        assert_eq!(
+            x.start_s.to_bits(),
+            y.start_s.to_bits(),
+            "{label}: start of {}",
+            x.request
+        );
+        assert_eq!(
+            x.ttft_s.to_bits(),
+            y.ttft_s.to_bits(),
+            "{label}: ttft of {}",
+            x.request
+        );
+        assert_eq!(
+            x.itl_ms.to_bits(),
+            y.itl_ms.to_bits(),
+            "{label}: itl of {}",
+            x.request
+        );
+        assert_eq!(
+            x.total_s.to_bits(),
+            y.total_s.to_bits(),
+            "{label}: total of {}",
+            x.request
+        );
+    }
+}
+
+#[test]
+fn chunk_at_or_above_prompt_bitmatches_monolithic() {
+    let reqs = trace();
+    let (mono, t_mono) = drain(server(256, 1, None, 2), &reqs);
+    // chunk == prompt and chunk >> prompt both degenerate to one chunk.
+    for chunk in [256usize, 4096] {
+        let (chunked, t_c) = drain(server(256, 1, Some(chunk), 2), &reqs);
+        assert_bit_identical(&mono, &chunked, &format!("chunk {chunk}"));
+        assert_eq!(t_mono.to_bits(), t_c.to_bits(), "sim clock at chunk {chunk}");
+    }
+}
+
+#[test]
+fn batch1_chunked_bitmatches_legacy_serial_model() {
+    // At batch 1 nothing can interleave between chunks, so any chunk size
+    // must reproduce the legacy `Server::new` + `run()` numbers exactly.
+    let reqs = trace();
+    let (mono, t_mono) = drain(server(256, 1, None, 2), &reqs);
+    for chunk in [32usize, 64, 128] {
+        let (chunked, t_c) = drain(server(256, 1, Some(chunk), 2), &reqs);
+        assert_bit_identical(&mono, &chunked, &format!("chunk {chunk}"));
+        assert_eq!(t_mono.to_bits(), t_c.to_bits(), "sim clock at chunk {chunk}");
+        assert!(chunked.iter().all(|r| r.stall_s == 0.0), "batch 1 never stalls");
+    }
+}
+
+#[test]
+fn prefill_time_conserved_across_chunk_sizes() {
+    // The total prefill charged to a request (its TTFT) is identical for
+    // every chunk size — chunking only re-times the work.
+    let reqs = trace();
+    let (base, _) = drain(server(256, 1, Some(128), 2), &reqs);
+    for chunk in [1usize, 16, 64, 96, 200, 512] {
+        let (other, _) = drain(server(256, 1, Some(chunk), 2), &reqs);
+        for (a, b) in base.iter().zip(&other) {
+            assert_eq!(
+                a.ttft_s.to_bits(),
+                b.ttft_s.to_bits(),
+                "ttft of {} at chunk {chunk}",
+                a.request
+            );
+        }
+    }
+}
+
+/// Learn request A's service time, then arrive request B (same adapter)
+/// right after A's prefill finishes, so A is decoding when B is admitted.
+/// A's stall is the part of B's prefill that runs before A completes.
+fn stall_of_a(chunk: Option<usize>, arrive_b: f64) -> f64 {
+    let mut s = server(512, 2, chunk, 1);
+    s.submit(Request::new(0, AdapterId(0), 512, 2)).unwrap();
+    s.submit(Request::new(1, AdapterId(0), 512, 2).at(arrive_b)).unwrap();
+    let res = s.drain(None).unwrap();
+    res.iter().find(|r| r.request == 0).expect("request 0").stall_s
+}
+
+#[test]
+fn stall_monotonically_nonincreasing_as_chunks_shrink() {
+    // Probe A's TTFT so B can arrive while A decodes.
+    let mut probe = server(512, 1, None, 1);
+    probe.submit(Request::new(0, AdapterId(0), 512, 2)).unwrap();
+    let ttft = probe.drain(None).unwrap()[0].ttft_s;
+    let arrive_b = ttft * 1.001;
+
+    // 512-token prompt: monolithic, then 1, 2, and 4 chunks. A has only
+    // 2 decode steps left, so fine chunks let it escape mid-prefill.
+    let stalls: Vec<f64> = [None, Some(512), Some(256), Some(128)]
+        .iter()
+        .map(|&c| stall_of_a(c, arrive_b))
+        .collect();
+    for w in stalls.windows(2) {
+        assert!(
+            w[1] <= w[0] + 1e-15,
+            "stall must not grow as chunks shrink: {stalls:?}"
+        );
+    }
+    assert!(
+        stalls[3] < stalls[0] * 0.999,
+        "4-way chunking must strictly cut the stall: {stalls:?}"
+    );
+    assert!(stalls.iter().all(|&s| s >= 0.0));
+    // Single-chunk (chunk >= prompt) equals monolithic up to one rounding
+    // step: monolithic charges the stall directly while a chunk charges
+    // the clock delta `(start + C1) - start`.
+    assert!(
+        (stalls[0] - stalls[1]).abs() <= 1e-12 * stalls[0].max(1.0),
+        "single chunk vs monolithic stall: {stalls:?}"
+    );
+}
+
+#[test]
+fn chunked_serving_is_deterministic() {
+    let run = || {
+        let mut s = server(256, 4, Some(128), 3);
+        for i in 0..9u64 {
+            s.submit(
+                Request::new(i, AdapterId((i % 3) as u32), 192 + 32 * (i as usize % 3), 8)
+                    .at(i as f64 * 0.02),
+            )
+            .unwrap();
+        }
+        let res = s.drain(None).unwrap();
+        (res, s.stats().sim_time_s)
+    };
+    let (r1, t1) = run();
+    let (r2, t2) = run();
+    assert_eq!(t1.to_bits(), t2.to_bits());
+    assert_bit_identical(&r1, &r2, "replay");
+}
+
+#[test]
+fn chunked_total_work_matches_monolithic_at_batch_4() {
+    // Same trace, same tokens out, and the same prefill+decode work: the
+    // chunked makespan stays within a whisker of monolithic (alternation
+    // can narrow the average decode width slightly, never by much).
+    let reqs: Vec<Request> = (0..12u64)
+        .map(|i| Request::new(i, AdapterId((i % 2) as u32), 512, 4))
+        .collect();
+    let (mono, t_mono) = drain(server(512, 4, None, 2), &reqs);
+    let (chunked, t_chunked) = drain(server(512, 4, Some(128), 2), &reqs);
+    let toks = |rs: &[RequestResult]| rs.iter().map(|r| r.tokens_out).sum::<usize>();
+    assert_eq!(toks(&mono), toks(&chunked));
+    assert!(
+        (t_chunked - t_mono).abs() / t_mono < 0.05,
+        "makespan drift: mono {t_mono} vs chunked {t_chunked}"
+    );
+}

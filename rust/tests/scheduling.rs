@@ -1,13 +1,16 @@
 //! Integration: the event-driven serving API — legacy bit-match, arrival
-//! gating, batching, scheduling policies, determinism, and stats.
+//! gating, batching, scheduling policies, determinism, stats, a
+//! randomized fuzz harness over policies x prefill modes x batch widths,
+//! and the adapter-affinity starvation bound.
 
 use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use primal::coordinator::{
     AdapterId, Fcfs, FunctionalMode, Request, RequestResult, Server, ServerBuilder,
-    ServerConfig, ShortestJobFirst,
+    ServerConfig, ShortestJobFirst, TokenEvent,
 };
 use primal::dataflow::{prefill_program, reprogram_program};
 use primal::sim::{program_cost, LayerCostModel, Simulator};
+use primal::util::Rng;
 
 fn exp_1b(ctx: usize) -> ExperimentConfig {
     ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], ctx)
@@ -315,6 +318,205 @@ fn run_until_partitions_work_at_the_deadline() {
     assert_eq!(late[0].request, 1);
     assert!(late[0].start_s >= far);
     assert_eq!(late[0].queue_s, 0.0);
+}
+
+// ---- randomized scheduling fuzz harness ----------------------------------
+
+const FUZZ_ADAPTERS: u32 = 3;
+const FUZZ_REQUESTS: usize = 12;
+
+/// Seeded trace: mixed adapters, Poisson-ish arrivals, mixed prompt and
+/// output lengths (exercising both chunk-schedule branches).
+fn fuzz_trace(seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..FUZZ_REQUESTS as u64)
+        .map(|i| {
+            t += rng.f64() * 0.05;
+            let adapter = AdapterId(rng.range(0, FUZZ_ADAPTERS as usize) as u32);
+            let input = 64 + rng.range(0, 256);
+            let output = 4 + rng.range(0, 20);
+            Request::new(i, adapter, input, output).at(t)
+        })
+        .collect()
+}
+
+fn fuzz_run(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+) -> (Vec<RequestResult>, Vec<TokenEvent>, f64, u64, u64) {
+    let mut s = ServerBuilder::from_experiment(exp_1b(256))
+        .max_batch(batch)
+        .policy_kind(policy)
+        .prefill_chunk(chunk)
+        .build()
+        .expect("server");
+    for a in 0..FUZZ_ADAPTERS {
+        s.register_adapter(AdapterId(a));
+    }
+    for r in fuzz_trace(seed) {
+        s.submit(r).unwrap();
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let results = s.drain(Some(&tx)).unwrap();
+    drop(tx);
+    let events: Vec<TokenEvent> = rx.iter().collect();
+    let st = s.stats();
+    (results, events, st.sim_time_s, st.adapter_swaps, st.adapter_hits)
+}
+
+fn check_invariants(
+    label: &str,
+    results: &[RequestResult],
+    events: &[TokenEvent],
+    swaps: u64,
+    hits: u64,
+) {
+    // Completed-request conservation: every submitted id retires once.
+    assert_eq!(results.len(), FUZZ_REQUESTS, "{label}: conservation");
+    let mut ids: Vec<u64> = results.iter().map(|r| r.request).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..FUZZ_REQUESTS as u64).collect::<Vec<_>>(), "{label}: ids");
+
+    for r in results {
+        assert!(r.start_s >= r.arrival_s, "{label}: {} started early", r.request);
+        assert_eq!(
+            r.queue_s.to_bits(),
+            (r.start_s - r.arrival_s).to_bits(),
+            "{label}: queue identity of {}",
+            r.request
+        );
+        assert!(r.ttft_s > 0.0 && r.stall_s >= 0.0, "{label}: {}", r.request);
+        assert!(r.total_s >= r.ttft_s, "{label}: {} total < ttft", r.request);
+    }
+
+    // Token-stream sanity: per request, `output_tokens` strictly
+    // monotone events, none before arrival + TTFT (event times are
+    // relative to admission, so absolute time is start_s + at_s).
+    for r in results {
+        let times: Vec<f64> = events
+            .iter()
+            .filter(|e| e.request == r.request)
+            .map(|e| e.at_s)
+            .collect();
+        assert_eq!(times.len(), r.tokens_out, "{label}: stream of {}", r.request);
+        assert!(
+            times.windows(2).all(|w| w[1] > w[0]),
+            "{label}: stream of {} not monotone",
+            r.request
+        );
+        let first_abs = r.start_s + times[0];
+        assert!(
+            first_abs >= r.arrival_s + r.ttft_s,
+            "{label}: {} emitted a token before arrival + ttft",
+            r.request
+        );
+    }
+
+    // Adapter accounting: every admission is exactly one swap or hit, and
+    // per-adapter swaps never exceed that adapter's admissions.
+    assert_eq!(swaps + hits, FUZZ_REQUESTS as u64, "{label}: swap/hit total");
+    assert!(swaps >= 1, "{label}: the cold start must swap");
+}
+
+#[test]
+fn randomized_traces_hold_invariants_for_all_modes() {
+    for seed in [1u64, 7, 42] {
+        for &(batch, chunk) in &[(1usize, None), (1, Some(128)), (4, None), (4, Some(128))] {
+            for policy in [
+                PolicyKind::Fcfs,
+                PolicyKind::AdapterAffinity,
+                PolicyKind::ShortestJobFirst,
+            ] {
+                let label = format!(
+                    "seed {seed} / {} / batch {batch} / chunk {chunk:?}",
+                    policy.name()
+                );
+                let (results, events, sim_t, swaps, hits) =
+                    fuzz_run(seed, policy, batch, chunk);
+                check_invariants(&label, &results, &events, swaps, hits);
+
+                // Identical replay determinism, bit for bit.
+                let (r2, _, t2, s2, h2) = fuzz_run(seed, policy, batch, chunk);
+                assert_eq!(sim_t.to_bits(), t2.to_bits(), "{label}: clock replay");
+                assert_eq!((swaps, hits), (s2, h2), "{label}: swap replay");
+                for (a, b) in results.iter().zip(&r2) {
+                    assert_eq!(a.request, b.request, "{label}: order replay");
+                    assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                    assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                    assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_adapter_swaps_bounded_by_admissions() {
+    let (results, _, _, _, _) = fuzz_run(7, PolicyKind::AdapterAffinity, 4, Some(128));
+    let mut served: std::collections::BTreeMap<u32, u64> = Default::default();
+    for r in &results {
+        *served.entry(r.adapter.0).or_default() += 1;
+    }
+    let mut s = ServerBuilder::from_experiment(exp_1b(256))
+        .max_batch(4)
+        .policy_kind(PolicyKind::AdapterAffinity)
+        .prefill_chunk(Some(128))
+        .build()
+        .unwrap();
+    for a in 0..FUZZ_ADAPTERS {
+        s.register_adapter(AdapterId(a));
+    }
+    for r in fuzz_trace(7) {
+        s.submit(r).unwrap();
+    }
+    s.drain(None).unwrap();
+    for (id, u) in &s.stats().per_adapter {
+        let n = served.get(&id.0).copied().unwrap_or(0);
+        assert_eq!(u.served, n, "adapter {id:?}");
+        assert!(u.swaps <= n, "adapter {id:?}: swaps {} > admissions {n}", u.swaps);
+        assert_eq!(u.swaps + u.hits, n, "adapter {id:?}: swap/hit partition");
+    }
+}
+
+#[test]
+fn affinity_starvation_bound_limits_minority_queue_delay() {
+    // Eight majority-adapter requests and one minority request, all at
+    // t=0: unbounded affinity serves the minority dead last; a run bound
+    // of 2 forces a regroup after two majority admissions.
+    let run = |max_run_len: Option<usize>| {
+        let mut exp = exp_1b(256);
+        exp.serving.affinity_max_run_len = max_run_len;
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(1)
+            .policy_kind(PolicyKind::AdapterAffinity)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(0));
+        s.register_adapter(AdapterId(1));
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(0), 256, 8)).unwrap();
+        }
+        s.submit(Request::new(8, AdapterId(1), 256, 8)).unwrap();
+        let res = s.drain(None).unwrap();
+        assert_eq!(res.len(), 9);
+        let pos = res.iter().position(|r| r.request == 8).unwrap();
+        let queue = res.iter().find(|r| r.request == 8).unwrap().queue_s;
+        (pos, queue)
+    };
+    let (pos_unbounded, q_unbounded) = run(None);
+    let (pos_bounded, q_bounded) = run(Some(2));
+    assert_eq!(pos_unbounded, 8, "unbounded affinity starves the minority to the end");
+    assert!(
+        pos_bounded <= 2,
+        "run bound 2 must serve the minority within one bounded run, got {pos_bounded}"
+    );
+    assert!(
+        q_bounded < q_unbounded * 0.5,
+        "bounded queue delay {q_bounded} not well below unbounded {q_unbounded}"
+    );
 }
 
 #[test]

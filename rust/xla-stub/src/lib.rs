@@ -1,0 +1,203 @@
+//! Offline stub of the slice of the `xla`/xla_extension API that
+//! `primal`'s golden runtime uses (see `rust/src/runtime/backend.rs` for
+//! the documented call sequence). Everything up to execution works — HLO
+//! text is read and carried, clients and executables are real handles —
+//! so configuration errors surface in the same places they would with
+//! the native bindings; only `execute` fails, reporting that the real
+//! PJRT CPU client is not part of the offline build.
+
+use std::fmt;
+
+/// Stub error: a message with `Display`, matching how the native crate's
+/// errors flow through `primal`'s `Context` extension trait.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Whether this `xla` crate can actually execute compiled modules. The
+/// stub cannot (its `execute` always errors); `primal`'s runtime probes
+/// this so golden tests keep skipping under `--features xla`. A real
+/// xla_extension drop-in should answer `true` (or the probe in
+/// `rust/src/runtime/backend.rs` can be hard-wired when porting).
+pub fn execution_supported() -> bool {
+    false
+}
+
+/// Element dtypes the golden artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+/// Parsed HLO module (the stub keeps the raw text).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO *text* file (jax >= 0.5 interchange format).
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(Self { text })
+    }
+
+    /// Size of the carried HLO text in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.text.len()
+    }
+}
+
+/// Computation handle built from a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    hlo_bytes: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { hlo_bytes: proto.byte_len() }
+    }
+}
+
+/// Stub PJRT client.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The native crate opens a CPU PJRT client here; the stub hands back
+    /// a handle so manifest/compile plumbing can be exercised offline.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        if comp.hlo_bytes == 0 {
+            return Err(Error::new("empty HLO module"));
+        }
+        Ok(PjRtLoadedExecutable { hlo_bytes: comp.hlo_bytes })
+    }
+}
+
+/// Stub loaded executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    hlo_bytes: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Real execution needs the native xla_extension library; the stub
+    /// build reports that instead of producing fake numerics.
+    pub fn execute<A>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "PJRT execution is stubbed in the offline build ({}-byte HLO module \
+             compiled); vendor the native xla_extension crate in place of \
+             rust/xla-stub to run golden numerics",
+            self.hlo_bytes
+        )))
+    }
+}
+
+/// Stub device buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new("PJRT execution is stubbed in the offline build"))
+    }
+}
+
+/// Host literal (shape + raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub ty: ElementType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        let width = match ty {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::S8 => 1,
+        };
+        if elems * width != data.len() {
+            return Err(Error::new(format!(
+                "literal shape {shape:?} ({ty:?}) wants {} bytes, got {}",
+                elems * width,
+                data.len()
+            )));
+        }
+        Ok(Self { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::new("PJRT execution is stubbed in the offline build"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::new("PJRT execution is stubbed in the offline build"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_checks_byte_length() {
+        let ok = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 3],
+            &[0u8; 24],
+        );
+        assert!(ok.is_ok());
+        let bad = Literal::create_from_shape_and_untyped_data(
+            ElementType::S8,
+            &[4],
+            &[0u8; 3],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn execute_reports_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[1],
+            &[0u8; 4],
+        )
+        .unwrap();
+        let err = exe.execute::<Literal>(&[lit]).unwrap_err();
+        assert!(err.to_string().contains("stubbed"), "{err}");
+    }
+}
