@@ -11,10 +11,15 @@ integer arithmetic, same order of operations):
   * noc closed-form spanning-tree metrics + AnalyticNoc
   * isa program structures and sim::cost::{instr,phase,program}_cost
   * dataflow::{decode,prefill,reprogram}_program
-  * sim::LayerCostModel (geometric kv sampling + lerp)
-  * sim::engine::Simulator::run_batched (cycles + energy ledger)
+  * sim::LayerCostModel (geometric kv sampling + lerp; sharded variant
+    samples chip 0's program slice)
+  * mapping::shard (split_even work shares) + dataflow::shard_program_slice
+  * noc::chipmesh (chip-ring all-reduce closed form)
+  * sim::engine::Simulator::run_sharded_batched (cycles + energy ledger,
+    n_chips tensor-parallel sharding; 1 chip collapses bit-for-bit)
   * coordinator::Server event loop — monolithic AND chunked prefill,
-    batched decode, Fcfs / AdapterAffinity(/max_run_len) / SJF policies
+    batched decode, Fcfs / AdapterAffinity(/max_run_len) / SJF policies,
+    sharded decode/prefill costs
 
 Running it regenerates the instruction-count proxy values committed in
 rust/benches/baselines/sim_proxy.txt and re-checks the serving gates the
@@ -616,6 +621,85 @@ def reprogram_program(lm):
 
 
 # ---------------------------------------------------------------------------
+# sharding mirrors: mapping::shard, dataflow::shard_program_slice,
+# noc::chipmesh (ShardConfig defaults: 250-cycle hop, 32 B/cycle links)
+# ---------------------------------------------------------------------------
+
+CHIP_HOP_CYCLES = 250
+CHIP_LINK_BPC = 32.0
+ALLREDUCES_PER_LAYER = 2
+
+
+def share_of(total, chip, n):
+    """mapping::shard::share_of — exact integer share of chip `chip`."""
+    n = max(n, 1)
+    return total // n + (1 if chip < total % n else 0)
+
+
+def split_even(total, n):
+    return [share_of(total, i, n) for i in range(max(n, 1))]
+
+
+def shard_program_slice(prog, chip, n):
+    """dataflow::shard_program_slice on the mirror's instr tuples."""
+    out = []
+    for overlaps, instrs in prog:
+        ni = []
+        for i in instrs:
+            k = i[0]
+            if k in ("smac", "srmac", "dmac", "softmax", "sprd", "spwr"):
+                ni.append((k, i[1], share_of(i[2], chip, n)))
+            elif k == "ucast":
+                ni.append((k, i[1], i[2], share_of(i[3], chip, n)))
+            else:
+                ni.append(i)
+        out.append((overlaps, ni))
+    return out
+
+
+def chip_all_reduce_cycles(n_chips, bytes_):
+    """noc::ChipMesh::all_reduce_cycles (ring, 2(n-1) steps)."""
+    if n_chips <= 1 or bytes_ == 0:
+        return 0
+    steps = 2 * (n_chips - 1)
+    chunk = -(-bytes_ // n_chips)
+    return steps * (CHIP_HOP_CYCLES + math.ceil(float(chunk) / CHIP_LINK_BPC))
+
+
+def chip_all_reduce_link_bytes(n_chips, bytes_):
+    if n_chips <= 1 or bytes_ == 0:
+        return 0
+    return 2 * (n_chips - 1) * (-(-bytes_ // n_chips))
+
+
+def layer_all_reduce_cycles(n_chips, hidden, tokens):
+    return ALLREDUCES_PER_LAYER * chip_all_reduce_cycles(n_chips, hidden * 4 * tokens)
+
+
+def layer_all_reduce_link_bytes(n_chips, hidden, tokens):
+    return ALLREDUCES_PER_LAYER * chip_all_reduce_link_bytes(n_chips, hidden * 4 * tokens)
+
+
+def shard_kv_bytes_per_router(lm, n_chips, tokens, slots):
+    """mapping::ShardPlan::kv_bytes_per_router."""
+    kv_tok_chip = -(-lm.kv_token_bytes // max(n_chips, 1))
+    return (-(-tokens // max(lm.kv_ring_routers, 1))) * kv_tok_chip * max(slots, 1)
+
+
+def config_validate_kv(model, targets, ctx, batch, n_chips):
+    """ExperimentConfig::validate's weight-estimate KV check (True = fits)."""
+    m = MODELS[model]
+    layer_weights = (q_dim(m) * m["hidden"] + 2 * kv_dim(m) * m["hidden"]
+                     + m["hidden"] * q_dim(m) + 3 * m["intermediate"] * m["hidden"])
+    cts = max(-(-layer_weights // (PES_PER_CT * 256 * 256)), 1)
+    ring = cts * PES_PER_CT
+    tokens = 2 * ctx
+    kv_tok = -(-(2 * kv_dim(m) * 2) // max(n_chips, 1))
+    per_router = (-(-tokens // ring)) * kv_tok * max(batch, 1)
+    return per_router <= SYS["scratchpad_bytes"]
+
+
+# ---------------------------------------------------------------------------
 # layer cost model mirror
 # ---------------------------------------------------------------------------
 
@@ -623,9 +707,12 @@ KV_SAMPLES = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096, 8192]
 
 
 class LayerCostModel:
-    def __init__(self, model, targets, lm):
-        self.samples = [(kv, program_cost(decode_program(model, targets, lm, kv)))
-                        for kv in KV_SAMPLES]
+    def __init__(self, model, targets, lm, n_chips=1):
+        def prog(kv):
+            p = decode_program(model, targets, lm, kv)
+            return p if n_chips <= 1 else shard_program_slice(p, 0, n_chips)
+
+        self.samples = [(kv, program_cost(prog(kv))) for kv in KV_SAMPLES]
 
     def eval_cycles(self, kv_len):
         pts = self.samples
@@ -732,27 +819,38 @@ class Ledger:
         return self.total_j() / t if t > 0 else 0.0
 
 
-def run_batched(model, targets, ctx, batch=1, srpg=True, overhead=64):
+def run_batched(model, targets, ctx, batch=1, srpg=True, overhead=64, n_chips=1):
+    """Mirror of Simulator::run_sharded_batched (n_chips=1: run_batched)."""
     m = MODELS[model]
     lm = map_model(model, targets)
     b = max(batch, 1)
+    nc = max(n_chips, 1)
+    hidden = m["hidden"]
     ledger = Ledger()
     n_groups = m["layers"]
     cts_per_group = lm.n_cts
-    total_cts = n_groups * cts_per_group
+    total_cts = n_groups * cts_per_group * nc
 
     reprog = program_cost(reprogram_program(lm))
     block = min(128, max(ctx, 1))
     n_blocks = -(-ctx // block)
     stage_cost = []
+    stage_compute = []
     stage_events = []
+    prefill_ar_link = 0
     for bi in range(n_blocks):
         this_block = ctx - bi * block if bi + 1 == n_blocks else block
         kvv = bi * block + this_block // 2
-        c = program_cost(prefill_program(model, targets, lm, this_block, max(kvv, 1)))
-        stage_cost.append(c.cycles)
+        prog = prefill_program(model, targets, lm, this_block, max(kvv, 1))
+        c = program_cost(prog)
+        compute = c.cycles if nc == 1 else program_cost(
+            shard_program_slice(prog, 0, nc)).cycles
+        stage_cost.append(compute + layer_all_reduce_cycles(nc, hidden, this_block))
+        stage_compute.append(compute)
+        prefill_ar_link += layer_all_reduce_link_bytes(nc, hidden, this_block)
         stage_events.append(c)
     layer_prefill_cycles = sum(stage_cost)
+    layer_prefill_compute = sum(stage_compute)
     group_start = [l * layer_prefill_cycles for l in range(n_groups)]
     prefill_makespan = layer_prefill_cycles * n_groups * b
     ttft_penalty, stalls = srpg_plan(n_groups, reprog.cycles, group_start, srpg)
@@ -762,10 +860,13 @@ def run_batched(model, targets, ctx, batch=1, srpg=True, overhead=64):
         for _ in range(n_groups * b):
             ledger.post_cost_events(c)
     ledger.post_sram_writes(reprog.reprog_bytes * n_groups)
+    if nc > 1:
+        ledger.net += float(prefill_ar_link * (n_groups * b) * 4) \
+            * CAL["hop_energy_pj_per_byte"] * 1e-12
 
-    active_ct = float(layer_prefill_cycles) * float(n_groups * cts_per_group * b)
+    active_ct = float(layer_prefill_compute) * float(n_groups * cts_per_group * b * nc)
     total_ct = float(ttft_cycles) * float(total_cts)
-    reprog_ct = float(reprog.cycles * n_groups) * float(cts_per_group)
+    reprog_ct = float(reprog.cycles * n_groups) * float(cts_per_group) * float(nc)
     idle_ct = max(total_ct - active_ct - reprog_ct, 0.0)
     idle_state = "gated" if srpg else "idle_ungated"
     ledger.post_state("active", active_ct, 1)
@@ -773,23 +874,29 @@ def run_batched(model, targets, ctx, batch=1, srpg=True, overhead=64):
     ledger.post_state("reprogramming", reprog_ct, 1)
 
     model_lcm = LayerCostModel(model, targets, lm)
+    shard_lcm = model_lcm if nc == 1 else LayerCostModel(model, targets, lm, nc)
+    ar_dec = layer_all_reduce_cycles(nc, hidden, 1)
+    ar_dec_link = layer_all_reduce_link_bytes(nc, hidden, 1)
     decode_total = 0
     out = ctx
     for i in range(out):
         kvv = ctx + i
-        c_cycles = model_lcm.eval_cycles(kvv)
-        tok_cycles = step_cycles([c_cycles] * b, n_groups, overhead)
+        compute = shard_lcm.eval_cycles(kvv)
+        tok_cycles = step_cycles([compute + ar_dec] * b, n_groups, overhead)
         decode_total += tok_cycles
         # dynamic decode energy: eval full cost at kv (lerped counters).
         ev = lerped_cost(model_lcm, kvv)
         for _ in range(n_groups * b):
             ledger.post_cost_events(ev)
-        if b == 1:
+        if nc > 1:
+            ledger.net += float(ar_dec_link * (n_groups * b) * 4) \
+                * CAL["hop_energy_pj_per_byte"] * 1e-12
+        if b == 1 and nc == 1:
             active = float(tok_cycles) * float(cts_per_group)
             idle = float(tok_cycles) * float((n_groups - 1) * cts_per_group)
         else:
-            active = float(b * n_groups * c_cycles) * float(cts_per_group)
-            total = float(tok_cycles) * float(n_groups * cts_per_group)
+            active = float(b * (n_groups * nc) * compute) * float(cts_per_group)
+            total = float(tok_cycles) * float(n_groups * cts_per_group * nc)
             idle = max(total - active, 0.0)
         ledger.post_state("active", active, 1)
         ledger.post_state(idle_state, idle, 1)
@@ -958,7 +1065,8 @@ class Server:
     """Mirror of coordinator::Server (timing only, no energy)."""
 
     def __init__(self, model, targets, ctx, max_batch=1, policy="fcfs",
-                 prefill_chunk=None, srpg=True, overhead=64, max_run_len=None):
+                 prefill_chunk=None, srpg=True, overhead=64, max_run_len=None,
+                 n_chips=1):
         self.m = MODELS[model]
         self.lm = map_model(model, targets)
         self.ctx = ctx
@@ -967,6 +1075,7 @@ class Server:
         self.overhead = overhead
         self.prefill_chunk = prefill_chunk
         self.policy = Policy(policy, max_run_len)
+        nc = max(n_chips, 1)
         reprog = program_cost(reprogram_program(self.lm))
         if srpg:
             self.reprog_s = float(reprog.cycles) * CYCLE_S
@@ -978,9 +1087,13 @@ class Server:
         for bi in range(n_blocks):
             this_block = ctx - bi * block if bi + 1 == n_blocks else block
             kvv = max(bi * block + this_block // 2, 1)
-            c = program_cost(prefill_program(model, targets, self.lm, this_block, kvv))
-            self.blocks.append((this_block, float(c.cycles) * CYCLE_S))
-        self.lcm = LayerCostModel(model, targets, self.lm)
+            prog = prefill_program(model, targets, self.lm, this_block, kvv)
+            cycles = (program_cost(prog).cycles if nc == 1 else
+                      program_cost(shard_program_slice(prog, 0, nc)).cycles) \
+                + layer_all_reduce_cycles(nc, self.m["hidden"], this_block)
+            self.blocks.append((this_block, float(cycles) * CYCLE_S))
+        self.lcm = LayerCostModel(model, targets, self.lm, nc)
+        self.ar_dec = layer_all_reduce_cycles(nc, self.m["hidden"], 1)
         self.resident = None
         self.now = 0.0
         self.waiting = []
@@ -1083,7 +1196,8 @@ class Server:
             self.batch.append(job.to_slot())
 
     def decode_step(self):
-        per = [self.lcm.eval_cycles(s.req.inp + s.generated) for s in self.batch]
+        per = [self.lcm.eval_cycles(s.req.inp + s.generated) + self.ar_dec
+               for s in self.batch]
         sc = step_cycles(per, self.n_layers, self.overhead)
         step_s = float(sc) * CYCLE_S
         self.now += step_s
@@ -1318,6 +1432,125 @@ def main():
                 if not ok:
                     print(f"  FAIL {policy}/b{batch}/chunk{chunk}")
     gate("fuzz invariants (3 policies x 2 batch x 2 chunk)", ok_all)
+
+    # ---- multi-chip sharding (PR 4) ---------------------------------------
+    print("\n== sharded mapping checks (run_sharded + Table II Chips cells) ==")
+
+    # 1-chip bit-match on ALL 12 grid points (the non-negotiable gate).
+    bit_ok = True
+    for mdl in ("1b", "8b", "13b"):
+        for tg in (["Q"], ["Q", "V"]):
+            for ctx in (1024, 2048):
+                a = run_batched(mdl, tg, ctx, batch=1)
+                c = run_batched(mdl, tg, ctx, batch=1, n_chips=1)
+                bit_ok &= a == c
+    gate("1-chip sharded bit-matches serial on all 12 grid points", bit_ok)
+
+    # Sliced-program conservation (FLOP/byte classes partition exactly).
+    cons_ok = True
+    for mdl in ("8b", "13b"):
+        lmx = map_model(mdl, ["Q", "V"])
+        for prog in (decode_program(mdl, ["Q", "V"], lmx, 1536),
+                     prefill_program(mdl, ["Q", "V"], lmx, 128, 512)):
+            full = program_cost(prog)
+            for n in (2, 4):
+                tot = Cost()
+                for chip in range(n):
+                    tot._merge_events(program_cost(shard_program_slice(prog, chip, n)))
+                cons_ok &= (tot.rram_passes == full.rram_passes
+                            and tot.sram_passes == full.sram_passes
+                            and tot.dmac_macs == full.dmac_macs
+                            and tot.softmax_elems == full.softmax_elems
+                            and tot.spad_bytes == full.spad_bytes
+                            and tot.d2d_bytes == full.d2d_bytes * n)
+    gate("sliced programs conserve FLOP/byte classes (chips 2,4)", cons_ok)
+
+    # split_even exactness.
+    se_ok = all(sum(split_even(t, n)) == t
+                for t in (0, 7, 40, 65521, 2**32 - 1) for n in range(1, 10))
+    gate("split_even partitions exactly", se_ok)
+
+    # Per-chip KV footprint monotone non-increasing; all-reduce increasing.
+    mono_ok = True
+    for mdl in ("1b", "8b", "13b"):
+        lmx = map_model(mdl, ["Q", "V"])
+        for slots in (1, 4):
+            feet = [shard_kv_bytes_per_router(lmx, n, 4096, slots)
+                    for n in (1, 2, 4, 8)]
+            mono_ok &= all(feet[i] >= feet[i + 1] for i in range(len(feet) - 1))
+    gate("per-chip KV footprint monotone non-increasing", mono_ok)
+    ar_ok = True
+    for hidden in (2048, 4096, 5120):
+        for tokens in (1, 128):
+            costs = [layer_all_reduce_cycles(n, hidden, tokens)
+                     for n in (2, 3, 4, 6, 8)]
+            ar_ok &= all(costs[i] < costs[i + 1] for i in range(len(costs) - 1))
+            ar_ok &= layer_all_reduce_cycles(1, hidden, tokens) == 0
+    gate("all-reduce cost strictly increasing in chip count", ar_ok)
+
+    # Sharded scaling shape on every grid point: 2 chips raise throughput
+    # (within 2x), raise power, lower efficiency.
+    shape_ok = True
+    chips_rows = []
+    for mdl in ("1b", "8b", "13b"):
+        for tg in (["Q"], ["Q", "V"]):
+            for ctx in (1024, 2048):
+                s1 = run_batched(mdl, tg, ctx, batch=1)
+                s2 = run_batched(mdl, tg, ctx, batch=1, n_chips=2)
+                shape_ok &= s1["throughput"] < s2["throughput"] < 2 * s1["throughput"]
+                shape_ok &= s2["power"] > s1["power"] and s2["eff"] < s1["eff"]
+                chips_rows.append((mdl, "+".join(tg), ctx, 2, s2))
+    gate("2-chip sharding: tput in (1,2)x, power up, efficiency down "
+         "(all 12 points)", shape_ok)
+    c4 = run_batched("1b", ["Q", "V"], 1024, batch=1, n_chips=4)
+    c2 = run_batched("1b", ["Q", "V"], 1024, batch=1, n_chips=2)
+    gate("4 chips beat 2 chips on 1B throughput",
+         c4["throughput"] > c2["throughput"],
+         f"({c4['throughput']:.1f} vs {c2['throughput']:.1f})")
+
+    # 13B batch-4: KV-infeasible on 1 and 2 chips, opened at 4 chips, and
+    # the sharded run beats the serial single-chip point.
+    gate("13B/2048 b4 infeasible at 1 chip",
+         not config_validate_kv("13b", ["Q", "V"], 2048, 4, 1))
+    gate("13B/2048 b4 infeasible at 2 chips",
+         not config_validate_kv("13b", ["Q", "V"], 2048, 4, 2))
+    gate("13B/2048 b4 feasible at 4 chips",
+         config_validate_kv("13b", ["Q", "V"], 2048, 4, 4))
+    s13 = run_batched("13b", ["Q", "V"], 2048, batch=1)
+    b4c4 = run_batched("13b", ["Q", "V"], 2048, batch=4, n_chips=4)
+    gate("13B b4 over 4 chips beats serial throughput",
+         b4c4["throughput"] > s13["throughput"],
+         f"({b4c4['throughput']:.1f} vs {s13['throughput']:.1f})")
+    chips_rows.append(("13b", "Q+V", 2048, 4, b4c4))
+
+    # Sharded serving event loop: 1 chip is bit-identical to the default
+    # server; 2 chips drain the same trace strictly faster.
+    serve_trace = [(i, i % 3, 256, 8 + i, 0.0) for i in range(9)]
+
+    def run_sharded_server(chips, batch, chunk):
+        s = Server("1b", ["Q", "V"], 256, max_batch=batch, policy="fcfs",
+                   prefill_chunk=chunk, n_chips=chips)
+        for r in serve_trace:
+            s.submit(Req(*r))
+        return s, s.drain()
+
+    sa, ra = run_sharded_server(1, 4, 128)
+    s_dflt = Server("1b", ["Q", "V"], 256, max_batch=4, policy="fcfs",
+                    prefill_chunk=128)
+    for r in serve_trace:
+        s_dflt.submit(Req(*r))
+    rb = s_dflt.drain()
+    gate("1-chip sharded server bit-matches default server",
+         ra == rb and sa.now == s_dflt.now)
+    s2_, _ = run_sharded_server(2, 4, 128)
+    gate("2-chip server drains the trace strictly faster",
+         s2_.now < sa.now, f"({s2_.now:.3f} vs {sa.now:.3f} s)")
+
+    # The blessed Table II "Chips" cells (cross-check for the Rust bench).
+    print("\n  Table II Chips cells (model/lora/ctx/chips: tok/s, W, tok/J):")
+    for mdl, tg, ctx, n, s in chips_rows:
+        print(f"    {mdl:>3} {tg:>3} {ctx:>4} c{n}: "
+              f"{s['throughput']:8.2f} {s['power']:6.2f} {s['eff']:8.2f}")
 
     # ---- affinity starvation bound ---------------------------------------
     print("\n== affinity max_run_len starvation bound ==")

@@ -8,12 +8,14 @@ mod calib;
 mod lora;
 mod models;
 mod serving;
+mod shard;
 mod system;
 
 pub use calib::CalibConstants;
 pub use lora::{LoraConfig, LoraTarget};
 pub use models::{ModelConfig, ModelId};
 pub use serving::{PolicyKind, ServingConfig};
+pub use shard::ShardConfig;
 pub use system::{MacroParams, SystemConfig};
 
 
@@ -39,6 +41,8 @@ pub struct ExperimentConfig {
     /// Serving-coordinator knobs (batched decode + admission policy).
     /// Defaults reproduce the paper's serial batch-1 FCFS model.
     pub serving: ServingConfig,
+    /// Multi-chip tensor-parallel sharding (1 chip = the paper's system).
+    pub shard: ShardConfig,
     pub calib: CalibConstants,
 }
 
@@ -63,6 +67,7 @@ impl ExperimentConfig {
             srpg: true,
             include_lm_head: false,
             serving: ServingConfig::default(),
+            shard: ShardConfig::default(),
             calib: CalibConstants::default(),
         }
     }
@@ -94,6 +99,9 @@ impl ExperimentConfig {
                 self.lora.rank, self.system.sram_cols
             ));
         }
+        if self.shard.n_chips == 0 {
+            problems.push("shard.n_chips must be >= 1".into());
+        }
         // KV capacity: the cyclic ring stripes fp16 K+V over every router
         // of a layer's CT group (see mapping::layer). Estimate the group
         // size from the weight footprint and check the per-router share
@@ -106,13 +114,18 @@ impl ExperimentConfig {
         let ring_routers = cts_per_layer * self.system.pes_per_ct();
         let tokens = self.input_tokens + self.output_tokens;
         let kv_token_bytes = 2 * self.model.kv_dim() * 2; // K+V, fp16
+        // Tensor-parallel sharding splits each token's K+V vector across
+        // chips by attention head, so the per-chip resident share shrinks
+        // with the chip count (the lever that opens batch points a single
+        // chip's scratchpads reject; see mapping::shard).
+        let kv_token_chip = kv_token_bytes.div_ceil(self.shard.n_chips.max(1));
         // Every in-flight decode slot holds its own KV ring share, so the
         // batched footprint scales with serving.max_batch. This is an
         // *estimate* from the weight footprint (config cannot see the
         // mapper); the authoritative mapping-based check lives in
         // `coordinator::ServerBuilder::build`.
         let slots = self.serving.max_batch.max(1);
-        let per_router = tokens.div_ceil(ring_routers) * kv_token_bytes * slots;
+        let per_router = tokens.div_ceil(ring_routers) * kv_token_chip * slots;
         if per_router > self.system.scratchpad_bytes {
             problems.push(format!(
                 "KV cache needs {per_router} B/router ({slots} slot(s)) but \

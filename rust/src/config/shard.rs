@@ -1,0 +1,67 @@
+//! Multi-chip sharding knobs: how many PRIMAL chips serve one model and
+//! the chip-to-chip interconnect parameters.
+//!
+//! The paper evaluates a single chip (one 2D-mesh IPCN of CTs). The
+//! sharded extension tensor-parallel-splits every decoder layer's
+//! projection and LoRA CT groups across `n_chips` identical chips
+//! (column splits for QKV/gate/up, row splits for O/down, head splits
+//! for attention + KV), joined by an explicit all-reduce per projection
+//! pair on a chip-level ring. These fields parameterize that ring; the
+//! cost model lives in `noc::chipmesh` and the work partition in
+//! `mapping::shard`.
+//!
+//! `n_chips == 1` is the paper's configuration and collapses every
+//! sharded arithmetic path to the single-chip expressions bit-for-bit
+//! (gated in `tests/sharding.rs` and `benches/table2.rs`).
+
+/// Chip-level sharding configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardConfig {
+    /// Chips the model is tensor-parallel-sharded over (1 = the paper's
+    /// single-chip system; the sharded cost paths all collapse exactly).
+    pub n_chips: usize,
+    /// Per-hop latency of one chip-to-chip ring link in cycles (SerDes +
+    /// package traversal; an order of magnitude above the intra-chip
+    /// `CalibConstants::d2d_latency_cycles` turnaround).
+    pub chip_hop_cycles: u64,
+    /// Effective chip-to-chip link bandwidth in bytes per cycle (the
+    /// inter-chip SerDes is wider than one intra-chip mesh link).
+    pub chip_link_bytes_per_cycle: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            n_chips: 1,
+            chip_hop_cycles: 250,
+            chip_link_bytes_per_cycle: 32.0,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// A copy of this config at a given chip count (the common override).
+    pub fn with_chips(mut self, n_chips: usize) -> Self {
+        self.n_chips = n_chips.max(1);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_single_chip() {
+        let s = ShardConfig::default();
+        assert_eq!(s.n_chips, 1);
+        assert!(s.chip_hop_cycles > 0);
+        assert!(s.chip_link_bytes_per_cycle > 0.0);
+    }
+
+    #[test]
+    fn with_chips_clamps_to_one() {
+        assert_eq!(ShardConfig::default().with_chips(4).n_chips, 4);
+        assert_eq!(ShardConfig::default().with_chips(0).n_chips, 1);
+    }
+}

@@ -39,7 +39,9 @@ use super::batch::{DecodeBatch, PrefillJob, Slot};
 use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
-use crate::dataflow::{prefill_program, reprogram_program};
+use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
+use crate::mapping::ShardPlan;
+use crate::noc::ChipMesh;
 use crate::runtime::{Executable, GoldenRuntime};
 use crate::sim::cost::program_cost;
 use crate::sim::{LayerCostModel, Simulator};
@@ -338,24 +340,30 @@ impl ServerBuilder {
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
         let lm0 = &mapping.layers[0];
+        let n_chips = exp.shard.n_chips.max(1);
+        let mesh = ChipMesh::new(&exp.shard, n_chips);
 
         // Batched KV pressure: every in-flight slot stripes its own KV
-        // ring over the layer group's scratchpads. This is the
-        // authoritative (mapping-based) version of the estimate in
-        // `ExperimentConfig::validate`.
-        let kv_per_router = lm0
-            .kv_bytes_per_router(exp.input_tokens + exp.output_tokens)
-            * self.max_batch;
+        // ring over the layer group's scratchpads; tensor-parallel
+        // sharding divides each token's resident K+V share across the
+        // chips' rings. This is the authoritative (mapping-based) version
+        // of the estimate in `ExperimentConfig::validate`.
+        let plan = ShardPlan::new(&exp, mapping, n_chips);
+        let kv_per_router =
+            plan.kv_bytes_per_router(exp.input_tokens + exp.output_tokens, self.max_batch);
         if kv_per_router > exp.system.scratchpad_bytes {
             bail!(
-                "batched KV needs {kv_per_router} B/router ({} slots) but the \
-                 scratchpad is {} B — shorten the context or narrow the batch",
+                "batched KV needs {kv_per_router} B/router ({} slots over {} \
+                 chip(s)) but the scratchpad is {} B — shorten the context, \
+                 narrow the batch, or shard over more chips",
                 self.max_batch,
+                n_chips,
                 exp.system.scratchpad_bytes
             );
         }
 
-        let layer_model = LayerCostModel::build_cached(&exp, lm0);
+        let layer_model = LayerCostModel::build_cached_for_chips(&exp, lm0, n_chips);
+        let shard_ar_decode_cycles = mesh.layer_all_reduce_cycles(exp.model.hidden, 1);
         let cyc = exp.system.cycle_s();
 
         // Reprogramming cost for one group (SRPG pipelines the rest).
@@ -366,7 +374,10 @@ impl ServerBuilder {
             (reprog.cycles * exp.model.layers as u64) as f64 * cyc
         };
 
-        // Prefill stage template at the experiment's input length.
+        // Prefill stage template at the experiment's input length. The
+        // sharded block cost mirrors `Simulator::run_sharded_batched`:
+        // chip 0's (widest) program slice plus the block's per-layer
+        // all-reduce; both collapse to the unsharded cost at one chip.
         let block = 128usize.min(exp.input_tokens.max(1));
         let n_blocks = exp.input_tokens.div_ceil(block);
         let mut prefill_block_s = Vec::new();
@@ -377,12 +388,15 @@ impl ServerBuilder {
                 block
             };
             let kv = (b * block + this_block / 2).max(1);
-            let c = program_cost(
-                &prefill_program(&exp, lm0, this_block, kv),
-                &exp.system,
-                &exp.calib,
-            );
-            prefill_block_s.push((this_block, c.cycles as f64 * cyc));
+            let prog = prefill_program(&exp, lm0, this_block, kv);
+            let compute = if n_chips == 1 {
+                program_cost(&prog, &exp.system, &exp.calib).cycles
+            } else {
+                program_cost(&shard_program_slice(&prog, 0, n_chips), &exp.system, &exp.calib)
+                    .cycles
+            };
+            let cycles = compute + mesh.layer_all_reduce_cycles(exp.model.hidden, this_block);
+            prefill_block_s.push((this_block, cycles as f64 * cyc));
         }
 
         let (golden, golden_exe) = match self.functional {
@@ -409,6 +423,7 @@ impl ServerBuilder {
             finished: Vec::new(),
             now_s: 0.0,
             layer_model,
+            shard_ar_decode_cycles,
             reprog_ttft_s,
             prefill_block_s,
             golden,
@@ -444,8 +459,12 @@ pub struct Server {
     /// Simulated clock (seconds).
     now_s: f64,
     /// Cached per-layer decode model + prefill/reprog costs (the mapping
-    /// is fixed per server).
+    /// is fixed per server). Sharded servers hold chip 0's (widest) slice
+    /// model and charge the chip-ring all-reduce per layer on top.
     layer_model: Arc<LayerCostModel>,
+    /// Per-layer chip-ring all-reduce cycles of one decode token (0 on a
+    /// single chip).
+    shard_ar_decode_cycles: u64,
     reprog_ttft_s: f64,
     prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
     n_layers: usize,
@@ -883,7 +902,7 @@ impl Server {
             .batch
             .slots()
             .iter()
-            .map(|s| self.layer_model.eval(s.kv_len()).cycles)
+            .map(|s| self.layer_model.eval(s.kv_len()).cycles + self.shard_ar_decode_cycles)
             .collect();
         let step_cycles = DecodeBatch::step_cycles(
             &per_layer,
@@ -1074,6 +1093,47 @@ mod tests {
         );
         let r = ServerBuilder::from_experiment(exp).max_batch(64).build();
         assert!(r.is_err(), "64 slots of 13B 2048/2048 KV cannot fit");
+    }
+
+    #[test]
+    fn sharding_opens_batch_points_and_speeds_service() {
+        // 13B 2048/2048 at batch 4: rejected on one chip (the PR 3 silent
+        // skip), admitted at four chips (per-token KV share divides).
+        let exp13 = || {
+            ExperimentConfig::paper_point(
+                ModelId::Llama2_13b,
+                &[LoraTarget::Q, LoraTarget::V],
+                2048,
+            )
+        };
+        assert!(
+            ServerBuilder::from_experiment(exp13()).max_batch(4).build().is_err(),
+            "13B batch 4 must NOT fit one chip"
+        );
+        let mut sharded = exp13();
+        sharded.shard.n_chips = 4;
+        assert!(
+            ServerBuilder::from_experiment(sharded).max_batch(4).build().is_ok(),
+            "13B batch 4 must fit four chips"
+        );
+
+        // Sharded decode steps are strictly shorter: same trace, lower
+        // total service time (cheap 1B point keeps the test fast).
+        let run = |chips: usize| -> f64 {
+            let mut exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                256,
+            );
+            exp.shard.n_chips = chips;
+            let mut s = ServerBuilder::from_experiment(exp).build().unwrap();
+            s.register_adapter(AdapterId(0));
+            s.submit(Request::new(0, AdapterId(0), 256, 16)).unwrap();
+            s.run(None).unwrap()[0].total_s
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        assert!(t2 < t1, "sharded service {t2} must beat single-chip {t1}");
     }
 
     #[test]

@@ -11,4 +11,6 @@
 
 mod generate;
 
-pub use generate::{decode_program, prefill_program, reprogram_program, ProgramParams};
+pub use generate::{
+    decode_program, prefill_program, reprogram_program, shard_program_slice, ProgramParams,
+};

@@ -27,21 +27,23 @@ fn usage() -> ! {
 
 commands:
   simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--batch N]
-             [--no-srpg] [--trace]
-  report     --table <1|2|3|4|h100|srpg> [--batch N] (tables 2/3 only)
+             [--chips N] [--no-srpg] [--trace]
+  report     --table <1|2|3|4|h100|srpg> [--batch N] [--chips N]
+             (batch/chips: tables 2/3 only)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
-             [--batch N] [--policy fcfs|affinity|sjf] [--rate R]
-             [--prefill-chunk N] [--max-run-len N] [--golden]
+             [--batch N] [--chips N] [--policy fcfs|affinity|sjf]
+             [--rate R] [--prefill-chunk N] [--max-run-len N] [--golden]
              (--rate R: Poisson arrivals at R req/s; 0 = all at t=0;
               --prefill-chunk N: chunk admissions into N-token prefill
               pieces interleaved with decode steps;
-              --max-run-len N: affinity starvation bound)
+              --max-run-len N: affinity starvation bound;
+              --chips N: tensor-parallel shard over N chips)
   sweep      --model <1b|8b|13b> [--from N] [--to N]
   validate   [--artifacts DIR]
 
 examples:
   primal simulate --model 13b --ctx 2048 --lora qv
-  primal report --table 2 --batch 4
+  primal report --table 2 --batch 4 --chips 2
   primal serve --model 1b --requests 16 --adapters 3 --batch 4 \\
                --policy affinity --prefill-chunk 128
   primal validate"
@@ -108,6 +110,7 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     let ctx = num_flag(&flags, "ctx", 1024);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     cfg.serving.max_batch = num_flag(&flags, "batch", 1).max(1);
+    cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
     if flags.contains_key("no-srpg") {
         cfg.srpg = false;
     }
@@ -128,6 +131,7 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     println!("LoRA         : rank 8 ({})", r.lora_label);
     println!("context      : {}/{}", r.input_tokens, r.output_tokens);
     println!("batch        : {}", r.batch);
+    println!("chips        : {}", r.n_chips);
     println!("SRPG         : {}", if r.srpg { "on" } else { "off" });
     println!("CTs          : {} ({} per layer)", r.total_cts, r.cts_per_layer);
     println!("TTFT         : {:.3} s", r.ttft_s);
@@ -147,36 +151,46 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
 fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let which = flags.get("table").map(String::as_str).unwrap_or("2");
     let batch = num_flag(&flags, "batch", 1).max(1);
+    let chips = num_flag(&flags, "chips", 1).max(1);
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
         "2" | "3" => {
+            let mut qualifier = String::new();
+            if batch > 1 {
+                qualifier.push_str(&format!(" at batch {batch}"));
+            }
+            if chips > 1 {
+                qualifier.push_str(&format!(" over {chips} chips"));
+            }
             eprintln!(
                 "running the 12-point paper grid (three models x two LoRA sets x \
-                 two contexts){}...",
-                if batch > 1 { format!(" at batch {batch}") } else { String::new() }
+                 two contexts){qualifier}..."
             );
             let mut reports = Vec::new();
             for cfg in &metrics::paper_grid() {
-                // Re-validate at the requested batch: the KV-capacity check
-                // scales with serving.max_batch, so a physically infeasible
-                // batch is skipped loudly (e.g. 13B KV rings cannot hold 4
-                // slots per router) rather than tabulated as if it fit.
+                // Re-validate at the requested batch and chip count: the
+                // KV-capacity check scales with serving.max_batch and
+                // divides by shard.n_chips, so a physically infeasible
+                // point is skipped loudly (e.g. 13B KV rings cannot hold 4
+                // slots per router on one chip) rather than tabulated as
+                // if it fit.
                 let mut cfg = cfg.clone();
                 cfg.serving.max_batch = batch;
+                cfg.shard.n_chips = chips;
                 let problems = cfg.validate();
                 if !problems.is_empty() {
                     for p in &problems {
                         eprintln!(
-                            "skipping {} ctx {} at batch {batch}: {p}",
+                            "skipping {} ctx {} at batch {batch} / {chips} chip(s): {p}",
                             cfg.model.id, cfg.input_tokens
                         );
                     }
                     continue;
                 }
-                reports.push(metrics::run_point_batched(&cfg, batch));
+                reports.push(metrics::run_point_sharded(&cfg, batch, chips));
             }
             if reports.is_empty() {
-                eprintln!("no grid point is feasible at batch {batch}");
+                eprintln!("no grid point is feasible at batch {batch} / {chips} chip(s)");
                 return ExitCode::FAILURE;
             }
             if which == "2" {
@@ -234,6 +248,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     let max_run_len = positive_flag("max-run-len");
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     cfg.serving.affinity_max_run_len = max_run_len;
+    cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
     let functional = if flags.contains_key("golden") {
         FunctionalMode::Golden
     } else {

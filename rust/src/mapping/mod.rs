@@ -13,14 +13,22 @@
 //! contiguous group of adjacent CTs ("CT-based, layer-wise weight
 //! allocation"), which is what SRPG's pipelined reprogramming and
 //! power-gating operate on.
+//!
+//! Above the single-chip mapping sits the chip tier ([`shard`]): a
+//! [`ShardPlan`] tensor-parallel-splits every layer's projection and LoRA
+//! CT groups across `n_chips` identical chips with exact (conserved)
+//! integer work shares; the chip-to-chip all-reduce cost lives in
+//! `noc::chipmesh`.
 
 mod layer;
 mod optimizer;
 mod placement;
+mod shard;
 
 pub use layer::{LayerMapping, ModelMapping};
 pub use optimizer::{optimize_layer, MappingStrategy};
 pub use placement::{MatrixId, MatrixRegion, MatrixShape};
+pub use shard::{share_of, split_even, ShardPlan, ShardSlice};
 
 use crate::config::ExperimentConfig;
 

@@ -1,0 +1,219 @@
+//! Chip-level sharding: the tier above the CT-group mapping.
+//!
+//! The single-chip mapping allocates each decoder layer one contiguous CT
+//! group. [`ShardPlan`] splits that layer across `n_chips` identical
+//! chips tensor-parallel-wise: QKV/gate/up are column-split, O/down are
+//! row-split, and attention (DMAC score/value work, softmax, the cyclic
+//! KV ring) is split by head, so each chip keeps the same CT-group
+//! footprint but holds and computes an exact `1/n` share of the layer's
+//! work. Shares are integer-exact: for every partitioned quantity the
+//! per-chip shares sum to the unsharded total (`split_even`), which is
+//! the conservation invariant `tests/sharding.rs` gates.
+//!
+//! What the split buys: each token's K+V vector is divided across the
+//! chips' rings instead of landing whole on one router, so the per-chip
+//! scratchpad KV footprint is monotone non-increasing in the chip count —
+//! this is what opens the 13B batch >= 2 points a single chip's 32 KB
+//! scratchpads reject. What it costs: every layer pays the chip-ring
+//! all-reduce critical path ([`crate::noc::ChipMesh`]), and the replicated
+//! activation broadcasts keep each chip's streaming terms whole (sharded
+//! speedup is below ideal `n`x by construction — the per-shard program
+//! slices in `dataflow::shard_program_slice` keep the full delivery
+//! instructions and split only the resident compute).
+
+use super::layer::ModelMapping;
+use crate::config::ExperimentConfig;
+
+/// Split `total` into `n` integer shares that sum to `total` exactly;
+/// share 0 is the largest (`ceil(total / n)`), the tail shares the
+/// smallest (`floor(total / n)`).
+pub fn split_even(total: u64, n: usize) -> Vec<u64> {
+    let n = n.max(1);
+    let nu = n as u64;
+    let base = total / nu;
+    let rem = (total % nu) as usize;
+    (0..n).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Share of chip `chip` under [`split_even`] without materializing the
+/// vector (chip 0's share is `total.div_ceil(n)`).
+pub fn share_of(total: u64, chip: usize, n: usize) -> u64 {
+    let n = n.max(1) as u64;
+    total / n + u64::from((chip as u64) < total % n)
+}
+
+/// One chip's exact slice of a decoder layer's work and residency.
+///
+/// The slice is the *contract* the cost paths realize: the per-router KV
+/// check consumes `kv_token_bytes` (via [`ShardPlan::kv_bytes_per_router`]),
+/// and `dataflow::shard_program_slice` applies the same `share_of`
+/// partition per instruction — element-granular, which equals the
+/// head-granular split recorded here whenever the chip count divides the
+/// head count (all evaluated configurations). The conservation suite
+/// gates both representations against the same totals so they cannot
+/// drift apart silently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSlice {
+    pub chip: usize,
+    /// Projection + MLP weights resident (= SMAC MACs per token).
+    pub smac_weights: u64,
+    /// Attention heads assigned (DMAC score/value + softmax share).
+    pub attn_heads: u64,
+    /// LoRA adapter parameters resident in SRAM-DCIM.
+    pub lora_params: u64,
+    /// K+V bytes per token resident on this chip's ring (fp16).
+    pub kv_token_bytes: u64,
+}
+
+/// The chip-level tier above [`ModelMapping`]: per-chip slices of one
+/// layer (all layers are identical, so one slice set describes the model).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub n_chips: usize,
+    pub slices: Vec<ShardSlice>,
+    /// Per-layer unsharded totals the slices partition (for the
+    /// conservation gates).
+    pub layer_smac_weights: u64,
+    pub layer_attn_heads: u64,
+    pub layer_lora_params: u64,
+    pub layer_kv_token_bytes: u64,
+    /// Ring routers per chip (the CT-group footprint replicates; only the
+    /// resident share shrinks).
+    pub ring_routers: usize,
+}
+
+impl ShardPlan {
+    pub fn new(cfg: &ExperimentConfig, mapping: &ModelMapping, n_chips: usize) -> Self {
+        let n = n_chips.max(1);
+        let m = &cfg.model;
+        let lm0 = &mapping.layers[0];
+        let smac = m.layer_weights() as u64;
+        let heads = m.n_heads as u64;
+        let lora = cfg.lora.layer_params(m.hidden, m.q_dim(), m.kv_dim()) as u64;
+        let kv_tok = lm0.kv_token_bytes as u64;
+
+        let smacs = split_even(smac, n);
+        let head_s = split_even(heads, n);
+        let loras = split_even(lora, n);
+        let kvs = split_even(kv_tok, n);
+        let slices = (0..n)
+            .map(|chip| ShardSlice {
+                chip,
+                smac_weights: smacs[chip],
+                attn_heads: head_s[chip],
+                lora_params: loras[chip],
+                kv_token_bytes: kvs[chip],
+            })
+            .collect();
+        Self {
+            n_chips: n,
+            slices,
+            layer_smac_weights: smac,
+            layer_attn_heads: heads,
+            layer_lora_params: lora,
+            layer_kv_token_bytes: kv_tok,
+            ring_routers: lm0.kv_ring_routers,
+        }
+    }
+
+    /// The widest per-chip K+V bytes-per-token share (chip 0's).
+    pub fn kv_token_bytes_per_chip(&self) -> usize {
+        self.slices.first().map(|s| s.kv_token_bytes as usize).unwrap_or(0)
+    }
+
+    /// Worst-case scratchpad bytes one ring router needs for `tokens` of
+    /// context with `slots` in-flight decode slots (the sharded version
+    /// of `LayerMapping::kv_bytes_per_router`). Monotone non-increasing
+    /// in the chip count: the ring footprint is fixed while the resident
+    /// per-token share shrinks.
+    pub fn kv_bytes_per_router(&self, tokens: usize, slots: usize) -> usize {
+        tokens.div_ceil(self.ring_routers.max(1))
+            * self.kv_token_bytes_per_chip()
+            * slots.max(1)
+    }
+
+    /// Whether the sharded KV of `tokens` context and `slots` slots fits
+    /// the per-router scratchpad budget.
+    pub fn kv_fits(&self, tokens: usize, slots: usize, scratchpad_bytes: usize) -> bool {
+        self.kv_bytes_per_router(tokens, slots) <= scratchpad_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+    use crate::mapping::map_model;
+
+    fn plan(model: ModelId, n: usize) -> (ExperimentConfig, ShardPlan) {
+        let cfg =
+            ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], 2048);
+        let mapping = map_model(&cfg);
+        let p = ShardPlan::new(&cfg, &mapping, n);
+        (cfg, p)
+    }
+
+    #[test]
+    fn split_even_is_exact_and_ordered() {
+        for (total, n) in [(10u64, 3usize), (0, 4), (7, 7), (65536, 6), (5, 8)] {
+            let shares = split_even(total, n);
+            assert_eq!(shares.len(), n);
+            assert_eq!(shares.iter().sum::<u64>(), total, "{total}/{n}");
+            assert!(shares.windows(2).all(|w| w[0] >= w[1]), "{shares:?}");
+            for (i, s) in shares.iter().enumerate() {
+                assert_eq!(*s, share_of(total, i, n));
+            }
+        }
+        assert_eq!(split_even(42, 1), vec![42]);
+        assert_eq!(share_of(42, 0, 1), 42);
+    }
+
+    #[test]
+    fn slices_conserve_layer_totals() {
+        for model in ModelId::all_paper() {
+            for n in [1usize, 2, 4, 8] {
+                let (_, p) = plan(model, n);
+                assert_eq!(p.slices.len(), n);
+                let smac: u64 = p.slices.iter().map(|s| s.smac_weights).sum();
+                let heads: u64 = p.slices.iter().map(|s| s.attn_heads).sum();
+                let lora: u64 = p.slices.iter().map(|s| s.lora_params).sum();
+                let kv: u64 = p.slices.iter().map(|s| s.kv_token_bytes).sum();
+                assert_eq!(smac, p.layer_smac_weights, "{model:?}/{n}: smac");
+                assert_eq!(heads, p.layer_attn_heads, "{model:?}/{n}: heads");
+                assert_eq!(lora, p.layer_lora_params, "{model:?}/{n}: lora");
+                assert_eq!(kv, p.layer_kv_token_bytes, "{model:?}/{n}: kv");
+            }
+        }
+    }
+
+    #[test]
+    fn single_chip_slice_is_the_whole_layer() {
+        let (cfg, p) = plan(ModelId::Llama2_13b, 1);
+        assert_eq!(p.slices[0].smac_weights, cfg.model.layer_weights() as u64);
+        assert_eq!(p.slices[0].attn_heads, cfg.model.n_heads as u64);
+        assert_eq!(p.kv_token_bytes_per_chip(), 2 * cfg.model.kv_dim() * 2);
+    }
+
+    #[test]
+    fn kv_footprint_monotone_in_chips() {
+        for model in ModelId::all_paper() {
+            let mut prev = usize::MAX;
+            for n in [1usize, 2, 4, 8] {
+                let (_, p) = plan(model, n);
+                let f = p.kv_bytes_per_router(4096, 4);
+                assert!(f <= prev, "{model:?}: {f} at {n} chips above {prev}");
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_opens_the_13b_batch4_point() {
+        let (cfg, p1) = plan(ModelId::Llama2_13b, 1);
+        let tokens = cfg.input_tokens + cfg.output_tokens;
+        let spad = cfg.system.scratchpad_bytes;
+        assert!(!p1.kv_fits(tokens, 4, spad), "13B b4 must NOT fit one chip");
+        let (_, p4) = plan(ModelId::Llama2_13b, 4);
+        assert!(p4.kv_fits(tokens, 4, spad), "13B b4 must fit four chips");
+    }
+}

@@ -36,6 +36,12 @@ pub fn run_point_batched(cfg: &ExperimentConfig, batch: usize) -> SimReport {
     Simulator::new(cfg).run_batched(batch)
 }
 
+/// Run one grid point at an explicit batch and chip count (Table II's
+/// "Chips" column; `(batch 1, 1 chip)` bit-matches [`run_point`]).
+pub fn run_point_sharded(cfg: &ExperimentConfig, batch: usize, n_chips: usize) -> SimReport {
+    Simulator::new(cfg).run_sharded_batched(batch, n_chips)
+}
+
 /// Table I — system parameters (prints the active configuration).
 pub fn table1(cfg: &ExperimentConfig) -> String {
     let s = &cfg.system;
@@ -64,11 +70,15 @@ pub fn table1(cfg: &ExperimentConfig) -> String {
 /// lockstep through the layer pipeline: throughput and efficiency count
 /// every request's tokens over the shared wall time, power integrates
 /// the fuller pipeline, and batch 1 reproduces the paper's serial
+/// numbers exactly. The `Chips` column reports tensor-parallel sharding
+/// over the chip-level ring (`Simulator::run_sharded`): per-layer
+/// compute shrinks to the widest chip slice plus the all-reduce, power
+/// integrates `n`x the CTs, and 1 chip reproduces the single-chip
 /// numbers exactly.
 pub fn table2(reports: &[SimReport]) -> String {
     let mut t = Table::new(&[
-        "Model", "LoRA", "Context (In/Out)", "Batch", "Throughput (tok/s)",
-        "Avg Power (W)", "Efficiency (tok/J)",
+        "Model", "LoRA", "Context (In/Out)", "Batch", "Chips",
+        "Throughput (tok/s)", "Avg Power (W)", "Efficiency (tok/J)",
     ])
     .align(0, Align::Left)
     .align(1, Align::Left)
@@ -79,6 +89,7 @@ pub fn table2(reports: &[SimReport]) -> String {
             r.lora_label.clone(),
             format!("{}/{}", r.input_tokens, r.output_tokens),
             r.batch.to_string(),
+            r.n_chips.to_string(),
             fnum(r.throughput_tps, 2),
             fnum(r.avg_power_w, 2),
             fnum(r.efficiency_tpj, 2),
@@ -266,6 +277,23 @@ mod tests {
         assert!(b4.throughput_tps > serial.throughput_tps);
         let t2 = table2(&[serial, b4]);
         assert!(t2.contains("Batch"), "table II must carry the batch column");
+        assert!(t2.contains("Chips"), "table II must carry the chips column");
+    }
+
+    #[test]
+    fn sharded_point_bitmatches_serial_at_one_chip() {
+        let grid = paper_grid();
+        let cfg = &grid[0];
+        let serial = run_point(cfg);
+        let c1 = run_point_sharded(cfg, 1, 1);
+        assert_eq!(serial.throughput_tps.to_bits(), c1.throughput_tps.to_bits());
+        assert_eq!(serial.avg_power_w.to_bits(), c1.avg_power_w.to_bits());
+        assert_eq!(serial.total_cycles, c1.total_cycles);
+        let c2 = run_point_sharded(cfg, 1, 2);
+        assert_eq!(c2.n_chips, 2);
+        assert!(c2.throughput_tps > serial.throughput_tps);
+        let t2 = table2(&[serial, c2]);
+        assert_eq!(t2.matches("Llama 3.2 1B").count(), 2);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Chip-to-chip interconnect: the tier above the intra-chip IPCN.
+//!
+//! Sharded tensor-parallel execution joins `n_chips` PRIMAL chips on a
+//! bidirectional ring of package-level SerDes links. The cost model is
+//! the same closed-form style as [`super::analytic`], but with its own
+//! per-hop latency and link bandwidth ([`crate::config::ShardConfig`]):
+//! inter-chip hops cost an order of magnitude more than intra-chip mesh
+//! hops, and the collective of interest is the **all-reduce** that joins
+//! each chip's partial activations after a row-split projection
+//! (Megatron-style tensor parallelism: one all-reduce after the attention
+//! output projection and one after the MLP down projection).
+//!
+//! The ring all-reduce runs `2 * (n - 1)` steps (reduce-scatter then
+//! all-gather), each moving a `ceil(bytes / n)` chunk per link, so for a
+//! fixed payload the cost is strictly increasing in the chip count —
+//! latency steps accumulate linearly while the streamed volume approaches
+//! `2 * bytes` from below. At `n_chips == 1` every cost is exactly zero,
+//! which is what lets the sharded engine paths collapse bit-for-bit onto
+//! the single-chip model.
+
+use crate::config::ShardConfig;
+
+/// All-reduces per decoder layer per token (attention output + MLP down).
+pub const ALLREDUCES_PER_LAYER: u64 = 2;
+
+/// The chip-level ring interconnect for an `n_chips` shard group.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipMesh {
+    n_chips: usize,
+    hop_cycles: u64,
+    link_bytes_per_cycle: f64,
+}
+
+impl ChipMesh {
+    pub fn new(shard: &ShardConfig, n_chips: usize) -> Self {
+        Self {
+            n_chips: n_chips.max(1),
+            hop_cycles: shard.chip_hop_cycles,
+            link_bytes_per_cycle: shard.chip_link_bytes_per_cycle,
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.n_chips
+    }
+
+    /// Cycles to stream one chunk over one chip link.
+    fn stream_cycles(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.link_bytes_per_cycle).ceil() as u64
+    }
+
+    /// Ring all-reduce of a `bytes` payload resident on every chip:
+    /// `2 * (n - 1)` pipelined steps of `ceil(bytes / n)` chunks. Zero at
+    /// one chip (nothing to reduce) or zero payload.
+    pub fn all_reduce_cycles(&self, bytes: u64) -> u64 {
+        if self.n_chips <= 1 || bytes == 0 {
+            return 0;
+        }
+        let n = self.n_chips as u64;
+        let steps = 2 * (n - 1);
+        let chunk = bytes.div_ceil(n);
+        steps * (self.hop_cycles + self.stream_cycles(chunk))
+    }
+
+    /// Per-layer all-reduce critical path for activations of `tokens`
+    /// tokens with hidden size `hidden` (f32): [`ALLREDUCES_PER_LAYER`]
+    /// ring all-reduces of `hidden * 4 * tokens` bytes each.
+    pub fn layer_all_reduce_cycles(&self, hidden: usize, tokens: usize) -> u64 {
+        ALLREDUCES_PER_LAYER
+            * self.all_reduce_cycles((hidden * 4 * tokens) as u64)
+    }
+
+    /// Total bytes crossing chip-to-chip links during one all-reduce of a
+    /// `bytes` payload (for the energy ledger's network account).
+    pub fn all_reduce_link_bytes(&self, bytes: u64) -> u64 {
+        if self.n_chips <= 1 || bytes == 0 {
+            return 0;
+        }
+        let n = self.n_chips as u64;
+        2 * (n - 1) * bytes.div_ceil(n)
+    }
+
+    /// Per-layer all-reduce link traffic (bytes) for `tokens` tokens.
+    pub fn layer_all_reduce_link_bytes(&self, hidden: usize, tokens: usize) -> u64 {
+        ALLREDUCES_PER_LAYER
+            * self.all_reduce_link_bytes((hidden * 4 * tokens) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh(n: usize) -> ChipMesh {
+        ChipMesh::new(&ShardConfig::default(), n)
+    }
+
+    #[test]
+    fn single_chip_costs_nothing() {
+        assert_eq!(mesh(1).all_reduce_cycles(1 << 20), 0);
+        assert_eq!(mesh(1).all_reduce_link_bytes(1 << 20), 0);
+        assert_eq!(mesh(1).layer_all_reduce_cycles(4096, 128), 0);
+        assert_eq!(mesh(4).all_reduce_cycles(0), 0);
+    }
+
+    #[test]
+    fn all_reduce_strictly_increases_with_chips() {
+        // Fixed layer payloads across the model zoo's hidden sizes.
+        for bytes in [2048u64 * 4, 4096 * 4, 5120 * 4, 5120 * 4 * 128] {
+            let mut prev = 0u64;
+            for n in [1usize, 2, 3, 4, 6, 8] {
+                let c = mesh(n).all_reduce_cycles(bytes);
+                assert!(
+                    c > prev || n == 1,
+                    "{bytes} B over {n} chips: {c} not above {prev}"
+                );
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_components() {
+        // 2 chips, 8192 B: 2 steps of (250 + ceil(4096/32)) = 2 * 378.
+        let m = mesh(2);
+        assert_eq!(m.all_reduce_cycles(8192), 2 * (250 + 128));
+        assert_eq!(m.all_reduce_link_bytes(8192), 2 * 4096);
+    }
+
+    #[test]
+    fn link_volume_approaches_twice_payload() {
+        let bytes = 1 << 20;
+        let v8 = mesh(8).all_reduce_link_bytes(bytes);
+        assert!(v8 < 2 * bytes);
+        assert!(v8 > (2 * bytes) * 3 / 4);
+        assert!(mesh(8).all_reduce_link_bytes(bytes) > mesh(2).all_reduce_link_bytes(bytes));
+    }
+
+    #[test]
+    fn layer_cost_scales_with_tokens() {
+        let m = mesh(4);
+        let t1 = m.layer_all_reduce_cycles(4096, 1);
+        let t128 = m.layer_all_reduce_cycles(4096, 128);
+        assert!(t128 > t1 * 64, "streaming term must dominate at block size");
+    }
+}

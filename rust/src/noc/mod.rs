@@ -10,13 +10,18 @@
 //!    small-mesh studies;
 //!  * [`analytic`] — the closed-form per-instruction cost model used by
 //!    full-model simulation, validated against [`flit`] in tests and in
-//!    the `noc_model` bench (experiment A3).
+//!    the `noc_model` bench (experiment A3);
+//!  * [`chipmesh`] — the chip-to-chip ring above the IPCN (per-hop
+//!    latency/bandwidth distinct from the intra-chip mesh) and its
+//!    all-reduce closed form for tensor-parallel sharding.
 
 pub mod analytic;
+pub mod chipmesh;
 pub mod flit;
 pub mod spanning;
 pub mod topology;
 
 pub use analytic::AnalyticNoc;
+pub use chipmesh::{ChipMesh, ALLREDUCES_PER_LAYER};
 pub use spanning::SpanningTree;
 pub use topology::{xy_path, Mesh};

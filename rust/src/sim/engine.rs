@@ -8,11 +8,13 @@
 use super::cost::{pipelined_step_cycles, program_cost};
 use super::layer_model::LayerCostModel;
 use crate::config::ExperimentConfig;
-use crate::dataflow::{prefill_program, reprogram_program};
+use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
 use crate::energy::{CtPowerState, EnergyLedger};
 use crate::mapping::{map_model, map_model_naive, ModelMapping};
+use crate::noc::ChipMesh;
 use crate::srpg::SrpgSchedule;
 use crate::trace::{Trace, TraceEvent, TraceKind};
+use std::sync::Arc;
 
 /// Everything a paper table needs about one simulated request (or batch
 /// of identical requests — see [`Simulator::run_batched`]).
@@ -28,6 +30,10 @@ pub struct SimReport {
     /// latencies (`itl_ms`) stay per *step*, while `throughput_tps` and
     /// the energy totals count all `batch` requests' tokens.
     pub batch: usize,
+    /// Chips the model was tensor-parallel-sharded over (Table II's
+    /// "Chips" column). 1 = the paper's single-chip system; sharded runs
+    /// pay the chip-ring all-reduce per layer and idle `n`x the CTs.
+    pub n_chips: usize,
     pub srpg: bool,
     // ---- Table III ------------------------------------------------------
     /// Time to first token, seconds (reprogram CT0 + prefill).
@@ -89,9 +95,19 @@ impl Simulator {
     }
 
     /// Simulate one serving point at the experiment's configured batch
-    /// (`serving.max_batch`, default 1 = the paper's benchmarking unit).
+    /// (`serving.max_batch`, default 1 = the paper's benchmarking unit)
+    /// and chip count (`shard.n_chips`, default 1).
     pub fn run(&self) -> SimReport {
         self.run_batched(self.cfg.serving.max_batch)
+    }
+
+    /// Simulate at the experiment's configured batch, tensor-parallel
+    /// sharded over `n_chips` chips. `run_sharded(1)` bit-matches
+    /// [`Simulator::run`] on every Table II grid point (gated in
+    /// `tests/sharding.rs` and `benches/table2.rs`) — the sharded terms
+    /// all collapse exactly at one chip.
+    pub fn run_sharded(&self, n_chips: usize) -> SimReport {
+        self.run_sharded_batched(self.cfg.serving.max_batch, n_chips)
     }
 
     /// Simulate `batch` identical requests served together: each request
@@ -105,19 +121,48 @@ impl Simulator {
     /// arithmetic step reduces to the serial model, so the report
     /// bit-matches the paper-table path (gated in `benches/table2.rs`).
     pub fn run_batched(&self, batch: usize) -> SimReport {
+        self.run_sharded_batched(batch, self.cfg.shard.n_chips)
+    }
+
+    /// The full engine: `batch` identical requests over `n_chips` chips.
+    ///
+    /// Sharding model (see `mapping::shard` and DESIGN.md): every layer's
+    /// compute is tensor-parallel-split, so the per-layer critical path
+    /// becomes the cost of chip 0's (widest) program slice — sampled
+    /// through the same `LayerCostModel`/`program_cost` pipeline as the
+    /// single-chip path — plus the chip-ring all-reduce that joins the
+    /// row-split projections (`noc::ChipMesh`, two per layer). Dynamic
+    /// compute energy is conserved (the chips' exact work shares sum to
+    /// the single-chip totals, so the unsharded event counters are
+    /// posted); chip-link all-reduce traffic is posted on top at the same
+    /// 4-hop equivalent as intra-package D2D; and the state-energy
+    /// integrals scale to `n_chips`x the CTs (replicated CT groups idle
+    /// or gate while their shard is off-turn). At `n_chips == 1` every
+    /// term collapses to the single-chip expression bit-for-bit.
+    pub fn run_sharded_batched(&self, batch: usize, n_chips: usize) -> SimReport {
         let b = batch.max(1);
         let bu = b as u64;
+        let nc = n_chips.max(1);
         let cfg = &self.cfg;
         let m = &cfg.model;
+        let mesh = ChipMesh::new(&cfg.shard, nc);
         let mut ledger = EnergyLedger::new(&cfg.system, &cfg.calib);
         let mut trace = Trace::new(self.trace_enabled);
 
         let lm0 = &self.mapping.layers[0];
         let n_groups = m.layers; // one group per layer
         let cts_per_group = self.mapping.cts_per_layer();
-        let total_cts = self.mapping.total_cts;
+        let total_cts = self.mapping.total_cts * nc;
 
         // ---- reprogramming (adapter swap) --------------------------------
+        // Sharded runs keep the single-chip reprogram duration: adapter
+        // distribution is host-link-bound — the full adapter image streams
+        // from host storage once, every chip ingests the stream
+        // concurrently and writes only its LoRA slice. So the duration
+        // (and the SRPG TTFT penalty) does not shrink with chips, each
+        // chip's group holds the Reprogramming state for the whole window
+        // (state integral x nc below), and the dynamic write energy stays
+        // the conserved per-layer adapter volume.
         let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
         let srpg = SrpgSchedule {
             n_groups,
@@ -136,7 +181,10 @@ impl Simulator {
         let block = 128usize.min(cfg.input_tokens.max(1));
         let n_blocks = cfg.input_tokens.div_ceil(block);
         let mut stage_cost = Vec::with_capacity(n_blocks);
+        let mut stage_compute = Vec::with_capacity(n_blocks);
         let mut stage_events = Vec::with_capacity(n_blocks);
+        // Chip-link bytes per (layer, request) of the blocks' all-reduces.
+        let mut prefill_ar_link_bytes = 0u64;
         for b in 0..n_blocks {
             let this_block = if b + 1 == n_blocks {
                 cfg.input_tokens - b * block
@@ -145,15 +193,24 @@ impl Simulator {
             };
             // Mid-block causal span: tokens before the block + half of it.
             let kv = b * block + this_block / 2;
-            let c = program_cost(
-                &prefill_program(cfg, lm0, this_block, kv.max(1)),
-                &cfg.system,
-                &cfg.calib,
-            );
-            stage_cost.push(c.cycles);
+            let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
+            let c = program_cost(&prog, &cfg.system, &cfg.calib);
+            // Sharded: the block's critical path is chip 0's (widest)
+            // program slice plus the per-layer all-reduce of the block's
+            // activations; at one chip both reduce to the unsharded cost.
+            let compute = if nc == 1 {
+                c.cycles
+            } else {
+                program_cost(&shard_program_slice(&prog, 0, nc), &cfg.system, &cfg.calib)
+                    .cycles
+            };
+            stage_cost.push(compute + mesh.layer_all_reduce_cycles(m.hidden, this_block));
+            stage_compute.push(compute);
+            prefill_ar_link_bytes += mesh.layer_all_reduce_link_bytes(m.hidden, this_block);
             stage_events.push(c);
         }
         let layer_prefill_cycles: u64 = stage_cost.iter().sum();
+        let layer_prefill_compute: u64 = stage_compute.iter().sum();
         let mut group_start = vec![0u64; n_groups];
         for (l, gs) in group_start.iter_mut().enumerate() {
             *gs = l as u64 * layer_prefill_cycles;
@@ -183,7 +240,9 @@ impl Simulator {
         }
         let ttft_cycles = plan.ttft_penalty + prefill_makespan + plan.pipeline_stalls;
 
-        // Prefill energy: dynamic events per (request, layer, block).
+        // Prefill energy: dynamic events per (request, layer, block). The
+        // chips' exact work shares sum to these unsharded counters
+        // (`mapping::shard`), so the single-chip totals are posted as-is.
         for c in &stage_events {
             let mut ev = *c;
             ev.cycles = 0;
@@ -192,13 +251,18 @@ impl Simulator {
             }
         }
         ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
+        if nc > 1 {
+            // Chip-ring all-reduce traffic of every (layer, request)
+            // prefill, at the same 4-hop equivalent as intra-package D2D.
+            ledger.post_network(prefill_ar_link_bytes * (n_groups * b) as u64 * 4, 1);
+        }
 
         // Prefill state energy: layer-sequential — one group busy at a
-        // time, for b prompts in turn.
+        // time (on every chip of the shard group), for b prompts in turn.
         let active_ct_cycles =
-            layer_prefill_cycles as f64 * (n_groups * cts_per_group * b) as f64;
+            layer_prefill_compute as f64 * (n_groups * cts_per_group * b * nc) as f64;
         let total_ct_cycles = ttft_cycles as f64 * total_cts as f64;
-        let reprog_cycles_total = plan.reprog_ct_cycles;
+        let reprog_cycles_total = plan.reprog_ct_cycles * nc as f64;
         let idle_ct_cycles =
             (total_ct_cycles - active_ct_cycles - reprog_cycles_total).max(0.0);
         // post_ct_state(state, n_cts, cycles): passing the CT-cycle
@@ -209,6 +273,16 @@ impl Simulator {
 
         // ---- decode loop ---------------------------------------------------
         let layer_model = LayerCostModel::build_cached(cfg, lm0);
+        // Sharded per-layer critical path: chip 0's (widest) slice. One
+        // chip shares the unsharded model (bit-identical by construction).
+        let shard_model = if nc == 1 {
+            Arc::clone(&layer_model)
+        } else {
+            LayerCostModel::build_cached_for_chips(cfg, lm0, nc)
+        };
+        // Per-layer all-reduce terms of one decode token (0 at one chip).
+        let ar_decode_cycles = mesh.layer_all_reduce_cycles(m.hidden, 1);
+        let ar_decode_link_bytes = mesh.layer_all_reduce_link_bytes(m.hidden, 1);
         // Extension: LM-head projection per decode token (off by default;
         // paper tables exclude it — see sim::lm_head).
         let lm_head = if cfg.include_lm_head {
@@ -228,12 +302,20 @@ impl Simulator {
         for i in 0..out {
             let kv = cfg.input_tokens + i;
             let per_layer = layer_model.eval(kv);
+            // Per-layer per-slot cost: the sharded compute critical path
+            // plus the chip-ring all-reduce (both collapse at one chip:
+            // `per_layer` already holds the value, zero all-reduce).
+            let compute_cycles = if nc == 1 {
+                per_layer.cycles
+            } else {
+                shard_model.eval(kv).cycles
+            };
             // Batched decode: b tokens in flight through the layer
             // pipeline in lockstep, costed with the same pipeline bound as
             // the serving coordinator (`DecodeBatch::step_cycles` shares
             // this function). At b = 1 the bound collapses to the serial
             // `n_groups * cycles` in integer arithmetic.
-            per_slot.fill(per_layer.cycles);
+            per_slot.fill(compute_cycles + ar_decode_cycles);
             let mut tok_cycles = pipelined_step_cycles(
                 &per_slot,
                 n_groups,
@@ -254,39 +336,48 @@ impl Simulator {
                 itl_last = tok_cycles;
             }
             decode_cycles_total += tok_cycles;
-            // dynamic energy per (slot, layer)
+            // dynamic energy per (slot, layer): the unsharded event
+            // counters (the chips' exact shares sum to them), plus the
+            // chip-ring all-reduce traffic when sharded.
             let mut ev = per_layer;
             ev.cycles = 0;
             for _ in 0..n_groups * b {
                 ev.post(&mut ledger);
             }
-            // State energy. Serial: at any instant exactly one group
-            // computes and the rest are gated/idle, so integrating "one
-            // active group" over the whole token interval gives the exact
-            // CT-cycle split. Batched: the pipeline holds up to b busy
-            // groups, so the active integral is the b slots' compute and
+            if nc > 1 {
+                ledger.post_network(ar_decode_link_bytes * (n_groups * b) as u64 * 4, 1);
+            }
+            // State energy. Serial single-chip: at any instant exactly one
+            // group computes and the rest are gated/idle, so integrating
+            // "one active group" over the whole token interval gives the
+            // exact CT-cycle split. Batched/sharded: the pipeline holds up
+            // to b busy groups on each of the nc chips, so the active
+            // integral is the slots' sharded compute across all chips and
             // the idle integral is the remainder of the step.
-            if b == 1 {
+            if b == 1 && nc == 1 {
                 let sc = srpg.decode_interval(tok_cycles);
                 ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
                 ledger.post_ct_state(srpg.idle_state(), sc.idle, 1);
             } else {
-                let active = (bu * n_groups as u64 * per_layer.cycles) as f64
+                let active = (bu * (n_groups * nc) as u64 * compute_cycles) as f64
                     * cts_per_group as f64;
-                let total = tok_cycles as f64 * (n_groups * cts_per_group) as f64;
+                let total = tok_cycles as f64 * (n_groups * cts_per_group * nc) as f64;
                 let idle = (total - active).max(0.0);
                 ledger.post_ct_state(CtPowerState::Active, active, 1);
                 ledger.post_ct_state(srpg.idle_state(), idle, 1);
             }
-            // decode trace: only the first few tokens (diagram readability)
+            // decode trace: only the first few tokens (diagram readability).
+            // Sharded layers span compute + all-reduce (0 at one chip), so
+            // the traced intervals tile the step the clock actually takes.
             if self.trace_enabled && i < 4 {
                 let t0 = ttft_cycles + decode_cycles_total - tok_cycles;
+                let span = compute_cycles + ar_decode_cycles;
                 for l in 0..n_groups {
                     trace.push(TraceEvent {
                         ct_group: l,
                         kind: TraceKind::Decode,
-                        start: t0 + per_layer.cycles * l as u64,
-                        end: t0 + per_layer.cycles * (l + 1) as u64,
+                        start: t0 + span * l as u64,
+                        end: t0 + span * (l + 1) as u64,
                     });
                 }
             }
@@ -314,6 +405,7 @@ impl Simulator {
             input_tokens: cfg.input_tokens,
             output_tokens: out,
             batch: b,
+            n_chips: nc,
             srpg: cfg.srpg,
             ttft_s,
             itl_ms,
@@ -427,6 +519,68 @@ mod tests {
         assert!(b4.avg_power_w > b1.avg_power_w);
         assert!(b4.efficiency_tpj > b1.efficiency_tpj);
         assert!(b4.total_energy_j > b1.total_energy_j);
+    }
+
+    #[test]
+    fn sharded_report_bitmatches_serial_at_one_chip() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let sim = Simulator::new(&cfg);
+        let a = sim.run();
+        let b = sim.run_sharded(1);
+        assert_eq!(b.n_chips, 1);
+        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+        assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+        assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits());
+        assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits());
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn sharding_trades_latency_for_power() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let sim = Simulator::new(&cfg);
+        let c1 = sim.run_sharded(1);
+        let c2 = sim.run_sharded(2);
+        assert_eq!(c2.n_chips, 2);
+        assert_eq!(c2.total_cts, 2 * c1.total_cts);
+        // Per-layer compute shrinks faster than the all-reduce grows at
+        // these payloads: latency and throughput improve...
+        assert!(c2.itl_ms < c1.itl_ms, "{} vs {}", c2.itl_ms, c1.itl_ms);
+        assert!(c2.ttft_s < c1.ttft_s);
+        assert!(c2.throughput_tps > c1.throughput_tps);
+        // ...but nowhere near 2x (replicated activation streams), and the
+        // doubled CT count + chip links cost power and efficiency.
+        assert!(c2.throughput_tps < c1.throughput_tps * 2.0);
+        assert!(c2.avg_power_w > c1.avg_power_w);
+        assert!(c2.efficiency_tpj < c1.efficiency_tpj);
+    }
+
+    #[test]
+    fn run_batched_follows_shard_config() {
+        let mut cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            512,
+        );
+        cfg.shard.n_chips = 2;
+        let via_cfg = Simulator::new(&cfg).run();
+        cfg.shard.n_chips = 1;
+        let via_param = Simulator::new(&cfg).run_sharded(2);
+        assert_eq!(via_cfg.n_chips, 2);
+        assert_eq!(via_cfg.total_cycles, via_param.total_cycles);
+        assert_eq!(
+            via_cfg.throughput_tps.to_bits(),
+            via_param.throughput_tps.to_bits()
+        );
     }
 
     #[test]

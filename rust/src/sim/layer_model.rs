@@ -13,7 +13,7 @@
 
 use super::cost::{program_cost, PhaseCost};
 use crate::config::ExperimentConfig;
-use crate::dataflow::decode_program;
+use crate::dataflow::{decode_program, shard_program_slice};
 use crate::mapping::LayerMapping;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,14 +30,16 @@ static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 
 /// Everything the sampled decode cost depends on: the hardware, the model
-/// shape, the LoRA configuration, the calibration constants, and the layer
-/// mapping itself. Deliberately excludes input/output lengths, batch, and
-/// SRPG (the decode program is kv-parameterized and SRPG only affects
-/// reprogramming/power, not the decode instruction stream).
-fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping) -> String {
+/// shape, the LoRA configuration, the calibration constants, the layer
+/// mapping itself, and the tensor-parallel chip count (the sharded model
+/// samples chip 0's program slice). Deliberately excludes input/output
+/// lengths, batch, and SRPG (the decode program is kv-parameterized and
+/// SRPG only affects reprogramming/power, not the decode instruction
+/// stream).
+fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping, n_chips: usize) -> String {
     format!(
-        "{:?}|{:?}|{:?}|{:?}|{:?}",
-        cfg.system, cfg.model, cfg.lora, cfg.calib, lm
+        "{:?}|{:?}|{:?}|{:?}|{:?}|chips{}",
+        cfg.system, cfg.model, cfg.lora, cfg.calib, lm, n_chips
     )
 }
 
@@ -58,12 +60,42 @@ impl LayerCostModel {
         Self { samples }
     }
 
+    /// The sharded decode model: samples the cost of chip 0's (widest)
+    /// tensor-parallel program slice of an `n_chips` group
+    /// (`dataflow::shard_program_slice`). `n_chips == 1` takes the exact
+    /// unsharded [`LayerCostModel::build`] path, so its samples bit-match.
+    pub fn build_for_chips(cfg: &ExperimentConfig, lm: &LayerMapping, n_chips: usize) -> Self {
+        let n = n_chips.max(1);
+        if n == 1 {
+            return Self::build(cfg, lm);
+        }
+        let samples = KV_SAMPLES
+            .iter()
+            .map(|&kv| {
+                let sliced = shard_program_slice(&decode_program(cfg, lm, kv), 0, n);
+                (kv, program_cost(&sliced, &cfg.system, &cfg.calib))
+            })
+            .collect();
+        Self { samples }
+    }
+
     /// Cached [`LayerCostModel::build`]: returns a shared model for the
     /// (system, model, LoRA, calib, mapping) key, building at most once
     /// per key per process. This is the hot-path fix for grid sweeps and
     /// repeated `Server` construction.
     pub fn build_cached(cfg: &ExperimentConfig, lm: &LayerMapping) -> Arc<LayerCostModel> {
-        let key = cache_key(cfg, lm);
+        Self::build_cached_for_chips(cfg, lm, 1)
+    }
+
+    /// Cached [`LayerCostModel::build_for_chips`] (the chip count is part
+    /// of the cache key).
+    pub fn build_cached_for_chips(
+        cfg: &ExperimentConfig,
+        lm: &LayerMapping,
+        n_chips: usize,
+    ) -> Arc<LayerCostModel> {
+        let n = n_chips.max(1);
+        let key = cache_key(cfg, lm, n);
         let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
         {
             let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
@@ -74,7 +106,7 @@ impl LayerCostModel {
         }
         // Build outside the lock (it is the expensive part); a racing
         // builder for the same key keeps the first insertion.
-        let built = Arc::new(Self::build(cfg, lm));
+        let built = Arc::new(Self::build_for_chips(cfg, lm, n));
         CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
         let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
         Arc::clone(guard.entry(key).or_insert(built))
@@ -200,6 +232,24 @@ mod tests {
         let per_layer = m.eval(1024).cycles;
         assert_eq!(m.token_cycles(1024, 16), per_layer * 16);
         assert_eq!(m.token_cycles(1024, 1), per_layer);
+    }
+
+    #[test]
+    fn sharded_model_matches_unsharded_at_one_chip_and_undercuts_beyond() {
+        let (cfg, m) = model_for(ModelId::Llama3_8b);
+        let mapping = map_model(&cfg);
+        let m1 = LayerCostModel::build_for_chips(&cfg, &mapping.layers[0], 1);
+        for kv in [0usize, 512, 2048, 8192] {
+            assert_eq!(m.eval(kv), m1.eval(kv), "kv {kv}: 1-chip build must bit-match");
+        }
+        let m2 = LayerCostModel::build_for_chips(&cfg, &mapping.layers[0], 2);
+        let m4 = LayerCostModel::build_for_chips(&cfg, &mapping.layers[0], 4);
+        for kv in [512usize, 2048] {
+            let (c1, c2, c4) = (m.eval(kv).cycles, m2.eval(kv).cycles, m4.eval(kv).cycles);
+            assert!(c2 < c1 && c4 < c2, "kv {kv}: {c1} / {c2} / {c4}");
+            // Streaming terms replicate: nowhere near ideal 1/n.
+            assert!(c4 > c1 / 8, "kv {kv}");
+        }
     }
 
     #[test]

@@ -347,7 +347,19 @@ fn fuzz_run(
     batch: usize,
     chunk: Option<usize>,
 ) -> (Vec<RequestResult>, Vec<TokenEvent>, f64, u64, u64) {
-    let mut s = ServerBuilder::from_experiment(exp_1b(256))
+    fuzz_run_sharded(seed, policy, batch, chunk, 1)
+}
+
+fn fuzz_run_sharded(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+    chips: usize,
+) -> (Vec<RequestResult>, Vec<TokenEvent>, f64, u64, u64) {
+    let mut exp = exp_1b(256);
+    exp.shard.n_chips = chips;
+    let mut s = ServerBuilder::from_experiment(exp)
         .max_batch(batch)
         .policy_kind(policy)
         .prefill_chunk(chunk)
@@ -450,6 +462,76 @@ fn randomized_traces_hold_invariants_for_all_modes() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn randomized_traces_hold_invariants_when_sharded() {
+    // The sharded axis of the fuzz harness: chips {1, 2, 4} x batch
+    // {1, 4} over every policy, with the same seeded bitwise-replay
+    // determinism as the single-chip sweep (chunked prefill is covered
+    // per-chip-count at batch 4, where admissions actually interleave).
+    let seed = 7u64;
+    for &chips in &[1usize, 2, 4] {
+        for &(batch, chunk) in &[(1usize, None), (4usize, Some(128))] {
+            for policy in [
+                PolicyKind::Fcfs,
+                PolicyKind::AdapterAffinity,
+                PolicyKind::ShortestJobFirst,
+            ] {
+                let label = format!(
+                    "chips {chips} / {} / batch {batch} / chunk {chunk:?}",
+                    policy.name()
+                );
+                let (results, events, sim_t, swaps, hits) =
+                    fuzz_run_sharded(seed, policy, batch, chunk, chips);
+                check_invariants(&label, &results, &events, swaps, hits);
+
+                // Bitwise replay determinism on the sharded axis.
+                let (r2, _, t2, s2, h2) = fuzz_run_sharded(seed, policy, batch, chunk, chips);
+                assert_eq!(sim_t.to_bits(), t2.to_bits(), "{label}: clock replay");
+                assert_eq!((swaps, hits), (s2, h2), "{label}: swap replay");
+                for (a, b) in results.iter().zip(&r2) {
+                    assert_eq!(a.request, b.request, "{label}: order replay");
+                    assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                    assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                    assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_chip_fuzz_bitmatches_the_unsharded_server() {
+    // chips = 1 through the sharded constructor must be indistinguishable
+    // from the default single-chip server, bit for bit.
+    for policy in [PolicyKind::Fcfs, PolicyKind::AdapterAffinity] {
+        let (a, _, ta, sa, ha) = fuzz_run(42, policy, 4, Some(128));
+        let (b, _, tb, sb, hb) = fuzz_run_sharded(42, policy, 4, Some(128), 1);
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{}: clock", policy.name());
+        assert_eq!((sa, ha), (sb, hb));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request, y.request);
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.total_s.to_bits(), y.total_s.to_bits());
+        }
+    }
+}
+
+#[test]
+fn sharded_server_serves_the_same_trace_faster() {
+    // Per-layer decode and prefill both shrink under sharding, so the
+    // same fuzz trace must drain in strictly less simulated time; the
+    // completion set is conserved.
+    for &(batch, chunk) in &[(1usize, None), (4usize, Some(128))] {
+        let (r1, _, t1, _, _) = fuzz_run_sharded(1, PolicyKind::Fcfs, batch, chunk, 1);
+        let (r2, _, t2, _, _) = fuzz_run_sharded(1, PolicyKind::Fcfs, batch, chunk, 2);
+        assert_eq!(r1.len(), r2.len());
+        assert!(
+            t2 < t1,
+            "batch {batch}: 2-chip drain {t2} s must beat single-chip {t1} s"
+        );
     }
 }
 

@@ -1,0 +1,282 @@
+//! Integration: the multi-chip sharded mapping — cross-shard invariants.
+//!
+//! The sharded tier must be an *extension*, not a fork, of the
+//! single-chip model. Four property families gate that, the same
+//! bit-match discipline PR 3 established for batching:
+//!
+//!  1. `Simulator::run_sharded(1)` bit-matches `Simulator::run` on every
+//!     Table II grid point (all sharded terms collapse exactly);
+//!  2. per-layer FLOP/byte totals are conserved across every shard count
+//!     (exact integer shares, at both the `ShardPlan` and the sliced
+//!     program level);
+//!  3. the per-chip KV footprint is monotone non-increasing in the chip
+//!     count — the lever that opens the 13B batch >= 2 points one chip's
+//!     scratchpads reject;
+//!  4. the chip-ring all-reduce cost is strictly increasing in the shard
+//!     count for a fixed layer size.
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId, ShardConfig};
+use primal::dataflow::{decode_program, prefill_program, shard_program_slice};
+use primal::mapping::{map_model, split_even, ShardPlan};
+use primal::metrics::{paper_grid, run_point, run_point_sharded};
+use primal::noc::ChipMesh;
+use primal::sim::{program_cost, PhaseCost, Simulator};
+
+fn cfg_of(model: ModelId, ctx: usize) -> ExperimentConfig {
+    ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], ctx)
+}
+
+// ---- 1. one-chip bit-match ------------------------------------------------
+
+#[test]
+fn one_chip_bitmatches_single_chip_on_all_12_grid_points() {
+    for cfg in &paper_grid() {
+        let serial = run_point(cfg);
+        let sharded = run_point_sharded(cfg, 1, 1);
+        let label = format!(
+            "{} {} {}",
+            serial.model, serial.lora_label, serial.input_tokens
+        );
+        assert_eq!(sharded.n_chips, 1, "{label}");
+        assert_eq!(serial.ttft_s.to_bits(), sharded.ttft_s.to_bits(), "{label}: ttft");
+        assert_eq!(serial.itl_ms.to_bits(), sharded.itl_ms.to_bits(), "{label}: itl");
+        assert_eq!(
+            serial.throughput_tps.to_bits(),
+            sharded.throughput_tps.to_bits(),
+            "{label}: throughput"
+        );
+        assert_eq!(
+            serial.avg_power_w.to_bits(),
+            sharded.avg_power_w.to_bits(),
+            "{label}: power"
+        );
+        assert_eq!(
+            serial.efficiency_tpj.to_bits(),
+            sharded.efficiency_tpj.to_bits(),
+            "{label}: efficiency"
+        );
+        assert_eq!(serial.total_cycles, sharded.total_cycles, "{label}: cycles");
+        assert_eq!(
+            serial.total_energy_j.to_bits(),
+            sharded.total_energy_j.to_bits(),
+            "{label}: energy"
+        );
+        assert_eq!(serial.total_cts, sharded.total_cts, "{label}: CTs");
+    }
+}
+
+/// Anchors the 1-chip path to *pre-refactor* numbers, not to itself:
+/// `run()` now delegates to `run_sharded_batched`, so serial-vs-1-chip
+/// comparisons alone would pass even if the collapse regressed on both
+/// sides. These total-cycle counts were blessed from the operation-exact
+/// Python mirror (`python/tools/sim_mirror.py`, the same source as
+/// `benches/baselines/sim_proxy.txt`) and pin the single-chip engine
+/// absolutely; any sharded term leaking into the 1-chip path moves them.
+#[test]
+fn one_chip_grid_matches_mirror_blessed_cycle_counts() {
+    const GOLDEN: &[(ModelId, &[LoraTarget], usize, u64)] = &[
+        (ModelId::Llama32_1b, &[LoraTarget::Q], 1024, 1_665_971_520),
+        (ModelId::Llama32_1b, &[LoraTarget::Q], 2048, 5_681_908_288),
+        (ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], 1024, 1_665_986_240),
+        (ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], 2048, 5_681_923_008),
+        (ModelId::Llama3_8b, &[LoraTarget::Q], 1024, 6_649_328_128),
+        (ModelId::Llama3_8b, &[LoraTarget::Q], 2048, 17_620_567_552),
+        (ModelId::Llama3_8b, &[LoraTarget::Q, LoraTarget::V], 1024, 6_649_357_568),
+        (ModelId::Llama3_8b, &[LoraTarget::Q, LoraTarget::V], 2048, 17_620_596_992),
+        (ModelId::Llama2_13b, &[LoraTarget::Q], 1024, 12_121_800_208),
+        (ModelId::Llama2_13b, &[LoraTarget::Q], 2048, 30_783_471_488),
+        (ModelId::Llama2_13b, &[LoraTarget::Q, LoraTarget::V], 1024, 12_121_859_088),
+        (ModelId::Llama2_13b, &[LoraTarget::Q, LoraTarget::V], 2048, 30_783_530_368),
+    ];
+    for &(model, targets, ctx, cycles) in GOLDEN {
+        let cfg = ExperimentConfig::paper_point(model, targets, ctx);
+        let r = Simulator::new(&cfg).run_sharded(1);
+        assert_eq!(
+            r.total_cycles, cycles,
+            "{model:?} {targets:?} {ctx}: 1-chip cycles drifted from the \
+             mirror-blessed single-chip value"
+        );
+    }
+}
+
+// ---- 2. conservation across shard counts ----------------------------------
+
+#[test]
+fn shard_plan_conserves_layer_totals_for_all_models_and_counts() {
+    for model in ModelId::all_paper() {
+        let cfg = cfg_of(model, 2048);
+        let mapping = map_model(&cfg);
+        let m = &cfg.model;
+        let lora_params = cfg.lora.layer_params(m.hidden, m.q_dim(), m.kv_dim()) as u64;
+        for n in [1usize, 2, 3, 4, 6, 8] {
+            let p = ShardPlan::new(&cfg, &mapping, n);
+            assert_eq!(p.n_chips, n);
+            let smac: u64 = p.slices.iter().map(|s| s.smac_weights).sum();
+            let heads: u64 = p.slices.iter().map(|s| s.attn_heads).sum();
+            let kv: u64 = p.slices.iter().map(|s| s.kv_token_bytes).sum();
+            let lora: u64 = p.slices.iter().map(|s| s.lora_params).sum();
+            assert_eq!(smac, m.layer_weights() as u64, "{model:?}/{n}: weight FLOPs");
+            assert_eq!(heads, m.n_heads as u64, "{model:?}/{n}: heads");
+            assert_eq!(kv, mapping.layers[0].kv_token_bytes as u64, "{model:?}/{n}: KV");
+            assert_eq!(lora, lora_params, "{model:?}/{n}: LoRA params");
+        }
+    }
+}
+
+#[test]
+fn sliced_programs_conserve_flops_and_resident_bytes() {
+    // Both program kinds, both a GQA and an MHA model, chips in {2, 4}.
+    for model in [ModelId::Llama3_8b, ModelId::Llama2_13b] {
+        let cfg = cfg_of(model, 1024);
+        let mapping = map_model(&cfg);
+        let lm0 = &mapping.layers[0];
+        let programs = [
+            decode_program(&cfg, lm0, 1536),
+            prefill_program(&cfg, lm0, 128, 512),
+        ];
+        for prog in &programs {
+            let full = program_cost(prog, &cfg.system, &cfg.calib);
+            for n in [2usize, 4] {
+                let mut sum = PhaseCost::default();
+                for chip in 0..n {
+                    let sliced = shard_program_slice(prog, chip, n);
+                    let c = program_cost(&sliced, &cfg.system, &cfg.calib);
+                    sum.rram_passes += c.rram_passes;
+                    sum.sram_passes += c.sram_passes;
+                    sum.dmac_macs += c.dmac_macs;
+                    sum.softmax_elems += c.softmax_elems;
+                    sum.spad_bytes += c.spad_bytes;
+                    sum.d2d_bytes += c.d2d_bytes;
+                }
+                // FLOP classes (crossbar passes, LoRA passes, attention
+                // MACs, softmax) and the sharded KV's scratchpad bytes
+                // partition exactly.
+                assert_eq!(sum.rram_passes, full.rram_passes, "{model:?}/{n}");
+                assert_eq!(sum.sram_passes, full.sram_passes, "{model:?}/{n}");
+                assert_eq!(sum.dmac_macs, full.dmac_macs, "{model:?}/{n}");
+                assert_eq!(sum.softmax_elems, full.softmax_elems, "{model:?}/{n}");
+                assert_eq!(sum.spad_bytes, full.spad_bytes, "{model:?}/{n}");
+                // Activation deliveries replicate whole per chip.
+                assert_eq!(sum.d2d_bytes, full.d2d_bytes * n as u64, "{model:?}/{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn split_even_partitions_exactly() {
+    for total in [0u64, 1, 7, 40, 65_521, u32::MAX as u64] {
+        for n in 1usize..=9 {
+            let shares = split_even(total, n);
+            assert_eq!(shares.iter().sum::<u64>(), total, "{total}/{n}");
+            let (max, min) = (shares.iter().max().unwrap(), shares.iter().min().unwrap());
+            assert!(max - min <= 1, "{total}/{n}: uneven by more than 1");
+        }
+    }
+}
+
+// ---- 3. per-chip KV footprint monotone ------------------------------------
+
+#[test]
+fn per_chip_kv_footprint_monotone_non_increasing() {
+    for model in ModelId::all_paper() {
+        let cfg = cfg_of(model, 2048);
+        let mapping = map_model(&cfg);
+        let tokens = cfg.input_tokens + cfg.output_tokens;
+        for slots in [1usize, 4] {
+            let mut prev = usize::MAX;
+            for n in [1usize, 2, 4, 8] {
+                let f = ShardPlan::new(&cfg, &mapping, n).kv_bytes_per_router(tokens, slots);
+                assert!(
+                    f <= prev,
+                    "{model:?} slots {slots}: footprint {f} at {n} chips above {prev}"
+                );
+                prev = f;
+            }
+        }
+    }
+}
+
+#[test]
+fn sharding_opens_previously_kv_infeasible_13b_batch_points() {
+    // PR 3 had to reject every 13B batch-4 point as KV-infeasible on one
+    // chip; four chips divide each token's resident K+V share enough to
+    // fit, and the sharded run completes with a well-formed report.
+    let mut cfg = cfg_of(ModelId::Llama2_13b, 2048);
+    cfg.serving.max_batch = 4;
+    assert!(
+        !cfg.validate().is_empty(),
+        "13B 2048/2048 batch 4 must stay infeasible on one chip"
+    );
+    cfg.shard.n_chips = 2;
+    assert!(!cfg.validate().is_empty(), "two chips are still short");
+    cfg.shard.n_chips = 4;
+    assert!(
+        cfg.validate().is_empty(),
+        "13B 2048/2048 batch 4 must be feasible on four chips: {:?}",
+        cfg.validate()
+    );
+    let r = Simulator::new(&cfg).run_sharded_batched(4, 4);
+    assert_eq!((r.batch, r.n_chips), (4, 4));
+    assert!(r.ttft_s.is_finite() && r.ttft_s > 0.0);
+    assert!(r.itl_ms.is_finite() && r.itl_ms > 0.0);
+    assert!(r.throughput_tps.is_finite() && r.throughput_tps > 0.0);
+    assert!(r.total_energy_j > 0.0);
+    // And it beats the serial single-chip point: 4 requests' tokens over
+    // the shared sharded pipeline.
+    let serial = Simulator::new(&cfg_of(ModelId::Llama2_13b, 2048)).run();
+    assert!(
+        r.throughput_tps > serial.throughput_tps,
+        "sharded b4 {} tok/s must beat serial {} tok/s",
+        r.throughput_tps,
+        serial.throughput_tps
+    );
+}
+
+// ---- 4. all-reduce cost strictly increasing -------------------------------
+
+#[test]
+fn all_reduce_cost_strictly_increases_in_shard_count() {
+    let shard = ShardConfig::default();
+    // Fixed layer sizes: every paper model's hidden activation, decode
+    // (1 token) and a full prefill block (128 tokens).
+    for hidden in [2048usize, 4096, 5120] {
+        for tokens in [1usize, 128] {
+            let mut prev = 0u64;
+            for n in [2usize, 3, 4, 6, 8] {
+                let c = ChipMesh::new(&shard, n).layer_all_reduce_cycles(hidden, tokens);
+                assert!(
+                    c > prev,
+                    "hidden {hidden} x{tokens}: {c} cycles at {n} chips not above {prev}"
+                );
+                prev = c;
+            }
+            assert_eq!(
+                ChipMesh::new(&shard, 1).layer_all_reduce_cycles(hidden, tokens),
+                0,
+                "one chip must cost zero"
+            );
+        }
+    }
+}
+
+// ---- sharded scaling shape -------------------------------------------------
+
+#[test]
+fn sharded_throughput_rises_and_efficiency_falls() {
+    let cfg = cfg_of(ModelId::Llama32_1b, 1024);
+    let sim = Simulator::new(&cfg);
+    let c1 = sim.run_sharded(1);
+    let c2 = sim.run_sharded(2);
+    let c4 = sim.run_sharded(4);
+    assert!(c2.throughput_tps > c1.throughput_tps);
+    assert!(c4.throughput_tps > c2.throughput_tps);
+    // Sub-linear: replicated activation streams + the all-reduce keep the
+    // speedup well under ideal n-fold.
+    assert!(c4.throughput_tps < c1.throughput_tps * 4.0);
+    // The chip count multiplies idle CTs: power rises, tokens/J falls.
+    assert!(c2.avg_power_w > c1.avg_power_w && c4.avg_power_w > c2.avg_power_w);
+    assert!(c2.efficiency_tpj < c1.efficiency_tpj);
+    assert!(c4.efficiency_tpj < c2.efficiency_tpj);
+    assert_eq!(c4.total_cts, 4 * c1.total_cts);
+}
