@@ -12,6 +12,23 @@
 
 use std::time::Instant;
 
+/// Parse a `--jobs N` bench argument
+/// (`cargo bench --bench table2 -- --jobs 4`): worker threads for the
+/// grid fan-out. Defaults to 1 (serial); results are bit-identical at any
+/// width (the sweep driver collects by index).
+pub fn jobs_flag() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    let mut jobs = 1usize;
+    for (i, a) in args.iter().enumerate() {
+        if a == "--jobs" {
+            if let Some(v) = args.get(i + 1).and_then(|v| v.parse().ok()) {
+                jobs = v;
+            }
+        }
+    }
+    primal::sim::sweep::clamp_jobs(jobs)
+}
+
 /// Measure `f` with `warmup` + `iters` runs; returns (median_s, max_s).
 pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
     for _ in 0..warmup {

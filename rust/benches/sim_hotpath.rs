@@ -22,7 +22,7 @@ use primal::config::{ExperimentConfig, LoraTarget, ModelId};
 use primal::dataflow::{decode_program, prefill_program, reprogram_program};
 use primal::mapping::map_model;
 use primal::sim::cost::program_cost;
-use primal::sim::{LayerCostModel, Simulator};
+use primal::sim::{LayerCostModel, PhaseCost, Simulator};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -61,11 +61,20 @@ fn main() {
     report("2048 decode-token evals", med, max);
     let eval_per_token_us = med / 2048.0 * 1e6;
 
-    // 4. end-to-end 13B 2048/2048 request
-    let (e2e_med, e2e_max) = measure(1, 3, || {
+    // 4. end-to-end 13B 2048/2048 request: closed-form decode (the
+    //    default engine) vs the retained per-token reference loop.
+    let (e2e_med, e2e_max) = measure(1, 5, || {
         let _ = Simulator::new(&cfg).run();
     });
     report("full 13B 2048/2048 simulation", e2e_med, e2e_max);
+    let (ref_med, ref_max) = measure(1, 3, || {
+        let _ = Simulator::new(&cfg).run_sharded_batched_reference(1, 1);
+    });
+    report("  ... per-token reference engine", ref_med, ref_max);
+    println!(
+        "  closed-form decode speedup vs retained reference: {:.1}x",
+        ref_med / e2e_med.max(1e-12)
+    );
 
     // 5. mapping shape search
     let (med, max) = measure(1, 5, || {
@@ -78,12 +87,73 @@ fn main() {
          {eval_per_token_us:.3} us/decode-token eval"
     );
 
-    // §Perf gates (see EXPERIMENTS.md §Perf).
+    // §Perf gates (see DESIGN.md §Perf).
     let mut ok = true;
-    ok &= e2e_med < 1.0; // full 13B request < 1 s
+    ok &= e2e_med < 0.25; // full 13B request well under a second
     ok &= eval_per_token_us < 5.0; // decode eval O(1), < 5 us
+    // Closed form must not lose to the reference (5% noise allowance —
+    // both measurements share the mapping + prefill costing that the
+    // decode pass does not touch).
+    ok &= e2e_med <= ref_med * 1.05;
     if !ok {
-        eprintln!("§Perf gate violated: e2e {e2e_med:.3} s, eval {eval_per_token_us:.2} us");
+        eprintln!(
+            "§Perf gate violated: e2e {e2e_med:.3} s (reference {ref_med:.3} s), \
+             eval {eval_per_token_us:.2} us"
+        );
+    }
+
+    // ---- fast-path proxy gates (deterministic) ---------------------------
+    // (a) The closed-form engine must bit-match the retained per-token
+    //     reference on the 13B point, energy bits included.
+    let sim = Simulator::new(&cfg);
+    let fast = sim.run_sharded_batched(1, 1);
+    let slow = sim.run_sharded_batched_reference(1, 1);
+    if fast.total_cycles != slow.total_cycles
+        || fast.throughput_tps.to_bits() != slow.throughput_tps.to_bits()
+        || fast.avg_power_w.to_bits() != slow.avg_power_w.to_bits()
+        || fast.total_energy_j.to_bits() != slow.total_energy_j.to_bits()
+    {
+        eprintln!("proxy gate: closed-form decode diverges from the per-token reference");
+        ok = false;
+    }
+    // (b) Decode-loop proxy count: the closed form consumes O(#segments)
+    //     per-kv evaluations (a handful: ITL first/last probes), the
+    //     reference consumes one per output token. build_cached returns
+    //     the same shared instance the engine evaluates through.
+    let shared = LayerCostModel::build_cached(&cfg, lm0);
+    let evals_before = shared.eval_count();
+    let _ = sim.run_sharded_batched(1, 1);
+    let evals_fast = shared.eval_count() - evals_before;
+    let evals_before = shared.eval_count();
+    let _ = sim.run_sharded_batched_reference(1, 1);
+    let evals_ref = shared.eval_count() - evals_before;
+    println!(
+        "\ndecode-loop proxy: {evals_fast} evals closed-form vs {evals_ref} \
+         per-token (output_tokens = {})",
+        cfg.output_tokens
+    );
+    if evals_fast > 8 {
+        eprintln!("proxy gate: closed-form run consumed {evals_fast} evals (O(out)?)");
+        ok = false;
+    }
+    if evals_ref < cfg.output_tokens as u64 {
+        eprintln!("proxy gate: reference run consumed only {evals_ref} evals");
+        ok = false;
+    }
+    // (c) Segment summation == per-token summation, as committed u64s:
+    //     the decode-sweep counters below are computed with the closed
+    //     form here and blessed from the mirror's per-token loop, so the
+    //     baseline match IS the fast-vs-reference equality gate.
+    let sweep_fast = model.sum_window(2048, 2048);
+    let mut sweep_ref = PhaseCost::default();
+    for kv in 2048..4096 {
+        let e = model.eval(kv);
+        sweep_ref.cycles += e.cycles;
+        sweep_ref.add_events(&e);
+    }
+    if sweep_fast != sweep_ref {
+        eprintln!("proxy gate: sum_window != per-token sweep on [2048, 4096)");
+        ok = false;
     }
 
     // ---- instruction-count proxies (deterministic CI gates) -------------
@@ -106,6 +176,15 @@ fn main() {
         ("decode0_cycles", d0.cycles),
         ("prefill128_kv1024_cycles", pre.cycles),
         ("reprogram_cycles", rep.cycles),
+        // Fast-path proxies: the 13B decode sweep [2048, 4096) summed with
+        // the closed form (blessed values come from the mirror's per-token
+        // loop — exact match pins fast == reference), and the end-to-end
+        // cycle count of the closed-form 13B 2048/2048 request.
+        ("decode_sweep_cycles", sweep_fast.cycles),
+        ("decode_sweep_dmac_macs", sweep_fast.dmac_macs),
+        ("decode_sweep_net_byte_hops", sweep_fast.net_byte_hops),
+        ("decode_sweep_rram_passes", sweep_fast.rram_passes),
+        ("e2e13b_total_cycles", fast.total_cycles),
     ]);
     println!("\ninstruction-count proxies (13B):");
     for (name, v) in &proxies {

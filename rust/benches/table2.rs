@@ -9,8 +9,9 @@
 
 mod common;
 
-use common::{check_expectations, finish, measure, report, Expect};
+use common::{check_expectations, finish, jobs_flag, measure, report, Expect};
 use primal::metrics::{paper_grid, run_point, run_point_batched, run_point_sharded, table2};
+use primal::sim::sweep::run_indexed;
 
 /// Paper Table II values: (model, lora, ctx) -> (tput, power, eff).
 const PAPER: &[(&str, &str, usize, f64, f64, f64)] = &[
@@ -29,8 +30,12 @@ const PAPER: &[(&str, &str, usize, f64, f64, f64)] = &[
 ];
 
 fn main() {
+    let jobs = jobs_flag();
+    if jobs > 1 {
+        println!("grid fan-out: {jobs} jobs");
+    }
     let grid = paper_grid();
-    let reports: Vec<_> = grid.iter().map(run_point).collect();
+    let reports = run_indexed(jobs, grid.len(), |i| run_point(&grid[i]));
     println!("{}", table2(&reports));
 
     // Timing: how long one grid point takes to simulate (1B 1024 point).
@@ -102,9 +107,36 @@ fn main() {
     // grid) are NOT silently skipped: sharding must open them — the gate
     // below asserts they become feasible at some chip count in {2, 4, 8}
     // and that the sharded run beats the serial point.
+    // Fan out the expensive batch runs (b1 bit-match probes + the b4
+    // column, sharded where a single chip rejects the KV footprint); the
+    // gate checks and their messages stay serial so output order is
+    // deterministic at any job count.
+    #[allow(clippy::large_enum_variant)]
+    enum B4Run {
+        Plain(primal::sim::SimReport),
+        Sharded(primal::sim::SimReport, usize),
+        Infeasible,
+    }
+    let b1_runs = run_indexed(jobs, grid.len(), |i| run_point_batched(&grid[i], 1));
+    let b4_runs = run_indexed(jobs, grid.len(), |i| {
+        let mut at4 = grid[i].clone();
+        at4.serving.max_batch = 4;
+        if at4.validate().is_empty() {
+            return B4Run::Plain(run_point_batched(&grid[i], 4));
+        }
+        // KV-infeasible on one chip: escalate the chip count until the
+        // per-token KV share fits, then run the sharded batch-4 point.
+        match [2usize, 4, 8].into_iter().find(|&n| {
+            let mut sharded = at4.clone();
+            sharded.shard.n_chips = n;
+            sharded.validate().is_empty()
+        }) {
+            Some(chips) => B4Run::Sharded(run_point_sharded(&grid[i], 4, chips), chips),
+            None => B4Run::Infeasible,
+        }
+    });
     let mut b4_reports = Vec::new();
-    for (cfg, serial) in grid.iter().zip(&reports) {
-        let b1 = run_point_batched(cfg, 1);
+    for ((serial, b1), b4run) in reports.iter().zip(&b1_runs).zip(b4_runs) {
         if b1.throughput_tps.to_bits() != serial.throughput_tps.to_bits()
             || b1.avg_power_w.to_bits() != serial.avg_power_w.to_bits()
             || b1.efficiency_tpj.to_bits() != serial.efficiency_tpj.to_bits()
@@ -116,63 +148,56 @@ fn main() {
             );
             ok = false;
         }
-        let mut at4 = cfg.clone();
-        at4.serving.max_batch = 4;
-        if !at4.validate().is_empty() {
-            // KV-infeasible on one chip: escalate the chip count until the
-            // per-token KV share fits, then gate the sharded batch-4 run.
-            let feasible_chips = [2usize, 4, 8].into_iter().find(|&n| {
-                let mut sharded = at4.clone();
-                sharded.shard.n_chips = n;
-                sharded.validate().is_empty()
-            });
-            let Some(chips) = feasible_chips else {
+        match b4run {
+            B4Run::Infeasible => {
                 eprintln!(
                     "GATE: batch 4 at {} {} {} infeasible even sharded over 8 chips",
                     serial.model, serial.lora_label, serial.input_tokens
                 );
                 ok = false;
-                continue;
-            };
-            println!(
-                "batch 4 at {} {} {} exceeds one chip's KV rings — feasible \
-                 sharded over {chips} chips",
-                serial.model, serial.lora_label, serial.input_tokens
-            );
-            let b4s = run_point_sharded(cfg, 4, chips);
-            if !(b4s.throughput_tps > serial.throughput_tps) {
-                eprintln!(
-                    "GATE: sharded batch-4 throughput {:.1} not above serial {:.1} \
-                     at {} {} {} over {chips} chips",
-                    b4s.throughput_tps,
-                    serial.throughput_tps,
-                    serial.model,
-                    serial.lora_label,
-                    serial.input_tokens
-                );
-                ok = false;
             }
-            ok &= b4s.batch == 4
-                && b4s.n_chips == chips
-                && b4s.itl_ms.is_finite()
-                && b4s.itl_ms > 0.0;
-            b4_reports.push(b4s);
-            continue;
+            B4Run::Sharded(b4s, chips) => {
+                println!(
+                    "batch 4 at {} {} {} exceeds one chip's KV rings — feasible \
+                     sharded over {chips} chips",
+                    serial.model, serial.lora_label, serial.input_tokens
+                );
+                if !(b4s.throughput_tps > serial.throughput_tps) {
+                    eprintln!(
+                        "GATE: sharded batch-4 throughput {:.1} not above serial {:.1} \
+                         at {} {} {} over {chips} chips",
+                        b4s.throughput_tps,
+                        serial.throughput_tps,
+                        serial.model,
+                        serial.lora_label,
+                        serial.input_tokens
+                    );
+                    ok = false;
+                }
+                ok &= b4s.batch == 4
+                    && b4s.n_chips == chips
+                    && b4s.itl_ms.is_finite()
+                    && b4s.itl_ms > 0.0;
+                b4_reports.push(b4s);
+            }
+            B4Run::Plain(b4) => {
+                if !(b4.throughput_tps > serial.throughput_tps) {
+                    eprintln!(
+                        "GATE: batch-4 throughput {:.1} not above batch-1 {:.1} at {} {} {}",
+                        b4.throughput_tps,
+                        serial.throughput_tps,
+                        serial.model,
+                        serial.lora_label,
+                        serial.input_tokens
+                    );
+                    ok = false;
+                }
+                ok &= b4.batch == 4
+                    && b4.itl_ms > serial.itl_ms
+                    && b4.itl_ms < serial.itl_ms * 2.0;
+                b4_reports.push(b4);
+            }
         }
-        let b4 = run_point_batched(cfg, 4);
-        if !(b4.throughput_tps > serial.throughput_tps) {
-            eprintln!(
-                "GATE: batch-4 throughput {:.1} not above batch-1 {:.1} at {} {} {}",
-                b4.throughput_tps,
-                serial.throughput_tps,
-                serial.model,
-                serial.lora_label,
-                serial.input_tokens
-            );
-            ok = false;
-        }
-        ok &= b4.batch == 4 && b4.itl_ms > serial.itl_ms && b4.itl_ms < serial.itl_ms * 2.0;
-        b4_reports.push(b4);
     }
     if b4_reports.len() != grid.len() {
         eprintln!(
@@ -200,9 +225,11 @@ fn main() {
     // serial path on every grid point, and 2-chip sharding strictly
     // raises throughput at batch 1 (per-layer compute shrinks faster
     // than the all-reduce grows) while paying power for the doubled CTs.
+    let shard_runs = run_indexed(jobs, grid.len(), |i| {
+        (run_point_sharded(&grid[i], 1, 1), run_point_sharded(&grid[i], 1, 2))
+    });
     let mut c2_reports = Vec::new();
-    for (cfg, serial) in grid.iter().zip(&reports) {
-        let c1 = run_point_sharded(cfg, 1, 1);
+    for (serial, (c1, c2)) in reports.iter().zip(shard_runs) {
         if c1.throughput_tps.to_bits() != serial.throughput_tps.to_bits()
             || c1.avg_power_w.to_bits() != serial.avg_power_w.to_bits()
             || c1.efficiency_tpj.to_bits() != serial.efficiency_tpj.to_bits()
@@ -214,7 +241,6 @@ fn main() {
             );
             ok = false;
         }
-        let c2 = run_point_sharded(cfg, 1, 2);
         if !(c2.throughput_tps > serial.throughput_tps
             && c2.throughput_tps < serial.throughput_tps * 2.0)
         {

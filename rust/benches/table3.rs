@@ -5,8 +5,9 @@
 
 mod common;
 
-use common::{check_expectations, finish, measure, report, Expect};
+use common::{check_expectations, finish, jobs_flag, measure, report, Expect};
 use primal::metrics::{paper_grid, run_point, table3};
+use primal::sim::sweep::run_indexed;
 
 /// Paper Table III values: (model, lora, ctx) -> (ttft_s, itl_ms).
 const PAPER: &[(&str, &str, usize, f64, f64)] = &[
@@ -25,8 +26,12 @@ const PAPER: &[(&str, &str, usize, f64, f64)] = &[
 ];
 
 fn main() {
+    let jobs = jobs_flag();
+    if jobs > 1 {
+        println!("grid fan-out: {jobs} jobs");
+    }
     let grid = paper_grid();
-    let reports: Vec<_> = grid.iter().map(run_point).collect();
+    let reports = run_indexed(jobs, grid.len(), |i| run_point(&grid[i]));
     println!("{}", table3(&reports));
 
     let (med, max) = measure(1, 3, || {

@@ -36,6 +36,10 @@ pub struct CalibConstants {
     pub collective_congestion: f64,
     /// Fixed NMC instruction issue overhead per instruction group (cycles).
     pub nmc_issue_cycles: u64,
+    /// Power-gate settle time of a CT's gating transistors (cycles): the
+    /// latency of one `Instr::Gate` before the gated domain is safe to
+    /// drop (or re-raise) its rails.
+    pub gate_settle_cycles: u64,
     /// Inter-CT (chiplet-to-chiplet) transfer latency in cycles, and
     /// bandwidth in bytes/cycle (D2D SerDes link, cut-through streaming).
     pub d2d_latency_cycles: u64,
@@ -85,6 +89,7 @@ impl Default for CalibConstants {
             sram_write_bytes_per_cycle: 4.0,
             collective_congestion: 1.15,
             nmc_issue_cycles: 4,
+            gate_settle_cycles: 8,
             d2d_latency_cycles: 40,
             d2d_bytes_per_cycle: 16.0,
             d2d_sf_bytes_per_cycle: 4.0,
@@ -121,6 +126,7 @@ mod tests {
         assert!(c.collective_congestion >= 1.0);
         assert!(c.link_efficiency > 0.0 && c.link_efficiency <= 1.0);
         assert!(c.rram_pass_cycles > 0);
+        assert_eq!(c.gate_settle_cycles, 8, "default must preserve the old literal");
     }
 
     #[test]

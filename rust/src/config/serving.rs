@@ -70,6 +70,13 @@ pub struct ServingConfig {
     /// and switches to the deepest other backlog). `None` = unbounded
     /// affinity runs (the original greedy behavior).
     pub affinity_max_run_len: Option<usize>,
+    /// Coordinator decode fast-forward: when no arrival, prefill chunk, or
+    /// completion event can fall inside the next k lockstep decode steps,
+    /// `run_until`/`drain` advance the batch k steps via the layer model's
+    /// closed-form segment summation instead of k per-slot evaluations.
+    /// Results are bit-identical either way (gated in the scheduling fuzz
+    /// suite); `false` forces the step-by-step reference path.
+    pub decode_fast_forward: bool,
 }
 
 impl Default for ServingConfig {
@@ -80,6 +87,7 @@ impl Default for ServingConfig {
             batch_overhead_cycles: 64,
             prefill_chunk: None,
             affinity_max_run_len: None,
+            decode_fast_forward: true,
         }
     }
 }
@@ -109,5 +117,6 @@ mod tests {
         assert_eq!(s.policy, PolicyKind::Fcfs);
         assert_eq!(s.prefill_chunk, None, "monolithic prefill by default");
         assert_eq!(s.affinity_max_run_len, None);
+        assert!(s.decode_fast_forward, "fast-forward on by default");
     }
 }

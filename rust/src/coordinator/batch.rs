@@ -133,7 +133,7 @@ impl PrefillJob {
             start_s: self.start_s,
             swap: self.swap,
             ttft_s,
-            decode_s: 0.0,
+            decode_cycles: 0,
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms: self.golden_exec_ms,
@@ -154,8 +154,12 @@ pub struct Slot {
     pub swap: bool,
     /// Reprogram + prefill time charged at admission (s).
     pub ttft_s: f64,
-    /// Pure decode compute time accumulated so far (s).
-    pub decode_s: f64,
+    /// Pure decode compute accumulated so far, in integer cycles. Kept as
+    /// u64 (not seconds) so step-by-step decode and the coordinator's
+    /// closed-form fast-forward accumulate *associatively* — the f64
+    /// conversion happens once, at observation points (token events,
+    /// retirement), which is what lets the two paths bit-match.
+    pub decode_cycles: u64,
     /// Time this slot spent stalled behind other slots' admissions (the
     /// layer-sequential prefill occupies every CT group) (s).
     pub stall_s: f64,
@@ -173,6 +177,17 @@ impl Slot {
 
     pub fn done(&self) -> bool {
         self.generated >= self.req.output_tokens
+    }
+
+    /// Decode tokens still owed to this slot.
+    pub fn remaining_tokens(&self) -> usize {
+        self.req.output_tokens.saturating_sub(self.generated)
+    }
+
+    /// Decode compute accumulated so far in seconds at `cycle_s` per
+    /// cycle (single u64 -> f64 conversion).
+    pub fn decode_s(&self, cycle_s: f64) -> f64 {
+        self.decode_cycles as f64 * cycle_s
     }
 }
 
@@ -203,6 +218,18 @@ impl DecodeBatch {
     /// The batch's shared adapter (slots are homogeneous by construction).
     pub fn adapter(&self) -> Option<AdapterId> {
         self.slots.first().map(|s| s.req.adapter)
+    }
+
+    /// Fewest decode tokens any slot still owes — the longest lockstep
+    /// window with no completion event inside it (the fast-forward bound).
+    pub fn min_remaining_tokens(&self) -> Option<usize> {
+        self.slots.iter().map(Slot::remaining_tokens).min()
+    }
+
+    /// Largest per-slot KV length in the batch. Under a kv-monotone cost
+    /// model this slot is the pipeline's `max` term every step.
+    pub fn max_kv_len(&self) -> Option<usize> {
+        self.slots.iter().map(Slot::kv_len).max()
     }
 
     pub fn push(&mut self, slot: Slot) {
@@ -298,6 +325,8 @@ mod tests {
         assert_eq!(slot.start_s, 10.0);
         assert_eq!(slot.generated, 0);
         assert_eq!(slot.stall_s, 0.0);
+        assert_eq!(slot.decode_cycles, 0);
+        assert_eq!(slot.remaining_tokens(), 4);
     }
 
     #[test]
@@ -325,7 +354,7 @@ mod tests {
             start_s: 0.0,
             swap: false,
             ttft_s: 0.0,
-            decode_s: 0.0,
+            decode_cycles: 0,
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms: None,
@@ -334,9 +363,12 @@ mod tests {
         b.push(mk(0, 2, 2)); // done
         b.push(mk(1, 1, 2)); // running
         b.push(mk(2, 8, 8)); // done
+        assert_eq!(b.min_remaining_tokens(), Some(0));
+        assert_eq!(b.max_kv_len(), Some(4 + 8));
         let done = b.take_finished();
         assert_eq!(done.iter().map(|s| s.req.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(b.len(), 1);
         assert_eq!(b.adapter(), Some(AdapterId(1)));
+        assert_eq!(b.min_remaining_tokens(), Some(1));
     }
 }

@@ -52,7 +52,18 @@ pub trait SchedulePolicy {
     /// drains further. Implementations must only return indices of
     /// requests whose adapter matches `ctx.active_adapter` when it is
     /// `Some` (the hardware cannot decode two tasks' LoRA sets at once).
+    /// `pick` may record the admission in policy state (e.g. the
+    /// affinity run-length counter) — the server admits every `Some`.
     fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize>;
+
+    /// Side-effect-free preview of [`SchedulePolicy::pick`]: must return
+    /// exactly the index `pick` would for the same `(waiting, ctx)`,
+    /// WITHOUT mutating policy state (enforced by the `&self` receiver).
+    /// The server's decode fast-forward probes admission with this — a
+    /// discarded probe must not advance run-length counters, and a held
+    /// (`None`) decision is stable across a window whose inputs do not
+    /// change, which is what licenses coalescing the per-step re-asks.
+    fn peek(&self, waiting: &[Request], ctx: &SchedContext) -> Option<usize>;
 }
 
 /// Strict first-come-first-served: only ever considers the head of the
@@ -68,6 +79,10 @@ impl SchedulePolicy for Fcfs {
     }
 
     fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
+        self.peek(waiting, ctx)
+    }
+
+    fn peek(&self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         let head = waiting.first()?;
         match ctx.active_adapter {
             None => Some(0),
@@ -148,6 +163,13 @@ impl SchedulePolicy for AdapterAffinity {
     }
 
     fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
+        let pick = self.peek(waiting, ctx);
+        self.note(waiting, pick)
+    }
+
+    /// The pure decision function behind `pick` — run-length accounting
+    /// happens only in `pick` (every `Some` it returns is admitted).
+    fn peek(&self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         if waiting.is_empty() {
             return None;
         }
@@ -163,13 +185,12 @@ impl SchedulePolicy for AdapterAffinity {
                     // Drain the in-flight same-adapter work, then regroup.
                     return None;
                 }
-                let pick = deepest_backlog(waiting, Some(a));
-                return self.note(waiting, pick);
+                return deepest_backlog(waiting, Some(a));
             }
         }
         if let Some(a) = anchor {
             if let Some(i) = waiting.iter().position(|r| r.adapter == a) {
-                return self.note(waiting, Some(i));
+                return Some(i);
             }
             if ctx.active_adapter.is_some() {
                 // Nothing matches the in-flight work: drain, then regroup.
@@ -179,8 +200,7 @@ impl SchedulePolicy for AdapterAffinity {
         // Nothing in flight and residency useless: a swap is unavoidable.
         // Pick the adapter with the deepest backlog (ties: earliest
         // arrival).
-        let pick = deepest_backlog(waiting, None);
-        self.note(waiting, pick)
+        deepest_backlog(waiting, None)
     }
 }
 
@@ -196,6 +216,10 @@ impl SchedulePolicy for ShortestJobFirst {
     }
 
     fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
+        self.peek(waiting, ctx)
+    }
+
+    fn peek(&self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, r) in waiting.iter().enumerate() {
             if let Some(a) = ctx.active_adapter {
@@ -306,6 +330,30 @@ mod tests {
         let w2 = [req(0, 1, 32), req(1, 2, 4), req(2, 1, 16)];
         assert_eq!(p.pick(&w2, &ctx(Some(1), None)), Some(2));
         assert_eq!(p.pick(&w2, &ctx(Some(3), None)), None);
+    }
+
+    #[test]
+    fn peek_matches_pick_and_never_mutates() {
+        // peek must preview pick exactly and leave run-length state
+        // untouched — the decode fast-forward probes admission with it.
+        let mut p = AdapterAffinity::with_max_run_len(2);
+        let w = [req(0, 1, 8), req(1, 2, 8), req(2, 1, 8)];
+        let c = ctx(None, Some(1));
+        for _ in 0..5 {
+            assert_eq!(p.peek(&w, &c), Some(0), "peek is stable");
+        }
+        // Five peeks later the run counter has not moved: two real picks
+        // are still allowed before the bound fires.
+        assert_eq!(p.pick(&w, &c), Some(0));
+        assert_eq!(p.pick(&w[1..], &ctx(Some(1), None)), Some(1));
+        // Third same-adapter admission attempt while adapter 2 waits:
+        // bound of 2 reached by the two PICKS (not inflated by peeks).
+        assert_eq!(p.peek(&w[1..], &ctx(Some(1), None)), None);
+        // peek == pick on the stateless policies too.
+        let mut f = Fcfs;
+        assert_eq!(f.peek(&w, &ctx(Some(2), None)), f.pick(&w, &ctx(Some(2), None)));
+        let mut s = ShortestJobFirst;
+        assert_eq!(s.peek(&w, &ctx(None, None)), s.pick(&w, &ctx(None, None)));
     }
 
     #[test]

@@ -246,6 +246,7 @@ pub struct ServerBuilder {
     policy: Box<dyn SchedulePolicy>,
     batch_overhead_cycles: u64,
     prefill_chunk: Option<usize>,
+    decode_fast_forward: bool,
 }
 
 impl Default for ServerBuilder {
@@ -270,6 +271,7 @@ impl ServerBuilder {
             policy: policy_of(s.policy, &s),
             batch_overhead_cycles: s.batch_overhead_cycles,
             prefill_chunk: s.prefill_chunk,
+            decode_fast_forward: s.decode_fast_forward,
             experiment,
         }
     }
@@ -325,6 +327,15 @@ impl ServerBuilder {
         self
     }
 
+    /// Decode fast-forward (default on): `run_until`/`drain` advance
+    /// uninterrupted lockstep decode windows in closed form. `false`
+    /// forces the step-by-step reference path; results are bit-identical
+    /// either way.
+    pub fn decode_fast_forward(mut self, enabled: bool) -> Self {
+        self.decode_fast_forward = enabled;
+        self
+    }
+
     pub fn build(self) -> Result<Server> {
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
@@ -336,6 +347,7 @@ impl ServerBuilder {
         exp.serving.max_batch = self.max_batch;
         exp.serving.batch_overhead_cycles = self.batch_overhead_cycles;
         exp.serving.prefill_chunk = self.prefill_chunk;
+        exp.serving.decode_fast_forward = self.decode_fast_forward;
 
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
@@ -408,11 +420,18 @@ impl ServerBuilder {
             }
         };
 
+        // The fast-forward's pipeline-max shortcut ("largest kv is the
+        // max slot") is licensed by kv-monotone per-layer cycles; checked
+        // once here, not per window.
+        let model_monotone = layer_model.cycles_nondecreasing();
+
         Ok(Server {
             n_layers: exp.model.layers,
             max_batch: self.max_batch,
             batch_overhead_cycles: self.batch_overhead_cycles,
             prefill_chunk: self.prefill_chunk,
+            decode_fast_forward: self.decode_fast_forward,
+            model_monotone,
             policy: self.policy,
             cfg: exp,
             adapters: AdapterManager::new(),
@@ -422,6 +441,8 @@ impl ServerBuilder {
             prefill_turn: false,
             finished: Vec::new(),
             now_s: 0.0,
+            now_run_base_s: 0.0,
+            now_run_cycles: 0,
             layer_model,
             shard_ar_decode_cycles,
             reprog_ttft_s,
@@ -444,6 +465,11 @@ pub struct Server {
     /// Chunk size (prompt tokens) for chunked prefill; `None` = the
     /// paper's monolithic layer-sequential admission.
     prefill_chunk: Option<usize>,
+    /// Closed-form decode fast-forward enabled (see `ServingConfig`).
+    decode_fast_forward: bool,
+    /// Whether the layer model's cycles are kv-monotone (fast-forward
+    /// precondition, checked once at build).
+    model_monotone: bool,
     /// Submitted, not yet admitted; sorted by (arrival_s, submit order).
     waiting: Vec<Request>,
     batch: DecodeBatch,
@@ -456,8 +482,16 @@ pub struct Server {
     /// and decode steps interleave one-for-one.
     prefill_turn: bool,
     finished: Vec<RequestResult>,
-    /// Simulated clock (seconds).
+    /// Simulated clock (seconds). During a run of consecutive decode
+    /// steps this is *derived*: `now_run_base_s + now_run_cycles * cyc`,
+    /// with the cycles accumulated in u64 — associative, so step-by-step
+    /// decode and the closed-form fast-forward reach bit-identical clocks.
+    /// Non-decode events fold the run (`set_clock`).
     now_s: f64,
+    /// Clock base of the current decode run (seconds).
+    now_run_base_s: f64,
+    /// Decode cycles accumulated since `now_run_base_s`.
+    now_run_cycles: u64,
     /// Cached per-layer decode model + prefill/reprog costs (the mapping
     /// is fixed per server). Sharded servers hold chip 0's (widest) slice
     /// model and charge the chip-ring all-reduce per layer on top.
@@ -666,7 +700,7 @@ impl Server {
             .map(|r| r.arrival_s)
             .find(|a| *a > self.now_s)
         {
-            self.now_s = next;
+            self.set_clock(next);
             return Ok(StepOutcome::Advanced { to_s: next });
         }
         if !self.waiting.is_empty() {
@@ -690,10 +724,16 @@ impl Server {
             if e > t {
                 break;
             }
+            // Uninterrupted lockstep decode windows advance in closed
+            // form; everything else is a normal event.
+            if let Some(k) = self.fast_forward_window(Some(t)) {
+                self.fast_forward(k, tokens);
+                continue;
+            }
             self.step(tokens)?;
         }
         if self.now_s < t {
-            self.now_s = t;
+            self.set_clock(t);
         }
         Ok(std::mem::take(&mut self.finished))
     }
@@ -706,6 +746,10 @@ impl Server {
         tokens: Option<&mpsc::Sender<TokenEvent>>,
     ) -> Result<Vec<RequestResult>> {
         loop {
+            if let Some(k) = self.fast_forward_window(None) {
+                self.fast_forward(k, tokens);
+                continue;
+            }
             if let StepOutcome::Idle = self.step(tokens)? {
                 break;
             }
@@ -731,6 +775,23 @@ impl Server {
     }
 
     // ---- internals ------------------------------------------------------
+
+    /// Set the simulated clock from a non-decode event, folding (ending)
+    /// any decode run in progress.
+    fn set_clock(&mut self, t: f64) {
+        self.now_s = t;
+        self.now_run_base_s = t;
+        self.now_run_cycles = 0;
+    }
+
+    /// Advance the clock by one or more decode steps' cycles. The clock
+    /// is re-derived from the run base so the same total cycle count
+    /// yields the same clock bits however it was accumulated.
+    fn advance_decode_clock(&mut self, cycles: u64) {
+        self.now_run_cycles += cycles;
+        self.now_s =
+            self.now_run_base_s + self.now_run_cycles as f64 * self.cfg.system.cycle_s();
+    }
 
     /// Admit `req`: monolithic (the paper's model) or chunked, depending
     /// on `prefill_chunk`.
@@ -784,7 +845,7 @@ impl Server {
             s.stall_s += ttft;
             s.pending_stall_s += ttft;
         }
-        self.now_s += ttft;
+        self.set_clock(self.now_s + ttft);
 
         let id = req.id;
         self.batch.push(Slot {
@@ -793,7 +854,7 @@ impl Server {
             start_s,
             swap,
             ttft_s: ttft,
-            decode_s: 0.0,
+            decode_cycles: 0,
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms,
@@ -877,7 +938,7 @@ impl Server {
         // (float accumulation order); never run the clock backwards.
         let new_now = if end > old_now { end } else { old_now };
         let stall = new_now - old_now;
-        self.now_s = new_now;
+        self.set_clock(new_now);
         for s in self.batch.slots_mut() {
             s.stall_s += stall;
             s.pending_stall_s += stall;
@@ -902,7 +963,7 @@ impl Server {
             .batch
             .slots()
             .iter()
-            .map(|s| self.layer_model.eval(s.kv_len()).cycles + self.shard_ar_decode_cycles)
+            .map(|s| self.layer_model.eval_cycles(s.kv_len()) + self.shard_ar_decode_cycles)
             .collect();
         let step_cycles = DecodeBatch::step_cycles(
             &per_layer,
@@ -910,7 +971,7 @@ impl Server {
             self.batch_overhead_cycles,
         );
         let step_s = step_cycles as f64 * cyc;
-        self.now_s += step_s;
+        self.advance_decode_clock(step_cycles);
         // Prefills in flight wait out the decode step (their TTFT grows).
         for j in self.jobs.iter_mut() {
             j.note_external(step_s);
@@ -918,7 +979,7 @@ impl Server {
 
         let b = self.batch.len();
         for slot in self.batch.slots_mut() {
-            slot.decode_s += step_s;
+            slot.decode_cycles += step_cycles;
             slot.generated += 1;
             let gap_ms = (step_s + slot.pending_stall_s) * 1e3;
             slot.pending_stall_s = 0.0;
@@ -927,7 +988,7 @@ impl Server {
                 let _ = tx.send(TokenEvent {
                     request: slot.req.id,
                     index: slot.generated - 1,
-                    at_s: slot.ttft_s + slot.stall_s + slot.decode_s,
+                    at_s: slot.ttft_s + slot.stall_s + slot.decode_s(cyc),
                 });
             }
         }
@@ -940,9 +1001,192 @@ impl Server {
         StepOutcome::Decoded { batch: b, completed }
     }
 
+    /// How many lockstep decode steps may run as one closed-form window:
+    /// `Some(k >= 2)` when the next k events are guaranteed to be plain
+    /// decode steps — no prefill chunk is in flight, no slot completes
+    /// before step k, no pending arrival becomes admissible mid-window,
+    /// the admission policy holds, and (for `run_until`) the clock stays
+    /// within the deadline. `None` means "take a normal `step()`".
+    fn fast_forward_window(&self, deadline: Option<f64>) -> Option<usize> {
+        if !self.decode_fast_forward
+            || !self.model_monotone
+            || !self.jobs.is_empty()
+            || self.batch.is_empty()
+        {
+            return None;
+        }
+        // Completion bound: the window may *end* on completions but must
+        // not contain one earlier.
+        let mut k = self.batch.min_remaining_tokens()?;
+        if self.has_capacity() && !self.waiting.is_empty() {
+            let arrived = self.waiting.partition_point(|r| r.arrival_s <= self.now_s);
+            if arrived > 0 {
+                let ctx = SchedContext {
+                    active_adapter: self.active_adapter(),
+                    resident: self.adapters.resident(),
+                    in_flight: self.batch.len() + self.jobs.len(),
+                    prefill_in_flight: false,
+                };
+                // Probe with the side-effect-free `peek`: a discarded
+                // probe must not advance run-length accounting (the
+                // affinity starvation bound), and with the batch
+                // non-empty the policy's inputs are constant across the
+                // window, so a held decision is stable per the peek
+                // contract.
+                if self.policy.peek(&self.waiting[..arrived], &ctx).is_some() {
+                    return None;
+                }
+            }
+            // A pending arrival becomes admissible once the clock reaches
+            // it: every step of the window must *start* strictly before
+            // the next arrival time.
+            if let Some(next_arr) = self
+                .waiting
+                .iter()
+                .map(|r| r.arrival_s)
+                .find(|a| *a > self.now_s)
+            {
+                k = k.min(self.steps_within(next_arr, true, k) + 1);
+            }
+        }
+        if let Some(t) = deadline {
+            // `run_until` runs a step only while the clock before it is
+            // <= t (the final step may carry past t).
+            k = k.min(self.steps_within(t, false, k) + 1);
+        }
+        (k >= 2).then_some(k)
+    }
+
+    /// Total cycles of the next `m` lockstep decode steps, in closed form
+    /// via the layer model's exact segment summation: with kv-monotone
+    /// cycles the pipeline max is always the largest-kv slot, so
+    ///   Σ steps = Σ_i S_i(m) + m·b·ar + (L-1)·(S_max(m) + m·ar)
+    ///             + m·(b-1)·ovh
+    /// where `S_i(m)` sums slot i's per-layer cycles over its kv window.
+    /// Bit-equal to stepping `m` times (pure integer arithmetic).
+    fn window_cycles(&self, m: usize) -> u64 {
+        let b = self.batch.len() as u64;
+        let ar = self.shard_ar_decode_cycles;
+        let max_kv = self.batch.max_kv_len().unwrap_or(0);
+        let mut sum = 0u64;
+        let mut s_max = 0u64;
+        for s in self.batch.slots() {
+            let si = self.layer_model.sum_cycles_window(s.kv_len(), m);
+            sum += si;
+            if s.kv_len() == max_kv {
+                s_max = si;
+            }
+        }
+        sum + m as u64 * b * ar
+            + (self.n_layers as u64 - 1) * (s_max + m as u64 * ar)
+            + m as u64 * (b - 1) * self.batch_overhead_cycles
+    }
+
+    /// Largest `m <= kmax` whose post-step clock stays below (`strict`)
+    /// or at (`!strict`) `limit`, via binary search over the closed-form
+    /// window cycles. `m = 0` always qualifies (the current clock already
+    /// satisfied the caller's loop condition).
+    fn steps_within(&self, limit: f64, strict: bool, kmax: usize) -> usize {
+        let cyc = self.cfg.system.cycle_s();
+        let ok = |m: usize| {
+            let t = self.now_run_base_s
+                + (self.now_run_cycles + self.window_cycles(m)) as f64 * cyc;
+            if strict {
+                t < limit
+            } else {
+                t <= limit
+            }
+        };
+        if ok(kmax) {
+            return kmax;
+        }
+        let (mut lo, mut hi) = (0usize, kmax);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if ok(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Advance the batch `k` lockstep decode steps as one window. The
+    /// per-step makespans come from incremental segment cursors (no
+    /// per-step model evaluation, allocation, or pipeline scan), while
+    /// clocks and slot totals accumulate the exact same u64 cycle counts
+    /// the step-by-step path would — so completion records, token events,
+    /// gap samples, and stats are bit-identical (gated in
+    /// `tests/scheduling.rs` / `tests/fastpath.rs`).
+    fn fast_forward(&mut self, k: usize, tokens: Option<&mpsc::Sender<TokenEvent>>) {
+        debug_assert!(self.jobs.is_empty() && !self.batch.is_empty());
+        let cyc = self.cfg.system.cycle_s();
+        let b = self.batch.len() as u64;
+        let l = self.n_layers as u64;
+        let ar = self.shard_ar_decode_cycles;
+        let ovh = self.batch_overhead_cycles;
+        let model = Arc::clone(&self.layer_model);
+        let max_kv = self.batch.max_kv_len().unwrap_or(0);
+        let mut cursors: Vec<(bool, crate::sim::CyclesCursor<'_>)> = self
+            .batch
+            .slots()
+            .iter()
+            .map(|s| (s.kv_len() == max_kv, model.cycles_cursor(s.kv_len())))
+            .collect();
+        #[cfg(debug_assertions)]
+        let expect_window = self.window_cycles(k);
+        let mut window_total = 0u64;
+        for _ in 0..k {
+            let mut sum = 0u64;
+            let mut maxv = 0u64;
+            for (is_max, cur) in cursors.iter_mut() {
+                let v = cur.next_cycles() + ar;
+                sum += v;
+                if *is_max {
+                    maxv = v;
+                }
+            }
+            let step_cycles = sum + (l - 1) * maxv + (b - 1) * ovh;
+            window_total += step_cycles;
+            let step_s = step_cycles as f64 * cyc;
+            self.advance_decode_clock(step_cycles);
+            for slot in self.batch.slots_mut() {
+                slot.decode_cycles += step_cycles;
+                slot.generated += 1;
+                let gap_ms = (step_s + slot.pending_stall_s) * 1e3;
+                slot.pending_stall_s = 0.0;
+                self.acc.gaps_ms.push(gap_ms);
+                if let Some(tx) = tokens {
+                    let _ = tx.send(TokenEvent {
+                        request: slot.req.id,
+                        index: slot.generated - 1,
+                        at_s: slot.ttft_s + slot.stall_s + slot.decode_s(cyc),
+                    });
+                }
+            }
+        }
+        drop(cursors);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            window_total, expect_window,
+            "cursor window must equal the closed-form segment summation"
+        );
+        let _ = window_total;
+        // No slot can have completed before the final step (k is bounded
+        // by the minimum remaining tokens), so one sweep retires exactly
+        // what step-by-step execution would.
+        let done = self.batch.take_finished();
+        for slot in done {
+            self.retire(slot);
+        }
+        self.prefill_turn = true;
+    }
+
     fn retire(&mut self, s: Slot) {
-        let itl_ms = s.decode_s / s.req.output_tokens as f64 * 1e3;
-        let total = s.ttft_s + s.stall_s + s.decode_s;
+        let decode_s = s.decode_s(self.cfg.system.cycle_s());
+        let itl_ms = decode_s / s.req.output_tokens as f64 * 1e3;
+        let total = s.ttft_s + s.stall_s + decode_s;
         let queue_s = s.start_s - s.req.arrival_s;
 
         self.acc.served += 1;

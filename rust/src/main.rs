@@ -15,7 +15,7 @@ use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use primal::coordinator::{AdapterId, FunctionalMode, Request, ServerBuilder};
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
-use primal::sim::Simulator;
+use primal::sim::{sweep, Simulator};
 use primal::trace::render_gantt;
 use primal::util::Rng;
 use std::collections::BTreeMap;
@@ -28,8 +28,10 @@ fn usage() -> ! {
 commands:
   simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--batch N]
              [--chips N] [--no-srpg] [--trace]
-  report     --table <1|2|3|4|h100|srpg> [--batch N] [--chips N]
-             (batch/chips: tables 2/3 only)
+  report     --table <1|2|3|4|h100|srpg> [--batch N] [--chips N] [--jobs N]
+             (batch/chips: tables 2/3 only; --jobs N: simulate the grid
+              points across N worker threads — results are bit-identical
+              to --jobs 1, just faster)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
              [--batch N] [--chips N] [--policy fcfs|affinity|sjf]
              [--rate R] [--prefill-chunk N] [--max-run-len N] [--golden]
@@ -38,12 +40,12 @@ commands:
               pieces interleaved with decode steps;
               --max-run-len N: affinity starvation bound;
               --chips N: tensor-parallel shard over N chips)
-  sweep      --model <1b|8b|13b> [--from N] [--to N]
+  sweep      --model <1b|8b|13b> [--from N] [--to N] [--jobs N]
   validate   [--artifacts DIR]
 
 examples:
   primal simulate --model 13b --ctx 2048 --lora qv
-  primal report --table 2 --batch 4 --chips 2
+  primal report --table 2 --batch 4 --chips 2 --jobs 4
   primal serve --model 1b --requests 16 --adapters 3 --batch 4 \\
                --policy affinity --prefill-chunk 128
   primal validate"
@@ -152,6 +154,7 @@ fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let which = flags.get("table").map(String::as_str).unwrap_or("2");
     let batch = num_flag(&flags, "batch", 1).max(1);
     let chips = num_flag(&flags, "chips", 1).max(1);
+    let jobs = sweep::clamp_jobs(num_flag(&flags, "jobs", 1));
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
         "2" | "3" => {
@@ -162,18 +165,20 @@ fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
             if chips > 1 {
                 qualifier.push_str(&format!(" over {chips} chips"));
             }
+            if jobs > 1 {
+                qualifier.push_str(&format!(" across {jobs} jobs"));
+            }
             eprintln!(
                 "running the 12-point paper grid (three models x two LoRA sets x \
                  two contexts){qualifier}..."
             );
-            let mut reports = Vec::new();
+            // Feasibility pass first (cheap, serial, loud): the
+            // KV-capacity check scales with serving.max_batch and divides
+            // by shard.n_chips, so a physically infeasible point is
+            // skipped loudly (e.g. 13B KV rings cannot hold 4 slots per
+            // router on one chip) rather than tabulated as if it fit.
+            let mut feasible = Vec::new();
             for cfg in &metrics::paper_grid() {
-                // Re-validate at the requested batch and chip count: the
-                // KV-capacity check scales with serving.max_batch and
-                // divides by shard.n_chips, so a physically infeasible
-                // point is skipped loudly (e.g. 13B KV rings cannot hold 4
-                // slots per router on one chip) rather than tabulated as
-                // if it fit.
                 let mut cfg = cfg.clone();
                 cfg.serving.max_batch = batch;
                 cfg.shard.n_chips = chips;
@@ -187,8 +192,13 @@ fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
                     }
                     continue;
                 }
-                reports.push(metrics::run_point_sharded(&cfg, batch, chips));
+                feasible.push(cfg);
             }
+            // Then the expensive simulations, fanned out deterministically
+            // (results collected by grid index — identical at any width).
+            let reports = sweep::run_indexed(jobs, feasible.len(), |i| {
+                metrics::run_point_sharded(&feasible[i], batch, chips)
+            });
             if reports.is_empty() {
                 eprintln!("no grid point is feasible at batch {batch} / {chips} chip(s)");
                 return ExitCode::FAILURE;
@@ -354,17 +364,26 @@ fn cmd_sweep(flags: BTreeMap<String, String>) -> ExitCode {
     let model = model_flag(&flags);
     let from = num_flag(&flags, "from", 256);
     let to = num_flag(&flags, "to", 4096);
-    println!("{:>6} {:>9} {:>9} {:>9} {:>8} {:>8}",
-             "ctx", "ttft_s", "itl_ms", "tok/s", "P_W", "tok/J");
+    let jobs = sweep::clamp_jobs(num_flag(&flags, "jobs", 1));
+    let lora = lora_flag(&flags);
+    let mut contexts = Vec::new();
     let mut ctx = from;
     while ctx <= to {
-        let cfg = ExperimentConfig::paper_point(model, &lora_flag(&flags), ctx);
-        let r = Simulator::new(&cfg).run();
+        contexts.push(ctx);
+        ctx *= 2;
+    }
+    println!("{:>6} {:>9} {:>9} {:>9} {:>8} {:>8}",
+             "ctx", "ttft_s", "itl_ms", "tok/s", "P_W", "tok/J");
+    // Fan the context points out; print strictly in sweep order.
+    let reports = sweep::run_indexed(jobs, contexts.len(), |i| {
+        let cfg = ExperimentConfig::paper_point(model, &lora, contexts[i]);
+        Simulator::new(&cfg).run()
+    });
+    for (ctx, r) in contexts.iter().zip(&reports) {
         println!(
             "{:>6} {:>9.3} {:>9.3} {:>9.2} {:>8.2} {:>8.2}",
             ctx, r.ttft_s, r.itl_ms, r.throughput_tps, r.avg_power_w, r.efficiency_tpj
         );
-        ctx *= 2;
     }
     ExitCode::SUCCESS
 }

@@ -38,8 +38,10 @@ impl PhaseCost {
         ledger.post_network(self.d2d_bytes * 4, 1);
     }
 
-    fn merge_parallel(&mut self, other: PhaseCost) {
-        self.cycles = self.cycles.max(other.cycles);
+    /// Accumulate the event counters of `other` (cycles untouched). The
+    /// single merge helper behind both phase-parallel and program-
+    /// sequential composition.
+    pub fn add_events(&mut self, other: &PhaseCost) {
         self.rram_passes += other.rram_passes;
         self.sram_passes += other.sram_passes;
         self.dmac_macs += other.dmac_macs;
@@ -50,8 +52,23 @@ impl PhaseCost {
         self.d2d_bytes += other.d2d_bytes;
     }
 
+    fn merge_parallel(&mut self, other: PhaseCost) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.add_events(&other);
+    }
+
     fn scale(&mut self, n: u64) {
         self.cycles *= n;
+        self.scale_events(n);
+    }
+
+    /// Scale only the event counters by `n` (cycles untouched).
+    ///
+    /// This is what keeps "post the same event `n` times" replaceable by
+    /// one scaled post with *bit-identical* f64 energy: the u64 counters
+    /// are multiplied exactly before the single u64 -> f64 conversion in
+    /// the ledger, instead of accumulating `n` rounded f64 additions.
+    pub fn scale_events(&mut self, n: u64) {
         self.rram_passes *= n;
         self.sram_passes *= n;
         self.dmac_macs *= n;
@@ -60,6 +77,15 @@ impl PhaseCost {
         self.net_byte_hops *= n;
         self.reprog_bytes *= n;
         self.d2d_bytes *= n;
+    }
+
+    /// A copy with the event counters scaled by `n` and cycles zeroed —
+    /// the "post this event `n` times" value for a single ledger post.
+    pub fn events_scaled(&self, n: u64) -> PhaseCost {
+        let mut e = *self;
+        e.cycles = 0;
+        e.scale_events(n);
+        e
     }
 }
 
@@ -81,6 +107,23 @@ pub fn pipelined_step_cycles(
     let max: u64 = per_layer.iter().copied().max().unwrap_or(0);
     let b = per_layer.len() as u64;
     sum + (n_layers as u64 - 1) * max + (b - 1) * batch_overhead_cycles
+}
+
+/// Uniform-slot fast path of [`pipelined_step_cycles`]: when every slot
+/// decodes at the same per-layer cost `c` (the engine's lockstep batch),
+/// `sum = b*c` and `max = c`, so the bound collapses to
+/// `(b + n_layers - 1) * c + (b - 1) * overhead` — no per-slot buffer to
+/// fill, sum, or max. Bit-identical to the general form on a uniform
+/// slice by integer arithmetic (gated in tests).
+pub fn pipelined_step_cycles_uniform(
+    per_layer: u64,
+    batch: usize,
+    n_layers: usize,
+    batch_overhead_cycles: u64,
+) -> u64 {
+    debug_assert!(batch >= 1);
+    let b = batch as u64;
+    (b + n_layers as u64 - 1) * per_layer + (b - 1) * batch_overhead_cycles
 }
 
 /// Cost of one instruction.
@@ -149,8 +192,8 @@ pub fn instr_cost(
             c.reprog_bytes = *bytes as u64;
         }
         Instr::Gate { .. } => {
-            // Power-gate settle time: a handful of cycles.
-            c.cycles = 8;
+            // Power-gate settle time: a handful of cycles (calibrated).
+            c.cycles = calib.gate_settle_cycles;
         }
         Instr::Sync => {
             c.cycles = calib.nmc_issue_cycles;
@@ -208,31 +251,14 @@ pub fn program_cost(
             let extra = c.cycles.saturating_sub(prev_cycles);
             total.cycles += extra;
             prev_cycles += extra;
-            let mut e = c;
-            e.cycles = 0;
-            total.merge_events(e);
+            total.add_events(&c);
         } else {
             total.cycles += c.cycles + calib.nmc_issue_cycles;
             prev_cycles = c.cycles;
-            let mut e = c;
-            e.cycles = 0;
-            total.merge_events(e);
+            total.add_events(&c);
         }
     }
     total
-}
-
-impl PhaseCost {
-    fn merge_events(&mut self, other: PhaseCost) {
-        self.rram_passes += other.rram_passes;
-        self.sram_passes += other.sram_passes;
-        self.dmac_macs += other.dmac_macs;
-        self.softmax_elems += other.softmax_elems;
-        self.spad_bytes += other.spad_bytes;
-        self.net_byte_hops += other.net_byte_hops;
-        self.reprog_bytes += other.reprog_bytes;
-        self.d2d_bytes += other.d2d_bytes;
-    }
 }
 
 #[cfg(test)]
@@ -343,6 +369,72 @@ mod tests {
             let c = instr_cost(&i, &sys, &calib, &noc);
             assert!(c.cycles > 0, "{i:?}");
         }
+    }
+
+    #[test]
+    fn uniform_step_matches_general_bound() {
+        for &(c, b, l, ovh) in &[
+            (1000u64, 1usize, 16usize, 64u64),
+            (1000, 4, 16, 64),
+            (317, 7, 40, 0),
+            (0, 3, 1, 9),
+            (88_888, 32, 40, 128),
+        ] {
+            let general = pipelined_step_cycles(&vec![c; b], l, ovh);
+            let uniform = pipelined_step_cycles_uniform(c, b, l, ovh);
+            assert_eq!(general, uniform, "c={c} b={b} l={l} ovh={ovh}");
+        }
+    }
+
+    #[test]
+    fn gate_settle_cost_follows_calibration() {
+        let (sys, calib, noc) = setup();
+        let gate = Instr::Gate { ct: 3, off: true };
+        // Default preserves the historical literal 8.
+        assert_eq!(instr_cost(&gate, &sys, &calib, &noc).cycles, 8);
+        // Config override is honored by the cost model.
+        let mut slow = calib.clone();
+        slow.gate_settle_cycles = 50;
+        assert_eq!(instr_cost(&gate, &sys, &slow, &noc).cycles, 50);
+        let mut free = calib;
+        free.gate_settle_cycles = 0;
+        assert_eq!(instr_cost(&gate, &sys, &free, &noc).cycles, 0);
+    }
+
+    #[test]
+    fn events_scaled_matches_repeated_posts_exactly() {
+        use crate::energy::EnergyLedger;
+        let ev = PhaseCost {
+            cycles: 123,
+            rram_passes: 7,
+            sram_passes: 3,
+            dmac_macs: 1_000_003,
+            softmax_elems: 99,
+            spad_bytes: 4097,
+            net_byte_hops: 123_457,
+            reprog_bytes: 11,
+            d2d_bytes: 513,
+        };
+        // Scaling the u64 counters is exact; the single post converts the
+        // scaled integers once, so the result is the mathematically exact
+        // n*x (a repeated-f64-add loop would accumulate rounding).
+        let scaled = ev.events_scaled(160);
+        assert_eq!(scaled.cycles, 0);
+        assert_eq!(scaled.rram_passes, 7 * 160);
+        assert_eq!(scaled.dmac_macs, 1_000_003 * 160);
+        let (sys, calib, _) = setup();
+        let mut a = EnergyLedger::new(&sys, &calib);
+        scaled.post(&mut a);
+        let mut b = EnergyLedger::new(&sys, &calib);
+        ev.events_scaled(1).post(&mut b);
+        // one scaled post of n == n-fold counters in a single post
+        let mut c = EnergyLedger::new(&sys, &calib);
+        let mut big = ev;
+        big.cycles = 0;
+        big.scale_events(160);
+        big.post(&mut c);
+        assert_eq!(a.total_j().to_bits(), c.total_j().to_bits());
+        assert!(a.total_j() > b.total_j());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! the Table II/III quantities. See DESIGN.md for the timing-model
 //! derivation and EXPERIMENTS.md for calibration.
 
-use super::cost::{pipelined_step_cycles, program_cost};
+use super::cost::{pipelined_step_cycles_uniform, program_cost, PhaseCost};
 use super::layer_model::LayerCostModel;
 use crate::config::ExperimentConfig;
 use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
@@ -66,6 +66,40 @@ impl SimReport {
     }
 }
 
+/// How the decode sweep is evaluated. Both modes produce bit-identical
+/// [`SimReport`]s (gated across the whole paper grid in
+/// `tests/fastpath.rs` and in `benches/sim_hotpath.rs`); the closed form
+/// is the default because it is O(#kv-segments) instead of
+/// O(output_tokens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeEval {
+    /// Sum cycles, event counters, and state integrals per linear segment
+    /// of the layer cost model (exact integer floor-sums over the rounded
+    /// lerp — see `LayerCostModel::sum_window`).
+    ClosedForm,
+    /// The retained token-by-token reference loop.
+    PerToken,
+}
+
+/// Aggregated decode-sweep totals — the one set of numbers both
+/// [`DecodeEval`] modes produce and the shared posting routine consumes.
+/// Everything is u64 (exact), so the f64 ledger conversions happen once
+/// per run instead of once per token, and closed-form vs per-token
+/// equality reduces to integer equality.
+#[derive(Debug, Clone, Copy, Default)]
+struct DecodeTotals {
+    /// Σ per-step makespan cycles (pipeline bound + LM head if enabled).
+    cycles: u64,
+    /// Σ per-token *sharded* per-layer compute cycles (excludes the
+    /// all-reduce and LM head; the batched/sharded state integral's
+    /// active term).
+    compute_cycles: u64,
+    /// Σ per-token unsharded event counters (`cycles` field unused).
+    events: PhaseCost,
+    itl_first: u64,
+    itl_last: u64,
+}
+
 /// The simulator: owns the mapping and cost models for one experiment.
 pub struct Simulator {
     cfg: ExperimentConfig,
@@ -124,7 +158,8 @@ impl Simulator {
         self.run_sharded_batched(batch, self.cfg.shard.n_chips)
     }
 
-    /// The full engine: `batch` identical requests over `n_chips` chips.
+    /// The full engine: `batch` identical requests over `n_chips` chips,
+    /// decode evaluated in closed form (O(#kv-segments)).
     ///
     /// Sharding model (see `mapping::shard` and DESIGN.md): every layer's
     /// compute is tensor-parallel-split, so the per-layer critical path
@@ -140,6 +175,24 @@ impl Simulator {
     /// or gate while their shard is off-turn). At `n_chips == 1` every
     /// term collapses to the single-chip expression bit-for-bit.
     pub fn run_sharded_batched(&self, batch: usize, n_chips: usize) -> SimReport {
+        self.run_sharded_batched_with(batch, n_chips, DecodeEval::ClosedForm)
+    }
+
+    /// The retained per-token reference engine: walks every (layer, token)
+    /// decode evaluation. Exists so tests and the perf bench can gate the
+    /// closed form's bit-identity; production paths use
+    /// [`Simulator::run_sharded_batched`].
+    pub fn run_sharded_batched_reference(&self, batch: usize, n_chips: usize) -> SimReport {
+        self.run_sharded_batched_with(batch, n_chips, DecodeEval::PerToken)
+    }
+
+    /// Engine core shared by both decode evaluation modes.
+    pub fn run_sharded_batched_with(
+        &self,
+        batch: usize,
+        n_chips: usize,
+        mode: DecodeEval,
+    ) -> SimReport {
         let b = batch.max(1);
         let bu = b as u64;
         let nc = n_chips.max(1);
@@ -242,14 +295,16 @@ impl Simulator {
 
         // Prefill energy: dynamic events per (request, layer, block). The
         // chips' exact work shares sum to these unsharded counters
-        // (`mapping::shard`), so the single-chip totals are posted as-is.
+        // (`mapping::shard`), so the single-chip totals are posted as-is —
+        // one scaled post per run: the u64 counters are summed over blocks
+        // and multiplied by the `n_groups * b` repeat exactly, then
+        // converted to f64 once (the historical per-repeat posting loop
+        // accumulated one rounded f64 add per repeat).
+        let mut prefill_events = PhaseCost::default();
         for c in &stage_events {
-            let mut ev = *c;
-            ev.cycles = 0;
-            for _ in 0..n_groups * b {
-                ev.post(&mut ledger);
-            }
+            prefill_events.add_events(c);
         }
+        prefill_events.events_scaled((n_groups * b) as u64).post(&mut ledger);
         ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
         if nc > 1 {
             // Chip-ring all-reduce traffic of every (layer, request)
@@ -292,94 +347,160 @@ impl Simulator {
         } else {
             None
         };
-        let mut decode_cycles_total = 0u64;
-        let mut itl_first = 0u64;
-        let mut itl_last = 0u64;
         let out = cfg.output_tokens;
-        // Reusable slot-cost buffer: every slot decodes in lockstep at the
-        // same kv, so only the value changes per token, not the width.
-        let mut per_slot = vec![0u64; b];
-        for i in 0..out {
-            let kv = cfg.input_tokens + i;
-            let per_layer = layer_model.eval(kv);
-            // Per-layer per-slot cost: the sharded compute critical path
-            // plus the chip-ring all-reduce (both collapse at one chip:
-            // `per_layer` already holds the value, zero all-reduce).
-            let compute_cycles = if nc == 1 {
-                per_layer.cycles
-            } else {
-                shard_model.eval(kv).cycles
-            };
-            // Batched decode: b tokens in flight through the layer
-            // pipeline in lockstep, costed with the same pipeline bound as
-            // the serving coordinator (`DecodeBatch::step_cycles` shares
-            // this function). At b = 1 the bound collapses to the serial
-            // `n_groups * cycles` in integer arithmetic.
-            per_slot.fill(compute_cycles + ar_decode_cycles);
-            let mut tok_cycles = pipelined_step_cycles(
-                &per_slot,
+        let outu = out as u64;
+        let kv0 = cfg.input_tokens;
+        let ovh = cfg.serving.batch_overhead_cycles;
+        let head_cycles_bu = lm_head.as_ref().map(|(_, c)| c.cycles * bu).unwrap_or(0);
+        // Per-step makespan at one kv: every slot decodes in lockstep at
+        // the same kv, so the pipeline bound collapses to the uniform-slot
+        // form (`sum = b*c`, `max = c`; bit-identical to the general
+        // per-slot bound, which `DecodeBatch::step_cycles` still uses for
+        // the coordinator's heterogeneous slots). At b = 1 it further
+        // collapses to the serial `n_groups * cycles`.
+        let step_of = |compute_cycles: u64| -> u64 {
+            pipelined_step_cycles_uniform(
+                compute_cycles + ar_decode_cycles,
+                b,
                 n_groups,
-                cfg.serving.batch_overhead_cycles,
-            );
-            if let Some((_, head_cost)) = &lm_head {
-                tok_cycles += head_cost.cycles * bu;
-                for _ in 0..b {
-                    let mut ev = *head_cost;
-                    ev.cycles = 0;
-                    ev.post(&mut ledger);
+                ovh,
+            ) + head_cycles_bu
+        };
+        let totals = match mode {
+            DecodeEval::ClosedForm if out > 0 => {
+                // Closed-form sweep: exact integer floor-sums of the
+                // rounded lerp per linear segment of the layer model —
+                // O(#segments), not O(out) — then the per-token affine
+                // pipeline bound distributes over the sum:
+                //   Σ_i tok_i = (b+L-1)·(Σ_i c_i + out·ar)
+                //               + out·((b-1)·ovh + head·b).
+                let events = layer_model.sum_window(kv0, out);
+                let compute_cycles = if nc == 1 {
+                    events.cycles
+                } else {
+                    shard_model.sum_cycles_window(kv0, out)
+                };
+                let cycles = (bu + n_groups as u64 - 1)
+                    * (compute_cycles + outu * ar_decode_cycles)
+                    + outu * ((bu - 1) * ovh + head_cycles_bu);
+                let eval_at = |kv: usize| -> u64 {
+                    if nc == 1 {
+                        layer_model.eval_cycles(kv)
+                    } else {
+                        shard_model.eval_cycles(kv)
+                    }
+                };
+                let totals = DecodeTotals {
+                    cycles,
+                    compute_cycles,
+                    events,
+                    itl_first: step_of(eval_at(kv0)),
+                    itl_last: step_of(eval_at(kv0 + out - 1)),
+                };
+                // decode trace: only the first few tokens (diagram
+                // readability) — evaluated directly, identical to the
+                // reference loop's events.
+                if self.trace_enabled {
+                    let mut cum = 0u64;
+                    for i in 0..out.min(4) {
+                        let compute_cycles = eval_at(kv0 + i);
+                        let tok_cycles = step_of(compute_cycles);
+                        cum += tok_cycles;
+                        push_decode_trace(
+                            &mut trace,
+                            ttft_cycles + cum - tok_cycles,
+                            compute_cycles + ar_decode_cycles,
+                            n_groups,
+                        );
+                    }
                 }
+                totals
             }
-            if i == 0 {
-                itl_first = tok_cycles;
+            _ => {
+                // Reference loop: token by token, accumulating the same
+                // u64 totals the closed form produces (their equality is
+                // pure integer arithmetic, gated in tests/fastpath.rs).
+                let mut t = DecodeTotals::default();
+                for i in 0..out {
+                    let kv = kv0 + i;
+                    let per_layer = layer_model.eval(kv);
+                    // Per-layer per-slot cost: the sharded compute
+                    // critical path (collapses to `per_layer` at one
+                    // chip).
+                    let compute_cycles = if nc == 1 {
+                        per_layer.cycles
+                    } else {
+                        shard_model.eval(kv).cycles
+                    };
+                    let tok_cycles = step_of(compute_cycles);
+                    if i == 0 {
+                        t.itl_first = tok_cycles;
+                    }
+                    if i + 1 == out {
+                        t.itl_last = tok_cycles;
+                    }
+                    t.cycles += tok_cycles;
+                    t.compute_cycles += compute_cycles;
+                    t.events.add_events(&per_layer);
+                    if self.trace_enabled && i < 4 {
+                        push_decode_trace(
+                            &mut trace,
+                            ttft_cycles + t.cycles - tok_cycles,
+                            compute_cycles + ar_decode_cycles,
+                            n_groups,
+                        );
+                    }
+                }
+                t
             }
-            if i + 1 == out {
-                itl_last = tok_cycles;
-            }
-            decode_cycles_total += tok_cycles;
-            // dynamic energy per (slot, layer): the unsharded event
-            // counters (the chips' exact shares sum to them), plus the
-            // chip-ring all-reduce traffic when sharded.
-            let mut ev = per_layer;
-            ev.cycles = 0;
-            for _ in 0..n_groups * b {
-                ev.post(&mut ledger);
-            }
+        };
+        let decode_cycles_total = totals.cycles;
+        let (itl_first, itl_last) = (totals.itl_first, totals.itl_last);
+
+        // ---- decode energy: scaled single posts ---------------------------
+        // Dynamic energy per (slot, layer, token): the unsharded event
+        // counters (the chips' exact shares sum to them), the chip-ring
+        // all-reduce traffic when sharded, and the LM head when enabled —
+        // each as ONE ledger post with the u64 counters scaled by the
+        // repeat count before the f64 conversion, which keeps the result
+        // exact (and independent of how the totals were produced).
+        if out > 0 {
+            totals.events.events_scaled((n_groups * b) as u64).post(&mut ledger);
             if nc > 1 {
-                ledger.post_network(ar_decode_link_bytes * (n_groups * b) as u64 * 4, 1);
+                ledger.post_network(
+                    ar_decode_link_bytes * (n_groups * b * out) as u64 * 4,
+                    1,
+                );
+            }
+            if let Some((_, head_cost)) = &lm_head {
+                head_cost.events_scaled((b * out) as u64).post(&mut ledger);
             }
             // State energy. Serial single-chip: at any instant exactly one
             // group computes and the rest are gated/idle, so integrating
-            // "one active group" over the whole token interval gives the
+            // "one active group" over the whole decode sweep gives the
             // exact CT-cycle split. Batched/sharded: the pipeline holds up
             // to b busy groups on each of the nc chips, so the active
             // integral is the slots' sharded compute across all chips and
-            // the idle integral is the remainder of the step.
+            // the idle integral is the remainder — all integer CT-cycles,
+            // converted to f64 once.
             if b == 1 && nc == 1 {
-                let sc = srpg.decode_interval(tok_cycles);
-                ledger.post_ct_state(CtPowerState::Active, sc.active, 1);
-                ledger.post_ct_state(srpg.idle_state(), sc.idle, 1);
-            } else {
-                let active = (bu * (n_groups * nc) as u64 * compute_cycles) as f64
-                    * cts_per_group as f64;
-                let total = tok_cycles as f64 * (n_groups * cts_per_group * nc) as f64;
-                let idle = (total - active).max(0.0);
+                let active = decode_cycles_total as f64 * cts_per_group as f64;
+                let idle = decode_cycles_total as f64
+                    * ((n_groups - 1) * cts_per_group) as f64;
                 ledger.post_ct_state(CtPowerState::Active, active, 1);
                 ledger.post_ct_state(srpg.idle_state(), idle, 1);
-            }
-            // decode trace: only the first few tokens (diagram readability).
-            // Sharded layers span compute + all-reduce (0 at one chip), so
-            // the traced intervals tile the step the clock actually takes.
-            if self.trace_enabled && i < 4 {
-                let t0 = ttft_cycles + decode_cycles_total - tok_cycles;
-                let span = compute_cycles + ar_decode_cycles;
-                for l in 0..n_groups {
-                    trace.push(TraceEvent {
-                        ct_group: l,
-                        kind: TraceKind::Decode,
-                        start: t0 + span * l as u64,
-                        end: t0 + span * (l + 1) as u64,
-                    });
-                }
+            } else {
+                let active_int = bu
+                    * (n_groups * nc) as u64
+                    * totals.compute_cycles
+                    * cts_per_group as u64;
+                let total_int =
+                    decode_cycles_total * (n_groups * cts_per_group * nc) as u64;
+                // Per token, b·compute ≤ (b+L-1)·(compute+ar), so the
+                // aggregate idle integral is non-negative by construction.
+                let idle_int = total_int.saturating_sub(active_int);
+                ledger.post_ct_state(CtPowerState::Active, active_int as f64, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle_int as f64, 1);
             }
         }
 
@@ -422,6 +543,20 @@ impl Simulator {
             itl_first_ms: itl_first as f64 * cyc * 1e3,
             itl_last_ms: itl_last as f64 * cyc * 1e3,
         }
+    }
+}
+
+/// Push one decode token's per-group trace spans (first few tokens only;
+/// sharded layers span compute + all-reduce — 0 at one chip — so the
+/// traced intervals tile the step the clock actually takes).
+fn push_decode_trace(trace: &mut Trace, t0: u64, span: u64, n_groups: usize) {
+    for l in 0..n_groups {
+        trace.push(TraceEvent {
+            ct_group: l,
+            kind: TraceKind::Decode,
+            start: t0 + span * l as u64,
+            end: t0 + span * (l + 1) as u64,
+        });
     }
 }
 
@@ -592,6 +727,61 @@ mod tests {
         let r = sim.run();
         assert_eq!(r.batch, 2);
         assert_eq!(r.throughput_tps.to_bits(), sim.run_batched(2).throughput_tps.to_bits());
+    }
+
+    fn assert_reports_bit_identical(a: &SimReport, b: &SimReport, label: &str) {
+        assert_eq!(a.total_cycles, b.total_cycles, "{label}: cycles");
+        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}: ttft");
+        assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}: itl");
+        assert_eq!(
+            a.itl_first_ms.to_bits(),
+            b.itl_first_ms.to_bits(),
+            "{label}: itl_first"
+        );
+        assert_eq!(a.itl_last_ms.to_bits(), b.itl_last_ms.to_bits(), "{label}: itl_last");
+        assert_eq!(
+            a.throughput_tps.to_bits(),
+            b.throughput_tps.to_bits(),
+            "{label}: throughput"
+        );
+        assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits(), "{label}: power");
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "{label}: energy"
+        );
+        assert_eq!(
+            a.efficiency_tpj.to_bits(),
+            b.efficiency_tpj.to_bits(),
+            "{label}: efficiency"
+        );
+    }
+
+    #[test]
+    fn closed_form_decode_bitmatches_reference() {
+        for (batch, chips) in [(1usize, 1usize), (4, 1), (1, 2), (4, 4)] {
+            let cfg = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                512,
+            );
+            let sim = Simulator::new(&cfg);
+            let fast = sim.run_sharded_batched(batch, chips);
+            let slow = sim.run_sharded_batched_reference(batch, chips);
+            assert_reports_bit_identical(&fast, &slow, &format!("b{batch}/c{chips}"));
+        }
+    }
+
+    #[test]
+    fn closed_form_traces_match_reference() {
+        let cfg = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 256);
+        let sim = Simulator::new(&cfg).with_trace();
+        let fast = sim.run_sharded_batched(1, 1);
+        let slow = sim.run_sharded_batched_reference(1, 1);
+        assert_eq!(fast.trace.events.len(), slow.trace.events.len());
+        for (a, b) in fast.trace.events.iter().zip(&slow.trace.events) {
+            assert_eq!((a.ct_group, a.start, a.end), (b.ct_group, b.start, b.end));
+        }
     }
 
     #[test]

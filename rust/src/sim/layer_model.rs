@@ -10,43 +10,203 @@
 //! exact program cost at a geometric grid of kv values and interpolate;
 //! samples are exact, interpolation error between adjacent samples is
 //! bounded by the segment's curvature (checked in tests at <2%).
+//!
+//! The interpolation is evaluated in *exact integer arithmetic*: for a
+//! segment `[k0, k1]` with sampled values `a, b`, the rounded lerp at
+//! `j = kv - k0` is
+//!
+//!   max(0, floor((2*a*d + 2*(b-a)*j + d) / (2*d)))        d = k1 - k0
+//!
+//! which equals the historical f64 `(a + (b-a)*j/d).round().max(0.0)`
+//! bit-for-bit on this sample grid (every segment width is a power of
+//! two, so the f64 expression was already exact; gated in tests). The
+//! integer form is what makes *closed-form window summation* possible:
+//! `sum_window` folds a whole `[kv0, kv0+n)` decode window into one
+//! floor-sum per linear segment (the classic O(log) lattice-point count
+//! for `sum floor((a*i+b)/m)`), so summing a 2048-token decode sweep
+//! costs O(#segments) instead of O(tokens) — exactly, not approximately.
 
 use super::cost::{program_cost, PhaseCost};
 use crate::config::ExperimentConfig;
 use crate::dataflow::{decode_program, shard_program_slice};
 use crate::mapping::LayerMapping;
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// kv sample grid (covers the paper's contexts with margin).
+/// kv sample grid (covers the paper's contexts with margin). Segment
+/// widths are powers of two — see the module docs; `sum_window` does not
+/// depend on that, but bit-equality with the historical f64 lerp does.
 const KV_SAMPLES: [usize; 10] = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096, 8192];
 
 /// Process-wide build cache: grid sweeps and repeated `Server` construction
 /// hit the same (model, mapping) key over and over, and each uncached build
 /// generates + costs ten decode programs.
-static CACHE: OnceLock<Mutex<BTreeMap<String, Arc<LayerCostModel>>>> = OnceLock::new();
+static CACHE: OnceLock<Mutex<BTreeMap<CacheKey, Arc<LayerCostModel>>>> = OnceLock::new();
 static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 
-/// Everything the sampled decode cost depends on: the hardware, the model
-/// shape, the LoRA configuration, the calibration constants, the layer
-/// mapping itself, and the tensor-parallel chip count (the sharded model
-/// samples chip 0's program slice). Deliberately excludes input/output
-/// lengths, batch, and SRPG (the decode program is kv-parameterized and
-/// SRPG only affects reprogramming/power, not the decode instruction
-/// stream).
-fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping, n_chips: usize) -> String {
-    format!(
-        "{:?}|{:?}|{:?}|{:?}|{:?}|chips{}",
-        cfg.system, cfg.model, cfg.lora, cfg.calib, lm, n_chips
+/// Hashed cache key. Everything the sampled decode cost depends on — the
+/// hardware, the model shape, the LoRA configuration, the calibration
+/// constants, the layer mapping itself — is streamed through two
+/// independent 64-bit FNV-1a states (no multi-kilobyte Debug `String` is
+/// allocated, stored, or compared, which the old format!-keyed map did on
+/// every lookup); the tensor-parallel chip count rides alongside in the
+/// clear. Deliberately excludes input/output lengths, batch, and SRPG
+/// (the decode program is kv-parameterized and SRPG only affects
+/// reprogramming/power, not the decode instruction stream). 128 bits of
+/// hash across two independent states makes an accidental collision
+/// astronomically unlikely; a collision-sanity test sweeps nearby configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct CacheKey {
+    h1: u64,
+    h2: u64,
+    n_chips: usize,
+}
+
+/// Two independent FNV-1a 64 streams fed through `fmt::Write`, so the
+/// Debug representations hash without materializing a string.
+struct DualFnv {
+    h1: u64,
+    h2: u64,
+}
+
+impl DualFnv {
+    const OFFSET1: u64 = 0xcbf2_9ce4_8422_2325;
+    const OFFSET2: u64 = 0x6c62_272e_07bb_0142; // distinct basis
+    const PRIME: u64 = 0x1000_0000_01b3;
+
+    fn new() -> Self {
+        Self { h1: Self::OFFSET1, h2: Self::OFFSET2 }
+    }
+}
+
+impl Default for DualFnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Write for DualFnv {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for &byte in s.as_bytes() {
+            self.h1 = (self.h1 ^ byte as u64).wrapping_mul(Self::PRIME);
+            // The second stream folds the running length parity in, so it
+            // is not a bijection of the first.
+            self.h2 = (self.h2 ^ byte.rotate_left(3) as u64).wrapping_mul(Self::PRIME);
+        }
+        Ok(())
+    }
+}
+
+fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping, n_chips: usize) -> CacheKey {
+    let mut h = DualFnv::new();
+    write!(
+        h,
+        "{:?}|{:?}|{:?}|{:?}|{:?}",
+        cfg.system, cfg.model, cfg.lora, cfg.calib, lm
     )
+    .expect("hashing Debug output is infallible");
+    CacheKey { h1: h.h1, h2: h.h2, n_chips }
+}
+
+/// Exact rounded lerp between `(k0, a)` and `(k1, b)` at offset `j`
+/// (`d = k1 - k0`), clamped at zero:
+/// `max(0, floor((2*a*d + 2*(b-a)*j + d) / (2*d)))`. For non-negative
+/// interpolants this is round-half-away-from-zero, matching `f64::round`.
+#[inline]
+fn lerp_round(a: u64, b: u64, j: i128, d: i128) -> u64 {
+    debug_assert!(d > 0);
+    let num = 2 * a as i128 * d + 2 * (b as i128 - a as i128) * j + d;
+    if num < 0 {
+        return 0;
+    }
+    (num / (2 * d)) as u64
+}
+
+/// Exact `sum_{j in [j0, j1)} lerp_round(a, b, j, d)` in O(log) integer
+/// operations: the zero clamp is split off analytically (the numerator is
+/// monotone in `j`), the rest is a floor-sum of a linear rational
+/// sequence.
+fn sum_lerp(a: u64, b: u64, d: i128, j0: i128, j1: i128) -> u64 {
+    if j1 <= j0 {
+        return 0;
+    }
+    let delta = b as i128 - a as i128;
+    let c = 2 * a as i128 * d + d;
+    let hi = if delta < 0 {
+        // Numerator decreasing: values clamp to zero for
+        // j > floor(c / (-2*delta)); the `hi <= j0` guard below covers
+        // windows entirely inside the clamped region.
+        let j_pos = c.div_euclid(-2 * delta);
+        j1.min(j_pos + 1)
+    } else {
+        j1
+    };
+    if hi <= j0 {
+        return 0;
+    }
+    let n = hi - j0;
+    let s = floor_sum(n, 2 * d, 2 * delta, 2 * delta * j0 + c);
+    debug_assert!(s >= 0, "clamped lerp sum cannot be negative");
+    s as u64
+}
+
+/// `sum_{i=0}^{n-1} floor((a*i + b) / m)` for `m > 0`, any sign of `a`
+/// and `b` — the classic Euclidean-descent floor-sum, O(log) steps.
+fn floor_sum(n: i128, m: i128, a: i128, b: i128) -> i128 {
+    debug_assert!(n >= 0 && m > 0);
+    let (mut n, mut m, mut a, mut b) = (n, m, a, b);
+    let mut ans: i128 = 0;
+    if a < 0 {
+        let a2 = a.rem_euclid(m);
+        ans -= n * (n - 1) / 2 * ((a2 - a) / m);
+        a = a2;
+    }
+    if b < 0 {
+        let b2 = b.rem_euclid(m);
+        ans -= n * ((b2 - b) / m);
+        b = b2;
+    }
+    loop {
+        if a >= m {
+            ans += n * (n - 1) / 2 * (a / m);
+            a %= m;
+        }
+        if b >= m {
+            ans += n * (b / m);
+            b %= m;
+        }
+        let y_max = a * n + b;
+        if y_max < m {
+            break;
+        }
+        n = y_max / m;
+        b = y_max % m;
+        std::mem::swap(&mut m, &mut a);
+    }
+    ans
 }
 
 /// Piecewise-linear per-layer decode model.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct LayerCostModel {
     samples: Vec<(usize, PhaseCost)>,
+    /// Per-instance count of `eval`/`eval_cycles` calls — the decode-loop
+    /// proxy the perf bench and fast-path tests gate on (closed-form
+    /// paths must not scale it with tokens). Instance-scoped so counting
+    /// tests don't race other tests sharing the process.
+    evals: AtomicU64,
+}
+
+impl Clone for LayerCostModel {
+    fn clone(&self) -> Self {
+        Self {
+            samples: self.samples.clone(),
+            evals: AtomicU64::new(self.evals.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl LayerCostModel {
@@ -57,7 +217,7 @@ impl LayerCostModel {
                 (kv, program_cost(&decode_program(cfg, lm, kv), &cfg.system, &cfg.calib))
             })
             .collect();
-        Self { samples }
+        Self { samples, evals: AtomicU64::new(0) }
     }
 
     /// The sharded decode model: samples the cost of chip 0's (widest)
@@ -76,7 +236,7 @@ impl LayerCostModel {
                 (kv, program_cost(&sliced, &cfg.system, &cfg.calib))
             })
             .collect();
-        Self { samples }
+        Self { samples, evals: AtomicU64::new(0) }
     }
 
     /// Cached [`LayerCostModel::build`]: returns a shared model for the
@@ -120,22 +280,42 @@ impl LayerCostModel {
         )
     }
 
-    /// Evaluate at a kv length (linear interpolation; clamped extrapolation
-    /// above the last sample uses the final segment's slope).
-    pub fn eval(&self, kv_len: usize) -> PhaseCost {
+    /// Per-kv `eval`/`eval_cycles` calls served by THIS model instance —
+    /// the decode-loop proxy `sim_hotpath` and `tests/fastpath.rs` gate
+    /// on: closed-form summation must not scale it with output tokens.
+    /// (Cached models are shared process-wide, so gate against an
+    /// instance no concurrent test touches.)
+    pub fn eval_count(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Bracketing segment of `kv_len` under the historical rule "first
+    /// sample >= kv closes the segment" (extrapolation keeps the last
+    /// segment's slope). Returns `None` when `kv_len` sits at/below the
+    /// first sample.
+    fn bracket(&self, kv_len: usize) -> Option<(&(usize, PhaseCost), &(usize, PhaseCost))> {
         let pts = &self.samples;
-        // find the bracketing segment
-        let (lo, hi) = match pts.iter().position(|(k, _)| *k >= kv_len) {
-            Some(0) => return pts[0].1,
-            Some(i) => (pts[i - 1], pts[i]),
-            None => (pts[pts.len() - 2], pts[pts.len() - 1]),
+        match pts.iter().position(|(k, _)| *k >= kv_len) {
+            Some(0) => None,
+            Some(i) => Some((&pts[i - 1], &pts[i])),
+            None => Some((&pts[pts.len() - 2], &pts[pts.len() - 1])),
+        }
+    }
+
+    /// Evaluate at a kv length (exact integer rounded lerp; clamped
+    /// extrapolation above the last sample uses the final segment's
+    /// slope). Bit-identical to the historical f64 lerp on this sample
+    /// grid (power-of-two segment widths keep the f64 path exact).
+    pub fn eval(&self, kv_len: usize) -> PhaseCost {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let Some((lo, hi)) = self.bracket(kv_len) else {
+            return self.samples[0].1;
         };
         let (k0, c0) = lo;
         let (k1, c1) = hi;
-        let f = (kv_len as f64 - k0 as f64) / (k1 as f64 - k0 as f64);
-        let lerp = |a: u64, b: u64| -> u64 {
-            (a as f64 + (b as f64 - a as f64) * f).round().max(0.0) as u64
-        };
+        let d = (*k1 - *k0) as i128;
+        let j = (kv_len - *k0) as i128;
+        let lerp = |a: u64, b: u64| -> u64 { lerp_round(a, b, j, d) };
         PhaseCost {
             cycles: lerp(c0.cycles, c1.cycles),
             rram_passes: lerp(c0.rram_passes, c1.rram_passes),
@@ -149,6 +329,104 @@ impl LayerCostModel {
         }
     }
 
+    /// Cycles-only evaluation — the serving coordinator's per-step hook
+    /// (skips the eight event-field lerps `eval` pays).
+    pub fn eval_cycles(&self, kv_len: usize) -> u64 {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let Some((lo, hi)) = self.bracket(kv_len) else {
+            return self.samples[0].1.cycles;
+        };
+        lerp_round(
+            lo.1.cycles,
+            hi.1.cycles,
+            (kv_len - lo.0) as i128,
+            (hi.0 - lo.0) as i128,
+        )
+    }
+
+    /// Walk the linear segments covering the kv window `[kv0, kv0 + n)`:
+    /// calls `f(lo, hi, lo_sample, hi_sample)` per maximal run of kv
+    /// values sharing one segment (half-open `[lo, hi)`; the last segment
+    /// extends past the final sample for extrapolation).
+    fn for_each_segment<F: FnMut(usize, usize, &(usize, PhaseCost), &(usize, PhaseCost))>(
+        &self,
+        kv0: usize,
+        n: usize,
+        mut f: F,
+    ) {
+        let pts = &self.samples;
+        let m = pts.len();
+        debug_assert!(m >= 2);
+        let hi = kv0 + n;
+        let mut lo = kv0;
+        while lo < hi {
+            let i = match pts.iter().rposition(|(k, _)| *k <= lo) {
+                Some(i) => i.min(m - 2),
+                None => 0,
+            };
+            let seg_end = if i == m - 2 { hi } else { hi.min(pts[i + 1].0) };
+            f(lo, seg_end, &pts[i], &pts[i + 1]);
+            lo = seg_end;
+        }
+    }
+
+    /// Exact `sum_{kv in [kv0, kv0+n)} eval(kv)` over every `PhaseCost`
+    /// field, in O(#segments) floor-sums instead of O(n) evals. This is
+    /// the closed-form decode summation: each field is piecewise the
+    /// rounded lerp, and the boundary convention difference against
+    /// `eval`'s bracketing is value-free (both are exact at samples).
+    pub fn sum_window(&self, kv0: usize, n: usize) -> PhaseCost {
+        let mut acc = PhaseCost::default();
+        self.for_each_segment(kv0, n, |lo, hi, &(k0, c0), &(k1, c1)| {
+            let d = (k1 - k0) as i128;
+            let j0 = (lo - k0) as i128;
+            let j1 = (hi - k0) as i128;
+            acc.cycles += sum_lerp(c0.cycles, c1.cycles, d, j0, j1);
+            acc.rram_passes += sum_lerp(c0.rram_passes, c1.rram_passes, d, j0, j1);
+            acc.sram_passes += sum_lerp(c0.sram_passes, c1.sram_passes, d, j0, j1);
+            acc.dmac_macs += sum_lerp(c0.dmac_macs, c1.dmac_macs, d, j0, j1);
+            acc.softmax_elems += sum_lerp(c0.softmax_elems, c1.softmax_elems, d, j0, j1);
+            acc.spad_bytes += sum_lerp(c0.spad_bytes, c1.spad_bytes, d, j0, j1);
+            acc.net_byte_hops += sum_lerp(c0.net_byte_hops, c1.net_byte_hops, d, j0, j1);
+            acc.reprog_bytes += sum_lerp(c0.reprog_bytes, c1.reprog_bytes, d, j0, j1);
+            acc.d2d_bytes += sum_lerp(c0.d2d_bytes, c1.d2d_bytes, d, j0, j1);
+        });
+        acc
+    }
+
+    /// Exact `sum_{kv in [kv0, kv0+n)} eval(kv).cycles` in O(#segments).
+    pub fn sum_cycles_window(&self, kv0: usize, n: usize) -> u64 {
+        let mut acc = 0u64;
+        self.for_each_segment(kv0, n, |lo, hi, &(k0, c0), &(k1, c1)| {
+            acc += sum_lerp(
+                c0.cycles,
+                c1.cycles,
+                (k1 - k0) as i128,
+                (lo - k0) as i128,
+                (hi - k0) as i128,
+            );
+        });
+        acc
+    }
+
+    /// Whether the per-layer cycle cost is non-decreasing in kv across the
+    /// whole sample grid *and* under extrapolation (last-segment slope
+    /// >= 0). Piecewise-linear interpolation of non-decreasing samples is
+    /// non-decreasing and rounding preserves monotonicity, so this single
+    /// check licenses "the slot at the largest kv is the pipeline max" in
+    /// the coordinator's decode fast-forward.
+    pub fn cycles_nondecreasing(&self) -> bool {
+        self.samples.windows(2).all(|w| w[0].1.cycles <= w[1].1.cycles)
+    }
+
+    /// An incremental cursor yielding `eval_cycles(kv0)`,
+    /// `eval_cycles(kv0+1)`, … in O(1) integer ops per step with no
+    /// per-step segment search — the coordinator's fast-forward uses one
+    /// per decode slot.
+    pub fn cycles_cursor(&self, kv0: usize) -> CyclesCursor<'_> {
+        CyclesCursor { model: self, kv: kv0, seg_end: 0, a: 0, b: 0, k0: 0, d: 1 }
+    }
+
     /// Cycles for one decode token at `kv_len` across the whole model
     /// (all layer groups, layer-sequential). This is the per-token cost
     /// hook the serving coordinator's batched decode builds on.
@@ -159,6 +437,52 @@ impl LayerCostModel {
     /// Mean cycles-per-kv-token slope over [1024, 2048] (diagnostics).
     pub fn slope_cycles(&self) -> f64 {
         (self.eval(2048).cycles as f64 - self.eval(1024).cycles as f64) / 1024.0
+    }
+}
+
+/// Incremental per-kv cycles iterator over a [`LayerCostModel`]; see
+/// [`LayerCostModel::cycles_cursor`]. Values bit-match `eval_cycles` at
+/// every kv (gated in tests), without the per-call segment search.
+pub struct CyclesCursor<'a> {
+    model: &'a LayerCostModel,
+    kv: usize,
+    /// Exclusive kv bound of the cached segment (`usize::MAX` once on the
+    /// extrapolating final segment). Starts at 0 so the first call seats.
+    seg_end: usize,
+    a: u64,
+    b: u64,
+    k0: usize,
+    d: i128,
+}
+
+impl CyclesCursor<'_> {
+    fn reseat(&mut self) {
+        let pts = &self.model.samples;
+        let m = pts.len();
+        let i = match pts.iter().rposition(|(k, _)| *k <= self.kv) {
+            Some(i) => i.min(m - 2),
+            None => 0,
+        };
+        self.seg_end = if i == m - 2 { usize::MAX } else { pts[i + 1].0 };
+        self.k0 = pts[i].0;
+        self.a = pts[i].1.cycles;
+        self.b = pts[i + 1].1.cycles;
+        self.d = (pts[i + 1].0 - pts[i].0) as i128;
+    }
+
+    /// The per-layer cycles at the cursor's kv, then advance by one token.
+    pub fn next_cycles(&mut self) -> u64 {
+        if self.kv >= self.seg_end || self.seg_end == 0 {
+            self.reseat();
+        }
+        let v = lerp_round(self.a, self.b, (self.kv - self.k0) as i128, self.d);
+        self.kv += 1;
+        v
+    }
+
+    /// kv the next `next_cycles` call will evaluate.
+    pub fn kv(&self) -> usize {
+        self.kv
     }
 }
 
@@ -203,6 +527,121 @@ mod tests {
             let err = (pred.cycles as f64 - direct.cycles as f64).abs()
                 / direct.cycles as f64;
             assert!(err < 0.02, "kv {kv}: err {err:.4}");
+        }
+    }
+
+    #[test]
+    fn integer_lerp_bitmatches_historical_f64_lerp() {
+        // The pre-closed-form eval computed
+        // (a + (b - a) * f).round().max(0.0) in f64; on this sample grid
+        // (power-of-two segment widths) that expression is exact, so the
+        // integer form must reproduce it everywhere, all fields.
+        for id in [ModelId::Llama32_1b, ModelId::Llama3_8b, ModelId::Llama2_13b] {
+            let (_, m) = model_for(id);
+            for kv in (0..=9000).step_by(37) {
+                let got = m.eval(kv);
+                let (lo, hi) = match m.bracket(kv) {
+                    None => continue, // kv <= first sample: exact by construction
+                    Some(p) => p,
+                };
+                let (k0, c0) = lo;
+                let (k1, c1) = hi;
+                let f = (kv as f64 - *k0 as f64) / (*k1 as f64 - *k0 as f64);
+                let lerp_f64 = |a: u64, b: u64| -> u64 {
+                    (a as f64 + (b as f64 - a as f64) * f).round().max(0.0) as u64
+                };
+                assert_eq!(got.cycles, lerp_f64(c0.cycles, c1.cycles), "kv {kv}");
+                assert_eq!(got.dmac_macs, lerp_f64(c0.dmac_macs, c1.dmac_macs), "kv {kv}");
+                assert_eq!(
+                    got.net_byte_hops,
+                    lerp_f64(c0.net_byte_hops, c1.net_byte_hops),
+                    "kv {kv}"
+                );
+                assert_eq!(got.spad_bytes, lerp_f64(c0.spad_bytes, c1.spad_bytes), "kv {kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn floor_sum_matches_naive() {
+        let cases: &[(i128, i128, i128, i128)] = &[
+            (10, 7, 3, 5),
+            (100, 256, 7, 1),
+            (57, 13, -4, 100),
+            (33, 9, 5, -17),
+            (41, 2048, -1000, 2_000_000),
+            (0, 5, 3, 3),
+            (1, 1, 0, 0),
+        ];
+        for &(n, m, a, b) in cases {
+            let naive: i128 = (0..n).map(|i| (a * i + b).div_euclid(m)).sum();
+            assert_eq!(floor_sum(n, m, a, b), naive, "n={n} m={m} a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn sum_window_matches_eval_loop_exactly() {
+        for id in [ModelId::Llama32_1b, ModelId::Llama2_13b] {
+            let (_, m) = model_for(id);
+            // Windows crossing segment boundaries, the last sample, and
+            // the extrapolation region.
+            for &(kv0, n) in &[
+                (0usize, 1usize),
+                (0, 300),
+                (100, 100),
+                (1024, 2048),
+                (2048, 2048),
+                (4000, 200),
+                (8000, 600),
+                (8192, 64),
+                (511, 2),
+                (777, 0),
+            ] {
+                let fast = m.sum_window(kv0, n);
+                let mut slow = PhaseCost::default();
+                for kv in kv0..kv0 + n {
+                    let e = m.eval(kv);
+                    slow.cycles += e.cycles;
+                    slow.add_events(&e);
+                }
+                assert_eq!(fast, slow, "{id:?} window [{kv0}, {})", kv0 + n);
+                assert_eq!(
+                    m.sum_cycles_window(kv0, n),
+                    slow.cycles,
+                    "{id:?} cycles window [{kv0}, {})",
+                    kv0 + n
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_bitmatches_eval_across_boundaries() {
+        let (_, m) = model_for(ModelId::Llama3_8b);
+        let mut cur = m.cycles_cursor(100);
+        for kv in 100..4500 {
+            assert_eq!(cur.next_cycles(), m.eval_cycles(kv), "kv {kv}");
+        }
+        // Extrapolation region too.
+        let mut far = m.cycles_cursor(8100);
+        for kv in 8100..8400 {
+            assert_eq!(far.next_cycles(), m.eval_cycles(kv), "kv {kv}");
+        }
+    }
+
+    #[test]
+    fn eval_cycles_agrees_with_eval() {
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        for kv in (0..6000).step_by(101) {
+            assert_eq!(m.eval_cycles(kv), m.eval(kv).cycles, "kv {kv}");
+        }
+    }
+
+    #[test]
+    fn paper_models_are_monotone_in_kv() {
+        for id in [ModelId::Llama32_1b, ModelId::Llama3_8b, ModelId::Llama2_13b] {
+            let (_, m) = model_for(id);
+            assert!(m.cycles_nondecreasing(), "{id:?}");
         }
     }
 
@@ -271,5 +710,58 @@ mod tests {
         // cached and uncached agree exactly
         let fresh = LayerCostModel::build(&cfg, &mapping.layers[0]);
         assert_eq!(a.eval(2048), fresh.eval(2048));
+    }
+
+    #[test]
+    fn hashed_keys_distinguish_nearby_configs() {
+        // Collision sanity: every pair of distinct configurations in this
+        // neighborhood sweep must hash to a distinct 128-bit key, and
+        // identical configs must collide (that is the cache contract).
+        let base = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let lm = map_model(&base).layers[0].clone();
+        let mut keys = Vec::new();
+        for id in [ModelId::Llama32_1b, ModelId::Llama3_8b, ModelId::Llama2_13b] {
+            for targets in [vec![LoraTarget::Q], vec![LoraTarget::Q, LoraTarget::V]] {
+                let cfg = ExperimentConfig::paper_point(id, &targets, 1024);
+                let lmx = map_model(&cfg).layers[0].clone();
+                for chips in [1usize, 2, 4] {
+                    keys.push(cache_key(&cfg, &lmx, chips));
+                }
+            }
+        }
+        // Calibration perturbations must also move the key.
+        let mut tweaked = base.clone();
+        tweaked.calib.rram_pass_cycles += 1;
+        keys.push(cache_key(&tweaked, &lm, 1));
+        let mut gated = base.clone();
+        gated.calib.gate_settle_cycles = 9;
+        keys.push(cache_key(&gated, &lm, 1));
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "key collision between {i} and {j}");
+            }
+        }
+        // Determinism: same inputs, same key.
+        assert_eq!(cache_key(&base, &lm, 1), cache_key(&base, &lm, 1));
+    }
+
+    #[test]
+    fn eval_counter_advances() {
+        // A fresh (uncached) instance: the counter is private to this
+        // test, so exact assertions are race-free under the parallel
+        // test harness.
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        assert_eq!(m.eval_count(), 0);
+        let _ = m.eval(1000);
+        let _ = m.eval_cycles(1001);
+        assert_eq!(m.eval_count(), 2);
+        // Closed-form window summation must not consume per-kv evals.
+        let _ = m.sum_window(1024, 2048);
+        let _ = m.sum_cycles_window(1024, 2048);
+        assert_eq!(m.eval_count(), 2);
     }
 }

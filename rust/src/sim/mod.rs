@@ -17,8 +17,12 @@ pub mod cost;
 pub mod engine;
 pub mod layer_model;
 pub mod lm_head;
+pub mod sweep;
 
-pub use cost::{phase_cost, pipelined_step_cycles, program_cost, PhaseCost};
-pub use engine::{SimReport, Simulator};
-pub use layer_model::LayerCostModel;
+pub use cost::{
+    phase_cost, pipelined_step_cycles, pipelined_step_cycles_uniform, program_cost,
+    PhaseCost,
+};
+pub use engine::{DecodeEval, SimReport, Simulator};
+pub use layer_model::{CyclesCursor, LayerCostModel};
 pub use lm_head::LmHead;

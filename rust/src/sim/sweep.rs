@@ -1,0 +1,123 @@
+//! Deterministic parallel sweep driver for grid runs.
+//!
+//! Table II/III regeneration, context sweeps, and the table benches all
+//! map an *independent* simulation over a list of grid points and then
+//! consume the results strictly in grid order. This module gives them a
+//! zero-dependency fan-out (`std::thread::scope`, no external thread
+//! pool): workers claim indices from a shared atomic counter, each result
+//! is tagged with its index, and the caller receives a `Vec` in input
+//! order — so the output is **bit-identical for every worker count**
+//! (gated in tests and in `tests/fastpath.rs`). Parallelism only changes
+//! wall-clock, never numbers: the simulator itself is pure per point and
+//! the one piece of shared state, the `LayerCostModel` build cache, is a
+//! keyed insert-once map whose values are identical however the race
+//! resolves.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(0..n)` across up to `jobs` scoped worker threads and return the
+/// results **indexed by input position** (deterministic, independent of
+/// scheduling). `jobs <= 1` (and `n <= 1`) run inline with zero thread
+/// overhead — the serial path *is* the parallel path at width one.
+pub fn run_indexed<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    let mut tagged: Vec<(usize, T)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        mine.push((i, f(i)));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(n);
+        for h in handles {
+            // A panicking grid point propagates instead of being dropped.
+            all.extend(h.join().expect("sweep worker panicked"));
+        }
+        all
+    });
+    tagged.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(tagged.len(), n);
+    tagged.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Parse a `--jobs`-style worker count: `0` and `1` mean serial; values
+/// are clamped to a sane ceiling so a typo cannot fork-bomb the host.
+pub fn clamp_jobs(requested: usize) -> usize {
+    requested.clamp(1, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_are_in_input_order() {
+        for jobs in [1usize, 2, 3, 8] {
+            let out = run_indexed(jobs, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "jobs {jobs}");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        // A mildly expensive, order-sensitive computation: identical
+        // output for every worker count is the determinism contract.
+        let work = |i: usize| -> u64 {
+            let mut acc = i as u64 + 1;
+            for k in 0..500u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            acc
+        };
+        let serial = run_indexed(1, 37, work);
+        for jobs in [2usize, 4, 16] {
+            assert_eq!(run_indexed(jobs, 37, work), serial, "jobs {jobs}");
+        }
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = run_indexed(4, 64, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn degenerate_widths() {
+        assert_eq!(run_indexed::<usize, _>(8, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(8, 1, |i| i + 10), vec![10]);
+        assert_eq!(run_indexed(0, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn clamp_jobs_bounds() {
+        assert_eq!(clamp_jobs(0), 1);
+        assert_eq!(clamp_jobs(1), 1);
+        assert_eq!(clamp_jobs(8), 8);
+        assert_eq!(clamp_jobs(10_000), 64);
+    }
+}

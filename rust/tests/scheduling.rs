@@ -77,11 +77,15 @@ fn serial_reference(cfg: &ExperimentConfig, trace: &[(usize, usize, u32)]) -> Ve
             per_tok * input as f64
         };
         ttft += prefill_per_layer * n_layers as f64;
-        let mut decode = 0.0;
+        // Decode accumulates in integer cycles (the server's accounting):
+        // the f64 conversion happens once per request, so step-by-step
+        // and fast-forwarded serving both bit-match this reference.
+        let mut decode_cycles = 0u64;
         for i in 0..output {
             let kv = input + i;
-            decode += (model.eval(kv).cycles * n_layers as u64) as f64 * cyc;
+            decode_cycles += model.eval(kv).cycles * n_layers as u64;
         }
+        let decode = decode_cycles as f64 * cyc;
         out.push((ttft, decode / output as f64 * 1e3, ttft + decode));
     }
     out
@@ -357,12 +361,24 @@ fn fuzz_run_sharded(
     chunk: Option<usize>,
     chips: usize,
 ) -> (Vec<RequestResult>, Vec<TokenEvent>, f64, u64, u64) {
+    fuzz_run_full(seed, policy, batch, chunk, chips, true)
+}
+
+fn fuzz_run_full(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+    chips: usize,
+    fast_forward: bool,
+) -> (Vec<RequestResult>, Vec<TokenEvent>, f64, u64, u64) {
     let mut exp = exp_1b(256);
     exp.shard.n_chips = chips;
     let mut s = ServerBuilder::from_experiment(exp)
         .max_batch(batch)
         .policy_kind(policy)
         .prefill_chunk(chunk)
+        .decode_fast_forward(fast_forward)
         .build()
         .expect("server");
     for a in 0..FUZZ_ADAPTERS {
@@ -500,6 +516,163 @@ fn randomized_traces_hold_invariants_when_sharded() {
             }
         }
     }
+}
+
+#[test]
+fn fast_forward_bitmatches_stepwise_on_fuzz_traces() {
+    // The closed-form decode fast-forward must be invisible: completion
+    // records, token streams, clock, and swap accounting all bit-identical
+    // to the step-by-step path, across policies x batch x chunk x chips.
+    for seed in [1u64, 7, 42] {
+        for &(batch, chunk, chips) in &[
+            (1usize, None, 1usize),
+            (4, None, 1),
+            (4, Some(128), 1),
+            (4, None, 2),
+            (1, None, 4),
+        ] {
+            for policy in [
+                PolicyKind::Fcfs,
+                PolicyKind::AdapterAffinity,
+                PolicyKind::ShortestJobFirst,
+            ] {
+                let label = format!(
+                    "seed {seed} / {} / batch {batch} / chunk {chunk:?} / chips {chips}",
+                    policy.name()
+                );
+                let (rf, ef, tf, sf, hf) =
+                    fuzz_run_full(seed, policy, batch, chunk, chips, true);
+                let (rs, es, ts, ss, hs) =
+                    fuzz_run_full(seed, policy, batch, chunk, chips, false);
+                assert_eq!(tf.to_bits(), ts.to_bits(), "{label}: clock");
+                assert_eq!((sf, hf), (ss, hs), "{label}: swaps/hits");
+                assert_eq!(rf.len(), rs.len(), "{label}: completions");
+                for (a, b) in rf.iter().zip(&rs) {
+                    assert_eq!(a.request, b.request, "{label}: order");
+                    assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                    assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                    assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+                    assert_eq!(a.stall_s.to_bits(), b.stall_s.to_bits(), "{label}");
+                    assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                }
+                assert_eq!(ef.len(), es.len(), "{label}: token events");
+                for (a, b) in ef.iter().zip(&es) {
+                    assert_eq!(a.request, b.request, "{label}: token order");
+                    assert_eq!(a.index, b.index, "{label}: token index");
+                    assert_eq!(a.at_s.to_bits(), b.at_s.to_bits(), "{label}: token time");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_forward_bitmatches_stepwise_under_affinity_run_bound() {
+    // The starvation-bounded affinity policy is stateful (run-length
+    // counter): a discarded fast-forward admission probe must not advance
+    // it, so the bound fires at the same admissions either way.
+    for batch in [1usize, 4] {
+        for mrl in [1usize, 2, 3] {
+            let run = |ff: bool| {
+                let mut exp = exp_1b(256);
+                exp.serving.affinity_max_run_len = Some(mrl);
+                let mut s = ServerBuilder::from_experiment(exp)
+                    .max_batch(batch)
+                    .policy_kind(PolicyKind::AdapterAffinity)
+                    .decode_fast_forward(ff)
+                    .build()
+                    .unwrap();
+                s.register_adapter(AdapterId(0));
+                s.register_adapter(AdapterId(1));
+                for i in 0..6u64 {
+                    s.submit(Request::new(i, AdapterId(0), 256, 30)).unwrap();
+                }
+                s.submit(Request::new(6, AdapterId(1), 256, 30)).unwrap();
+                s.submit(Request::new(7, AdapterId(1), 256, 30).at(0.05)).unwrap();
+                let results = s.drain(None).unwrap();
+                (results, s.stats())
+            };
+            let (rf, sf) = run(true);
+            let (rs, ss) = run(false);
+            let label = format!("b{batch} mrl{mrl}");
+            assert_eq!(rf.len(), rs.len(), "{label}");
+            for (a, b) in rf.iter().zip(&rs) {
+                assert_eq!(a.request, b.request, "{label}: admission order");
+                assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+            }
+            assert_eq!(sf.sim_time_s.to_bits(), ss.sim_time_s.to_bits(), "{label}");
+            assert_eq!(sf.adapter_swaps, ss.adapter_swaps, "{label}: swaps");
+        }
+    }
+}
+
+#[test]
+fn fast_forward_bitmatches_stepwise_stats() {
+    // Gap-sample (per-token ITL) statistics are part of the contract too.
+    let run = |ff: bool| {
+        let mut s = ServerBuilder::from_experiment(exp_1b(256))
+            .max_batch(4)
+            .policy_kind(PolicyKind::Fcfs)
+            .decode_fast_forward(ff)
+            .build()
+            .unwrap();
+        for a in 0..FUZZ_ADAPTERS {
+            s.register_adapter(AdapterId(a));
+        }
+        for r in fuzz_trace(7) {
+            s.submit(r).unwrap();
+        }
+        s.drain(None).unwrap();
+        s.stats()
+    };
+    let f = run(true);
+    let s = run(false);
+    assert_eq!(f.itl.mean.to_bits(), s.itl.mean.to_bits());
+    assert_eq!(f.itl.p50.to_bits(), s.itl.p50.to_bits());
+    assert_eq!(f.itl.p95.to_bits(), s.itl.p95.to_bits());
+    assert_eq!(f.itl.p99.to_bits(), s.itl.p99.to_bits());
+    assert_eq!(f.mean_itl_ms.to_bits(), s.mean_itl_ms.to_bits());
+    assert_eq!(f.mean_ttft_s.to_bits(), s.mean_ttft_s.to_bits());
+    assert_eq!(f.sim_time_s.to_bits(), s.sim_time_s.to_bits());
+    assert_eq!(f.total_tokens, s.total_tokens);
+}
+
+#[test]
+fn run_until_fast_forward_respects_the_deadline() {
+    // Fast-forwarded run_until must partition work at the deadline the
+    // same way stepwise execution does — including the final event that
+    // carries the clock past t.
+    let mk = |ff: bool| {
+        let mut s = ServerBuilder::from_experiment(exp_1b(256))
+            .max_batch(2)
+            .decode_fast_forward(ff)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(0));
+        for i in 0..4u64 {
+            s.submit(Request::new(i, AdapterId(0), 256, 24).at(i as f64 * 0.002)).unwrap();
+        }
+        s
+    };
+    let mut a = mk(true);
+    let mut b = mk(false);
+    // Walk both servers through the same ladder of deadlines.
+    for t in [0.001f64, 0.05, 0.2, 1.0, 50.0] {
+        let ra = a.run_until(t, None).unwrap();
+        let rb = b.run_until(t, None).unwrap();
+        assert_eq!(a.now_s().to_bits(), b.now_s().to_bits(), "clock at t={t}");
+        assert_eq!(ra.len(), rb.len(), "completions at t={t}");
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.request, y.request);
+            assert_eq!(x.total_s.to_bits(), y.total_s.to_bits());
+        }
+        assert_eq!(a.pending(), b.pending(), "pending at t={t}");
+        assert_eq!(a.in_flight(), b.in_flight(), "in flight at t={t}");
+    }
+    let ra = a.drain(None).unwrap();
+    let rb = b.drain(None).unwrap();
+    assert_eq!(ra.len(), rb.len());
 }
 
 #[test]
