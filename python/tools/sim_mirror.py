@@ -29,6 +29,7 @@ bit-matches, conservation, starvation bound).
 Usage:  python3 python/tools/sim_mirror.py [--check]
 """
 
+import heapq
 import math
 import sys
 from dataclasses import dataclass, field
@@ -1200,7 +1201,7 @@ class Server:
 
     def __init__(self, model, targets, ctx, max_batch=1, policy="fcfs",
                  prefill_chunk=None, srpg=True, overhead=64, max_run_len=None,
-                 n_chips=1, fast_forward=True):
+                 n_chips=1, fast_forward=True, calendar=False):
         self.m = MODELS[model]
         self.lm = map_model(model, targets)
         self.ctx = ctx
@@ -1236,6 +1237,13 @@ class Server:
         self.now = 0.0
         self.now_run_base = 0.0
         self.now_run_cycles = 0
+        # Calendar event core mirror: future arrivals as a heapq keyed
+        # (arrival, submit_seq) — identical order to the Rust heap's
+        # (arrival_s.to_bits(), seq) on the validated non-negative finite
+        # domain. Scan mode (calendar=False) keeps everything in waiting.
+        self.calendar = calendar
+        self.arrivals = []
+        self.submit_seq = 0
         self.waiting = []
         self.batch = []
         self.jobs = []
@@ -1256,10 +1264,43 @@ class Server:
         self.now = self.now_run_base + float(self.now_run_cycles) * CYCLE_S
 
     def submit(self, req):
+        seq = self.submit_seq
+        self.submit_seq += 1
+        if self.calendar and req.arrival > self.now:
+            heapq.heappush(self.arrivals, (req.arrival, seq, req))
+            return
         pos = 0
         while pos < len(self.waiting) and self.waiting[pos].arrival <= req.arrival:
             pos += 1
         self.waiting.insert(pos, req)
+
+    def sync_arrivals(self):
+        # Calendar mode: pops come out in (arrival, seq) order, so the
+        # arrived list stays exactly scan mode's sorted prefix.
+        while self.arrivals and self.arrivals[0][0] <= self.now:
+            req = heapq.heappop(self.arrivals)[2]
+            pos = 0
+            while pos < len(self.waiting) \
+                    and self.waiting[pos].arrival <= req.arrival:
+                pos += 1
+            self.waiting.insert(pos, req)
+
+    def arrived_count(self):
+        if self.calendar:
+            return len(self.waiting)
+        arrived = 0
+        while arrived < len(self.waiting) \
+                and self.waiting[arrived].arrival <= self.now:
+            arrived += 1
+        return arrived
+
+    def next_arrival_after_now(self):
+        if self.calendar:
+            return self.arrivals[0][0] if self.arrivals else None
+        for r in self.waiting:
+            if r.arrival > self.now:
+                return r.arrival
+        return None
 
     def active_adapter(self):
         if self.batch:
@@ -1404,22 +1445,15 @@ class Server:
             return None
         k = min(s.req.out - s.generated for s in self.batch)
         cap = len(self.batch) + len(self.jobs) < self.max_batch
-        if cap and self.waiting:
-            arrived = 0
-            while arrived < len(self.waiting) \
-                    and self.waiting[arrived].arrival <= self.now:
-                arrived += 1
+        if cap and (self.waiting or self.arrivals):
+            arrived = self.arrived_count()
             if arrived > 0:
                 # Side-effect-free probe (must not touch run-length state).
                 pick = self.policy.peek(self.waiting[:arrived],
                                         self.active_adapter(), self.resident)
                 if pick is not None:
                     return None
-            nxt = None
-            for r in self.waiting:
-                if r.arrival > self.now:
-                    nxt = r.arrival
-                    break
+            nxt = self.next_arrival_after_now()
             if nxt is not None:
                 k = min(k, self.steps_within(nxt, True, k) + 1)
         return k if k >= 2 else None
@@ -1458,16 +1492,15 @@ class Server:
             out=s.req.out))
 
     def step(self):
+        self.sync_arrivals()
         cap = len(self.batch) + len(self.jobs) < self.max_batch
         if cap and self.waiting:
-            arrived = 0
-            while arrived < len(self.waiting) and self.waiting[arrived].arrival <= self.now:
-                arrived += 1
+            arrived = self.arrived_count()
             if arrived > 0:
                 pick = self.policy.pick(self.waiting[:arrived],
                                         self.active_adapter(), self.resident)
                 if pick is None and not self.batch and not self.jobs \
-                        and arrived == len(self.waiting):
+                        and arrived == len(self.waiting) and not self.arrivals:
                     pick = 0
                 if pick is not None:
                     req = self.waiting.pop(pick)
@@ -1481,11 +1514,7 @@ class Server:
             self.prefill_turn = True
             self.decode_step()
             return "decoded"
-        nxt = None
-        for r in self.waiting:
-            if r.arrival > self.now:
-                nxt = r.arrival
-                break
+        nxt = self.next_arrival_after_now()
         if nxt is not None:
             self.set_clock(nxt)
             return "advanced"
@@ -1495,6 +1524,7 @@ class Server:
 
     def drain(self):
         while True:
+            self.sync_arrivals()
             k = self.fast_forward_window()
             if k is not None:
                 self.do_fast_forward(k)
@@ -1678,6 +1708,38 @@ def main():
                 print(f"  ff/max_run_len mismatch b{batch} mrl{mrl}")
     gate("fast-forward == stepwise under affinity max_run_len", mrl_ok)
 
+    # ---- calendar event core == scan loop --------------------------------
+    # The Rust server's default core holds future arrivals in a binary
+    # heap keyed (arrival_s.to_bits(), submission seq); the scan loop is
+    # the retained bit-identity reference. Same split here via heapq —
+    # the calendar must be invisible in every output, including on
+    # out-of-submission-order arrivals and equal-time ties (seq
+    # tie-break reproduces scan mode's stable FIFO).
+    cal_ok = True
+    cal_traces = ff_traces + [
+        [(0, 0, 128, 6, 0.04), (1, 1, 128, 6, 0.01), (2, 2, 128, 6, 0.04),
+         (3, 0, 128, 6, 0.0), (4, 1, 128, 6, 0.02), (5, 2, 128, 6, 0.04)],
+    ]
+    for policy in ("fcfs", "affinity", "sjf"):
+        for batch in (1, 4):
+            for chunk in (None, 64):
+                for trace in cal_traces:
+                    runs = []
+                    for cal in (True, False):
+                        s = Server("1b", ["Q", "V"], 256, max_batch=batch,
+                                   policy=policy, prefill_chunk=chunk,
+                                   calendar=cal)
+                        for r in trace:
+                            s.submit(Req(*r))
+                        res = s.drain()
+                        runs.append((res, s.now, s.gaps_ms, s.swaps, s.hits))
+                    if runs[0] != runs[1]:
+                        cal_ok = False
+                        print(f"  calendar mismatch {policy}/b{batch}/"
+                              f"chunk{chunk}")
+    gate("calendar event core == scan loop (results, clock, gaps, swaps)",
+         cal_ok)
+
     # ---- engine: batch-1 bit-match + batch-4 shape -----------------------
     print("\n== Simulator::run_batched checks (1B Q+V 1024) ==")
     b1 = run_batched("1b", ["Q", "V"], 1024, batch=1)
@@ -1757,7 +1819,17 @@ def main():
     sc_, rc = run_server(512, 4, "affinity", 128, bench_trace)
     mean_stall_m = sum(r["stall"] for r in rm) / len(rm)
     mean_stall_c = sum(r["stall"] for r in rc) / len(rc)
-    p95 = lambda xs: sorted(xs)[min(int(round((len(xs) - 1) * 0.95)), len(xs) - 1)]
+    # Nearest-rank percentile, mirroring latency_stats' bugfixed
+    # `ceil(q*n)` rank (the old `round((n-1)*q)` index sat one rank low
+    # on small n: p50 of [a, b] returned b).
+    pctl = lambda xs, q: \
+        sorted(xs)[min(max(math.ceil(q * len(xs)), 1), len(xs)) - 1]
+    gate("nearest-rank percentile small-n facts",
+         pctl([3.0], 0.5) == 3.0 and pctl([2.0, 1.0], 0.5) == 1.0
+         and pctl([3.0, 1.0, 2.0], 0.5) == 2.0
+         and pctl([5.0, 4.0, 3.0, 2.0, 1.0], 0.95) == 5.0
+         and pctl(list(range(1, 101)), 0.95) == 95)
+    p95 = lambda xs: pctl(xs, 0.95)
     p95_itl_m = p95(sm.gaps_ms)
     p95_itl_c = p95(sc_.gaps_ms)
     print(f"  mean stall mono {mean_stall_m:.4f} s vs chunked {mean_stall_c:.4f} s")

@@ -15,7 +15,8 @@ use std::time::Instant;
 /// Parse a `--jobs N` bench argument
 /// (`cargo bench --bench table2 -- --jobs 4`): worker threads for the
 /// grid fan-out. Defaults to 1 (serial); results are bit-identical at any
-/// width (the sweep driver collects by index).
+/// width (the sweep driver collects by index). An out-of-range width is
+/// a hard error, matching the CLI's `--jobs` validation.
 pub fn jobs_flag() -> usize {
     let args: Vec<String> = std::env::args().collect();
     let mut jobs = 1usize;
@@ -26,7 +27,13 @@ pub fn jobs_flag() -> usize {
             }
         }
     }
-    primal::sim::sweep::clamp_jobs(jobs)
+    match primal::sim::sweep::parse_jobs(jobs) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// Measure `f` with `warmup` + `iters` runs; returns (median_s, max_s).

@@ -19,12 +19,42 @@ mod common;
 
 use common::{finish, measure, report};
 use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::coordinator::{AdapterId, Request, SchedCounters, ServerBuilder};
 use primal::dataflow::{decode_program, prefill_program, reprogram_program};
 use primal::mapping::map_model;
 use primal::sim::cost::program_cost;
 use primal::sim::{LayerCostModel, PhaseCost, Simulator};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// Drain `requests` simultaneous t=0 arrivals (adapters alternating, so
+/// FCFS head-of-line mismatches keep the batch narrow) plus one far-future
+/// sentinel, and return the scheduler's deterministic event/scan counters.
+/// The sentinel is what the scan-based loop pays for: every next-arrival
+/// probe walks past the whole arrived backlog to reach it, while the
+/// calendar peeks the heap once.
+fn serve_counters(requests: usize, calendar: bool) -> SchedCounters {
+    let cfg = ExperimentConfig::paper_point(
+        ModelId::Llama32_1b,
+        &[LoraTarget::Q, LoraTarget::V],
+        128,
+    );
+    let mut s = ServerBuilder::from_experiment(cfg)
+        .max_batch(2)
+        .calendar(calendar)
+        .build()
+        .expect("server");
+    s.register_adapter(AdapterId(0));
+    s.register_adapter(AdapterId(1));
+    for i in 0..requests {
+        s.submit(Request::new(i as u64, AdapterId((i % 2) as u32), 128, 8))
+            .expect("submit");
+    }
+    s.submit(Request::new(requests as u64, AdapterId(0), 128, 8).at(1.0e6))
+        .expect("submit sentinel");
+    s.drain(None).expect("drain");
+    s.sched_counters()
+}
 
 fn main() {
     let cfg = ExperimentConfig::paper_point(
@@ -211,6 +241,57 @@ fn main() {
     let (hits_after, _) = LayerCostModel::cache_counters();
     if hits_after <= hits_before {
         eprintln!("proxy gate: second LayerCostModel::build_cached was not a cache hit");
+        ok = false;
+    }
+
+    // ---- calendar event-core proxies (deterministic) ---------------------
+    // The serving coordinator's O(log n) calendar vs the retained scan
+    // loop, on a backlog scenario where the scan cost is quadratic: both
+    // modes must execute the SAME events (bit-identity is gated in the
+    // scheduling fuzz suite; equal event counts are the cheap echo of it
+    // here), but the calendar's per-event scan work stays O(1) while the
+    // scan loop's grows with the backlog.
+    let (small, big) = (16usize, 64usize);
+    let cal_s = serve_counters(small, true);
+    let scan_s = serve_counters(small, false);
+    let cal_b = serve_counters(big, true);
+    let scan_b = serve_counters(big, false);
+    println!(
+        "\ncalendar event core ({small} vs {big} backlogged requests):\n  \
+         events   calendar {} / {}   scan {} / {}\n  \
+         scanned  calendar {} / {}   scan {} / {}",
+        cal_s.events, cal_b.events, scan_s.events, scan_b.events,
+        cal_s.scanned, cal_b.scanned, scan_s.scanned, scan_b.scanned,
+    );
+    if cal_s.events != scan_s.events || cal_b.events != scan_b.events {
+        eprintln!("proxy gate: calendar and scan modes executed different event counts");
+        ok = false;
+    }
+    // Calendar: O(1) locate work per event (peeks + amortized heap pops).
+    if cal_s.scanned > 4 * cal_s.events || cal_b.scanned > 4 * cal_b.events {
+        eprintln!(
+            "proxy gate: calendar scan work not O(1)/event ({}/{} and {}/{})",
+            cal_s.scanned, cal_s.events, cal_b.scanned, cal_b.events
+        );
+        ok = false;
+    }
+    let ratio = |c: SchedCounters| c.scanned as f64 / c.events.max(1) as f64;
+    // Scan loop: per-event walk grows with the backlog (superlinear total);
+    // the calendar's stays flat, so at the big size the scan loop must pay
+    // well over the calendar's per-event cost.
+    if ratio(scan_b) < 2.0 * ratio(scan_s) {
+        eprintln!(
+            "proxy gate: scan-mode per-event walk did not grow with the backlog \
+             ({:.2} -> {:.2})",
+            ratio(scan_s), ratio(scan_b)
+        );
+        ok = false;
+    }
+    if ratio(scan_b) < 3.0 * ratio(cal_b) {
+        eprintln!(
+            "proxy gate: calendar per-event cost {:.2} not well under scan {:.2}",
+            ratio(cal_b), ratio(scan_b)
+        );
         ok = false;
     }
 

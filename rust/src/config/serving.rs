@@ -77,6 +77,15 @@ pub struct ServingConfig {
     /// Results are bit-identical either way (gated in the scheduling fuzz
     /// suite); `false` forces the step-by-step reference path.
     pub decode_fast_forward: bool,
+    /// Calendar event core (default on): future arrivals live in a
+    /// binary heap keyed on the arrival timestamp's bits with a
+    /// submission-sequence tie-break, so locating the next event is
+    /// O(log n) in pending requests instead of rescanning the waiting
+    /// queue per event. `false` keeps the scan-based loop — the
+    /// bit-identity reference the fuzz suite gates the calendar against
+    /// (every `RequestResult` field, token-stream bit, and percentile
+    /// bit must match; see DESIGN.md §Calendar).
+    pub calendar: bool,
 }
 
 impl Default for ServingConfig {
@@ -88,6 +97,7 @@ impl Default for ServingConfig {
             prefill_chunk: None,
             affinity_max_run_len: None,
             decode_fast_forward: true,
+            calendar: true,
         }
     }
 }
@@ -118,5 +128,6 @@ mod tests {
         assert_eq!(s.prefill_chunk, None, "monolithic prefill by default");
         assert_eq!(s.affinity_max_run_len, None);
         assert!(s.decode_fast_forward, "fast-forward on by default");
+        assert!(s.calendar, "calendar event core on by default");
     }
 }

@@ -22,6 +22,21 @@
 use super::adapter::AdapterId;
 use super::server::Request;
 
+/// Checked u64 -> f64 cycle conversion: beyond 2^53 cycles f64 drops
+/// integer precision and the u64-clock bit-identity contract (stepwise
+/// vs fast-forward, scan vs calendar) silently breaks. Every cast from
+/// an accumulated cycle count to seconds goes through here so a
+/// million-request run that overflows the mantissa fails loudly in
+/// debug builds instead of drifting.
+#[inline]
+pub(crate) fn cycles_f64(cycles: u64) -> f64 {
+    debug_assert!(
+        cycles < (1u64 << 53),
+        "cycle count {cycles} exceeds f64's exact-integer range (2^53)"
+    );
+    cycles as f64
+}
+
 /// A chunked prefill in flight: the admission-side state machine that
 /// replaces the monolithic prefill event when
 /// `ServingConfig::prefill_chunk` is set.
@@ -187,7 +202,7 @@ impl Slot {
     /// Decode compute accumulated so far in seconds at `cycle_s` per
     /// cycle (single u64 -> f64 conversion).
     pub fn decode_s(&self, cycle_s: f64) -> f64 {
-        self.decode_cycles as f64 * cycle_s
+        cycles_f64(self.decode_cycles) * cycle_s
     }
 }
 
@@ -196,11 +211,26 @@ impl Slot {
 pub struct DecodeBatch {
     slots: Vec<Slot>,
     max_batch: usize,
+    /// Cached `min(remaining_tokens)` / `max(kv_len)` over `slots`,
+    /// maintained incrementally so the event loop's fast-forward bound
+    /// and pipeline-max lookup are O(1) instead of an O(b) rescan per
+    /// event: membership changes (`push`, `take_finished`) recompute
+    /// them, and each lockstep decode step shifts them by one
+    /// (`note_lockstep_step` — every slot generates exactly one token).
+    /// Meaningful only while `slots` is non-empty; validated against the
+    /// direct scan in debug builds.
+    min_remaining: usize,
+    max_kv: usize,
 }
 
 impl DecodeBatch {
     pub fn new(max_batch: usize) -> Self {
-        Self { slots: Vec::with_capacity(max_batch), max_batch }
+        Self {
+            slots: Vec::with_capacity(max_batch),
+            max_batch,
+            min_remaining: 0,
+            max_kv: 0,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -223,13 +253,29 @@ impl DecodeBatch {
     /// Fewest decode tokens any slot still owes — the longest lockstep
     /// window with no completion event inside it (the fast-forward bound).
     pub fn min_remaining_tokens(&self) -> Option<usize> {
-        self.slots.iter().map(Slot::remaining_tokens).min()
+        if self.slots.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(
+            Some(self.min_remaining),
+            self.slots.iter().map(Slot::remaining_tokens).min(),
+            "cached min_remaining out of sync with the slots"
+        );
+        Some(self.min_remaining)
     }
 
     /// Largest per-slot KV length in the batch. Under a kv-monotone cost
     /// model this slot is the pipeline's `max` term every step.
     pub fn max_kv_len(&self) -> Option<usize> {
-        self.slots.iter().map(Slot::kv_len).max()
+        if self.slots.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(
+            Some(self.max_kv),
+            self.slots.iter().map(Slot::kv_len).max(),
+            "cached max_kv out of sync with the slots"
+        );
+        Some(self.max_kv)
     }
 
     pub fn push(&mut self, slot: Slot) {
@@ -238,7 +284,25 @@ impl DecodeBatch {
             self.slots.iter().all(|s| s.req.adapter == slot.req.adapter),
             "mixed-adapter batch"
         );
+        if self.slots.is_empty() {
+            self.min_remaining = slot.remaining_tokens();
+            self.max_kv = slot.kv_len();
+        } else {
+            self.min_remaining = self.min_remaining.min(slot.remaining_tokens());
+            self.max_kv = self.max_kv.max(slot.kv_len());
+        }
         self.slots.push(slot);
+    }
+
+    /// Account one lockstep decode step in the cached extrema: every
+    /// slot generated one token, so the minimum remaining falls by one
+    /// and the maximum KV grows by one. The caller (the coordinator's
+    /// decode step / fast-forward loop) invokes this once per step,
+    /// after advancing the slots and before `take_finished`.
+    pub fn note_lockstep_step(&mut self) {
+        debug_assert!(!self.slots.is_empty(), "lockstep step on an empty batch");
+        self.min_remaining = self.min_remaining.saturating_sub(1);
+        self.max_kv += 1;
     }
 
     pub fn slots(&self) -> &[Slot] {
@@ -259,6 +323,12 @@ impl DecodeBatch {
             } else {
                 i += 1;
             }
+        }
+        if !out.is_empty() {
+            // Membership changed: recompute the cached extrema.
+            self.min_remaining =
+                self.slots.iter().map(Slot::remaining_tokens).min().unwrap_or(0);
+            self.max_kv = self.slots.iter().map(Slot::kv_len).max().unwrap_or(0);
         }
         out
     }
@@ -370,5 +440,36 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!(b.adapter(), Some(AdapterId(1)));
         assert_eq!(b.min_remaining_tokens(), Some(1));
+    }
+
+    #[test]
+    fn cached_extrema_track_lockstep_steps() {
+        let mk = |id: u64, input: usize, out: usize| Slot {
+            req: Request::new(id, AdapterId(1), input, out),
+            generated: 0,
+            start_s: 0.0,
+            swap: false,
+            ttft_s: 0.0,
+            decode_cycles: 0,
+            stall_s: 0.0,
+            pending_stall_s: 0.0,
+            golden_exec_ms: None,
+        };
+        let mut b = DecodeBatch::new(4);
+        b.push(mk(0, 16, 3));
+        b.push(mk(1, 32, 5));
+        assert_eq!(b.min_remaining_tokens(), Some(3));
+        assert_eq!(b.max_kv_len(), Some(32));
+        // One lockstep step: every slot emits one token.
+        for s in b.slots_mut() {
+            s.generated += 1;
+        }
+        b.note_lockstep_step();
+        assert_eq!(b.min_remaining_tokens(), Some(2));
+        assert_eq!(b.max_kv_len(), Some(33));
+        // A mid-run push re-joins the extrema.
+        b.push(mk(2, 64, 1));
+        assert_eq!(b.min_remaining_tokens(), Some(1));
+        assert_eq!(b.max_kv_len(), Some(64));
     }
 }

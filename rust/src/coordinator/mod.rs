@@ -34,6 +34,6 @@ pub use scheduler::{
     policy_of, AdapterAffinity, Fcfs, SchedContext, SchedulePolicy, ShortestJobFirst,
 };
 pub use server::{
-    AdapterUsage, FunctionalMode, LatencyStats, Request, RequestResult, Server,
-    ServerBuilder, ServerConfig, ServerStats, StepOutcome, TokenEvent,
+    AdapterUsage, FunctionalMode, LatencyStats, Request, RequestResult, SchedCounters,
+    Server, ServerBuilder, ServerConfig, ServerStats, StepOutcome, TokenEvent,
 };

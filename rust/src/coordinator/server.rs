@@ -35,7 +35,7 @@
 //! path runs real numerics without Python.
 
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
-use super::batch::{DecodeBatch, PrefillJob, Slot};
+use super::batch::{cycles_f64, DecodeBatch, PrefillJob, Slot};
 use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
@@ -46,7 +46,9 @@ use crate::runtime::{Executable, GoldenRuntime};
 use crate::sim::cost::program_cost;
 use crate::sim::{LayerCostModel, Simulator};
 use crate::util::error::Result;
-use std::collections::{BTreeMap, VecDeque};
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -193,7 +195,11 @@ struct StatsAccum {
     max_batch_observed: usize,
 }
 
-/// Nearest-rank percentile over an unsorted sample set.
+/// Nearest-rank percentile over an unsorted sample set: the q-th
+/// percentile of n samples is the `ceil(q * n)`-th smallest (1-based) —
+/// so p50 of `[a, b]` is `a`, and a percentile is always an observed
+/// sample. (The historical `round((n - 1) * q)` index was *not*
+/// nearest-rank: on two samples it returned the larger for p50.)
 fn latency_stats(samples: &[f64]) -> LatencyStats {
     if samples.is_empty() {
         return LatencyStats::default();
@@ -201,8 +207,8 @@ fn latency_stats(samples: &[f64]) -> LatencyStats {
     let mut sorted = samples.to_vec();
     sorted.sort_by(f64::total_cmp);
     let pct = |q: f64| {
-        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-        sorted[idx.min(sorted.len() - 1)]
+        let rank = (q * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
     };
     LatencyStats {
         mean: samples.iter().sum::<f64>() / samples.len() as f64,
@@ -210,6 +216,56 @@ fn latency_stats(samples: &[f64]) -> LatencyStats {
         p95: pct(0.95),
         p99: pct(0.99),
     }
+}
+
+/// A future arrival in the calendar heap. Ordered by `(key, seq)`:
+/// `key` is `arrival_s.to_bits()` — `submit` validates arrivals as
+/// finite and non-negative, and for non-negative finite f64 the IEEE-754
+/// bit pattern is order-isomorphic to the value, so heap order is
+/// *exactly* time order and popping reproduces the same f64 timestamps
+/// the scan loop reads from its sorted vector (heap order cannot perturb
+/// the clock). `seq` is the submission sequence number, which makes the
+/// pop order of equal-time arrivals identical to scan mode's stable FIFO
+/// insertion.
+#[derive(Debug, Clone)]
+struct ArrEvent {
+    key: u64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for ArrEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+
+impl Eq for ArrEvent {}
+
+impl PartialOrd for ArrEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ArrEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.key, self.seq).cmp(&(other.key, other.seq))
+    }
+}
+
+/// Deterministic scheduler-cost instrumentation: `events` counts the
+/// discrete events the loop executed (steps plus fast-forward windows);
+/// `scanned` counts waiting-queue entries examined while locating the
+/// next arrival — the linear walks of the scan loop, a single heap peek
+/// in calendar mode. Pure integer event counts (no wall-clock), so they
+/// are bit-identical across runs; `sim_hotpath` gates on them to show
+/// the calendar's per-event cost stays O(1) while the scan loop's grows
+/// with the number of concurrent requests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedCounters {
+    pub events: u64,
+    pub scanned: u64,
 }
 
 /// What one [`Server::step`] call did.
@@ -247,6 +303,7 @@ pub struct ServerBuilder {
     batch_overhead_cycles: u64,
     prefill_chunk: Option<usize>,
     decode_fast_forward: bool,
+    calendar: bool,
 }
 
 impl Default for ServerBuilder {
@@ -272,6 +329,7 @@ impl ServerBuilder {
             batch_overhead_cycles: s.batch_overhead_cycles,
             prefill_chunk: s.prefill_chunk,
             decode_fast_forward: s.decode_fast_forward,
+            calendar: s.calendar,
             experiment,
         }
     }
@@ -336,6 +394,16 @@ impl ServerBuilder {
         self
     }
 
+    /// Calendar event core (default on): future arrivals are held in a
+    /// binary heap and located in O(log n) instead of rescanning the
+    /// waiting queue per event. `false` forces the scan-based reference
+    /// loop; results are bit-identical either way (gated in the
+    /// scheduling fuzz suite).
+    pub fn calendar(mut self, enabled: bool) -> Self {
+        self.calendar = enabled;
+        self
+    }
+
     pub fn build(self) -> Result<Server> {
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
@@ -348,6 +416,7 @@ impl ServerBuilder {
         exp.serving.batch_overhead_cycles = self.batch_overhead_cycles;
         exp.serving.prefill_chunk = self.prefill_chunk;
         exp.serving.decode_fast_forward = self.decode_fast_forward;
+        exp.serving.calendar = self.calendar;
 
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
@@ -381,9 +450,9 @@ impl ServerBuilder {
         // Reprogramming cost for one group (SRPG pipelines the rest).
         let reprog = program_cost(&reprogram_program(&exp, lm0), &exp.system, &exp.calib);
         let reprog_ttft_s = if exp.srpg {
-            reprog.cycles as f64 * cyc
+            cycles_f64(reprog.cycles) * cyc
         } else {
-            (reprog.cycles * exp.model.layers as u64) as f64 * cyc
+            cycles_f64(reprog.cycles * exp.model.layers as u64) * cyc
         };
 
         // Prefill stage template at the experiment's input length. The
@@ -408,7 +477,7 @@ impl ServerBuilder {
                     .cycles
             };
             let cycles = compute + mesh.layer_all_reduce_cycles(exp.model.hidden, this_block);
-            prefill_block_s.push((this_block, cycles as f64 * cyc));
+            prefill_block_s.push((this_block, cycles_f64(cycles) * cyc));
         }
 
         let (golden, golden_exe) = match self.functional {
@@ -431,11 +500,15 @@ impl ServerBuilder {
             batch_overhead_cycles: self.batch_overhead_cycles,
             prefill_chunk: self.prefill_chunk,
             decode_fast_forward: self.decode_fast_forward,
+            calendar: self.calendar,
             model_monotone,
             policy: self.policy,
             cfg: exp,
             adapters: AdapterManager::new(),
             waiting: Vec::new(),
+            arrivals: BinaryHeap::new(),
+            submit_seq: 0,
+            counters: Cell::new(SchedCounters::default()),
             batch: DecodeBatch::new(self.max_batch),
             jobs: VecDeque::new(),
             prefill_turn: false,
@@ -467,11 +540,25 @@ pub struct Server {
     prefill_chunk: Option<usize>,
     /// Closed-form decode fast-forward enabled (see `ServingConfig`).
     decode_fast_forward: bool,
+    /// Calendar event core enabled (see `ServingConfig::calendar`).
+    calendar: bool,
     /// Whether the layer model's cycles are kv-monotone (fast-forward
     /// precondition, checked once at build).
     model_monotone: bool,
     /// Submitted, not yet admitted; sorted by (arrival_s, submit order).
+    /// Scan mode keeps *every* pending request here; calendar mode keeps
+    /// only the *arrived* ones (the sorted prefix the scan loop would
+    /// expose to the policy) and holds future arrivals in `arrivals`.
     waiting: Vec<Request>,
+    /// Calendar mode only: future arrivals, min-heap ordered by
+    /// ([`ArrEvent::key`], submission sequence). Always empty in scan
+    /// mode.
+    arrivals: BinaryHeap<Reverse<ArrEvent>>,
+    /// Monotone submission sequence number (the heap tie-break).
+    submit_seq: u64,
+    /// Deterministic event/scan counters (see [`SchedCounters`]); a
+    /// `Cell` because the `&self` window probe also scans.
+    counters: Cell<SchedCounters>,
     batch: DecodeBatch,
     /// Chunked prefills in flight (FIFO; the head job runs chunks). Each
     /// occupies a slot of `max_batch` capacity until it finishes and
@@ -540,7 +627,19 @@ impl Server {
         if !req.arrival_s.is_finite() || req.arrival_s < 0.0 {
             bail!("request {} has invalid arrival time {}", req.id, req.arrival_s);
         }
+        let seq = self.submit_seq;
+        self.submit_seq += 1;
+        if self.calendar && req.arrival_s > self.now_s {
+            // Future arrival: O(log n) heap push instead of an O(n)
+            // sorted-vector insert; it moves to `waiting` when its time
+            // comes (`sync_arrivals`).
+            self.arrivals.push(Reverse(ArrEvent { key: req.arrival_s.to_bits(), seq, req }));
+            return Ok(());
+        }
         // Stable arrival-ordered insertion (FIFO among equal arrivals).
+        // In calendar mode this is the already-arrived path, and the
+        // insertion position among the arrived entries matches the
+        // request's position in scan mode's arrived prefix.
         let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
         self.waiting.insert(pos, req);
         Ok(())
@@ -548,7 +647,7 @@ impl Server {
 
     /// Requests submitted but not yet admitted.
     pub fn pending(&self) -> usize {
-        self.waiting.len()
+        self.waiting.len() + self.arrivals.len()
     }
 
     /// Requests currently decoding.
@@ -588,13 +687,94 @@ impl Server {
         if !self.batch.is_empty() || !self.jobs.is_empty() {
             return Some(self.now_s);
         }
-        self.waiting.first().map(|r| {
-            if r.arrival_s <= self.now_s {
-                self.now_s
-            } else {
-                r.arrival_s
+        // Scan mode: `waiting.first()` is the global earliest arrival.
+        // Calendar mode: the earliest of the arrived list and the heap
+        // head (between syncs the heap may still hold entries at or
+        // before the clock) — the same value by construction.
+        let w = self.waiting.first().map(|r| r.arrival_s);
+        let h = self.arrivals.peek().map(|e| e.0.req.arrival_s);
+        let earliest = match (w, h) {
+            (Some(a), Some(b)) => Some(if a <= b { a } else { b }),
+            (a, b) => a.or(b),
+        };
+        earliest.map(|a| if a <= self.now_s { self.now_s } else { a })
+    }
+
+    /// Deterministic event/scan counters accumulated so far (see
+    /// [`SchedCounters`]).
+    pub fn sched_counters(&self) -> SchedCounters {
+        self.counters.get()
+    }
+
+    fn note_scanned(&self, n: u64) {
+        let mut c = self.counters.get();
+        c.scanned += n;
+        self.counters.set(c);
+    }
+
+    fn note_event(&self) {
+        let mut c = self.counters.get();
+        c.events += 1;
+        self.counters.set(c);
+    }
+
+    /// Calendar mode: move every arrival whose time has come from the
+    /// heap into the arrived `waiting` list. Pops come out in (time,
+    /// submission) order, and everything already in `waiting` arrived no
+    /// later, so each insert lands at the tail — the arrived list is
+    /// exactly scan mode's sorted prefix. No-op in scan mode.
+    fn sync_arrivals(&mut self) {
+        if !self.calendar {
+            return;
+        }
+        let now_key = self.now_s.to_bits();
+        while let Some(e) = self.arrivals.peek() {
+            if e.0.key > now_key {
+                break;
             }
-        })
+            let e = self.arrivals.pop().expect("peeked arrival").0;
+            self.note_scanned(1);
+            let pos = self.waiting.partition_point(|r| r.arrival_s <= e.req.arrival_s);
+            self.waiting.insert(pos, e.req);
+        }
+    }
+
+    /// How many waiting requests have arrived by the current clock. Scan
+    /// mode locates the boundary inside the full arrival-sorted list;
+    /// calendar mode's `waiting` holds only arrived entries (after
+    /// `sync_arrivals`), so the count is its length.
+    fn arrived_count(&self) -> usize {
+        if self.calendar {
+            debug_assert!(
+                self.arrivals.peek().is_none_or(|e| e.0.req.arrival_s > self.now_s),
+                "sync_arrivals must run before arrived_count"
+            );
+            self.waiting.len()
+        } else {
+            self.waiting.partition_point(|r| r.arrival_s <= self.now_s)
+        }
+    }
+
+    /// Earliest arrival strictly after the current clock, if any. The
+    /// scan loop walks the full waiting list past the arrived prefix
+    /// (O(arrived) per call — the cost the calendar removes); calendar
+    /// mode peeks the heap head in O(1).
+    fn next_arrival_after_now(&self) -> Option<f64> {
+        if self.calendar {
+            self.note_scanned(1);
+            return self.arrivals.peek().map(|e| e.0.req.arrival_s);
+        }
+        let mut walked = 0u64;
+        let next = self
+            .waiting
+            .iter()
+            .map(|r| {
+                walked += 1;
+                r.arrival_s
+            })
+            .find(|a| *a > self.now_s);
+        self.note_scanned(walked);
+        next
     }
 
     /// Statistics snapshot, computed from running sums (safe to call at
@@ -636,11 +816,11 @@ impl Server {
         &mut self,
         tokens: Option<&mpsc::Sender<TokenEvent>>,
     ) -> Result<StepOutcome> {
+        self.note_event();
+        self.sync_arrivals();
         // ---- admission opportunity --------------------------------------
         if self.has_capacity() && !self.waiting.is_empty() {
-            let arrived = self
-                .waiting
-                .partition_point(|r| r.arrival_s <= self.now_s);
+            let arrived = self.arrived_count();
             if arrived > 0 {
                 let ctx = SchedContext {
                     active_adapter: self.active_adapter(),
@@ -656,6 +836,7 @@ impl Server {
                     && self.batch.is_empty()
                     && self.jobs.is_empty()
                     && arrived == self.waiting.len()
+                    && self.arrivals.is_empty()
                 {
                     pick = Some(0);
                 }
@@ -694,13 +875,10 @@ impl Server {
         }
 
         // ---- clock jump to the next arrival -----------------------------
-        if let Some(next) = self
-            .waiting
-            .iter()
-            .map(|r| r.arrival_s)
-            .find(|a| *a > self.now_s)
-        {
+        if let Some(next) = self.next_arrival_after_now() {
             self.set_clock(next);
+            // Calendar mode: the arrival itself moves off the heap at
+            // the next step's sync.
             return Ok(StepOutcome::Advanced { to_s: next });
         }
         if !self.waiting.is_empty() {
@@ -725,7 +903,10 @@ impl Server {
                 break;
             }
             // Uninterrupted lockstep decode windows advance in closed
-            // form; everything else is a normal event.
+            // form; everything else is a normal event. The window probe
+            // reads the arrived boundary, so calendar arrivals sync
+            // first (idempotent; `step` syncs again).
+            self.sync_arrivals();
             if let Some(k) = self.fast_forward_window(Some(t)) {
                 self.fast_forward(k, tokens);
                 continue;
@@ -746,6 +927,7 @@ impl Server {
         tokens: Option<&mpsc::Sender<TokenEvent>>,
     ) -> Result<Vec<RequestResult>> {
         loop {
+            self.sync_arrivals();
             if let Some(k) = self.fast_forward_window(None) {
                 self.fast_forward(k, tokens);
                 continue;
@@ -790,7 +972,7 @@ impl Server {
     fn advance_decode_clock(&mut self, cycles: u64) {
         self.now_run_cycles += cycles;
         self.now_s =
-            self.now_run_base_s + self.now_run_cycles as f64 * self.cfg.system.cycle_s();
+            self.now_run_base_s + cycles_f64(self.now_run_cycles) * self.cfg.system.cycle_s();
     }
 
     /// Admit `req`: monolithic (the paper's model) or chunked, depending
@@ -970,7 +1152,7 @@ impl Server {
             self.n_layers,
             self.batch_overhead_cycles,
         );
-        let step_s = step_cycles as f64 * cyc;
+        let step_s = cycles_f64(step_cycles) * cyc;
         self.advance_decode_clock(step_cycles);
         // Prefills in flight wait out the decode step (their TTFT grows).
         for j in self.jobs.iter_mut() {
@@ -992,6 +1174,7 @@ impl Server {
                 });
             }
         }
+        self.batch.note_lockstep_step();
 
         let done = self.batch.take_finished();
         let completed = done.len();
@@ -1018,8 +1201,8 @@ impl Server {
         // Completion bound: the window may *end* on completions but must
         // not contain one earlier.
         let mut k = self.batch.min_remaining_tokens()?;
-        if self.has_capacity() && !self.waiting.is_empty() {
-            let arrived = self.waiting.partition_point(|r| r.arrival_s <= self.now_s);
+        if self.has_capacity() && (!self.waiting.is_empty() || !self.arrivals.is_empty()) {
+            let arrived = self.arrived_count();
             if arrived > 0 {
                 let ctx = SchedContext {
                     active_adapter: self.active_adapter(),
@@ -1040,12 +1223,7 @@ impl Server {
             // A pending arrival becomes admissible once the clock reaches
             // it: every step of the window must *start* strictly before
             // the next arrival time.
-            if let Some(next_arr) = self
-                .waiting
-                .iter()
-                .map(|r| r.arrival_s)
-                .find(|a| *a > self.now_s)
-            {
+            if let Some(next_arr) = self.next_arrival_after_now() {
                 k = k.min(self.steps_within(next_arr, true, k) + 1);
             }
         }
@@ -1090,7 +1268,7 @@ impl Server {
         let cyc = self.cfg.system.cycle_s();
         let ok = |m: usize| {
             let t = self.now_run_base_s
-                + (self.now_run_cycles + self.window_cycles(m)) as f64 * cyc;
+                + cycles_f64(self.now_run_cycles + self.window_cycles(m)) * cyc;
             if strict {
                 t < limit
             } else {
@@ -1121,6 +1299,7 @@ impl Server {
     /// `tests/scheduling.rs` / `tests/fastpath.rs`).
     fn fast_forward(&mut self, k: usize, tokens: Option<&mpsc::Sender<TokenEvent>>) {
         debug_assert!(self.jobs.is_empty() && !self.batch.is_empty());
+        self.note_event();
         let cyc = self.cfg.system.cycle_s();
         let b = self.batch.len() as u64;
         let l = self.n_layers as u64;
@@ -1149,7 +1328,7 @@ impl Server {
             }
             let step_cycles = sum + (l - 1) * maxv + (b - 1) * ovh;
             window_total += step_cycles;
-            let step_s = step_cycles as f64 * cyc;
+            let step_s = cycles_f64(step_cycles) * cyc;
             self.advance_decode_clock(step_cycles);
             for slot in self.batch.slots_mut() {
                 slot.decode_cycles += step_cycles;
@@ -1165,6 +1344,7 @@ impl Server {
                     });
                 }
             }
+            self.batch.note_lockstep_step();
         }
         drop(cursors);
         #[cfg(debug_assertions)]
@@ -1492,6 +1672,89 @@ mod tests {
     fn builder_rejects_zero_chunk() {
         assert!(ServerBuilder::default().prefill_chunk(Some(0)).build().is_err());
         assert!(ServerBuilder::default().prefill_chunk(Some(1)).build().is_ok());
+    }
+
+    #[test]
+    fn latency_stats_is_nearest_rank() {
+        // Nearest-rank: the q-th percentile of n samples is the
+        // ceil(q * n)-th smallest, 1-based — locked over the small-n
+        // cases the old round((n - 1) * q) index got wrong.
+        let one = latency_stats(&[5.0]);
+        assert_eq!((one.p50, one.p95, one.p99), (5.0, 5.0, 5.0));
+        // p50 of [a, b] is a (rank ceil(1.0) = 1); the old index
+        // round(0.5) returned the larger sample.
+        let two = latency_stats(&[2.0, 1.0]);
+        assert_eq!((two.p50, two.p95, two.p99), (1.0, 2.0, 2.0));
+        // n = 3: ranks ceil(1.5) = 2, ceil(2.85) = 3, ceil(2.97) = 3.
+        let three = latency_stats(&[30.0, 10.0, 20.0]);
+        assert_eq!((three.p50, three.p95, three.p99), (20.0, 30.0, 30.0));
+        // n = 5: ranks 3, ceil(4.75) = 5, ceil(4.95) = 5.
+        let five = latency_stats(&[5.0, 4.0, 3.0, 2.0, 1.0]);
+        assert_eq!((five.p50, five.p95, five.p99), (3.0, 5.0, 5.0));
+        // n = 100 over 1..=100: ranks land exactly on 50/95/99.
+        let big: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let hundred = latency_stats(&big);
+        assert_eq!((hundred.p50, hundred.p95, hundred.p99), (50.0, 95.0, 99.0));
+        assert!((hundred.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calendar_and_scan_loops_bitmatch_on_a_timed_trace() {
+        // Same trace (future arrivals, equal-time ties, mixed adapters)
+        // through both event cores: every completion field and stats
+        // percentile must match to the bit. The full policy x batch x
+        // chunk x chips matrix is gated in tests/scheduling.rs.
+        let run = |calendar: bool| {
+            let exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                256,
+            );
+            let mut s = ServerBuilder::from_experiment(exp).calendar(calendar).build().unwrap();
+            s.register_adapter(AdapterId(1));
+            s.register_adapter(AdapterId(2));
+            for (i, (a, t)) in
+                [(1u32, 0.5), (2, 0.5), (1, 0.0), (2, 2.0), (1, 0.5)].iter().enumerate()
+            {
+                s.submit(Request::new(i as u64, AdapterId(*a), 256, 8).at(*t)).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            let counters = s.sched_counters();
+            (results, s.stats(), counters)
+        };
+        let (rc, sc, cc) = run(true);
+        let (rs, ss, cs) = run(false);
+        assert_eq!(rc.len(), rs.len());
+        for (a, b) in rc.iter().zip(&rs) {
+            assert_eq!(a.request, b.request, "completion order must match");
+            assert_eq!(a.swap, b.swap);
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+            assert_eq!(a.queue_s.to_bits(), b.queue_s.to_bits());
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        }
+        assert_eq!(sc.sim_time_s.to_bits(), ss.sim_time_s.to_bits());
+        assert_eq!(sc.ttft.p95.to_bits(), ss.ttft.p95.to_bits());
+        assert_eq!(sc.itl.p50.to_bits(), ss.itl.p50.to_bits());
+        assert_eq!(sc.queue.p99.to_bits(), ss.queue.p99.to_bits());
+        // Both cores execute the identical event sequence; only the cost
+        // of *locating* events differs.
+        assert_eq!(cc.events, cs.events, "event streams must be identical");
+        assert!(cc.events > 0 && cc.scanned > 0 && cs.scanned > 0);
+    }
+
+    #[test]
+    fn calendar_pending_counts_heap_and_arrived() {
+        let mut s = server();
+        s.register_adapter(AdapterId(1));
+        s.submit(req(0, 1)).unwrap(); // arrival 0.0: already arrived
+        s.submit(req(1, 1).at(5.0)).unwrap(); // future: lives in the heap
+        assert_eq!(s.pending(), 2);
+        assert_eq!(s.next_event_s(), Some(0.0));
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(s.pending(), 0);
     }
 
     #[test]

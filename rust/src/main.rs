@@ -12,7 +12,9 @@
 //! every flag is `--key value` or a boolean `--flag`.
 
 use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
-use primal::coordinator::{AdapterId, FunctionalMode, Request, ServerBuilder};
+use primal::coordinator::{
+    AdapterId, FunctionalMode, Request, RequestResult, ServerBuilder, ServerStats,
+};
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
 use primal::sim::{sweep, Simulator};
@@ -33,12 +35,20 @@ commands:
               points across N worker threads — results are bit-identical
               to --jobs 1, just faster)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
-             [--batch N] [--chips N] [--policy fcfs|affinity|sjf]
-             [--rate R] [--prefill-chunk N] [--max-run-len N] [--golden]
+             [--batch N] [--chips N] [--policy fcfs|affinity|sjf[,..]]
+             [--rate R] [--seeds K] [--jobs N] [--prefill-chunk N]
+             [--max-run-len N] [--no-calendar] [--golden]
              (--rate R: Poisson arrivals at R req/s; 0 = all at t=0;
+              --policy a,b: comma-separated policy grid;
+              --seeds K: replicate each policy over K arrival traces
+              (seed 7+k); a (policy x seed) grid prints one summary row
+              per cell and fans out across --jobs N worker threads —
+              results are bit-identical at any width;
               --prefill-chunk N: chunk admissions into N-token prefill
               pieces interleaved with decode steps;
               --max-run-len N: affinity starvation bound;
+              --no-calendar: scan-based reference event loop (identical
+              results, O(n) event lookup — see DESIGN.md §Calendar);
               --chips N: tensor-parallel shard over N chips)
   sweep      --model <1b|8b|13b> [--from N] [--to N] [--jobs N]
   validate   [--artifacts DIR]
@@ -48,6 +58,8 @@ examples:
   primal report --table 2 --batch 4 --chips 2 --jobs 4
   primal serve --model 1b --requests 16 --adapters 3 --batch 4 \\
                --policy affinity --prefill-chunk 128
+  primal serve --model 1b --requests 8 --rate 50 --policy fcfs,affinity \\
+               --seeds 2 --jobs 2
   primal validate"
     );
     std::process::exit(2)
@@ -108,6 +120,18 @@ fn num_flag(flags: &BTreeMap<String, String>, key: &str, default: usize) -> usiz
         .unwrap_or(default)
 }
 
+/// Validated `--jobs N` (0 and 1 = serial; out-of-range is a hard error,
+/// never a silent clamp).
+fn jobs_arg(flags: &BTreeMap<String, String>) -> usize {
+    match sweep::parse_jobs(num_flag(flags, "jobs", 1)) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{e}");
+            usage()
+        }
+    }
+}
+
 fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     let ctx = num_flag(&flags, "ctx", 1024);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
@@ -154,7 +178,7 @@ fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let which = flags.get("table").map(String::as_str).unwrap_or("2");
     let batch = num_flag(&flags, "batch", 1).max(1);
     let chips = num_flag(&flags, "chips", 1).max(1);
-    let jobs = sweep::clamp_jobs(num_flag(&flags, "jobs", 1));
+    let jobs = jobs_arg(&flags);
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
         "2" | "3" => {
@@ -231,20 +255,38 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     let n_requests = num_flag(&flags, "requests", 8);
     let n_adapters = num_flag(&flags, "adapters", 3);
     let batch = num_flag(&flags, "batch", 1);
-    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("fcfs");
-    let Some(policy) = PolicyKind::parse(policy_name) else {
-        eprintln!("unknown policy '{policy_name}' (try fcfs, affinity, sjf)");
-        usage()
-    };
-    let rate: f64 = flags
-        .get("rate")
-        .map(|v| {
-            v.parse().unwrap_or_else(|_| {
-                eprintln!("--rate expects a number, got '{v}'");
+    let policy_arg = flags.get("policy").map(String::as_str).unwrap_or("fcfs");
+    let policies: Vec<PolicyKind> = policy_arg
+        .split(',')
+        .map(|name| {
+            PolicyKind::parse(name.trim()).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown policy '{name}' (try fcfs, affinity, sjf; \
+                     comma-separate for a policy grid)"
+                );
                 usage()
             })
         })
-        .unwrap_or(0.0);
+        .collect();
+    // --rate is a req/s intensity: NaN/inf/negative would silently poison
+    // every arrival timestamp downstream, so reject them here.
+    let rate: f64 = match flags.get("rate") {
+        None => 0.0,
+        Some(v) => match v.parse::<f64>() {
+            Ok(r) if r.is_finite() && r >= 0.0 => r,
+            _ => {
+                eprintln!("--rate expects a finite, non-negative req/s value, got '{v}'");
+                usage()
+            }
+        },
+    };
+    let seeds = num_flag(&flags, "seeds", 1);
+    if seeds == 0 {
+        eprintln!("--seeds expects a count >= 1");
+        usage()
+    }
+    let jobs = jobs_arg(&flags);
+    let calendar = !flags.contains_key("no-calendar");
     let positive_flag = |key: &str| -> Option<usize> {
         flags.get(key)?;
         let n = num_flag(&flags, key, 0);
@@ -264,36 +306,80 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     } else {
         FunctionalMode::TimingOnly
     };
-    let mut server = match ServerBuilder::from_experiment(cfg)
-        .functional(functional)
-        .artifacts_dir(default_artifacts_dir())
-        .max_batch(batch)
-        .policy_kind(policy)
-        .prefill_chunk(prefill_chunk)
-        .build()
-    {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("server init failed: {e:#}");
-            return ExitCode::FAILURE;
+    // One (policy, seed) cell: build a server, replay the synthetic trace
+    // for that seed, drain. Pure per cell, so the grid fans out through
+    // the deterministic sweep driver.
+    type ServeCell = (Vec<RequestResult>, ServerStats, &'static str);
+    let run_cell = |policy: PolicyKind, seed: u64| -> Result<ServeCell, String> {
+        let mut server = ServerBuilder::from_experiment(cfg.clone())
+            .functional(functional)
+            .artifacts_dir(default_artifacts_dir())
+            .max_batch(batch)
+            .policy_kind(policy)
+            .prefill_chunk(prefill_chunk)
+            .calendar(calendar)
+            .build()
+            .map_err(|e| format!("server init failed: {e:#}"))?;
+        for a in 0..n_adapters {
+            server.register_adapter(AdapterId(a as u32));
         }
+        let mut rng = Rng::new(seed);
+        let mut arrival = 0.0f64;
+        for i in 0..n_requests {
+            let adapter = AdapterId(rng.range(0, n_adapters) as u32);
+            if rate > 0.0 {
+                arrival += rng.exponential(rate);
+            }
+            let req = Request::new(i as u64, adapter, ctx, ctx.min(128)).at(arrival);
+            server
+                .submit(req)
+                .map_err(|e| format!("submit failed: {e:#}"))?;
+        }
+        let results = server
+            .drain(None)
+            .map_err(|e| format!("serving failed: {e:#}"))?;
+        let stats = server.stats();
+        let policy_name = server.policy_name();
+        Ok((results, stats, policy_name))
     };
-    for a in 0..n_adapters {
-        server.register_adapter(AdapterId(a as u32));
-    }
-    let mut rng = Rng::new(7);
-    let mut arrival = 0.0f64;
-    for i in 0..n_requests {
-        let adapter = AdapterId(rng.range(0, n_adapters) as u32);
-        if rate > 0.0 {
-            arrival += rng.exponential(rate);
+    if policies.len() > 1 || seeds > 1 {
+        // Grid mode: one summary row per (policy, seed) cell, fanned out
+        // across --jobs workers (bit-identical at any width).
+        let grid = sweep::run_nested(jobs, policies.len(), seeds, |p, s| {
+            run_cell(policies[p], 7 + s as u64)
+        });
+        println!(
+            "{:<22} {:>4} {:>6} {:>7} {:>8} {:>8} {:>5} {:>9} {:>9}",
+            "policy", "seed", "served", "tokens", "sim_s", "tok/s", "swaps", "ttft_p95", "itl_p95"
+        );
+        let mut ok = true;
+        for (p, rows) in grid.into_iter().enumerate() {
+            for (k, cell) in rows.into_iter().enumerate() {
+                let seed = 7 + k;
+                match cell {
+                    Ok((_, s, name)) => println!(
+                        "{:<22} {:>4} {:>6} {:>7} {:>8.3} {:>8.1} {:>5} {:>9.3} {:>9.3}",
+                        name,
+                        seed,
+                        s.served,
+                        s.total_tokens,
+                        s.sim_time_s,
+                        s.total_tokens as f64 / s.sim_time_s.max(1e-12),
+                        s.adapter_swaps,
+                        s.ttft.p95,
+                        s.itl.p95,
+                    ),
+                    Err(e) => {
+                        eprintln!("{} seed {}: {e}", policies[p].name(), seed);
+                        ok = false;
+                    }
+                }
+            }
         }
-        let req =
-            Request::new(i as u64, adapter, ctx, ctx.min(128)).at(arrival);
-        server.submit(req).unwrap();
+        return if ok { ExitCode::SUCCESS } else { ExitCode::FAILURE };
     }
-    match server.drain(None) {
-        Ok(results) => {
+    match run_cell(policies[0], 7) {
+        Ok((results, s, policy_name)) => {
             println!(
                 "req  adapter  swap  arrive_s   queue_s   ttft_s   itl_ms  golden_ms"
             );
@@ -312,13 +398,12 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                         .unwrap_or_else(|| "-".into()),
                 );
             }
-            let s = server.stats();
             let mean_stall =
                 results.iter().map(|r| r.stall_s).sum::<f64>() / results.len().max(1) as f64;
             println!(
                 "\npolicy {} / batch {}{} (widest observed {}): served {} requests, \
                  {} tokens, {:.2} simulated s ({:.1} tok/s); swaps {}, hits {}",
-                server.policy_name(),
+                policy_name,
                 batch,
                 prefill_chunk
                     .map(|c| format!(" / prefill-chunk {c}"))
@@ -354,7 +439,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             ExitCode::SUCCESS
         }
         Err(e) => {
-            eprintln!("serving failed: {e:#}");
+            eprintln!("{e}");
             ExitCode::FAILURE
         }
     }
@@ -364,7 +449,7 @@ fn cmd_sweep(flags: BTreeMap<String, String>) -> ExitCode {
     let model = model_flag(&flags);
     let from = num_flag(&flags, "from", 256);
     let to = num_flag(&flags, "to", 4096);
-    let jobs = sweep::clamp_jobs(num_flag(&flags, "jobs", 1));
+    let jobs = jobs_arg(&flags);
     let lora = lora_flag(&flags);
     let mut contexts = Vec::new();
     let mut ctx = from;

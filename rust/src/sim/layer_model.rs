@@ -189,6 +189,12 @@ fn floor_sum(n: i128, m: i128, a: i128, b: i128) -> i128 {
     ans
 }
 
+/// Cap on memoized window keys per model instance: a sweep revisits a
+/// small set of (kv0, n) windows, so this never fills in practice; the
+/// bound just keeps an adversarial caller from growing the map without
+/// limit.
+const WINDOW_MEMO_CAP: usize = 4096;
+
 /// Piecewise-linear per-layer decode model.
 #[derive(Debug)]
 pub struct LayerCostModel {
@@ -198,6 +204,16 @@ pub struct LayerCostModel {
     /// paths must not scale it with tokens). Instance-scoped so counting
     /// tests don't race other tests sharing the process.
     evals: AtomicU64,
+    /// Memoized `sum_window` results keyed on (kv0, n). Sweep points
+    /// sharing one cached model (see `build_cached`) ask for the same
+    /// decode windows over and over; the floor-sum is exact and the model
+    /// is immutable after build, so replaying the stored value is
+    /// bit-identical to recomputing. Deliberately does NOT touch `evals`.
+    window_memo: Mutex<BTreeMap<(usize, usize), PhaseCost>>,
+    /// Same, for the cycles-only `sum_cycles_window`.
+    cycles_memo: Mutex<BTreeMap<(usize, usize), u64>>,
+    /// Window-memo hits (both maps) served by THIS instance.
+    window_hits: AtomicU64,
 }
 
 impl Clone for LayerCostModel {
@@ -205,11 +221,27 @@ impl Clone for LayerCostModel {
         Self {
             samples: self.samples.clone(),
             evals: AtomicU64::new(self.evals.load(Ordering::Relaxed)),
+            // A clone starts with a cold memo: the maps are a cache, not
+            // state, and sharing them would need an Arc the callers of
+            // `build_cached` already provide.
+            window_memo: Mutex::new(BTreeMap::new()),
+            cycles_memo: Mutex::new(BTreeMap::new()),
+            window_hits: AtomicU64::new(0),
         }
     }
 }
 
 impl LayerCostModel {
+    fn from_samples(samples: Vec<(usize, PhaseCost)>) -> Self {
+        Self {
+            samples,
+            evals: AtomicU64::new(0),
+            window_memo: Mutex::new(BTreeMap::new()),
+            cycles_memo: Mutex::new(BTreeMap::new()),
+            window_hits: AtomicU64::new(0),
+        }
+    }
+
     pub fn build(cfg: &ExperimentConfig, lm: &LayerMapping) -> Self {
         let samples = KV_SAMPLES
             .iter()
@@ -217,7 +249,7 @@ impl LayerCostModel {
                 (kv, program_cost(&decode_program(cfg, lm, kv), &cfg.system, &cfg.calib))
             })
             .collect();
-        Self { samples, evals: AtomicU64::new(0) }
+        Self::from_samples(samples)
     }
 
     /// The sharded decode model: samples the cost of chip 0's (widest)
@@ -236,7 +268,7 @@ impl LayerCostModel {
                 (kv, program_cost(&sliced, &cfg.system, &cfg.calib))
             })
             .collect();
-        Self { samples, evals: AtomicU64::new(0) }
+        Self::from_samples(samples)
     }
 
     /// Cached [`LayerCostModel::build`]: returns a shared model for the
@@ -375,7 +407,25 @@ impl LayerCostModel {
     /// the closed-form decode summation: each field is piecewise the
     /// rounded lerp, and the boundary convention difference against
     /// `eval`'s bracketing is value-free (both are exact at samples).
+    /// Results are memoized per (kv0, n) — sweep points sharing one
+    /// cached model replay the stored value bit-identically.
     pub fn sum_window(&self, kv0: usize, n: usize) -> PhaseCost {
+        {
+            let memo = self.window_memo.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(hit) = memo.get(&(kv0, n)) {
+                self.window_hits.fetch_add(1, Ordering::Relaxed);
+                return *hit;
+            }
+        }
+        let acc = self.sum_window_uncached(kv0, n);
+        let mut memo = self.window_memo.lock().unwrap_or_else(|e| e.into_inner());
+        if memo.len() < WINDOW_MEMO_CAP {
+            memo.insert((kv0, n), acc);
+        }
+        acc
+    }
+
+    fn sum_window_uncached(&self, kv0: usize, n: usize) -> PhaseCost {
         let mut acc = PhaseCost::default();
         self.for_each_segment(kv0, n, |lo, hi, &(k0, c0), &(k1, c1)| {
             let d = (k1 - k0) as i128;
@@ -394,8 +444,16 @@ impl LayerCostModel {
         acc
     }
 
-    /// Exact `sum_{kv in [kv0, kv0+n)} eval(kv).cycles` in O(#segments).
+    /// Exact `sum_{kv in [kv0, kv0+n)} eval(kv).cycles` in O(#segments),
+    /// memoized per (kv0, n) like [`LayerCostModel::sum_window`].
     pub fn sum_cycles_window(&self, kv0: usize, n: usize) -> u64 {
+        {
+            let memo = self.cycles_memo.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(hit) = memo.get(&(kv0, n)) {
+                self.window_hits.fetch_add(1, Ordering::Relaxed);
+                return *hit;
+            }
+        }
         let mut acc = 0u64;
         self.for_each_segment(kv0, n, |lo, hi, &(k0, c0), &(k1, c1)| {
             acc += sum_lerp(
@@ -406,7 +464,18 @@ impl LayerCostModel {
                 (hi - k0) as i128,
             );
         });
+        let mut memo = self.cycles_memo.lock().unwrap_or_else(|e| e.into_inner());
+        if memo.len() < WINDOW_MEMO_CAP {
+            memo.insert((kv0, n), acc);
+        }
         acc
+    }
+
+    /// Window-memo hits (`sum_window` + `sum_cycles_window`) served by
+    /// THIS model instance. Like `eval_count`, instance-scoped so tests
+    /// don't race each other through the shared build cache.
+    pub fn window_memo_hits(&self) -> u64 {
+        self.window_hits.load(Ordering::Relaxed)
     }
 
     /// Whether the per-layer cycle cost is non-decreasing in kv across the
@@ -763,5 +832,28 @@ mod tests {
         let _ = m.sum_window(1024, 2048);
         let _ = m.sum_cycles_window(1024, 2048);
         assert_eq!(m.eval_count(), 2);
+    }
+
+    #[test]
+    fn window_memo_replays_bit_identically() {
+        let (_, m) = model_for(ModelId::Llama32_1b);
+        assert_eq!(m.window_memo_hits(), 0);
+        let first = m.sum_window(100, 500);
+        let first_cyc = m.sum_cycles_window(300, 64);
+        assert_eq!(m.window_memo_hits(), 0, "cold memo: both were misses");
+        // Replays are hits and bit-match the first computation.
+        assert_eq!(m.sum_window(100, 500), first);
+        assert_eq!(m.sum_cycles_window(300, 64), first_cyc);
+        assert_eq!(m.window_memo_hits(), 2);
+        // Memoized values also match the uncached path and stay eval-free.
+        assert_eq!(first, m.sum_window_uncached(100, 500));
+        assert_eq!(m.eval_count(), 0);
+        // A clone starts with a cold memo but identical values.
+        let c = m.clone();
+        assert_eq!(c.window_memo_hits(), 0);
+        assert_eq!(c.sum_window(100, 500), first);
+        assert_eq!(c.window_memo_hits(), 0, "clone's first call is a miss");
+        assert_eq!(c.sum_window(100, 500), first);
+        assert_eq!(c.window_memo_hits(), 1);
     }
 }

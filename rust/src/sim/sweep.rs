@@ -13,6 +13,8 @@
 //! keyed insert-once map whose values are identical however the race
 //! resolves.
 
+use crate::bail;
+use crate::util::error::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Run `f(0..n)` across up to `jobs` scoped worker threads and return the
@@ -59,10 +61,44 @@ where
     tagged.into_iter().map(|(_, v)| v).collect()
 }
 
-/// Parse a `--jobs`-style worker count: `0` and `1` mean serial; values
-/// are clamped to a sane ceiling so a typo cannot fork-bomb the host.
-pub fn clamp_jobs(requested: usize) -> usize {
-    requested.clamp(1, 64)
+/// Hard ceiling on requested sweep workers: anything wider is assumed to
+/// be a typo rather than a real machine.
+pub const MAX_JOBS: usize = 64;
+
+/// Validate a `--jobs`-style worker count: `0` and `1` both mean serial
+/// (`0` is the conventional "no parallelism" spelling, and the serial
+/// path *is* the parallel path at width one), `2..=MAX_JOBS` fan out,
+/// and anything above `MAX_JOBS` is an **error** — a typo must fail
+/// loudly, not silently run at a different width than asked (the old
+/// `clamp_jobs` clamped `10_000` down to 64 without a word).
+pub fn parse_jobs(requested: usize) -> Result<usize> {
+    if requested > MAX_JOBS {
+        bail!("--jobs {requested} exceeds the {MAX_JOBS}-worker ceiling");
+    }
+    Ok(requested.max(1))
+}
+
+/// Nested (grid × trace) fan-out: run `f(g, i)` for every pair in
+/// `0..grid` × `0..inner` across up to `jobs` workers, returning results
+/// grouped by grid point and trace-ordered within — bit-identical for
+/// every worker count, exactly like [`run_indexed`] (which this
+/// flattens onto). Claiming crosses grid-point boundaries, so one slow
+/// grid point never serializes the rest: this is what lets `serve
+/// --rate` fan a (policy grid × trace seed) matrix out under `--jobs N`.
+pub fn run_nested<T, F>(jobs: usize, grid: usize, inner: usize, f: F) -> Vec<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    if grid == 0 || inner == 0 {
+        return (0..grid).map(|_| Vec::new()).collect();
+    }
+    let flat = run_indexed(jobs, grid * inner, |i| f(i / inner, i % inner));
+    let mut out: Vec<Vec<T>> = (0..grid).map(|_| Vec::with_capacity(inner)).collect();
+    for (i, v) in flat.into_iter().enumerate() {
+        out[i / inner].push(v);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -114,10 +150,49 @@ mod tests {
     }
 
     #[test]
-    fn clamp_jobs_bounds() {
-        assert_eq!(clamp_jobs(0), 1);
-        assert_eq!(clamp_jobs(1), 1);
-        assert_eq!(clamp_jobs(8), 8);
-        assert_eq!(clamp_jobs(10_000), 64);
+    fn parse_jobs_semantics() {
+        // 0 and 1 both mean serial; in-range widths pass through.
+        assert_eq!(parse_jobs(0).unwrap(), 1);
+        assert_eq!(parse_jobs(1).unwrap(), 1);
+        assert_eq!(parse_jobs(8).unwrap(), 8);
+        assert_eq!(parse_jobs(MAX_JOBS).unwrap(), MAX_JOBS);
+        // Over the ceiling is an error, not a silent clamp.
+        let err = parse_jobs(10_000).unwrap_err().to_string();
+        assert!(err.contains("10000"), "error names the bad value: {err}");
+        assert!(parse_jobs(MAX_JOBS + 1).is_err());
+    }
+
+    #[test]
+    fn run_nested_groups_by_grid_point() {
+        for jobs in [1usize, 2, 8] {
+            let out = run_nested(jobs, 3, 4, |g, i| 10 * g + i);
+            assert_eq!(out.len(), 3, "jobs {jobs}");
+            for (g, row) in out.iter().enumerate() {
+                assert_eq!(row, &(0..4).map(|i| 10 * g + i).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn run_nested_worker_count_does_not_change_results() {
+        let work = |g: usize, i: usize| -> u64 {
+            let mut acc = ((g as u64) << 32) | (i as u64 + 1);
+            for k in 0..200u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            acc
+        };
+        let serial = run_nested(1, 5, 7, work);
+        for jobs in [2usize, 4, 16] {
+            assert_eq!(run_nested(jobs, 5, 7, work), serial, "jobs {jobs}");
+        }
+    }
+
+    #[test]
+    fn run_nested_degenerate_shapes() {
+        assert_eq!(run_nested::<usize, _>(4, 0, 5, |_, i| i), Vec::<Vec<usize>>::new());
+        let empty_rows = run_nested::<usize, _>(4, 3, 0, |_, i| i);
+        assert_eq!(empty_rows, vec![Vec::<usize>::new(); 3]);
+        assert_eq!(run_nested(4, 1, 1, |g, i| g + i), vec![vec![0]]);
     }
 }

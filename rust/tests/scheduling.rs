@@ -5,8 +5,8 @@
 
 use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use primal::coordinator::{
-    AdapterId, Fcfs, FunctionalMode, Request, RequestResult, Server, ServerBuilder,
-    ServerConfig, ShortestJobFirst, TokenEvent,
+    AdapterId, Fcfs, FunctionalMode, Request, RequestResult, SchedCounters, Server,
+    ServerBuilder, ServerConfig, ServerStats, ShortestJobFirst, TokenEvent,
 };
 use primal::dataflow::{prefill_program, reprogram_program};
 use primal::sim::{program_cost, LayerCostModel, Simulator};
@@ -772,6 +772,115 @@ fn affinity_starvation_bound_limits_minority_queue_delay() {
         q_bounded < q_unbounded * 0.5,
         "bounded queue delay {q_bounded} not well below unbounded {q_unbounded}"
     );
+}
+
+/// One fuzz run pinned to an event-loop mode (calendar heap vs the
+/// scan-based reference), returning everything the bit-match gate
+/// compares: completion records, the token stream, the full stats block,
+/// and the scheduler's event/scan counters.
+fn fuzz_run_cal(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+    chips: usize,
+    calendar: bool,
+) -> (Vec<RequestResult>, Vec<TokenEvent>, ServerStats, SchedCounters) {
+    let mut exp = exp_1b(256);
+    exp.shard.n_chips = chips;
+    let mut s = ServerBuilder::from_experiment(exp)
+        .max_batch(batch)
+        .policy_kind(policy)
+        .prefill_chunk(chunk)
+        .calendar(calendar)
+        .build()
+        .expect("server");
+    for a in 0..FUZZ_ADAPTERS {
+        s.register_adapter(AdapterId(a));
+    }
+    for r in fuzz_trace(seed) {
+        s.submit(r).unwrap();
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let results = s.drain(Some(&tx)).unwrap();
+    drop(tx);
+    let events: Vec<TokenEvent> = rx.iter().collect();
+    let stats = s.stats();
+    let counters = s.sched_counters();
+    (results, events, stats, counters)
+}
+
+#[test]
+fn calendar_bitmatches_scan_loop_on_fuzz_traces() {
+    // The calendar event core must be invisible: same completion records,
+    // same token-stream bits, same percentile bits, and — because both
+    // modes execute the identical event sequence — the same event count.
+    // Only the cost of *locating* the next event may differ.
+    for seed in [1u64, 7, 42] {
+        for &batch in &[1usize, 4] {
+            for &chunk in &[None, Some(64)] {
+                for &chips in &[1usize, 4] {
+                    for policy in [
+                        PolicyKind::Fcfs,
+                        PolicyKind::AdapterAffinity,
+                        PolicyKind::ShortestJobFirst,
+                    ] {
+                        let label = format!(
+                            "seed {seed} / {} / batch {batch} / chunk {chunk:?} / chips {chips}",
+                            policy.name()
+                        );
+                        let (rc, ec, sc, cc) =
+                            fuzz_run_cal(seed, policy, batch, chunk, chips, true);
+                        let (rs, es, ss, cs) =
+                            fuzz_run_cal(seed, policy, batch, chunk, chips, false);
+
+                        assert_eq!(rc.len(), rs.len(), "{label}: completions");
+                        for (a, b) in rc.iter().zip(&rs) {
+                            assert_eq!(a.request, b.request, "{label}: order");
+                            assert_eq!(a.adapter.0, b.adapter.0, "{label}");
+                            assert_eq!(a.swap, b.swap, "{label}: swap of {}", a.request);
+                            assert_eq!(a.tokens_out, b.tokens_out, "{label}");
+                            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "{label}");
+                            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                            assert_eq!(a.queue_s.to_bits(), b.queue_s.to_bits(), "{label}");
+                            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+                            assert_eq!(a.stall_s.to_bits(), b.stall_s.to_bits(), "{label}");
+                            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                        }
+
+                        assert_eq!(ec.len(), es.len(), "{label}: token events");
+                        for (a, b) in ec.iter().zip(&es) {
+                            assert_eq!(a.request, b.request, "{label}: token order");
+                            assert_eq!(a.index, b.index, "{label}: token index");
+                            assert_eq!(a.at_s.to_bits(), b.at_s.to_bits(), "{label}: token time");
+                        }
+
+                        assert_eq!(sc.sim_time_s.to_bits(), ss.sim_time_s.to_bits(), "{label}");
+                        assert_eq!(sc.total_tokens, ss.total_tokens, "{label}");
+                        assert_eq!(sc.adapter_swaps, ss.adapter_swaps, "{label}");
+                        assert_eq!(sc.adapter_hits, ss.adapter_hits, "{label}");
+                        assert_eq!(sc.mean_ttft_s.to_bits(), ss.mean_ttft_s.to_bits(), "{label}");
+                        assert_eq!(sc.mean_itl_ms.to_bits(), ss.mean_itl_ms.to_bits(), "{label}");
+                        for (x, y, what) in [
+                            (sc.ttft, ss.ttft, "ttft"),
+                            (sc.itl, ss.itl, "itl"),
+                            (sc.queue, ss.queue, "queue"),
+                        ] {
+                            assert_eq!(x.mean.to_bits(), y.mean.to_bits(), "{label}: {what}");
+                            assert_eq!(x.p50.to_bits(), y.p50.to_bits(), "{label}: {what}");
+                            assert_eq!(x.p95.to_bits(), y.p95.to_bits(), "{label}: {what}");
+                            assert_eq!(x.p99.to_bits(), y.p99.to_bits(), "{label}: {what}");
+                        }
+
+                        assert_eq!(cc.events, cs.events, "{label}: event count");
+                        assert!(cc.events > 0 && cc.scanned > 0, "{label}: live counters");
+                        assert!(cs.scanned > 0, "{label}: scan-mode counter");
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]
