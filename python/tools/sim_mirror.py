@@ -1096,6 +1096,7 @@ class Slot:
     decode_cycles: int = 0
     stall_s: float = 0.0
     pending_stall_s: float = 0.0
+    admit_seq: int = 0
 
 
 @dataclass
@@ -1107,6 +1108,7 @@ class Job:
     cum: list
     done: int = 0
     external_s: float = 0.0
+    admit_seq: int = 0
 
     def advance(self):
         end = self.start_s + self.external_s + (self.reprog_s + self.cum[self.done])
@@ -1120,7 +1122,55 @@ class Job:
         return (self.reprog_s + self.cum[-1]) + self.external_s
 
     def to_slot(self):
-        return Slot(self.req, 0, self.start_s, self.swap, self.ttft())
+        return Slot(self.req, 0, self.start_s, self.swap, self.ttft(),
+                    admit_seq=self.admit_seq)
+
+
+class KvPoolMirror:
+    """Counter-level mirror of coordinator::KvPool. Page *identities*
+    (the min-heap free list) never leak into any blessed value, so the
+    mirror tracks only per-owner page counts and the shared counters."""
+
+    def __init__(self, page_tokens, capacity_pages):
+        self.page_tokens = page_tokens
+        self.capacity = capacity_pages
+        self.held = {}
+        self.used = 0
+        self.allocs = 0
+        self.frees = 0
+        self.peak = 0
+
+    def pages_for(self, tokens):
+        return -(-tokens // self.page_tokens)
+
+    def free_pages(self):
+        return self.capacity - self.used
+
+    def alloc(self, owner, n):
+        assert n <= self.free_pages(), "mirror pool overflow"
+        self.held[owner] = self.held.get(owner, 0) + n
+        self.used += n
+        self.allocs += n
+        self.peak = max(self.peak, self.used)
+
+    def held_pages(self, owner):
+        return self.held.get(owner, 0)
+
+    def grow_to(self, owner, tokens):
+        need = self.pages_for(tokens) - self.held.get(owner, 0)
+        if need > 0:
+            self.alloc(owner, need)
+
+    def release(self, owner):
+        n = self.held.pop(owner, 0)
+        self.used -= n
+        self.frees += n
+
+
+def kv_pool_capacity_tokens(lm, n_chips=1):
+    """mapping::ShardPlan::kv_capacity_tokens at the default scratchpad."""
+    kv_tok_chip = max(-(-lm.kv_token_bytes // max(n_chips, 1)), 1)
+    return (SYS["scratchpad_bytes"] // kv_tok_chip) * lm.kv_ring_routers
 
 
 class Policy:
@@ -1201,7 +1251,8 @@ class Server:
 
     def __init__(self, model, targets, ctx, max_batch=1, policy="fcfs",
                  prefill_chunk=None, srpg=True, overhead=64, max_run_len=None,
-                 n_chips=1, fast_forward=True, calendar=False):
+                 n_chips=1, fast_forward=True, calendar=False,
+                 continuous=False, kv_page_tokens=128, kv_pool_pages=None):
         self.m = MODELS[model]
         self.lm = map_model(model, targets)
         self.ctx = ctx
@@ -1253,6 +1304,21 @@ class Server:
         self.hits = 0
         self.gaps_ms = []
         self.per_adapter = {}
+        # Continuous paged-KV mode (mirrors ServerBuilder::continuous):
+        # capacity derives from the ShardPlan KV share unless overridden.
+        # The mirror steps continuous mode plainly (no fast-forward);
+        # Rust's ff-with-pool path is gated bit-identical to stepwise in
+        # tests/scheduling.rs, so every blessed counter agrees.
+        self.pool = None
+        if continuous:
+            cap_tokens = kv_pool_capacity_tokens(self.lm, nc)
+            derived = cap_tokens // max(kv_page_tokens, 1)
+            pages = derived if kv_pool_pages is None else kv_pool_pages
+            assert pages <= derived and pages > 0, "mirror pool override"
+            self.pool = KvPoolMirror(kv_page_tokens, pages)
+        self.admit_seq = 0
+        self.preemptions = 0
+        self.preempted_tokens = 0
 
     def set_clock(self, t):
         self.now = t
@@ -1346,6 +1412,10 @@ class Server:
         return s * float(self.n_layers)
 
     def admit(self, req):
+        seq = self.admit_seq
+        self.admit_seq += 1
+        if self.pool is not None:
+            self.pool.alloc(seq, self.pool.pages_for(req.inp))
         swap = self.resident != req.adapter
         self.resident = req.adapter
         if swap:
@@ -1362,11 +1432,12 @@ class Server:
                 s.stall_s += ttft
                 s.pending_stall_s += ttft
             self.set_clock(self.now + ttft)
-            self.batch.append(Slot(req, 0, start, swap, ttft))
+            self.batch.append(Slot(req, 0, start, swap, ttft, admit_seq=seq))
         else:
             cum = self.chunk_schedule(req.inp, self.prefill_chunk)
             self.jobs.append(Job(req, swap, self.now,
-                                 self.reprog_s if swap else 0.0, cum))
+                                 self.reprog_s if swap else 0.0, cum,
+                                 admit_seq=seq))
         return True
 
     def chunk_step(self):
@@ -1385,7 +1456,61 @@ class Server:
             self.jobs.pop(0)
             self.batch.append(job.to_slot())
 
+    # ---- continuous paged-KV pressure (mirrors resolve_kv_pressure) ------
+
+    def resolve_kv_pressure(self):
+        # Returns True iff eviction emptied the decode batch (the step's
+        # event is the preemption itself). Victim order: youngest
+        # admit_seq across jobs and slots, jobs win ties (jseq > sseq).
+        if self.pool is None:
+            return False
+        preempted = False
+        while True:
+            short = 0
+            for s in self.batch:
+                need = self.pool.pages_for(s.req.inp + s.generated + 1)
+                short += max(need - self.pool.held_pages(s.admit_seq), 0)
+            if short <= self.pool.free_pages():
+                return preempted and not self.batch
+            job = None
+            for i, j in enumerate(self.jobs):
+                if job is None or j.admit_seq >= job[1]:
+                    job = (i, j.admit_seq)
+            slot = None
+            for i, s in enumerate(self.batch):
+                if slot is None or s.admit_seq >= slot[1]:
+                    slot = (i, s.admit_seq)
+            if job is not None and (slot is None or job[1] > slot[1]):
+                self.preempt_job(job[0])
+            else:
+                self.preempt_slot(slot[0])
+            preempted = True
+
+    def requeue(self, req):
+        pos = 0
+        while pos < len(self.waiting) and self.waiting[pos].arrival <= req.arrival:
+            pos += 1
+        self.waiting.insert(pos, req)
+
+    def preempt_job(self, ji):
+        job = self.jobs.pop(ji)
+        self.pool.release(job.admit_seq)
+        self.preemptions += 1
+        self.requeue(job.req)
+
+    def preempt_slot(self, si):
+        s = self.batch.pop(si)
+        self.pool.release(s.admit_seq)
+        self.preemptions += 1
+        self.preempted_tokens += s.generated
+        self.requeue(s.req)
+
     def decode_step(self):
+        if self.resolve_kv_pressure():
+            return
+        if self.pool is not None:
+            for s in self.batch:
+                self.pool.grow_to(s.admit_seq, s.req.inp + s.generated + 1)
         per = [self.lcm.eval_cycles(s.req.inp + s.generated) + self.ar_dec
                for s in self.batch]
         sc = step_cycles(per, self.n_layers, self.overhead)
@@ -1440,8 +1565,11 @@ class Server:
         return lo
 
     def fast_forward_window(self):
+        # Continuous mode steps plainly in the mirror (Rust's pooled
+        # fast-forward is gated bit-identical to stepwise in
+        # tests/scheduling.rs, so plain stepping blesses the same values).
         if not self.fast_forward or not self.model_monotone \
-                or self.jobs or not self.batch:
+                or self.jobs or not self.batch or self.pool is not None:
             return None
         k = min(s.req.out - s.generated for s in self.batch)
         cap = len(self.batch) + len(self.jobs) < self.max_batch
@@ -1481,6 +1609,8 @@ class Server:
         self.prefill_turn = True
 
     def retire(self, s):
+        if self.pool is not None:
+            self.pool.release(s.admit_seq)
         decode_s = float(s.decode_cycles) * CYCLE_S
         itl_ms = decode_s / float(s.req.out) * 1e3
         self.per_adapter[s.req.adapter]["served"] += 1
@@ -1497,15 +1627,27 @@ class Server:
         if cap and self.waiting:
             arrived = self.arrived_count()
             if arrived > 0:
-                pick = self.policy.pick(self.waiting[:arrived],
-                                        self.active_adapter(), self.resident)
-                if pick is None and not self.batch and not self.jobs \
-                        and arrived == len(self.waiting) and not self.arrivals:
-                    pick = 0
-                if pick is not None:
-                    req = self.waiting.pop(pick)
-                    self.admit(req)
-                    return "admitted"
+                # Paged admission gate: side-effect-free peek first; a
+                # blocked candidate must leave run-length state untouched.
+                blocked = False
+                if self.pool is not None:
+                    i = self.policy.peek(self.waiting[:arrived],
+                                         self.active_adapter(), self.resident)
+                    if i is not None:
+                        blocked = self.pool.pages_for(self.waiting[i].inp) \
+                            > self.pool.free_pages()
+                if not blocked:
+                    pick = self.policy.pick(self.waiting[:arrived],
+                                            self.active_adapter(),
+                                            self.resident)
+                    if pick is None and not self.batch and not self.jobs \
+                            and arrived == len(self.waiting) \
+                            and not self.arrivals:
+                        pick = 0
+                    if pick is not None:
+                        req = self.waiting.pop(pick)
+                        self.admit(req)
+                        return "admitted"
         if self.jobs and (self.prefill_turn or not self.batch):
             self.prefill_turn = False
             self.chunk_step()
@@ -1535,6 +1677,137 @@ class Server:
 
 
 # ---------------------------------------------------------------------------
+# trace::workload mirror (integer load stream only)
+# ---------------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """util::Rng (SplitMix64-seeded xoshiro256**), bit-exact."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK64
+        for _ in range(4):
+            sm, z = _splitmix64(sm)
+            s.append(z)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def range(self, lo, hi):
+        return lo + self.next_u64() % (hi - lo)
+
+
+LOAD_STREAM_SALT = 0xA5A55A5AC3C33C3C
+
+
+def workload_load_checksums(seed, n, adapters, max_input, max_output):
+    """trace::workload::load_checksum over a generated spec: the
+    (adapter, input, output) integer sums. The load stream draws exactly
+    4 values per request from its own salted RNG — no libm, no arrival
+    coupling — so these are bit-identical across languages and arrival
+    laws (the Zipf pick is basic IEEE +,*,/ and compares, exact-rounded
+    everywhere)."""
+    load = Rng(seed ^ LOAD_STREAM_SALT)
+    weights = [1.0 / (k + 1.0) for k in range(adapters)]
+    total_weight = 0.0
+    for w in weights:  # plain left-to-right sum, as Rust's iter().sum()
+        total_weight += w
+    a_sum = i_sum = o_sum = 0
+    for _ in range(n):
+        pick = load.f64() * total_weight
+        acc = 0.0
+        adapter = adapters - 1
+        for k, w in enumerate(weights):
+            acc += w
+            if pick < acc:
+                adapter = k
+                break
+        base = max(max_input, 16) >> load.range(0, 3)
+        jitter = load.range(0, base // 8 + 1)
+        inp = max(base - jitter, 16)
+        out = 4 + load.range(0, max(max_output, 1))
+        a_sum += adapter
+        i_sum += inp
+        o_sum += out
+    return a_sum, i_sum, o_sum
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous batched engine mirror (total_cycles only)
+# ---------------------------------------------------------------------------
+
+def hetero_cycles(model, targets, prompts, out, srpg=True, overhead=64):
+    """Mirror of Simulator::run_hetero_batched's total_cycles at one chip
+    with the lm_head off (the paper defaults): all-reduce terms vanish,
+    so only the per-slot prefill block decomposition and the closed-form
+    decode bound survive — pure u64 arithmetic end to end."""
+    m = MODELS[model]
+    lm = map_model(model, targets)
+    b = len(prompts)
+    n_groups = m["layers"]
+    reprog = program_cost(reprogram_program(lm))
+
+    layer_cycles_list = []
+    for p in prompts:
+        block = min(128, p)
+        n_blocks = -(-p // block)
+        cycles = 0
+        for bi in range(n_blocks):
+            this_block = p - bi * block if bi + 1 == n_blocks else block
+            kvv = bi * block + this_block // 2
+            cycles += program_cost(
+                prefill_program(model, targets, lm, this_block,
+                                max(kvv, 1))).cycles
+        layer_cycles_list.append(cycles)
+    # SRPG overlaps only slot 0's layer wave (the first admission).
+    layer0 = layer_cycles_list[0]
+    group_start = [l * layer0 for l in range(n_groups)]
+    prefill_makespan = sum(layer_cycles_list) * n_groups
+    ttft_penalty, stalls = srpg_plan(n_groups, reprog.cycles, group_start,
+                                     srpg)
+    ttft_cycles = ttft_penalty + prefill_makespan + stalls
+
+    if out == 0:
+        return ttft_cycles
+    lcm = LayerCostModel(model, targets, lm)
+    compute_sum = 0
+    for p in prompts:
+        compute_sum += lcm.sum_cycles_window(p, out)
+    sc_max = lcm.sum_cycles_window(max(prompts), out)
+    decode_total = compute_sum + (n_groups - 1) * sc_max \
+        + out * (b - 1) * overhead
+    return ttft_cycles + decode_total
+
+
+# ---------------------------------------------------------------------------
 # proxy baseline + checks
 # ---------------------------------------------------------------------------
 
@@ -1557,7 +1830,22 @@ def proxies_13b():
         sweep.cycles += ev.cycles
         sweep._merge_events(ev)
     e2e = run_batched("13b", targets, 2048, batch=1, closed_form=True)
+    # Continuous paged-KV backlog (the bench's engineered 5-page scenario).
+    # Every blessed counter is a step-sequence integer, so the mirror's
+    # plain stepping blesses the fast-forwarding Rust run too — the
+    # ff/stepwise bit-identity is gated in tests/scheduling.rs.
+    cont = Server("1b", ["Q", "V"], 128, max_batch=4, policy="fcfs",
+                  continuous=True, kv_pool_pages=5, fast_forward=False)
+    for i in range(8):
+        cont.submit(Req(i, 0, 128, 140, 0.0))
+    assert len(cont.drain()) == 8, "continuous backlog lost requests"
+    hetero13b = hetero_cycles("13b", targets, [512, 1024, 2048], 2048)
+    wl_a, wl_i, wl_o = workload_load_checksums(42, 4096, 8, 512, 32)
     return {
+        "cont_page_allocs": cont.pool.allocs,
+        "cont_page_frees": cont.pool.frees,
+        "cont_peak_pages": cont.pool.peak,
+        "cont_preemptions": cont.preemptions,
         "decode0_cycles": d0.cycles,
         "decode2048_cycles": d2048.cycles,
         "decode2048_dmac_macs": d2048.dmac_macs,
@@ -1570,8 +1858,12 @@ def proxies_13b():
         "decode_sweep_net_byte_hops": sweep.net_byte_hops,
         "decode_sweep_rram_passes": sweep.rram_passes,
         "e2e13b_total_cycles": e2e["cycles"],
+        "hetero13b_total_cycles": hetero13b,
         "prefill128_kv1024_cycles": pre.cycles,
         "reprogram_cycles": rep.cycles,
+        "workload_adapter_sum": wl_a,
+        "workload_input_sum": wl_i,
+        "workload_output_sum": wl_o,
     }, lm
 
 
@@ -1739,6 +2031,75 @@ def main():
                               f"chunk{chunk}")
     gate("calendar event core == scan loop (results, clock, gaps, swaps)",
          cal_ok)
+
+    # ---- continuous paged-KV mode ----------------------------------------
+    # With the pool far above demand the page gate never fires, admission
+    # order is untouched, and page bookkeeping has zero timing effect —
+    # continuous mode must be bit-invisible next to lockstep.
+    print("\n== continuous paged-KV mode ==")
+    cont_ok = True
+    for policy in ("fcfs", "affinity", "sjf"):
+        for batch in (1, 4):
+            for trace in cal_traces:
+                runs = []
+                for continuous in (False, True):
+                    s = Server("1b", ["Q", "V"], 256, max_batch=batch,
+                               policy=policy, continuous=continuous,
+                               fast_forward=False)
+                    for r in trace:
+                        s.submit(Req(*r))
+                    res = s.drain()
+                    runs.append((res, s.now, s.gaps_ms, s.swaps, s.hits))
+                    if continuous:
+                        cont_ok &= s.preemptions == 0 \
+                            and s.pool.allocs == s.pool.frees > 0 \
+                            and s.pool.used == 0
+                if runs[0] != runs[1]:
+                    cont_ok = False
+                    print(f"  continuous mismatch {policy}/b{batch}")
+    gate("ample-capacity continuous bit-matches lockstep (+conservation)",
+         cont_ok)
+
+    def cont_backlog():
+        s = Server("1b", ["Q", "V"], 128, max_batch=4, policy="fcfs",
+                   continuous=True, kv_pool_pages=5, fast_forward=False)
+        for i in range(8):
+            s.submit(Req(i, 0, 128, 140, 0.0))
+        return s, s.drain()
+
+    sb1, rb1 = cont_backlog()
+    sb2, rb2 = cont_backlog()
+    gate("over-capacity backlog completes all 8 requests", len(rb1) == 8)
+    gate("over-capacity backlog preempts (restart-from-prefill cost)",
+         sb1.preemptions > 0 and sb1.preempted_tokens > 0,
+         f"({sb1.preemptions} preemptions, {sb1.preempted_tokens} tokens)")
+    gate("page conservation (allocs == frees, none held at drain)",
+         sb1.pool.allocs == sb1.pool.frees and sb1.pool.used == 0,
+         f"({sb1.pool.allocs} allocs)")
+    gate("pool peak hits capacity", sb1.pool.peak == 5)
+    gate("continuous backlog deterministic",
+         rb1 == rb2 and sb1.now == sb2.now
+         and sb1.preemptions == sb2.preemptions
+         and sb1.preempted_tokens == sb2.preempted_tokens)
+
+    # ---- heterogeneous batched engine ------------------------------------
+    print("\n== heterogeneous batched engine (Table II --hetero) ==")
+    het_ok = True
+    for mdl in ("1b", "13b"):
+        for ctx in (1024, 2048):
+            uni = run_batched(mdl, ["Q", "V"], ctx, batch=4)
+            het = hetero_cycles(mdl, ["Q", "V"], [ctx] * 4, ctx)
+            if het != uni["cycles"]:
+                het_ok = False
+                print(f"  hetero collapse mismatch {mdl}/{ctx}: "
+                      f"{het} != {uni['cycles']}")
+    gate("equal prompts collapse to the uniform engine (u64 cycles)", het_ok)
+    lo = run_batched("13b", ["Q", "V"], 512, batch=3, out_tokens=2048)
+    hi = run_batched("13b", ["Q", "V"], 2048, batch=3, out_tokens=2048)
+    mixed = hetero_cycles("13b", ["Q", "V"], [512, 1024, 2048], 2048)
+    gate("mixed prompts land between the uniform bounds",
+         lo["cycles"] < mixed < hi["cycles"],
+         f"({lo['cycles']} < {mixed} < {hi['cycles']})")
 
     # ---- engine: batch-1 bit-match + batch-4 shape -----------------------
     print("\n== Simulator::run_batched checks (1B Q+V 1024) ==")

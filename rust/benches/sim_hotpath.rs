@@ -24,6 +24,7 @@ use primal::dataflow::{decode_program, prefill_program, reprogram_program};
 use primal::mapping::map_model;
 use primal::sim::cost::program_cost;
 use primal::sim::{LayerCostModel, PhaseCost, Simulator};
+use primal::trace::{load_checksum, WorkloadKind, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -196,6 +197,88 @@ fn main() {
         &cfg.calib,
     );
     let rep = program_cost(&reprogram_program(&cfg, lm0), &cfg.system, &cfg.calib);
+
+    // ---- continuous paged-KV proxies (deterministic) ---------------------
+    // An engineered over-capacity backlog: a 5-page pool under four decode
+    // slots that each outgrow their prefill pages forces the preemption
+    // path. The page/preemption counters are pure integers driven by the
+    // step sequence (all arrivals at t=0), so they are blessed from the
+    // mirror's continuous-mode replay and exact-matched here.
+    let cont = {
+        let cfg1b = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            128,
+        );
+        let mut s = ServerBuilder::from_experiment(cfg1b)
+            .max_batch(4)
+            .continuous(true)
+            .kv_pool_pages(Some(5))
+            .build()
+            .expect("continuous server");
+        s.register_adapter(AdapterId(0));
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(0), 128, 140)).expect("submit");
+        }
+        let results = s.drain(None).expect("drain continuous");
+        if results.len() != 8 {
+            eprintln!("proxy gate: continuous backlog lost requests ({}/8)", results.len());
+            ok = false;
+        }
+        s.stats()
+    };
+    println!(
+        "\ncontinuous paged-KV backlog: {} preemptions, {} allocs / {} frees, \
+         peak {} of {} pages",
+        cont.preemptions,
+        cont.kv_page_allocs,
+        cont.kv_page_frees,
+        cont.kv_peak_pages,
+        cont.kv_capacity_pages,
+    );
+    if cont.preemptions == 0 {
+        eprintln!("proxy gate: over-capacity backlog did not preempt");
+        ok = false;
+    }
+    if cont.kv_page_allocs != cont.kv_page_frees || cont.kv_used_pages != 0 {
+        eprintln!(
+            "proxy gate: page conservation violated ({} allocs, {} frees, {} held)",
+            cont.kv_page_allocs, cont.kv_page_frees, cont.kv_used_pages
+        );
+        ok = false;
+    }
+
+    // Heterogeneous batched engine: equal prompts must collapse exactly to
+    // the uniform engine (bit-identity gated cheaply here; the full grid
+    // lives in the engine tests), and the mixed-prompt 13B point is pinned
+    // by a mirror-blessed cycle count.
+    let hetero_equal = sim.run_hetero_batched(&[2048], 1);
+    if hetero_equal.total_cycles != fast.total_cycles
+        || hetero_equal.throughput_tps.to_bits() != fast.throughput_tps.to_bits()
+    {
+        eprintln!("proxy gate: hetero engine diverges from uniform on equal prompts");
+        ok = false;
+    }
+    let hetero = sim.run_hetero_batched(&[512, 1024, 2048], 1);
+
+    // Workload load-stream checksums: the (adapter, input, output) draws
+    // come from a dedicated RNG stream with a fixed draw count per request,
+    // so the integer sums are identical across arrival laws and across the
+    // Rust/Python implementations (no libm in the load stream).
+    let mut wl = WorkloadSpec::new(WorkloadKind::Bursty, 42, 4096);
+    wl.adapters = 8;
+    wl.max_input = 512;
+    wl.max_output = 32;
+    let (wl_adapter, wl_input, wl_output) = load_checksum(&wl.generate());
+    let mut wl_poisson = WorkloadSpec::new(WorkloadKind::Poisson, 42, 4096);
+    wl_poisson.adapters = 8;
+    wl_poisson.max_input = 512;
+    wl_poisson.max_output = 32;
+    if load_checksum(&wl_poisson.generate()) != (wl_adapter, wl_input, wl_output) {
+        eprintln!("proxy gate: load stream not independent of the arrival law");
+        ok = false;
+    }
+
     let proxies: BTreeMap<&'static str, u64> = BTreeMap::from([
         ("decode2048_cycles", d2048.cycles),
         ("decode2048_dmac_macs", d2048.dmac_macs),
@@ -215,6 +298,18 @@ fn main() {
         ("decode_sweep_net_byte_hops", sweep_fast.net_byte_hops),
         ("decode_sweep_rram_passes", sweep_fast.rram_passes),
         ("e2e13b_total_cycles", fast.total_cycles),
+        // Continuous paged-KV backlog (mirror-blessed step-sequence
+        // integers: page churn + preemption count on the 5-page scenario).
+        ("cont_preemptions", cont.preemptions),
+        ("cont_page_allocs", cont.kv_page_allocs),
+        ("cont_page_frees", cont.kv_page_frees),
+        ("cont_peak_pages", cont.kv_peak_pages),
+        // Heterogeneous batched 13B point (512+1024+2048 prompts, 1 chip).
+        ("hetero13b_total_cycles", hetero.total_cycles),
+        // Workload load-stream checksums (bursty seed 42, 4096 requests).
+        ("workload_adapter_sum", wl_adapter),
+        ("workload_input_sum", wl_input),
+        ("workload_output_sum", wl_output),
     ]);
     println!("\ninstruction-count proxies (13B):");
     for (name, v) in &proxies {

@@ -105,7 +105,18 @@ impl ExperimentConfig {
         // KV capacity: the cyclic ring stripes fp16 K+V over every router
         // of a layer's CT group (see mapping::layer). Estimate the group
         // size from the weight footprint and check the per-router share
-        // fits the 32 KB scratchpad.
+        // fits the 32 KB scratchpad. Under continuous batching this
+        // whole-request x max_batch bound is the wrong model — requests
+        // hold pages for their *current* KV, not their full context, so
+        // the authoritative capacity check moves to paged-pool
+        // construction (`coordinator::KvPool`), which rejects degenerate
+        // page sizes and over-capacity overrides with real errors.
+        if self.serving.continuous {
+            if self.serving.kv_page_tokens == 0 {
+                problems.push("serving.kv_page_tokens must be >= 1".into());
+            }
+            return problems;
+        }
         let cts_per_layer = self
             .model
             .layer_weights()

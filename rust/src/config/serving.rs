@@ -86,6 +86,24 @@ pub struct ServingConfig {
     /// (every `RequestResult` field, token-stream bit, and percentile
     /// bit must match; see DESIGN.md §Calendar).
     pub calendar: bool,
+    /// Continuous batching on a paged KV pool (default off): instead of
+    /// reserving whole-request KV per lockstep slot, admission gates on
+    /// free pool pages for the prompt, each decode step grows the holder
+    /// by pages as its KV crosses page boundaries, retirement frees
+    /// everything, and KV pressure preempts the youngest admission
+    /// (restart-from-prefill). With capacity >= total demand the mode
+    /// bit-matches lockstep completions (gated in `tests/scheduling.rs`);
+    /// see DESIGN.md §Continuous batching.
+    pub continuous: bool,
+    /// KV page size in tokens for continuous mode (default 128, the
+    /// prefill-block decomposition). Zero is rejected at pool
+    /// construction.
+    pub kv_page_tokens: usize,
+    /// Pool capacity override in pages for continuous mode. `None`
+    /// derives the capacity from the `ShardPlan` KV share (the per-router
+    /// scratchpad bound inverted to whole-pool tokens); an override past
+    /// the derived capacity is a construction error.
+    pub kv_pool_pages: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -98,6 +116,9 @@ impl Default for ServingConfig {
             affinity_max_run_len: None,
             decode_fast_forward: true,
             calendar: true,
+            continuous: false,
+            kv_page_tokens: 128,
+            kv_pool_pages: None,
         }
     }
 }
@@ -129,5 +150,8 @@ mod tests {
         assert_eq!(s.affinity_max_run_len, None);
         assert!(s.decode_fast_forward, "fast-forward on by default");
         assert!(s.calendar, "calendar event core on by default");
+        assert!(!s.continuous, "lockstep decode by default");
+        assert_eq!(s.kv_page_tokens, 128, "pages on the prefill-block size");
+        assert_eq!(s.kv_pool_pages, None, "capacity derived from the shard plan");
     }
 }

@@ -73,6 +73,10 @@ pub struct PrefillJob {
     external_s: f64,
     /// Golden-model decode-step wall time, if functional mode ran.
     pub golden_exec_ms: Option<f64>,
+    /// The server's admission sequence number — the paged KV pool's owner
+    /// key under continuous batching (0 in lockstep mode, where no pool
+    /// exists).
+    pub admit_seq: u64,
 }
 
 impl PrefillJob {
@@ -94,7 +98,14 @@ impl PrefillJob {
             done: 0,
             external_s: 0.0,
             golden_exec_ms,
+            admit_seq: 0,
         }
+    }
+
+    /// Tag the job with the admission sequence that owns its KV pages.
+    pub fn with_admit_seq(mut self, seq: u64) -> Self {
+        self.admit_seq = seq;
+        self
     }
 
     pub fn adapter(&self) -> AdapterId {
@@ -152,6 +163,7 @@ impl PrefillJob {
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms: self.golden_exec_ms,
+            admit_seq: self.admit_seq,
         }
     }
 }
@@ -182,6 +194,9 @@ pub struct Slot {
     pub pending_stall_s: f64,
     /// Golden-model decode-step wall time, if functional mode ran.
     pub golden_exec_ms: Option<f64>,
+    /// The server's admission sequence number — the paged KV pool's owner
+    /// key under continuous batching (0 in lockstep mode).
+    pub admit_seq: u64,
 }
 
 impl Slot {
@@ -333,6 +348,15 @@ impl DecodeBatch {
         out
     }
 
+    /// Remove and return the slot at `i` (preemption under KV pressure in
+    /// continuous mode), recomputing the cached extrema.
+    pub fn remove_at(&mut self, i: usize) -> Slot {
+        let slot = self.slots.remove(i);
+        self.min_remaining = self.slots.iter().map(Slot::remaining_tokens).min().unwrap_or(0);
+        self.max_kv = self.slots.iter().map(Slot::kv_len).max().unwrap_or(0);
+        slot
+    }
+
     /// Cycles for one batched decode step given each slot's *per-layer*
     /// cost: pipeline makespan plus the explicit batch overhead. Exactly
     /// `n_layers * c` when a single slot is active. Thin façade over
@@ -428,6 +452,7 @@ mod tests {
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms: None,
+            admit_seq: id,
         };
         let mut b = DecodeBatch::new(4);
         b.push(mk(0, 2, 2)); // done
@@ -454,6 +479,7 @@ mod tests {
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms: None,
+            admit_seq: id,
         };
         let mut b = DecodeBatch::new(4);
         b.push(mk(0, 16, 3));
@@ -471,5 +497,10 @@ mod tests {
         b.push(mk(2, 64, 1));
         assert_eq!(b.min_remaining_tokens(), Some(1));
         assert_eq!(b.max_kv_len(), Some(64));
+        // Preempting the widest slot recomputes both extrema.
+        let victim = b.remove_at(2);
+        assert_eq!(victim.req.id, 2);
+        assert_eq!(b.min_remaining_tokens(), Some(2));
+        assert_eq!(b.max_kv_len(), Some(33));
     }
 }

@@ -1,0 +1,295 @@
+//! Paged KV pool: a deterministic page allocator for continuous batching.
+//!
+//! Lockstep serving reserves whole-request KV up front (`max_batch` slots
+//! times the full `input + output` context), which wastes capacity on the
+//! un-generated tail of every in-flight request. Continuous mode instead
+//! carves the per-chip KV share into fixed-size pages on the existing
+//! 128-token prefill-block decomposition and allocates them as a request's
+//! KV actually grows: admission takes `ceil(input / page_tokens)` pages,
+//! each decode step tops the holder up to `ceil((kv + 1) / page_tokens)`,
+//! and retirement releases everything at once.
+//!
+//! Everything is deterministic and replayable bit-for-bit:
+//! - the free list is a min-heap of page ids, so allocation always hands
+//!   out the lowest-numbered free pages in order (stable across runs and
+//!   `--jobs` widths — the pool is per-server state, never shared);
+//! - holders are keyed by the server's admission sequence number, which is
+//!   unique per admission (a preempted request re-admits under a fresh
+//!   sequence), so a double release is structurally impossible — the
+//!   second `release` finds no entry and frees zero pages;
+//! - occupancy counters (`allocs`, `frees`, `peak_pages`) are plain sums
+//!   over those events, gated by the mirror-blessed proxy keys in
+//!   `benches/sim_hotpath.rs`.
+//!
+//! Capacity derives from the `ShardPlan` KV share: the per-router
+//! scratchpad bound inverts to a whole-pool token capacity
+//! (`ShardPlan::kv_capacity_tokens`), and `capacity_pages` is the floor of
+//! that in pages. Degenerate page sizes (zero, or a page so large the pool
+//! holds none) and overrides past the derived capacity are real
+//! constructor errors, not panics — this is where the authoritative KV
+//! check lives under paging (see `config::ExperimentConfig::validate`).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Lifetime counters over pool events (for stats and the proxy gates).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolCounters {
+    /// Total pages handed out over the pool's lifetime.
+    pub allocs: u64,
+    /// Total pages returned over the pool's lifetime.
+    pub frees: u64,
+    /// High-water mark of simultaneously held pages.
+    pub peak_pages: u64,
+}
+
+/// A deterministic fixed-page KV allocator (see module docs).
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    page_tokens: usize,
+    capacity_pages: usize,
+    /// Min-heap of free page ids: allocation is lowest-id-first.
+    free: BinaryHeap<Reverse<u32>>,
+    /// Pages held per owner (admission sequence number).
+    held: BTreeMap<u64, Vec<u32>>,
+    used_pages: usize,
+    counters: KvPoolCounters,
+}
+
+impl KvPool {
+    /// Build a pool of `capacity_pages` pages of `page_tokens` tokens each.
+    /// Degenerate shapes are errors: a zero page size, or a zero capacity
+    /// (a page size past the pool's token capacity floors to no pages).
+    pub fn new(page_tokens: usize, capacity_pages: usize) -> Result<Self, String> {
+        if page_tokens == 0 {
+            return Err("kv page size must be >= 1 token".into());
+        }
+        if capacity_pages == 0 {
+            return Err(format!(
+                "kv pool has zero capacity ({page_tokens}-token pages do not \
+                 fit the per-chip KV share; shrink the page size or add chips)"
+            ));
+        }
+        if capacity_pages > u32::MAX as usize {
+            return Err(format!("kv pool capacity {capacity_pages} pages overflows page ids"));
+        }
+        Ok(Self {
+            page_tokens,
+            capacity_pages,
+            free: (0..capacity_pages as u32).map(Reverse).collect(),
+            held: BTreeMap::new(),
+            used_pages: 0,
+            counters: KvPoolCounters::default(),
+        })
+    }
+
+    /// Derive capacity from the sharded per-chip KV share, with an optional
+    /// page-count override (which must not exceed the derived capacity).
+    pub fn from_capacity_tokens(
+        page_tokens: usize,
+        capacity_tokens: usize,
+        override_pages: Option<usize>,
+    ) -> Result<Self, String> {
+        if page_tokens == 0 {
+            return Err("kv page size must be >= 1 token".into());
+        }
+        let derived = capacity_tokens / page_tokens;
+        let pages = match override_pages {
+            Some(p) if p > derived => {
+                return Err(format!(
+                    "kv pool override of {p} pages overflows the per-chip \
+                     capacity of {derived} pages ({capacity_tokens} tokens at \
+                     {page_tokens}-token pages)"
+                ));
+            }
+            Some(p) => p,
+            None => derived,
+        };
+        Self::new(page_tokens, pages)
+    }
+
+    /// Pages needed to hold `tokens` of KV.
+    pub fn pages_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Allocate `n` pages to `owner` (lowest free ids first). Errors — with
+    /// the pool untouched — if fewer than `n` pages are free.
+    pub fn alloc(&mut self, owner: u64, n: usize) -> Result<(), String> {
+        if n > self.free.len() {
+            return Err(format!(
+                "kv pool exhausted: owner {owner} needs {n} page(s) but only \
+                 {} of {} are free",
+                self.free.len(),
+                self.capacity_pages
+            ));
+        }
+        let pages = self.held.entry(owner).or_default();
+        for _ in 0..n {
+            let Reverse(id) = self.free.pop().expect("checked above");
+            pages.push(id);
+        }
+        self.used_pages += n;
+        self.counters.allocs += n as u64;
+        self.counters.peak_pages = self.counters.peak_pages.max(self.used_pages as u64);
+        Ok(())
+    }
+
+    /// Top `owner` up to enough pages for `tokens` of KV (no-op when the
+    /// holding already suffices; never shrinks).
+    pub fn grow_to(&mut self, owner: u64, tokens: usize) -> Result<(), String> {
+        let need = self.pages_for_tokens(tokens);
+        let have = self.held.get(&owner).map_or(0, Vec::len);
+        if need > have {
+            self.alloc(owner, need - have)?;
+        }
+        Ok(())
+    }
+
+    /// Release every page `owner` holds; returns the count freed (zero if
+    /// the owner holds nothing — double release is a structural no-op).
+    pub fn release(&mut self, owner: u64) -> usize {
+        let Some(pages) = self.held.remove(&owner) else {
+            return 0;
+        };
+        let n = pages.len();
+        for id in pages {
+            self.free.push(Reverse(id));
+        }
+        self.used_pages -= n;
+        self.counters.frees += n as u64;
+        n
+    }
+
+    /// Pages currently free.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently held across all owners.
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pages held by `owner` (zero for unknown owners).
+    pub fn held_pages(&self, owner: u64) -> usize {
+        self.held.get(&owner).map_or(0, Vec::len)
+    }
+
+    pub fn counters(&self) -> KvPoolCounters {
+        self.counters
+    }
+
+    #[cfg(debug_assertions)]
+    pub(crate) fn debug_validate(&self) {
+        let held: usize = self.held.values().map(Vec::len).sum();
+        debug_assert_eq!(held, self.used_pages, "held/used drift");
+        debug_assert_eq!(
+            self.used_pages + self.free.len(),
+            self.capacity_pages,
+            "page conservation"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_shapes_are_errors() {
+        assert!(KvPool::new(0, 8).is_err(), "zero page size");
+        assert!(KvPool::new(128, 0).is_err(), "zero capacity");
+        // A page size past the capacity floors the derived pool to zero
+        // pages, which must surface as the same real error.
+        assert!(KvPool::from_capacity_tokens(4096, 1024, None).is_err());
+        // An override past the derived capacity is rejected.
+        assert!(KvPool::from_capacity_tokens(128, 1024, Some(9)).is_err());
+        assert!(KvPool::from_capacity_tokens(128, 1024, Some(8)).is_ok());
+    }
+
+    #[test]
+    fn alloc_free_conserves_pages() {
+        let mut p = KvPool::new(128, 10).unwrap();
+        p.alloc(1, 3).unwrap();
+        p.alloc(2, 4).unwrap();
+        assert_eq!(p.used_pages(), 7);
+        assert_eq!(p.free_pages(), 3);
+        assert_eq!(p.used_pages() + p.free_pages(), p.capacity_pages());
+        assert_eq!(p.release(1), 3);
+        assert_eq!(p.release(2), 4);
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 10);
+        let c = p.counters();
+        assert_eq!(c.allocs, 7);
+        assert_eq!(c.frees, 7);
+        assert_eq!(c.peak_pages, 7);
+    }
+
+    #[test]
+    fn double_release_is_a_noop() {
+        let mut p = KvPool::new(128, 4).unwrap();
+        p.alloc(5, 2).unwrap();
+        assert_eq!(p.release(5), 2);
+        assert_eq!(p.release(5), 0, "second release frees nothing");
+        assert_eq!(p.release(99), 0, "unknown owner frees nothing");
+        assert_eq!(p.counters().frees, 2);
+        assert_eq!(p.free_pages(), 4);
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_capacity() {
+        let mut p = KvPool::new(128, 5).unwrap();
+        p.alloc(1, 5).unwrap();
+        assert!(p.alloc(2, 1).is_err(), "over-capacity alloc must fail");
+        assert_eq!(p.used_pages(), 5, "failed alloc leaves the pool untouched");
+        assert_eq!(p.held_pages(2), 0);
+        assert_eq!(p.counters().allocs, 5);
+    }
+
+    #[test]
+    fn allocation_order_is_lowest_id_first_and_deterministic() {
+        let run = || {
+            let mut p = KvPool::new(128, 8).unwrap();
+            p.alloc(1, 2).unwrap();
+            p.alloc(2, 2).unwrap();
+            p.release(1); // pages 0,1 return
+            p.alloc(3, 3).unwrap(); // must take 0,1,4
+            let mut held: Vec<u32> = p.held.get(&3).unwrap().clone();
+            held.sort_unstable();
+            held
+        };
+        assert_eq!(run(), vec![0, 1, 4]);
+        assert_eq!(run(), run(), "bitwise-identical replay");
+    }
+
+    #[test]
+    fn grow_to_tops_up_in_page_steps() {
+        let mut p = KvPool::new(128, 8).unwrap();
+        p.alloc(1, p.pages_for_tokens(130)).unwrap(); // 2 pages
+        assert_eq!(p.held_pages(1), 2);
+        p.grow_to(1, 200).unwrap(); // still 2 pages
+        assert_eq!(p.held_pages(1), 2);
+        p.grow_to(1, 257).unwrap(); // 3 pages
+        assert_eq!(p.held_pages(1), 3);
+        p.grow_to(1, 100).unwrap(); // never shrinks
+        assert_eq!(p.held_pages(1), 3);
+    }
+
+    #[test]
+    fn pages_for_tokens_rounds_up() {
+        let p = KvPool::new(128, 4).unwrap();
+        assert_eq!(p.pages_for_tokens(0), 0);
+        assert_eq!(p.pages_for_tokens(1), 1);
+        assert_eq!(p.pages_for_tokens(128), 1);
+        assert_eq!(p.pages_for_tokens(129), 2);
+    }
+}

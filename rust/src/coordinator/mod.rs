@@ -25,11 +25,13 @@
 
 mod adapter;
 mod batch;
+mod kvpool;
 mod scheduler;
 mod server;
 
 pub use adapter::{AdapterCounters, AdapterId, AdapterManager, SwapOutcome};
 pub use batch::{DecodeBatch, PrefillJob, Slot};
+pub use kvpool::{KvPool, KvPoolCounters};
 pub use scheduler::{
     policy_of, AdapterAffinity, Fcfs, SchedContext, SchedulePolicy, ShortestJobFirst,
 };

@@ -36,6 +36,7 @@
 
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
 use super::batch::{cycles_f64, DecodeBatch, PrefillJob, Slot};
+use super::kvpool::KvPool;
 use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
@@ -176,6 +177,21 @@ pub struct ServerStats {
     pub per_adapter: BTreeMap<AdapterId, AdapterUsage>,
     /// Widest decode batch observed.
     pub max_batch_observed: usize,
+    /// Continuous mode: in-flight requests evicted under KV pressure
+    /// (restart-from-prefill; each re-admission is a fresh sequence).
+    pub preemptions: u64,
+    /// Continuous mode: decode tokens discarded by those evictions (the
+    /// preemption cost the restart policy pays).
+    pub preempted_tokens: u64,
+    /// Paged KV pool counters (all zero in lockstep mode, which has no
+    /// pool): lifetime page allocations/frees, the occupancy high-water
+    /// mark, current occupancy, and the pool geometry.
+    pub kv_page_allocs: u64,
+    pub kv_page_frees: u64,
+    pub kv_peak_pages: u64,
+    pub kv_used_pages: u64,
+    pub kv_capacity_pages: u64,
+    pub kv_page_tokens: u64,
 }
 
 /// Running sums + samples behind [`ServerStats`].
@@ -193,6 +209,10 @@ struct StatsAccum {
     /// adapter manager.
     per_adapter: BTreeMap<AdapterId, (u64, u64)>,
     max_batch_observed: usize,
+    /// Continuous mode: evictions under KV pressure and the decode
+    /// tokens they discarded.
+    preemptions: u64,
+    preempted_tokens: u64,
 }
 
 /// Nearest-rank percentile over an unsorted sample set: the q-th
@@ -285,6 +305,12 @@ pub enum StepOutcome {
     /// One batched decode step: every active slot emitted a token;
     /// `completed` of them finished.
     Decoded { batch: usize, completed: usize },
+    /// Continuous mode only: KV pressure evicted in-flight work until the
+    /// decode batch emptied (restart-from-prefill; the victims rejoined
+    /// the waiting queue). `request` is the last victim. When eviction
+    /// leaves the batch non-empty the decode step proceeds within the
+    /// same event and reports `Decoded`.
+    Preempted { request: u64 },
     /// No work was runnable; the clock jumped to the next arrival.
     Advanced { to_s: f64 },
     /// Nothing left to do (no waiting requests, no active slots).
@@ -304,6 +330,9 @@ pub struct ServerBuilder {
     prefill_chunk: Option<usize>,
     decode_fast_forward: bool,
     calendar: bool,
+    continuous: bool,
+    kv_page_tokens: usize,
+    kv_pool_pages: Option<usize>,
 }
 
 impl Default for ServerBuilder {
@@ -330,6 +359,9 @@ impl ServerBuilder {
             prefill_chunk: s.prefill_chunk,
             decode_fast_forward: s.decode_fast_forward,
             calendar: s.calendar,
+            continuous: s.continuous,
+            kv_page_tokens: s.kv_page_tokens,
+            kv_pool_pages: s.kv_pool_pages,
             experiment,
         }
     }
@@ -404,6 +436,31 @@ impl ServerBuilder {
         self
     }
 
+    /// Continuous batching on a paged KV pool (default off): admission
+    /// gates on free pool pages instead of whole-request reservations,
+    /// decode steps grow holdings page-by-page, retirement frees pages
+    /// immediately, and KV pressure evicts the youngest admission
+    /// (restart-from-prefill). With capacity >= total demand the mode
+    /// bit-matches lockstep completions (see DESIGN.md §Continuous
+    /// batching).
+    pub fn continuous(mut self, enabled: bool) -> Self {
+        self.continuous = enabled;
+        self
+    }
+
+    /// KV page size in tokens for continuous mode (default 128).
+    pub fn kv_page_tokens(mut self, tokens: usize) -> Self {
+        self.kv_page_tokens = tokens;
+        self
+    }
+
+    /// Pool capacity override in pages for continuous mode; `None`
+    /// derives the capacity from the `ShardPlan` KV share.
+    pub fn kv_pool_pages(mut self, pages: Option<usize>) -> Self {
+        self.kv_pool_pages = pages;
+        self
+    }
+
     pub fn build(self) -> Result<Server> {
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
@@ -417,6 +474,9 @@ impl ServerBuilder {
         exp.serving.prefill_chunk = self.prefill_chunk;
         exp.serving.decode_fast_forward = self.decode_fast_forward;
         exp.serving.calendar = self.calendar;
+        exp.serving.continuous = self.continuous;
+        exp.serving.kv_page_tokens = self.kv_page_tokens;
+        exp.serving.kv_pool_pages = self.kv_pool_pages;
 
         let sim = Simulator::new(&exp);
         let mapping = sim.mapping();
@@ -428,20 +488,33 @@ impl ServerBuilder {
         // ring over the layer group's scratchpads; tensor-parallel
         // sharding divides each token's resident K+V share across the
         // chips' rings. This is the authoritative (mapping-based) version
-        // of the estimate in `ExperimentConfig::validate`.
+        // of the estimate in `ExperimentConfig::validate`. Continuous
+        // mode replaces the whole-request x max_batch reservation with a
+        // paged pool over the same capacity, so the static bail does not
+        // apply there — the pool constructor is its capacity check.
         let plan = ShardPlan::new(&exp, mapping, n_chips);
-        let kv_per_router =
-            plan.kv_bytes_per_router(exp.input_tokens + exp.output_tokens, self.max_batch);
-        if kv_per_router > exp.system.scratchpad_bytes {
-            bail!(
-                "batched KV needs {kv_per_router} B/router ({} slots over {} \
-                 chip(s)) but the scratchpad is {} B — shorten the context, \
-                 narrow the batch, or shard over more chips",
-                self.max_batch,
-                n_chips,
-                exp.system.scratchpad_bytes
-            );
-        }
+        let pool = if self.continuous {
+            let cap_tokens = plan.kv_capacity_tokens(exp.system.scratchpad_bytes);
+            match KvPool::from_capacity_tokens(self.kv_page_tokens, cap_tokens, self.kv_pool_pages)
+            {
+                Ok(p) => Some(p),
+                Err(e) => bail!("continuous batching: {e}"),
+            }
+        } else {
+            let kv_per_router =
+                plan.kv_bytes_per_router(exp.input_tokens + exp.output_tokens, self.max_batch);
+            if kv_per_router > exp.system.scratchpad_bytes {
+                bail!(
+                    "batched KV needs {kv_per_router} B/router ({} slots over {} \
+                     chip(s)) but the scratchpad is {} B — shorten the context, \
+                     narrow the batch, or shard over more chips",
+                    self.max_batch,
+                    n_chips,
+                    exp.system.scratchpad_bytes
+                );
+            }
+            None
+        };
 
         let layer_model = LayerCostModel::build_cached_for_chips(&exp, lm0, n_chips);
         let shard_ar_decode_cycles = mesh.layer_all_reduce_cycles(exp.model.hidden, 1);
@@ -511,6 +584,8 @@ impl ServerBuilder {
             counters: Cell::new(SchedCounters::default()),
             batch: DecodeBatch::new(self.max_batch),
             jobs: VecDeque::new(),
+            pool,
+            admit_seq: 0,
             prefill_turn: false,
             finished: Vec::new(),
             now_s: 0.0,
@@ -564,6 +639,13 @@ pub struct Server {
     /// occupies a slot of `max_batch` capacity until it finishes and
     /// moves into `batch`. Always empty with monolithic prefill.
     jobs: VecDeque<PrefillJob>,
+    /// Paged KV pool (continuous mode only; `None` = lockstep
+    /// whole-request reservations).
+    pool: Option<KvPool>,
+    /// Monotone admission sequence number: the pool's owner key. A
+    /// preempted request re-admits under a fresh sequence, so stale page
+    /// holdings can never be confused with the retry's.
+    admit_seq: u64,
     /// Alternation flag: after a decode step the next runnable event is a
     /// prefill chunk (when a job is in flight), and vice versa, so chunks
     /// and decode steps interleave one-for-one.
@@ -626,6 +708,21 @@ impl Server {
         }
         if !req.arrival_s.is_finite() || req.arrival_s < 0.0 {
             bail!("request {} has invalid arrival time {}", req.id, req.arrival_s);
+        }
+        if let Some(pool) = &self.pool {
+            // A request whose full context outgrows the whole pool can
+            // never finish (the admission gate would thrash it through
+            // endless preemption); reject it at the door.
+            let need = pool.pages_for_tokens(req.input_tokens + req.output_tokens);
+            if need > pool.capacity_pages() {
+                bail!(
+                    "request {} needs {need} kv page(s) at its full context \
+                     but the pool holds {} ({}-token pages)",
+                    req.id,
+                    pool.capacity_pages(),
+                    pool.page_tokens()
+                );
+            }
         }
         let seq = self.submit_seq;
         self.submit_seq += 1;
@@ -795,6 +892,7 @@ impl Server {
             u.hits = c.hits;
         }
         let ttft = latency_stats(&a.ttfts_s);
+        let pc = self.pool.as_ref().map(KvPool::counters).unwrap_or_default();
         ServerStats {
             served,
             adapter_swaps: self.adapters.swaps,
@@ -808,6 +906,14 @@ impl Server {
             queue: latency_stats(&a.queues_s),
             per_adapter,
             max_batch_observed: a.max_batch_observed,
+            preemptions: a.preemptions,
+            preempted_tokens: a.preempted_tokens,
+            kv_page_allocs: pc.allocs,
+            kv_page_frees: pc.frees,
+            kv_peak_pages: pc.peak_pages,
+            kv_used_pages: self.pool.as_ref().map_or(0, |p| p.used_pages() as u64),
+            kv_capacity_pages: self.pool.as_ref().map_or(0, |p| p.capacity_pages() as u64),
+            kv_page_tokens: self.pool.as_ref().map_or(0, |p| p.page_tokens() as u64),
         }
     }
 
@@ -828,34 +934,54 @@ impl Server {
                     in_flight: self.batch.len() + self.jobs.len(),
                     prefill_in_flight: !self.jobs.is_empty(),
                 };
-                let mut pick = self.policy.pick(&self.waiting[..arrived], &ctx);
-                // Progress guarantee: a policy may hold an idle server to
-                // wait for future arrivals, but once there are none left
-                // it must take something or drain() would never finish.
-                if pick.is_none()
-                    && self.batch.is_empty()
-                    && self.jobs.is_empty()
-                    && arrived == self.waiting.len()
-                    && self.arrivals.is_empty()
-                {
-                    pick = Some(0);
+                // Paged admission gate (continuous mode): probe with the
+                // side-effect-free `peek` and require free pages for the
+                // candidate's prompt before running the stateful `pick` —
+                // a blocked admission must leave the policy's run-length
+                // accounting untouched, exactly like a discarded
+                // fast-forward probe. No deadlock: with the server empty
+                // every page is free and `submit` guaranteed the request
+                // fits the whole pool.
+                let mut blocked = false;
+                if let Some(pool) = &self.pool {
+                    if let Some(i) = self.policy.peek(&self.waiting[..arrived], &ctx) {
+                        blocked = pool.pages_for_tokens(self.waiting[i].input_tokens)
+                            > pool.free_pages();
+                    }
                 }
-                if let Some(i) = pick {
-                    if i >= arrived {
-                        bail!("policy {} picked unarrived index {i}", self.policy.name());
+                // When blocked, fall through to decode: steps retire
+                // slots, which frees pages and re-opens the gate.
+                if !blocked {
+                    let mut pick = self.policy.pick(&self.waiting[..arrived], &ctx);
+                    // Progress guarantee: a policy may hold an idle server
+                    // to wait for future arrivals, but once there are none
+                    // left it must take something or drain() would never
+                    // finish.
+                    if pick.is_none()
+                        && self.batch.is_empty()
+                        && self.jobs.is_empty()
+                        && arrived == self.waiting.len()
+                        && self.arrivals.is_empty()
+                    {
+                        pick = Some(0);
                     }
-                    let req = self.waiting.remove(i);
-                    if let Some(a) = self.active_adapter() {
-                        if a != req.adapter {
-                            bail!(
-                                "policy {} mixed adapter {:?} into a {:?} batch",
-                                self.policy.name(),
-                                req.adapter,
-                                a
-                            );
+                    if let Some(i) = pick {
+                        if i >= arrived {
+                            bail!("policy {} picked unarrived index {i}", self.policy.name());
                         }
+                        let req = self.waiting.remove(i);
+                        if let Some(a) = self.active_adapter() {
+                            if a != req.adapter {
+                                bail!(
+                                    "policy {} mixed adapter {:?} into a {:?} batch",
+                                    self.policy.name(),
+                                    req.adapter,
+                                    a
+                                );
+                            }
+                        }
+                        return self.admit(req);
                     }
-                    return self.admit(req);
                 }
             }
         }
@@ -984,6 +1110,24 @@ impl Server {
         }
     }
 
+    /// Assign the next admission sequence number and, in continuous mode,
+    /// allocate the prompt's KV pages under it. A chunked admission takes
+    /// all its prompt pages here too (prefill writes the whole prompt's
+    /// KV before the first decode token; holding the pages from admission
+    /// keeps the gate conservative). The admission gate in `step` checked
+    /// the free-page count, so the allocation cannot fail.
+    fn next_admit_seq(&mut self, req: &Request) -> Result<u64> {
+        let seq = self.admit_seq;
+        self.admit_seq += 1;
+        if let Some(pool) = self.pool.as_mut() {
+            let need = pool.pages_for_tokens(req.input_tokens);
+            if let Err(e) = pool.alloc(seq, need) {
+                bail!("kv pool admission for request {}: {e}", req.id);
+            }
+        }
+        Ok(seq)
+    }
+
     /// Golden functional decode step on the request path (optional).
     fn golden_step_ms(&self) -> Result<Option<f64>> {
         match (&self.golden, &self.golden_exe) {
@@ -1003,6 +1147,7 @@ impl Server {
     /// every CT group), so in-flight decode slots stall for the duration.
     fn admit_monolithic(&mut self, req: Request) -> Result<StepOutcome> {
         let start_s = self.now_s;
+        let admit_seq = self.next_admit_seq(&req)?;
         let swap = match self.adapters.admit(req.adapter) {
             SwapOutcome::Hit => false,
             SwapOutcome::Swap { .. } => true,
@@ -1040,6 +1185,7 @@ impl Server {
             stall_s: 0.0,
             pending_stall_s: 0.0,
             golden_exec_ms,
+            admit_seq,
         });
         self.acc.max_batch_observed = self.acc.max_batch_observed.max(self.batch.len());
         Ok(StepOutcome::Admitted { request: id, swap })
@@ -1053,6 +1199,7 @@ impl Server {
     /// necessarily empty, so there is nobody to stall).
     fn admit_chunked(&mut self, req: Request, chunk: usize) -> Result<StepOutcome> {
         let start_s = self.now_s;
+        let admit_seq = self.next_admit_seq(&req)?;
         let swap = match self.adapters.admit(req.adapter) {
             SwapOutcome::Hit => false,
             SwapOutcome::Swap { .. } => true,
@@ -1061,8 +1208,10 @@ impl Server {
         let cum = self.chunk_schedule(req.input_tokens, chunk);
         let golden_exec_ms = self.golden_step_ms()?;
         let id = req.id;
-        self.jobs
-            .push_back(PrefillJob::new(req, swap, start_s, reprog_s, cum, golden_exec_ms));
+        self.jobs.push_back(
+            PrefillJob::new(req, swap, start_s, reprog_s, cum, golden_exec_ms)
+                .with_admit_seq(admit_seq),
+        );
         Ok(StepOutcome::Admitted { request: id, swap })
     }
 
@@ -1137,9 +1286,107 @@ impl Server {
         StepOutcome::PrefillChunk { request, chunk, of, completed }
     }
 
+    /// Continuous mode: make room for the next lockstep decode step. Every
+    /// slot grows to `kv_len + 1` tokens this step; when the aggregate
+    /// page shortfall exceeds the free pool, evict the youngest admission
+    /// (highest `admit_seq`, jobs and slots alike — deterministic LIFO
+    /// victim order) and restart it from prefill: release its pages and
+    /// re-insert its request into the arrival-sorted waiting queue.
+    /// Repeats until the shortfall fits. Returns `Some(Preempted)` when
+    /// eviction emptied the decode batch (the step's event is the
+    /// preemption itself); `None` means the step may proceed.
+    fn resolve_kv_pressure(&mut self) -> Option<StepOutcome> {
+        self.pool.as_ref()?;
+        let mut last_victim = None;
+        loop {
+            let pool = self.pool.as_ref().expect("checked above");
+            let short: usize = self
+                .batch
+                .slots()
+                .iter()
+                .map(|s| {
+                    pool.pages_for_tokens(s.kv_len() + 1)
+                        .saturating_sub(pool.held_pages(s.admit_seq))
+                })
+                .sum();
+            if short <= pool.free_pages() {
+                return if self.batch.is_empty() {
+                    last_victim.map(|request| StepOutcome::Preempted { request })
+                } else {
+                    None
+                };
+            }
+            // Youngest admission across jobs and slots.
+            let job = self
+                .jobs
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, j)| j.admit_seq)
+                .map(|(i, j)| (i, j.admit_seq));
+            let slot = self
+                .batch
+                .slots()
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, s)| s.admit_seq)
+                .map(|(i, s)| (i, s.admit_seq));
+            last_victim = Some(match (job, slot) {
+                (Some((ji, jseq)), Some((_, sseq))) if jseq > sseq => self.preempt_job(ji),
+                (Some((ji, _)), None) => self.preempt_job(ji),
+                (_, Some((si, _))) => self.preempt_slot(si),
+                (None, None) => unreachable!("pressure without in-flight work"),
+            });
+        }
+    }
+
+    /// Evict the prefill job at `ji` (restart-from-prefill).
+    fn preempt_job(&mut self, ji: usize) -> u64 {
+        let job = self.jobs.remove(ji).expect("victim job index");
+        if let Some(pool) = self.pool.as_mut() {
+            pool.release(job.admit_seq);
+        }
+        self.acc.preemptions += 1;
+        let req = job.req;
+        let id = req.id;
+        let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
+        self.waiting.insert(pos, req);
+        id
+    }
+
+    /// Evict the decode slot at `si`, discarding its generated tokens
+    /// (restart-from-prefill; the tokens are the preemption cost).
+    fn preempt_slot(&mut self, si: usize) -> u64 {
+        let slot = self.batch.remove_at(si);
+        if let Some(pool) = self.pool.as_mut() {
+            pool.release(slot.admit_seq);
+        }
+        self.acc.preemptions += 1;
+        self.acc.preempted_tokens += slot.generated as u64;
+        let req = slot.req;
+        let id = req.id;
+        let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
+        self.waiting.insert(pos, req);
+        id
+    }
+
     /// One batched decode step: every active slot emits one token; the
     /// step takes the layer-pipelined makespan of the batch.
     fn decode_step(&mut self, tokens: Option<&mpsc::Sender<TokenEvent>>) -> StepOutcome {
+        // Continuous mode: secure this step's KV pages first (possibly
+        // evicting the youngest admissions). Page bookkeeping has zero
+        // timing effect — with ample capacity the step below is
+        // bit-identical to lockstep mode.
+        if let Some(outcome) = self.resolve_kv_pressure() {
+            return outcome;
+        }
+        if let Some(pool) = self.pool.as_mut() {
+            for s in self.batch.slots() {
+                pool.grow_to(s.admit_seq, s.kv_len() + 1)
+                    .expect("resolve_kv_pressure guarantees capacity");
+            }
+            #[cfg(debug_assertions)]
+            pool.debug_validate();
+        }
         let cyc = self.cfg.system.cycle_s();
         let per_layer: Vec<u64> = self
             .batch
@@ -1216,8 +1463,18 @@ impl Server {
                 // non-empty the policy's inputs are constant across the
                 // window, so a held decision is stable per the peek
                 // contract.
-                if self.policy.peek(&self.waiting[..arrived], &ctx).is_some() {
-                    return None;
+                if let Some(i) = self.policy.peek(&self.waiting[..arrived], &ctx) {
+                    match &self.pool {
+                        // Page-blocked admission stays blocked for the
+                        // whole window: free pages only shrink as slots
+                        // grow (no completion before the window's end),
+                        // so the candidate cannot become admissible
+                        // mid-window and decode may fast-forward past it.
+                        Some(pool)
+                            if pool.pages_for_tokens(self.waiting[i].input_tokens)
+                                > pool.free_pages() => {}
+                        _ => return None,
+                    }
                 }
             }
             // A pending arrival becomes admissible once the clock reaches
@@ -1231,6 +1488,39 @@ impl Server {
             // `run_until` runs a step only while the clock before it is
             // <= t (the final step may carry past t).
             k = k.min(self.steps_within(t, false, k) + 1);
+        }
+        // Pool bound (continuous mode): the window must not outgrow the
+        // free pages. Cumulative demand after m steps is
+        //   Σ_i pages(kv_i + m) - held_i
+        // (monotone in m; held_i == pages(kv_i) by the growth invariant),
+        // and no page frees inside a window (no completion before its
+        // end), so the largest feasible window is the largest m with
+        // demand(m) <= free — found by binary search. A shorter window
+        // hands the pressure to the next normal step, which preempts.
+        if let Some(pool) = &self.pool {
+            let demand = |m: usize| -> usize {
+                self.batch
+                    .slots()
+                    .iter()
+                    .map(|s| {
+                        pool.pages_for_tokens(s.kv_len() + m)
+                            .saturating_sub(pool.held_pages(s.admit_seq))
+                    })
+                    .sum()
+            };
+            let free = pool.free_pages();
+            if demand(k) > free {
+                let (mut lo, mut hi) = (0usize, k);
+                while hi - lo > 1 {
+                    let mid = lo + (hi - lo) / 2;
+                    if demand(mid) <= free {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                k = lo;
+            }
         }
         (k >= 2).then_some(k)
     }
@@ -1300,6 +1590,32 @@ impl Server {
     fn fast_forward(&mut self, k: usize, tokens: Option<&mpsc::Sender<TokenEvent>>) {
         debug_assert!(self.jobs.is_empty() && !self.batch.is_empty());
         self.note_event();
+        // Continuous mode: replay the window's page allocations exactly
+        // as the stepwise path would. Slot i allocates one page at local
+        // step s whenever its pre-step KV length `kv_i + s` sits on a
+        // page boundary; applying the events in (step, slot) order keeps
+        // the pool's free-list ids and counters bit-identical to
+        // step-by-step execution (page work has zero timing effect).
+        let mut window_allocs: Vec<(usize, usize, u64)> = Vec::new();
+        if let Some(pool) = &self.pool {
+            let pt = pool.page_tokens();
+            for (si, s) in self.batch.slots().iter().enumerate() {
+                let kv = s.kv_len();
+                for step in 0..k {
+                    if (kv + step) % pt == 0 {
+                        window_allocs.push((step, si, s.admit_seq));
+                    }
+                }
+            }
+            window_allocs.sort_unstable();
+        }
+        if let Some(pool) = self.pool.as_mut() {
+            for &(_, _, owner) in &window_allocs {
+                pool.alloc(owner, 1).expect("window bounded by the pool demand");
+            }
+            #[cfg(debug_assertions)]
+            pool.debug_validate();
+        }
         let cyc = self.cfg.system.cycle_s();
         let b = self.batch.len() as u64;
         let l = self.n_layers as u64;
@@ -1364,6 +1680,11 @@ impl Server {
     }
 
     fn retire(&mut self, s: Slot) {
+        // Continuous mode: a completed slot frees its pages immediately,
+        // re-opening the admission gate at the very next event.
+        if let Some(pool) = self.pool.as_mut() {
+            pool.release(s.admit_seq);
+        }
         let decode_s = s.decode_s(self.cfg.system.cycle_s());
         let itl_ms = decode_s / s.req.output_tokens as f64 * 1e3;
         let total = s.ttft_s + s.stall_s + decode_s;
@@ -1779,5 +2100,185 @@ mod tests {
         // One swap per adapter group: 1 (cold) then 2.
         assert_eq!(s.stats().adapter_swaps, 2);
         assert!(s.stats().max_batch_observed >= 2);
+    }
+
+    #[test]
+    fn continuous_mode_pages_kv_and_drains_clean() {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(2)
+            .continuous(true)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        for i in 0..4u64 {
+            s.submit(Request::new(i, AdapterId(1), 256, 16)).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 4);
+        let st = s.stats();
+        assert!(st.kv_capacity_pages > 0);
+        assert_eq!(st.kv_page_tokens, 128);
+        assert!(st.kv_page_allocs > 0);
+        assert_eq!(
+            st.kv_page_allocs, st.kv_page_frees,
+            "a drained server must have returned every page"
+        );
+        assert_eq!(st.kv_used_pages, 0);
+        assert!(st.kv_peak_pages <= st.kv_capacity_pages);
+        assert_eq!(st.preemptions, 0, "ample capacity must not preempt");
+    }
+
+    #[test]
+    fn continuous_over_capacity_backlog_preempts_and_completes() {
+        // Squeeze the pool to 5 pages: two 128/140 slots each grow
+        // 1 -> 2 -> 3 pages, so two in flight (6 pages of eventual
+        // demand) must trip the gate and evict the youngest.
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            128,
+        );
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(4)
+            .continuous(true)
+            .kv_pool_pages(Some(5))
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(1), 128, 140)).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 8, "every request completes despite eviction");
+        let st = s.stats();
+        assert!(st.preemptions > 0, "over-capacity backlog must preempt");
+        assert!(st.preempted_tokens > 0, "evicted slots had generated tokens");
+        assert_eq!(st.kv_page_allocs, st.kv_page_frees);
+        assert_eq!(st.kv_used_pages, 0);
+        assert_eq!(st.kv_peak_pages, 5, "pressure fills the whole pool");
+    }
+
+    #[test]
+    fn continuous_replays_bitwise_and_matches_fast_forward() {
+        let run = |ff: bool| {
+            let exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                128,
+            );
+            let mut s = ServerBuilder::from_experiment(exp)
+                .max_batch(4)
+                .continuous(true)
+                .kv_pool_pages(Some(5))
+                .decode_fast_forward(ff)
+                .build()
+                .unwrap();
+            s.register_adapter(AdapterId(1));
+            for i in 0..8u64 {
+                s.submit(Request::new(i, AdapterId(1), 128, 140)).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            (results, s.stats())
+        };
+        let (r1, s1) = run(true);
+        let (r2, s2) = run(false);
+        assert_eq!(r1.len(), r2.len());
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        }
+        assert_eq!(s1.preemptions, s2.preemptions);
+        assert_eq!(s1.kv_page_allocs, s2.kv_page_allocs);
+        assert_eq!(s1.kv_page_frees, s2.kv_page_frees);
+        assert_eq!(s1.kv_peak_pages, s2.kv_peak_pages);
+        assert_eq!(s1.sim_time_s.to_bits(), s2.sim_time_s.to_bits());
+    }
+
+    #[test]
+    fn continuous_rejects_degenerate_pools_and_oversized_requests() {
+        let exp = || {
+            ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                256,
+            )
+        };
+        // Zero page size and over-capacity overrides are build errors.
+        assert!(ServerBuilder::from_experiment(exp())
+            .continuous(true)
+            .kv_page_tokens(0)
+            .build()
+            .is_err());
+        assert!(ServerBuilder::from_experiment(exp())
+            .continuous(true)
+            .kv_pool_pages(Some(usize::MAX))
+            .build()
+            .is_err());
+        // A page size past the whole pool floors capacity to zero pages.
+        assert!(ServerBuilder::from_experiment(exp())
+            .continuous(true)
+            .kv_page_tokens(1 << 30)
+            .build()
+            .is_err());
+        // A request that outgrows the whole pool is rejected at submit.
+        let mut s = ServerBuilder::from_experiment(exp())
+            .continuous(true)
+            .kv_pool_pages(Some(2))
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(1));
+        assert!(s.submit(Request::new(0, AdapterId(1), 256, 256)).is_err());
+        assert!(s.submit(Request::new(1, AdapterId(1), 128, 100)).is_ok());
+    }
+
+    #[test]
+    fn continuous_with_ample_capacity_bitmatches_lockstep() {
+        // The builder-level smoke of the tier the fuzz suite gates: same
+        // trace through lockstep and continuous mode; with pool capacity
+        // far above total demand every completion field must match to
+        // the bit (page bookkeeping has zero timing effect).
+        let run = |continuous: bool| {
+            let exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                256,
+            );
+            let mut s = ServerBuilder::from_experiment(exp)
+                .max_batch(2)
+                .continuous(continuous)
+                .build()
+                .unwrap();
+            s.register_adapter(AdapterId(1));
+            s.register_adapter(AdapterId(2));
+            for (i, (a, t)) in
+                [(1u32, 0.0), (1, 0.1), (2, 0.2), (2, 0.2), (1, 3.0)].iter().enumerate()
+            {
+                s.submit(Request::new(i as u64, AdapterId(*a), 256, 12).at(*t)).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            (results, s.stats())
+        };
+        let (rl, sl) = run(false);
+        let (rc, sc) = run(true);
+        assert_eq!(rl.len(), rc.len());
+        for (a, b) in rl.iter().zip(&rc) {
+            assert_eq!(a.request, b.request, "completion order must match");
+            assert_eq!(a.swap, b.swap);
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        }
+        assert_eq!(sl.sim_time_s.to_bits(), sc.sim_time_s.to_bits());
+        assert_eq!(sl.ttft.p95.to_bits(), sc.ttft.p95.to_bits());
+        assert_eq!(sl.itl.p99.to_bits(), sc.itl.p99.to_bits());
+        assert_eq!(sc.preemptions, 0);
     }
 }

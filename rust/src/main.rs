@@ -18,7 +18,7 @@ use primal::coordinator::{
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
 use primal::sim::{sweep, Simulator};
-use primal::trace::render_gantt;
+use primal::trace::{render_gantt, WorkloadKind, WorkloadSpec};
 use primal::util::Rng;
 use std::collections::BTreeMap;
 use std::process::ExitCode;
@@ -31,14 +31,25 @@ commands:
   simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--batch N]
              [--chips N] [--no-srpg] [--trace]
   report     --table <1|2|3|4|h100|srpg> [--batch N] [--chips N] [--jobs N]
+             [--hetero]
              (batch/chips: tables 2/3 only; --jobs N: simulate the grid
               points across N worker threads — results are bit-identical
-              to --jobs 1, just faster)
+              to --jobs 1, just faster; --hetero: table 2 variant with
+              mixed prompt lengths per batch — one row per prompt mix)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
              [--batch N] [--chips N] [--policy fcfs|affinity|sjf[,..]]
              [--rate R] [--seeds K] [--jobs N] [--prefill-chunk N]
              [--max-run-len N] [--no-calendar] [--golden]
+             [--trace poisson|bursty|diurnal] [--continuous] [--kv-pages N]
              (--rate R: Poisson arrivals at R req/s; 0 = all at t=0;
+              --trace <kind>: generate the request mix from the seeded
+              fleet-scale workload generator (arrival law <kind>, Zipf
+              adapter mix, mixed lengths; scales to 10^5+ requests;
+              --rate then sets the generator's mean rate);
+              --continuous: continuous batching on the paged KV pool —
+              admission gates on free pages, retirement frees them,
+              KV pressure preempts the youngest admission;
+              --kv-pages N: override the pool capacity in pages;
               --policy a,b: comma-separated policy grid;
               --seeds K: replicate each policy over K arrival traces
               (seed 7+k); a (policy x seed) grid prints one summary row
@@ -60,6 +71,9 @@ examples:
                --policy affinity --prefill-chunk 128
   primal serve --model 1b --requests 8 --rate 50 --policy fcfs,affinity \\
                --seeds 2 --jobs 2
+  primal serve --model 1b --requests 100000 --trace bursty --continuous \\
+               --batch 8 --rate 200
+  primal report --table 2 --hetero --chips 2
   primal validate"
     );
     std::process::exit(2)
@@ -181,6 +195,50 @@ fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let jobs = jobs_arg(&flags);
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
+        "2" if flags.contains_key("hetero") => {
+            // Heterogeneous-batch Table II: one row per (grid point,
+            // prompt mix), batch fixed by the mix width. Feasibility is
+            // checked at the mix width with the conservative whole-
+            // context KV bound, so infeasible points skip loudly.
+            eprintln!(
+                "running the hetero-batch grid (12 paper points x 3 prompt \
+                 mixes) over {chips} chip(s)..."
+            );
+            let mut points: Vec<(ExperimentConfig, Vec<usize>)> = Vec::new();
+            for cfg in &metrics::paper_grid() {
+                let mut cfg = cfg.clone();
+                let mixes = metrics::hetero_mixes(cfg.input_tokens);
+                cfg.serving.max_batch = mixes[0].len();
+                cfg.shard.n_chips = chips;
+                let problems = cfg.validate();
+                if !problems.is_empty() {
+                    for p in &problems {
+                        eprintln!(
+                            "skipping {} ctx {} at batch {} / {chips} chip(s): {p}",
+                            cfg.model.id,
+                            cfg.input_tokens,
+                            cfg.serving.max_batch
+                        );
+                    }
+                    continue;
+                }
+                for mix in mixes {
+                    points.push((cfg.clone(), mix));
+                }
+            }
+            if points.is_empty() {
+                eprintln!("no hetero grid point is feasible over {chips} chip(s)");
+                return ExitCode::FAILURE;
+            }
+            let rows = sweep::run_indexed(jobs, points.len(), |i| {
+                let (cfg, mix) = &points[i];
+                (
+                    metrics::hetero_mix_label(mix),
+                    metrics::run_point_hetero(cfg, mix, chips),
+                )
+            });
+            println!("{}", metrics::table2_hetero(&rows));
+        }
         "2" | "3" => {
             let mut qualifier = String::new();
             if batch > 1 {
@@ -298,6 +356,14 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     };
     let prefill_chunk = positive_flag("prefill-chunk");
     let max_run_len = positive_flag("max-run-len");
+    let trace_kind = flags.get("trace").map(|name| {
+        WorkloadKind::parse(name).unwrap_or_else(|| {
+            eprintln!("unknown trace kind '{name}' (try poisson, bursty, diurnal)");
+            usage()
+        })
+    });
+    let continuous = flags.contains_key("continuous");
+    let kv_pages = positive_flag("kv-pages");
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     cfg.serving.affinity_max_run_len = max_run_len;
     cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
@@ -318,22 +384,41 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             .policy_kind(policy)
             .prefill_chunk(prefill_chunk)
             .calendar(calendar)
+            .continuous(continuous)
+            .kv_pool_pages(kv_pages)
             .build()
             .map_err(|e| format!("server init failed: {e:#}"))?;
         for a in 0..n_adapters {
             server.register_adapter(AdapterId(a as u32));
         }
-        let mut rng = Rng::new(seed);
-        let mut arrival = 0.0f64;
-        for i in 0..n_requests {
-            let adapter = AdapterId(rng.range(0, n_adapters) as u32);
+        if let Some(kind) = trace_kind {
+            // Fleet-scale generated trace: seeded arrival law + Zipf
+            // adapter mix + mixed lengths (see trace::workload). O(n),
+            // so 10^5+ requests are fine.
+            let mut spec = WorkloadSpec::new(kind, seed, n_requests);
+            spec.adapters = n_adapters;
+            spec.max_input = ctx;
             if rate > 0.0 {
-                arrival += rng.exponential(rate);
+                spec.rate_per_s = rate;
             }
-            let req = Request::new(i as u64, adapter, ctx, ctx.min(128)).at(arrival);
-            server
-                .submit(req)
-                .map_err(|e| format!("submit failed: {e:#}"))?;
+            for req in spec.generate() {
+                server
+                    .submit(req)
+                    .map_err(|e| format!("submit failed: {e:#}"))?;
+            }
+        } else {
+            let mut rng = Rng::new(seed);
+            let mut arrival = 0.0f64;
+            for i in 0..n_requests {
+                let adapter = AdapterId(rng.range(0, n_adapters) as u32);
+                if rate > 0.0 {
+                    arrival += rng.exponential(rate);
+                }
+                let req = Request::new(i as u64, adapter, ctx, ctx.min(128)).at(arrival);
+                server
+                    .submit(req)
+                    .map_err(|e| format!("submit failed: {e:#}"))?;
+            }
         }
         let results = server
             .drain(None)
@@ -349,8 +434,9 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             run_cell(policies[p], 7 + s as u64)
         });
         println!(
-            "{:<22} {:>4} {:>6} {:>7} {:>8} {:>8} {:>5} {:>9} {:>9}",
-            "policy", "seed", "served", "tokens", "sim_s", "tok/s", "swaps", "ttft_p95", "itl_p95"
+            "{:<22} {:>4} {:>6} {:>7} {:>8} {:>8} {:>5} {:>9} {:>9} {:>9} {:>7}",
+            "policy", "seed", "served", "tokens", "sim_s", "tok/s", "swaps", "ttft_p95",
+            "itl_p95", "itl_p99", "preempt"
         );
         let mut ok = true;
         for (p, rows) in grid.into_iter().enumerate() {
@@ -358,7 +444,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                 let seed = 7 + k;
                 match cell {
                     Ok((_, s, name)) => println!(
-                        "{:<22} {:>4} {:>6} {:>7} {:>8.3} {:>8.1} {:>5} {:>9.3} {:>9.3}",
+                        "{:<22} {:>4} {:>6} {:>7} {:>8.3} {:>8.1} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>7}",
                         name,
                         seed,
                         s.served,
@@ -368,6 +454,8 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                         s.adapter_swaps,
                         s.ttft.p95,
                         s.itl.p95,
+                        s.itl.p99,
+                        s.preemptions,
                     ),
                     Err(e) => {
                         eprintln!("{} seed {}: {e}", policies[p].name(), seed);
@@ -380,10 +468,21 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     }
     match run_cell(policies[0], 7) {
         Ok((results, s, policy_name)) => {
+            // Fleet-scale traces: the per-request table is noise at 10^5
+            // rows — print it only for small runs, the percentile summary
+            // below carries the signal either way.
+            let per_request_cap = 64;
+            if results.len() > per_request_cap {
+                println!(
+                    "({} requests served — per-request table suppressed beyond \
+                     {per_request_cap} rows)",
+                    results.len()
+                );
+            }
             println!(
                 "req  adapter  swap  arrive_s   queue_s   ttft_s   itl_ms  golden_ms"
             );
-            for r in &results {
+            for r in results.iter().take(per_request_cap) {
                 println!(
                     "{:>3}  {:>7}  {:>4}  {:>8.3}  {:>8.3}  {:>7.3}  {:>7.3}  {}",
                     r.request,
@@ -429,6 +528,20 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                 s.queue.mean, s.queue.p50, s.queue.p95, s.queue.p99
             );
             println!("stall mean {mean_stall:.3} s (in-flight time lost to admissions)");
+            if s.kv_capacity_pages > 0 {
+                println!(
+                    "KV pool: {}/{} pages at end (peak {}, page {} tok); \
+                     {} allocs / {} frees; preemptions {} ({} generated tokens re-decoded)",
+                    s.kv_used_pages,
+                    s.kv_capacity_pages,
+                    s.kv_peak_pages,
+                    s.kv_page_tokens,
+                    s.kv_page_allocs,
+                    s.kv_page_frees,
+                    s.preemptions,
+                    s.preempted_tokens,
+                );
+            }
             println!("\nadapter  served  tokens_out  swaps  hits");
             for (id, u) in &s.per_adapter {
                 println!(

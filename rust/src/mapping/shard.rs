@@ -137,6 +137,17 @@ impl ShardPlan {
     pub fn kv_fits(&self, tokens: usize, slots: usize, scratchpad_bytes: usize) -> bool {
         self.kv_bytes_per_router(tokens, slots) <= scratchpad_bytes
     }
+
+    /// The per-router scratchpad bound inverted to a whole-pool token
+    /// capacity: each ring router holds `scratchpad / kv_token_bytes`
+    /// tokens of K+V share, and the cyclic ring stripes tokens across all
+    /// `ring_routers`, so the chip as a whole can hold their product.
+    /// This is the capacity the paged KV pool partitions in continuous
+    /// mode (`coordinator::KvPool`); `kv_fits(t, 1, spad)` holds exactly
+    /// when `t <= kv_capacity_tokens(spad)`.
+    pub fn kv_capacity_tokens(&self, scratchpad_bytes: usize) -> usize {
+        (scratchpad_bytes / self.kv_token_bytes_per_chip().max(1)) * self.ring_routers
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +214,25 @@ mod tests {
                 let f = p.kv_bytes_per_router(4096, 4);
                 assert!(f <= prev, "{model:?}: {f} at {n} chips above {prev}");
                 prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_tokens_inverts_the_per_router_bound() {
+        for model in ModelId::all_paper() {
+            for n in [1usize, 2, 4] {
+                let (cfg, p) = plan(model, n);
+                let spad = cfg.system.scratchpad_bytes;
+                let cap = p.kv_capacity_tokens(spad);
+                assert!(cap > 0, "{model:?}/{n}: zero KV capacity");
+                // Single-slot feasibility and the token capacity agree at
+                // the boundary (cap fits, cap + ring stripe does not).
+                assert!(p.kv_fits(cap, 1, spad), "{model:?}/{n}: cap must fit");
+                assert!(
+                    !p.kv_fits(cap + p.ring_routers, 1, spad),
+                    "{model:?}/{n}: cap + one stripe must not fit"
+                );
             }
         }
     }

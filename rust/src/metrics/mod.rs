@@ -42,6 +42,71 @@ pub fn run_point_sharded(cfg: &ExperimentConfig, batch: usize, n_chips: usize) -
     Simulator::new(cfg).run_sharded_batched(batch, n_chips)
 }
 
+/// Run one grid point with a heterogeneous prompt mix (Table II's
+/// hetero variant; an all-equal mix bit-matches [`run_point_sharded`]
+/// at the same batch — gated in `sim::engine`).
+pub fn run_point_hetero(
+    cfg: &ExperimentConfig,
+    prompts: &[usize],
+    n_chips: usize,
+) -> SimReport {
+    Simulator::new(cfg).run_hetero_batched(prompts, n_chips)
+}
+
+/// The standard heterogeneous prompt mixes for a context ceiling: a
+/// uniform reference row plus two skewed mixes (half/quarter and a
+/// long-tail), all topping out at `ctx` so the rows share the
+/// makespan-setting widest slot.
+pub fn hetero_mixes(ctx: usize) -> Vec<Vec<usize>> {
+    let c = ctx.max(8);
+    vec![
+        vec![c; 4],
+        vec![c / 4, c / 2, c / 2, c],
+        vec![c / 8, c / 4, c / 2, c],
+    ]
+}
+
+/// Render a prompt mix as a compact cell label ("256+512+1024").
+pub fn hetero_mix_label(prompts: &[usize]) -> String {
+    let mut s = String::new();
+    for (i, p) in prompts.iter().enumerate() {
+        if i > 0 {
+            s.push('+');
+        }
+        s.push_str(&p.to_string());
+    }
+    s
+}
+
+/// Table II, heterogeneous-batch variant: one row per (model, mix) with
+/// the per-slot prompt lengths spelled out in the `Prompts` column
+/// (`report --table 2 --hetero`). Rows are `(mix label, report)` pairs
+/// from [`run_point_hetero`] + [`hetero_mix_label`].
+pub fn table2_hetero(rows: &[(String, SimReport)]) -> String {
+    let mut t = Table::new(&[
+        "Model", "LoRA", "Prompts (In)", "Out", "Batch", "Chips",
+        "Throughput (tok/s)", "Avg Power (W)", "Efficiency (tok/J)",
+    ])
+    .align(0, Align::Left)
+    .align(1, Align::Left)
+    .align(2, Align::Left)
+    .title("Table II (hetero): batched serving under mixed prompt lengths");
+    for (mix, r) in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.lora_label.clone(),
+            mix.clone(),
+            r.output_tokens.to_string(),
+            r.batch.to_string(),
+            r.n_chips.to_string(),
+            fnum(r.throughput_tps, 2),
+            fnum(r.avg_power_w, 2),
+            fnum(r.efficiency_tpj, 2),
+        ]);
+    }
+    t.render()
+}
+
 /// Table I — system parameters (prints the active configuration).
 pub fn table1(cfg: &ExperimentConfig) -> String {
     let s = &cfg.system;
@@ -294,6 +359,32 @@ mod tests {
         assert!(c2.throughput_tps > serial.throughput_tps);
         let t2 = table2(&[serial, c2]);
         assert_eq!(t2.matches("Llama 3.2 1B").count(), 2);
+    }
+
+    #[test]
+    fn hetero_table_renders_mixes() {
+        let grid = paper_grid();
+        let cfg = &grid[0]; // 1B, ctx 1024 (cheap)
+        let mixes = hetero_mixes(512);
+        assert_eq!(mixes.len(), 3);
+        assert_eq!(mixes[0], vec![512; 4], "first row is the uniform reference");
+        let rows: Vec<(String, SimReport)> = mixes
+            .iter()
+            .map(|m| (hetero_mix_label(m), run_point_hetero(cfg, m, 1)))
+            .collect();
+        assert_eq!(rows[1].0, "128+256+256+512");
+        let t = table2_hetero(&rows);
+        assert!(t.contains("Prompts"), "hetero table carries the mix column");
+        assert!(t.contains("128+256+256+512"));
+        assert_eq!(t.matches("Llama 3.2 1B").count(), 3);
+        // The uniform reference row bit-matches the plain batched path.
+        let mut hetero_cfg = cfg.clone();
+        hetero_cfg.input_tokens = 512;
+        hetero_cfg.output_tokens = 512;
+        let href = run_point_hetero(&hetero_cfg, &[512; 4], 1);
+        let uref = run_point_sharded(&hetero_cfg, 4, 1);
+        assert_eq!(href.throughput_tps.to_bits(), uref.throughput_tps.to_bits());
+        assert_eq!(href.total_cycles, uref.total_cycles);
     }
 
     #[test]

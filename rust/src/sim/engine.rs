@@ -5,7 +5,7 @@
 //! the Table II/III quantities. See DESIGN.md for the timing-model
 //! derivation and EXPERIMENTS.md for calibration.
 
-use super::cost::{pipelined_step_cycles_uniform, program_cost, PhaseCost};
+use super::cost::{pipelined_step_cycles, pipelined_step_cycles_uniform, program_cost, PhaseCost};
 use super::layer_model::LayerCostModel;
 use crate::config::ExperimentConfig;
 use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
@@ -544,6 +544,282 @@ impl Simulator {
             itl_last_ms: itl_last as f64 * cyc * 1e3,
         }
     }
+
+    /// Heterogeneous batched serving point: `prompts.len()` simultaneous
+    /// requests with *mixed* prompt lengths (Table II's batched variant
+    /// under a realistic length mix). Each slot prefills layer-
+    /// sequentially in turn over its own 128-token block decomposition,
+    /// then all decode in lockstep through the layer pipeline with the
+    /// *general* per-slot pipeline bound (`pipelined_step_cycles`: slot
+    /// `i` decodes at its own kv `prompts[i] + step`, so the per-step
+    /// makespan is `sum_i c_i + (L-1) * max_i c_i + (b-1) * overhead`) —
+    /// the same bound the serving coordinator charges heterogeneous
+    /// decode batches.
+    ///
+    /// With equal prompts every term collapses to the uniform engine in
+    /// exact integer arithmetic — `run_hetero_batched(&[ctx; b], nc)`
+    /// bit-matches `run_sharded_batched(b, nc)` on every report field
+    /// (gated below and in the mirror) — because the slot sums factor
+    /// (`sum = b*c`, `max = c`) and every energy post scales the same
+    /// u64 counters before the single f64 conversion.
+    ///
+    /// The decode sweep is closed-form per slot (`sum_cycles_window`),
+    /// with the max term taken from the largest-prompt slot whenever the
+    /// layer model is monotone in kv (`cycles_nondecreasing`, true for
+    /// every paper model); otherwise it falls back to an exact per-step
+    /// scan. Both produce identical u64 totals — no float rounding is
+    /// involved until the final report conversions.
+    pub fn run_hetero_batched(&self, prompts: &[usize], n_chips: usize) -> SimReport {
+        assert!(!prompts.is_empty(), "hetero batch needs at least one slot");
+        assert!(
+            prompts.iter().all(|&p| p >= 1),
+            "hetero prompts must be >= 1 token"
+        );
+        let b = prompts.len();
+        let bu = b as u64;
+        let nc = n_chips.max(1);
+        let cfg = &self.cfg;
+        let m = &cfg.model;
+        let mesh = ChipMesh::new(&cfg.shard, nc);
+        let mut ledger = EnergyLedger::new(&cfg.system, &cfg.calib);
+        let mut trace = Trace::new(self.trace_enabled);
+
+        let lm0 = &self.mapping.layers[0];
+        let n_groups = m.layers;
+        let cts_per_group = self.mapping.cts_per_layer();
+        let total_cts = self.mapping.total_cts * nc;
+
+        // ---- reprogramming: identical to the uniform engine ----------
+        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let srpg = SrpgSchedule {
+            n_groups,
+            cts_per_group,
+            reprog_cycles: reprog.cycles,
+            enabled: cfg.srpg,
+        };
+
+        // ---- prefill: per-slot block decomposition, slots in turn ----
+        let mut prefill_events = PhaseCost::default();
+        let mut prefill_layer_cycles = Vec::with_capacity(b);
+        let mut prefill_compute_sum = 0u64;
+        let mut prefill_ar_link_bytes = 0u64;
+        for &p in prompts {
+            let block = 128usize.min(p);
+            let n_blocks = p.div_ceil(block);
+            let mut layer_cycles = 0u64;
+            for blk in 0..n_blocks {
+                let this_block = if blk + 1 == n_blocks { p - blk * block } else { block };
+                let kv = blk * block + this_block / 2;
+                let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
+                let c = program_cost(&prog, &cfg.system, &cfg.calib);
+                let compute = if nc == 1 {
+                    c.cycles
+                } else {
+                    program_cost(&shard_program_slice(&prog, 0, nc), &cfg.system, &cfg.calib)
+                        .cycles
+                };
+                layer_cycles += compute + mesh.layer_all_reduce_cycles(m.hidden, this_block);
+                prefill_compute_sum += compute;
+                prefill_ar_link_bytes += mesh.layer_all_reduce_link_bytes(m.hidden, this_block);
+                prefill_events.add_events(&c);
+            }
+            prefill_layer_cycles.push(layer_cycles);
+        }
+        // SRPG overlaps only the first prompt's layer wave (slot 0 is the
+        // first admitted), exactly as the uniform path overlaps only the
+        // first of the b back-to-back prefills.
+        let layer0 = prefill_layer_cycles[0];
+        let mut group_start = vec![0u64; n_groups];
+        for (l, gs) in group_start.iter_mut().enumerate() {
+            *gs = l as u64 * layer0;
+        }
+        let prefill_makespan =
+            prefill_layer_cycles.iter().sum::<u64>() * n_groups as u64;
+        let plan = srpg.plan(&group_start);
+        for e in &plan.events {
+            trace.push(*e);
+        }
+        if self.trace_enabled {
+            for (l, gs) in group_start.iter().enumerate() {
+                trace.push(TraceEvent {
+                    ct_group: l,
+                    kind: TraceKind::Prefill,
+                    start: plan.ttft_penalty + gs,
+                    end: plan.ttft_penalty + gs + layer0,
+                });
+            }
+        }
+        let ttft_cycles = plan.ttft_penalty + prefill_makespan + plan.pipeline_stalls;
+
+        // Prefill energy: the per-slot event counters are already summed
+        // over the b slots, so one post scaled by the layer repeat.
+        prefill_events.events_scaled(n_groups as u64).post(&mut ledger);
+        ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
+        if nc > 1 {
+            ledger.post_network(prefill_ar_link_bytes * n_groups as u64 * 4, 1);
+        }
+        let active_ct_cycles =
+            prefill_compute_sum as f64 * (n_groups * cts_per_group * nc) as f64;
+        let total_ct_cycles = ttft_cycles as f64 * total_cts as f64;
+        let reprog_cycles_total = plan.reprog_ct_cycles * nc as f64;
+        let idle_ct_cycles =
+            (total_ct_cycles - active_ct_cycles - reprog_cycles_total).max(0.0);
+        ledger.post_ct_state(CtPowerState::Active, active_ct_cycles, 1);
+        ledger.post_ct_state(srpg.idle_state(), idle_ct_cycles, 1);
+        ledger.post_ct_state(CtPowerState::Reprogramming, reprog_cycles_total, 1);
+
+        // ---- decode: per-slot kv trajectories -------------------------
+        let layer_model = LayerCostModel::build_cached(cfg, lm0);
+        let shard_model = if nc == 1 {
+            Arc::clone(&layer_model)
+        } else {
+            LayerCostModel::build_cached_for_chips(cfg, lm0, nc)
+        };
+        let ar_decode_cycles = mesh.layer_all_reduce_cycles(m.hidden, 1);
+        let ar_decode_link_bytes = mesh.layer_all_reduce_link_bytes(m.hidden, 1);
+        let lm_head = if cfg.include_lm_head {
+            let head = super::lm_head::LmHead::build(cfg);
+            let cost = head.decode_cost(cfg);
+            Some((head, cost))
+        } else {
+            None
+        };
+        let out = cfg.output_tokens;
+        let outu = out as u64;
+        let ovh = cfg.serving.batch_overhead_cycles;
+        let head_cycles_bu = lm_head.as_ref().map(|(_, c)| c.cycles * bu).unwrap_or(0);
+        let step_model = if nc == 1 { &layer_model } else { &shard_model };
+        let step_costs = |s: usize| -> Vec<u64> {
+            prompts
+                .iter()
+                .map(|&p| step_model.eval_cycles(p + s) + ar_decode_cycles)
+                .collect()
+        };
+        let step_total = |s: usize| -> u64 {
+            pipelined_step_cycles(&step_costs(s), n_groups, ovh) + head_cycles_bu
+        };
+
+        // Per-slot closed-form window sums: Σ_i SC_i and the unsharded
+        // event counters (the chips' shares sum to them exactly).
+        let mut decode_events = PhaseCost::default();
+        let mut decode_compute_sum = 0u64;
+        for &p in prompts {
+            let e = layer_model.sum_window(p, out);
+            decode_compute_sum += if nc == 1 {
+                e.cycles
+            } else {
+                shard_model.sum_cycles_window(p, out)
+            };
+            decode_events.add_events(&e);
+        }
+        // Σ_steps of the per-step pipeline bound:
+        //   Σ_i (SC_i + out*ar) + (L-1)*(SC_max + out*ar)
+        //   + out*((b-1)*ovh + head*b)
+        // where the max term is the largest-prompt slot's window under a
+        // monotone layer model; otherwise scan the steps exactly.
+        let decode_cycles_total = if out == 0 {
+            0
+        } else if step_model.cycles_nondecreasing() {
+            let p_max = *prompts.iter().max().expect("non-empty batch");
+            let sc_max = if nc == 1 {
+                layer_model.sum_cycles_window(p_max, out)
+            } else {
+                shard_model.sum_cycles_window(p_max, out)
+            };
+            decode_compute_sum
+                + outu * bu * ar_decode_cycles
+                + (n_groups as u64 - 1) * (sc_max + outu * ar_decode_cycles)
+                + outu * ((bu - 1) * ovh + head_cycles_bu)
+        } else {
+            (0..out).map(&step_total).sum()
+        };
+        let (itl_first, itl_last) = if out == 0 {
+            (0, 0)
+        } else {
+            (step_total(0), step_total(out - 1))
+        };
+        if self.trace_enabled && out > 0 {
+            let mut cum = 0u64;
+            for s in 0..out.min(4) {
+                let costs = step_costs(s);
+                let tok = pipelined_step_cycles(&costs, n_groups, ovh) + head_cycles_bu;
+                cum += tok;
+                let span = costs.iter().copied().max().unwrap_or(0);
+                push_decode_trace(&mut trace, ttft_cycles + cum - tok, span, n_groups);
+            }
+        }
+
+        // ---- decode energy: same scaled single posts -----------------
+        if out > 0 {
+            decode_events.events_scaled(n_groups as u64).post(&mut ledger);
+            if nc > 1 {
+                ledger.post_network(
+                    ar_decode_link_bytes * (n_groups * b * out) as u64 * 4,
+                    1,
+                );
+            }
+            if let Some((_, head_cost)) = &lm_head {
+                head_cost.events_scaled((b * out) as u64).post(&mut ledger);
+            }
+            if b == 1 && nc == 1 {
+                let active = decode_cycles_total as f64 * cts_per_group as f64;
+                let idle = decode_cycles_total as f64
+                    * ((n_groups - 1) * cts_per_group) as f64;
+                ledger.post_ct_state(CtPowerState::Active, active, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle, 1);
+            } else {
+                let active_int =
+                    (n_groups * nc) as u64 * decode_compute_sum * cts_per_group as u64;
+                let total_int =
+                    decode_cycles_total * (n_groups * cts_per_group * nc) as u64;
+                let idle_int = total_int.saturating_sub(active_int);
+                ledger.post_ct_state(CtPowerState::Active, active_int as f64, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle_int as f64, 1);
+            }
+        }
+
+        // ---- report ---------------------------------------------------
+        let cyc = cfg.system.cycle_s();
+        let total_cycles = ttft_cycles + decode_cycles_total;
+        ledger.span_cycles = total_cycles;
+        let ttft_s = ttft_cycles as f64 * cyc;
+        let itl_ms = if out > 0 {
+            decode_cycles_total as f64 / out as f64 * cyc * 1e3
+        } else {
+            0.0
+        };
+        let total_s = ttft_s + decode_cycles_total as f64 * cyc;
+        let tokens = (prompts.iter().sum::<usize>() + b * out) as f64;
+        let throughput = tokens / total_s;
+        let avg_power = ledger.average_power_w();
+        let energy_j = ledger.total_j();
+
+        SimReport {
+            model: m.id.to_string(),
+            lora_label: crate::config::LoraTarget::label(&cfg.lora.targets),
+            // The report carries one prompt length; for a mixed batch,
+            // the widest slot (the makespan-setting one).
+            input_tokens: *prompts.iter().max().expect("non-empty batch"),
+            output_tokens: out,
+            batch: b,
+            n_chips: nc,
+            srpg: cfg.srpg,
+            ttft_s,
+            itl_ms,
+            throughput_tps: throughput,
+            avg_power_w: avg_power,
+            efficiency_tpj: throughput / avg_power.max(1e-12),
+            total_cts,
+            cts_per_layer: cts_per_group,
+            total_cycles,
+            total_energy_j: energy_j,
+            energy: ledger.breakdown,
+            reprog_stall_cycles: plan.pipeline_stalls,
+            trace,
+            itl_first_ms: itl_first as f64 * cyc * 1e3,
+            itl_last_ms: itl_last as f64 * cyc * 1e3,
+        }
+    }
 }
 
 /// Push one decode token's per-group trace spans (first few tokens only;
@@ -782,6 +1058,56 @@ mod tests {
         for (a, b) in fast.trace.events.iter().zip(&slow.trace.events) {
             assert_eq!((a.ct_group, a.start, a.end), (b.ct_group, b.start, b.end));
         }
+    }
+
+    #[test]
+    fn hetero_collapses_to_uniform_on_equal_prompts() {
+        // The satellite's acceptance gate: with every slot at the same
+        // prompt the general per-slot pipeline bound and all the energy
+        // posts factor back to the uniform engine in exact integer
+        // arithmetic, so every report field matches to the bit.
+        for (batch, chips) in [(1usize, 1usize), (3, 1), (2, 2), (4, 4)] {
+            let cfg = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                512,
+            );
+            let sim = Simulator::new(&cfg);
+            let uniform = sim.run_sharded_batched(batch, chips);
+            let hetero = sim.run_hetero_batched(&vec![512; batch], chips);
+            assert_eq!(hetero.batch, batch);
+            assert_eq!(hetero.input_tokens, 512);
+            assert_reports_bit_identical(&uniform, &hetero, &format!("b{batch}/c{chips}"));
+        }
+    }
+
+    #[test]
+    fn hetero_mixed_prompts_sit_between_uniform_bounds() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            1024,
+        );
+        let sim = Simulator::new(&cfg);
+        let mixed = sim.run_hetero_batched(&[256, 512, 1024], 1);
+        let small = sim.run_hetero_batched(&[256; 3], 1);
+        let big = sim.run_hetero_batched(&[1024; 3], 1);
+        assert_eq!(mixed.batch, 3);
+        assert_eq!(mixed.input_tokens, 1024, "report carries the widest slot");
+        assert!(small.total_cycles < mixed.total_cycles);
+        assert!(mixed.total_cycles < big.total_cycles);
+        assert!(small.ttft_s < mixed.ttft_s && mixed.ttft_s < big.ttft_s);
+        // The lockstep makespan is set by the widest slot, so the mixed
+        // batch's decode is nearly as slow as the all-wide batch...
+        assert!(mixed.itl_ms > small.itl_ms);
+        // ...and the per-step bound charges every slot's own compute.
+        assert!(mixed.itl_ms < big.itl_ms);
+        assert!(small.total_energy_j < mixed.total_energy_j);
+        assert!(mixed.total_energy_j < big.total_energy_j);
+        // Throughput identity over the true per-slot token counts.
+        let tokens = (256 + 512 + 1024 + 3 * 1024) as f64;
+        let expect = tokens / (mixed.ttft_s + 1024.0 * mixed.itl_ms * 1e-3);
+        assert!((mixed.throughput_tps - expect).abs() / expect < 1e-9);
     }
 
     #[test]

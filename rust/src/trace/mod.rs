@@ -5,6 +5,14 @@
 //! diagram: one row per CT group, time left-to-right, showing the
 //! reprogramming pipeline overlapping the prefill wave and the
 //! layer-sequential decode sweep.
+//!
+//! The [`workload`] submodule is the other kind of trace: fleet-scale
+//! synthetic *request* traces (seeded Poisson / bursty / diurnal
+//! arrivals) feeding the serving coordinator via `serve --trace`.
+
+pub mod workload;
+
+pub use workload::{load_checksum, WorkloadKind, WorkloadSpec};
 
 /// Activity classes shown in the timing diagram.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -883,6 +883,206 @@ fn calendar_bitmatches_scan_loop_on_fuzz_traces() {
     }
 }
 
+/// One fuzz run pinned to a decode mode (continuous paged-KV vs the
+/// retained lockstep reservation), with an optional pool-capacity
+/// override and fast-forward toggle.
+fn fuzz_run_cont(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+    continuous: bool,
+    pool_pages: Option<usize>,
+    fast_forward: bool,
+) -> (Vec<RequestResult>, Vec<TokenEvent>, ServerStats) {
+    let mut s = ServerBuilder::from_experiment(exp_1b(256))
+        .max_batch(batch)
+        .policy_kind(policy)
+        .prefill_chunk(chunk)
+        .continuous(continuous)
+        .kv_pool_pages(pool_pages)
+        .decode_fast_forward(fast_forward)
+        .build()
+        .expect("server");
+    for a in 0..FUZZ_ADAPTERS {
+        s.register_adapter(AdapterId(a));
+    }
+    for r in fuzz_trace(seed) {
+        s.submit(r).unwrap();
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let results = s.drain(Some(&tx)).unwrap();
+    drop(tx);
+    let events: Vec<TokenEvent> = rx.iter().collect();
+    let stats = s.stats();
+    (results, events, stats)
+}
+
+#[test]
+fn continuous_bitmatches_lockstep_when_capacity_is_ample() {
+    // The tentpole's acceptance gate: with pool capacity >= total demand
+    // (the derived 1B pool holds 128 pages; the fuzz traces need < 40)
+    // the admission gate never blocks and no preemption fires, so paged
+    // bookkeeping has zero timing effect — continuous mode must match
+    // retained lockstep mode on every completion field, token-stream
+    // bit, and stats percentile.
+    for seed in [1u64, 7, 42] {
+        for &(batch, chunk) in &[(1usize, None), (4, None), (4, Some(128))] {
+            for policy in [
+                PolicyKind::Fcfs,
+                PolicyKind::AdapterAffinity,
+                PolicyKind::ShortestJobFirst,
+            ] {
+                let label = format!(
+                    "seed {seed} / {} / batch {batch} / chunk {chunk:?}",
+                    policy.name()
+                );
+                let (rc, ec, sc) =
+                    fuzz_run_cont(seed, policy, batch, chunk, true, None, true);
+                let (rl, el, sl) =
+                    fuzz_run_cont(seed, policy, batch, chunk, false, None, true);
+
+                assert_eq!(rc.len(), rl.len(), "{label}: completions");
+                for (a, b) in rc.iter().zip(&rl) {
+                    assert_eq!(a.request, b.request, "{label}: order");
+                    assert_eq!(a.adapter.0, b.adapter.0, "{label}");
+                    assert_eq!(a.swap, b.swap, "{label}: swap of {}", a.request);
+                    assert_eq!(a.tokens_out, b.tokens_out, "{label}");
+                    assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "{label}");
+                    assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+                    assert_eq!(a.queue_s.to_bits(), b.queue_s.to_bits(), "{label}");
+                    assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                    assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+                    assert_eq!(a.stall_s.to_bits(), b.stall_s.to_bits(), "{label}");
+                    assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                }
+                assert_eq!(ec.len(), el.len(), "{label}: token events");
+                for (a, b) in ec.iter().zip(&el) {
+                    assert_eq!(a.request, b.request, "{label}: token order");
+                    assert_eq!(a.index, b.index, "{label}: token index");
+                    assert_eq!(a.at_s.to_bits(), b.at_s.to_bits(), "{label}: token time");
+                }
+                assert_eq!(sc.sim_time_s.to_bits(), sl.sim_time_s.to_bits(), "{label}");
+                assert_eq!(sc.total_tokens, sl.total_tokens, "{label}");
+                assert_eq!(sc.adapter_swaps, sl.adapter_swaps, "{label}");
+                assert_eq!(sc.adapter_hits, sl.adapter_hits, "{label}");
+                for (x, y, what) in [
+                    (sc.ttft, sl.ttft, "ttft"),
+                    (sc.itl, sl.itl, "itl"),
+                    (sc.queue, sl.queue, "queue"),
+                ] {
+                    assert_eq!(x.mean.to_bits(), y.mean.to_bits(), "{label}: {what}");
+                    assert_eq!(x.p50.to_bits(), y.p50.to_bits(), "{label}: {what}");
+                    assert_eq!(x.p95.to_bits(), y.p95.to_bits(), "{label}: {what}");
+                    assert_eq!(x.p99.to_bits(), y.p99.to_bits(), "{label}: {what}");
+                }
+                // Continuous mode actually paged (and returned) the KV.
+                assert!(sc.kv_page_allocs > 0, "{label}: pages moved");
+                assert_eq!(sc.kv_page_allocs, sc.kv_page_frees, "{label}: drained");
+                assert_eq!(sc.kv_used_pages, 0, "{label}: pool empty at end");
+                assert_eq!(sc.preemptions, 0, "{label}: ample capacity");
+                assert_eq!(sl.kv_page_allocs, 0, "{label}: lockstep never pages");
+            }
+        }
+    }
+}
+
+#[test]
+fn continuous_preemption_replays_bitwise_across_ff_modes() {
+    // Engineered over-capacity backlog: a 5-page pool with four slots
+    // that each grow to 3 pages forces eviction. The victim order is
+    // deterministic (youngest admission first, restart-from-prefill),
+    // so two replays are bit-identical — and the fast-forward path must
+    // agree with the stepwise path exactly.
+    let run = |ff: bool| {
+        let mut s = ServerBuilder::from_experiment(exp_1b(128))
+            .max_batch(4)
+            .continuous(true)
+            .kv_pool_pages(Some(5))
+            .decode_fast_forward(ff)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(0));
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(0), 128, 140).at(i as f64 * 0.001)).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        (results, s.stats())
+    };
+    let (r1, s1) = run(true);
+    let (r2, s2) = run(true);
+    let (r3, s3) = run(false);
+    assert_eq!(r1.len(), 8, "conservation under preemption");
+    assert!(s1.preemptions > 0, "the backlog must preempt");
+    assert!(s1.preempted_tokens > 0);
+    assert_eq!(s1.kv_page_allocs, s1.kv_page_frees, "page conservation");
+    assert_eq!(s1.kv_used_pages, 0);
+    assert_eq!(s1.kv_peak_pages, 5, "pressure fills the pool");
+    for (other_r, other_s, label) in [(&r2, &s2, "replay"), (&r3, &s3, "ff-off")] {
+        assert_eq!(r1.len(), other_r.len(), "{label}");
+        for (a, b) in r1.iter().zip(other_r.iter()) {
+            assert_eq!(a.request, b.request, "{label}: completion order");
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+        }
+        assert_eq!(s1.preemptions, other_s.preemptions, "{label}");
+        assert_eq!(s1.preempted_tokens, other_s.preempted_tokens, "{label}");
+        assert_eq!(s1.kv_page_allocs, other_s.kv_page_allocs, "{label}");
+        assert_eq!(s1.kv_page_frees, other_s.kv_page_frees, "{label}");
+        assert_eq!(s1.kv_peak_pages, other_s.kv_peak_pages, "{label}");
+        assert_eq!(s1.sim_time_s.to_bits(), other_s.sim_time_s.to_bits(), "{label}");
+    }
+}
+
+#[test]
+fn continuous_generated_traces_hold_conservation() {
+    // Workload-generator traces through continuous mode: every submitted
+    // request completes exactly once, pages conserve, and the calendar
+    // vs scan loops agree on the clock.
+    use primal::trace::{WorkloadKind, WorkloadSpec};
+    for kind in [WorkloadKind::Poisson, WorkloadKind::Bursty, WorkloadKind::Diurnal] {
+        let run = |calendar: bool| {
+            let mut spec = WorkloadSpec::new(kind, 11, 48);
+            spec.adapters = FUZZ_ADAPTERS as usize;
+            spec.max_input = 256;
+            spec.rate_per_s = 400.0;
+            let mut s = ServerBuilder::from_experiment(exp_1b(256))
+                .max_batch(4)
+                .policy_kind(PolicyKind::AdapterAffinity)
+                .continuous(true)
+                .calendar(calendar)
+                .build()
+                .unwrap();
+            for a in 0..FUZZ_ADAPTERS {
+                s.register_adapter(AdapterId(a));
+            }
+            for r in spec.generate() {
+                s.submit(r).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            (results, s.stats())
+        };
+        let (rc, sc) = run(true);
+        let (rs, ss) = run(false);
+        let label = kind.name();
+        assert_eq!(rc.len(), 48, "{label}: conservation");
+        let mut ids: Vec<u64> = rc.iter().map(|r| r.request).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..48u64).collect::<Vec<_>>(), "{label}: ids");
+        assert_eq!(sc.kv_page_allocs, sc.kv_page_frees, "{label}: page conservation");
+        assert_eq!(sc.kv_used_pages, 0, "{label}");
+        assert_eq!(rc.len(), rs.len(), "{label}: calendar vs scan");
+        for (a, b) in rc.iter().zip(&rs) {
+            assert_eq!(a.request, b.request, "{label}");
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+        }
+        assert_eq!(sc.sim_time_s.to_bits(), ss.sim_time_s.to_bits(), "{label}");
+        assert_eq!(sc.kv_page_allocs, ss.kv_page_allocs, "{label}");
+    }
+}
+
 #[test]
 fn token_stream_covers_batched_requests() {
     let mut s = server_1b(256, 3, PolicyKind::Fcfs, 1);
