@@ -20,6 +20,10 @@ integer arithmetic, same order of operations):
   * coordinator::Server event loop — monolithic AND chunked prefill,
     batched decode, Fcfs / AdapterAffinity(/max_run_len) / SJF policies,
     sharded decode/prefill costs
+  * coordinator::PrefixCache — cross-request KV prefix reuse: the
+    preamble trie over pool pages, hit/miss block ledger (u64 prefill
+    FLOP conservation), RRAM-passes-saved credit, release-on-retire/
+    preempt refcounting
 
 Running it regenerates the instruction-count proxy values committed in
 rust/benches/baselines/sim_proxy.txt and re-checks the serving gates the
@@ -1084,6 +1088,7 @@ class Req:
     inp: int
     out: int
     arrival: float = 0.0
+    preamble: object = None
 
 
 @dataclass
@@ -1097,6 +1102,7 @@ class Slot:
     stall_s: float = 0.0
     pending_stall_s: float = 0.0
     admit_seq: int = 0
+    shared_tokens: int = 0
 
 
 @dataclass
@@ -1109,6 +1115,8 @@ class Job:
     done: int = 0
     external_s: float = 0.0
     admit_seq: int = 0
+    cum_tokens: list = field(default_factory=list)
+    shared_tokens: int = 0
 
     def advance(self):
         end = self.start_s + self.external_s + (self.reprog_s + self.cum[self.done])
@@ -1118,12 +1126,15 @@ class Job:
     def is_done(self):
         return self.done >= len(self.cum)
 
+    def tokens_done(self):
+        return 0 if self.done == 0 else self.cum_tokens[self.done - 1]
+
     def ttft(self):
         return (self.reprog_s + self.cum[-1]) + self.external_s
 
     def to_slot(self):
         return Slot(self.req, 0, self.start_s, self.swap, self.ttft(),
-                    admit_seq=self.admit_seq)
+                    admit_seq=self.admit_seq, shared_tokens=self.shared_tokens)
 
 
 class KvPoolMirror:
@@ -1147,6 +1158,11 @@ class KvPoolMirror:
         return self.capacity - self.used
 
     def alloc(self, owner, n):
+        # Zero-page allocations are true no-ops: registering the owner
+        # anyway would leave a phantom holder in the held map (the bug the
+        # PR 8 sweep fixed — fully prefix-shared prompts need 0 pages).
+        if n == 0:
+            return
         assert n <= self.free_pages(), "mirror pool overflow"
         self.held[owner] = self.held.get(owner, 0) + n
         self.used += n
@@ -1171,6 +1187,87 @@ def kv_pool_capacity_tokens(lm, n_chips=1):
     """mapping::ShardPlan::kv_capacity_tokens at the default scratchpad."""
     kv_tok_chip = max(-(-lm.kv_token_bytes // max(n_chips, 1)), 1)
     return (SYS["scratchpad_bytes"] // kv_tok_chip) * lm.kv_ring_routers
+
+
+NODE_OWNER_BASE = 1 << 63
+
+
+class PrefixCacheMirror:
+    """Mirror of coordinator::PrefixCache: the preamble trie whose nodes
+    each own one ref-counted pool page. Same intern/release semantics
+    (hits are the leading interned run; zero-ref nodes free leaf->root),
+    same lifetime counters."""
+
+    def __init__(self):
+        self.nodes = {}          # id -> [parent, key, refs, {key: child_id}]
+        self.roots = {}
+        self.next_node = 0
+        self.interns = 0
+        self.releases = 0
+        self.hit_blocks = 0
+        self.miss_blocks = 0
+        self.nodes_created = 0
+        self.nodes_freed = 0
+
+    def probe(self, chain):
+        hits = 0
+        at = None
+        for key in chain:
+            nxt = self.roots.get(key) if at is None \
+                else self.nodes[at][3].get(key)
+            if nxt is None:
+                break
+            hits += 1
+            at = nxt
+        return hits, len(chain) - hits
+
+    def intern(self, chain, pool):
+        hits, misses = self.probe(chain)
+        assert misses <= pool.free_pages(), "prefix intern over capacity"
+        at = None
+        for key in chain:
+            existing = self.roots.get(key) if at is None \
+                else self.nodes[at][3].get(key)
+            if existing is not None:
+                self.nodes[existing][2] += 1
+                at = existing
+            else:
+                nid = self.next_node
+                self.next_node += 1
+                pool.alloc(NODE_OWNER_BASE | nid, 1)
+                self.nodes[nid] = [at, key, 1, {}]
+                if at is None:
+                    self.roots[key] = nid
+                else:
+                    self.nodes[at][3][key] = nid
+                self.nodes_created += 1
+                at = nid
+        self.interns += 1
+        self.hit_blocks += hits
+        self.miss_blocks += misses
+        return hits
+
+    def release(self, chain, pool):
+        ids = []
+        at = None
+        for key in chain:
+            at = self.roots[key] if at is None else self.nodes[at][3][key]
+            ids.append(at)
+        for nid in reversed(ids):
+            node = self.nodes[nid]
+            node[2] -= 1
+            if node[2] == 0:
+                del self.nodes[nid]
+                if node[0] is None:
+                    del self.roots[node[1]]
+                else:
+                    del self.nodes[node[0]][3][node[1]]
+                pool.release(NODE_OWNER_BASE | nid)
+                self.nodes_freed += 1
+        self.releases += 1
+
+    def live_nodes(self):
+        return len(self.nodes)
 
 
 class Policy:
@@ -1270,14 +1367,22 @@ class Server:
         block = min(128, max(ctx, 1))
         n_blocks = -(-ctx // block)
         self.blocks = []
+        # u64 twins of the prefill template: the prefix cache's FLOP
+        # conservation ledger sums these exactly, and the per-block RRAM
+        # passes are the energy credit of a skipped (hit) block.
+        self.block_cycles = []
+        self.block_rram = []
         for bi in range(n_blocks):
             this_block = ctx - bi * block if bi + 1 == n_blocks else block
             kvv = max(bi * block + this_block // 2, 1)
             prog = prefill_program(model, targets, self.lm, this_block, kvv)
-            cycles = (program_cost(prog).cycles if nc == 1 else
-                      program_cost(shard_program_slice(prog, 0, nc)).cycles) \
+            cost = (program_cost(prog) if nc == 1 else
+                    program_cost(shard_program_slice(prog, 0, nc)))
+            cycles = cost.cycles \
                 + layer_all_reduce_cycles(nc, self.m["hidden"], this_block)
             self.blocks.append((this_block, float(cycles) * CYCLE_S))
+            self.block_cycles.append(cycles)
+            self.block_rram.append(cost.rram_passes)
         self.lcm = LayerCostModel(model, targets, self.lm, nc)
         self.ar_dec = layer_all_reduce_cycles(nc, self.m["hidden"], 1)
         self.fast_forward = fast_forward
@@ -1319,6 +1424,60 @@ class Server:
         self.admit_seq = 0
         self.preemptions = 0
         self.preempted_tokens = 0
+        # KV prefix cache (continuous mode only, like Rust: the cache
+        # lives on the pool) + the prefill conservation ledger (u64).
+        self.prefix = PrefixCacheMirror() if self.pool is not None else None
+        self.preambles = {}
+        self.prefix_admissions = 0
+        self.prefix_cycles_saved = 0
+        self.prefix_cycles_charged = 0
+        self.prefix_rram_saved = 0
+
+    def register_preamble(self, pid, blocks):
+        assert blocks, "preamble has no blocks"
+        if self.pool is not None:
+            assert len(blocks) * self.pool.page_tokens <= self.ctx, \
+                "preamble spans more than the serving template"
+        self.preambles[pid] = list(blocks)
+
+    # ---- cross-request KV prefix reuse (mirrors server.rs) ---------------
+
+    def prefix_chain(self, req):
+        if self.pool is None or self.prefix is None or req.preamble is None:
+            return None
+        chain = self.preambles.get(req.preamble)
+        if chain is None or req.inp != self.ctx:
+            return None
+        block = self.blocks[0][0] if self.blocks else 0
+        if block != self.pool.page_tokens \
+                or len(chain) * self.pool.page_tokens > req.inp:
+            return None
+        return chain
+
+    def admission_page_need(self, req):
+        chain = self.prefix_chain(req)
+        if chain is not None:
+            _, misses = self.prefix.probe(chain)
+            shared = len(chain) * self.pool.page_tokens
+            return misses + self.pool.pages_for(req.inp - shared)
+        return self.pool.pages_for(req.inp)
+
+    def intern_prefix(self, req):
+        chain = self.prefix_chain(req)
+        if chain is None:
+            return 0, 0
+        hits = self.prefix.intern(chain, self.pool)
+        l = self.n_layers
+        self.prefix_admissions += 1
+        self.prefix_cycles_saved += sum(self.block_cycles[:hits]) * l
+        self.prefix_cycles_charged += sum(self.block_cycles[hits:]) * l
+        self.prefix_rram_saved += sum(self.block_rram[:hits]) * l
+        return hits, len(chain) * self.pool.page_tokens
+
+    def release_prefix(self, req, shared_tokens):
+        if shared_tokens == 0:
+            return
+        self.prefix.release(self.preambles[req.preamble], self.pool)
 
     def set_clock(self, t):
         self.now = t
@@ -1375,36 +1534,48 @@ class Server:
             return self.jobs[0].req.adapter
         return None
 
-    def chunk_schedule(self, inp, chunk):
+    def chunk_schedule(self, inp, chunk, skip_blocks=0):
         nl = float(self.n_layers)
         if inp == self.ctx:
+            blocks = self.blocks[skip_blocks:]
             block_tokens = max(self.blocks[0][0], 1) if self.blocks else 1
             per_chunk = max(-(-chunk // block_tokens), 1)
             cum = []
+            cum_tokens = []
             k = 0
-            while k < len(self.blocks):
-                k1 = min(k + per_chunk, len(self.blocks))
+            while k < len(blocks):
+                k1 = min(k + per_chunk, len(blocks))
                 # plain left-to-right sum: mirrors Rust's iterator Sum order
                 s = 0.0
-                for _t, sec in self.blocks[:k1]:
+                for _t, sec in blocks[:k1]:
                     s += sec
                 cum.append(s * nl)
+                cum_tokens.append(sum(t for t, _sec in blocks[:k1]))
                 k = k1
-            return cum
+            if not cum:
+                # Fully interned prompt: one zero-cost chunk carries the
+                # job (and any swap reprogramming) through the machinery.
+                cum.append(0.0)
+                cum_tokens.append(0)
+            return cum, cum_tokens
+        assert skip_blocks == 0, "off-template prompts never share"
         per_tok = 0.0
         for _t, sec in self.blocks:
             per_tok += sec
         per_tok = per_tok / float(self.ctx)
         n_chunks = max(-(-inp // chunk), 1)
-        return [(per_tok * float(min(j * chunk, inp))) * nl
-                for j in range(1, n_chunks + 1)]
+        cum = [(per_tok * float(min(j * chunk, inp))) * nl
+               for j in range(1, n_chunks + 1)]
+        cum_tokens = [min(j * chunk, inp) for j in range(1, n_chunks + 1)]
+        return cum, cum_tokens
 
-    def monolithic_prefill_s(self, inp):
+    def monolithic_prefill_s(self, inp, hit_blocks=0):
         if inp == self.ctx:
             s = 0.0
-            for _t, sec in self.blocks:
+            for _t, sec in self.blocks[hit_blocks:]:
                 s += sec
         else:
+            assert hit_blocks == 0, "off-template prompts never share"
             tot = 0.0
             for _t, sec in self.blocks:
                 tot += sec
@@ -1412,10 +1583,11 @@ class Server:
         return s * float(self.n_layers)
 
     def admit(self, req):
+        hits, shared = self.intern_prefix(req)
         seq = self.admit_seq
         self.admit_seq += 1
         if self.pool is not None:
-            self.pool.alloc(seq, self.pool.pages_for(req.inp))
+            self.pool.alloc(seq, self.pool.pages_for(req.inp - shared))
         swap = self.resident != req.adapter
         self.resident = req.adapter
         if swap:
@@ -1427,17 +1599,20 @@ class Server:
         if self.prefill_chunk is None:
             start = self.now
             ttft = (self.reprog_s if swap else 0.0)
-            ttft += self.monolithic_prefill_s(req.inp)
+            ttft += self.monolithic_prefill_s(req.inp, hits)
             for s in self.batch:
                 s.stall_s += ttft
                 s.pending_stall_s += ttft
             self.set_clock(self.now + ttft)
-            self.batch.append(Slot(req, 0, start, swap, ttft, admit_seq=seq))
+            self.batch.append(Slot(req, 0, start, swap, ttft, admit_seq=seq,
+                                   shared_tokens=shared))
         else:
-            cum = self.chunk_schedule(req.inp, self.prefill_chunk)
+            cum, cum_tokens = self.chunk_schedule(req.inp, self.prefill_chunk,
+                                                  hits)
             self.jobs.append(Job(req, swap, self.now,
                                  self.reprog_s if swap else 0.0, cum,
-                                 admit_seq=seq))
+                                 admit_seq=seq, cum_tokens=cum_tokens,
+                                 shared_tokens=shared))
         return True
 
     def chunk_step(self):
@@ -1468,7 +1643,10 @@ class Server:
         while True:
             short = 0
             for s in self.batch:
-                need = self.pool.pages_for(s.req.inp + s.generated + 1)
+                # Page demand covers only the PRIVATE kv (shared prefix
+                # pages are held by the cache's trie nodes).
+                need = self.pool.pages_for(
+                    s.req.inp - s.shared_tokens + s.generated + 1)
                 short += max(need - self.pool.held_pages(s.admit_seq), 0)
             if short <= self.pool.free_pages():
                 return preempted and not self.batch
@@ -1493,9 +1671,15 @@ class Server:
         self.waiting.insert(pos, req)
 
     def preempt_job(self, ji):
+        # The restart re-prefills the prompt KV the finished chunks wrote,
+        # so those tokens are charged exactly like a slot's generated
+        # tokens (the historic path silently dropped them and undercounted
+        # preempted_tokens — the PR 8 bugfix).
         job = self.jobs.pop(ji)
         self.pool.release(job.admit_seq)
         self.preemptions += 1
+        self.preempted_tokens += job.tokens_done()
+        self.release_prefix(job.req, job.shared_tokens)
         self.requeue(job.req)
 
     def preempt_slot(self, si):
@@ -1503,6 +1687,7 @@ class Server:
         self.pool.release(s.admit_seq)
         self.preemptions += 1
         self.preempted_tokens += s.generated
+        self.release_prefix(s.req, s.shared_tokens)
         self.requeue(s.req)
 
     def decode_step(self):
@@ -1510,7 +1695,9 @@ class Server:
             return
         if self.pool is not None:
             for s in self.batch:
-                self.pool.grow_to(s.admit_seq, s.req.inp + s.generated + 1)
+                self.pool.grow_to(
+                    s.admit_seq,
+                    s.req.inp - s.shared_tokens + s.generated + 1)
         per = [self.lcm.eval_cycles(s.req.inp + s.generated) + self.ar_dec
                for s in self.batch]
         sc = step_cycles(per, self.n_layers, self.overhead)
@@ -1611,6 +1798,7 @@ class Server:
     def retire(self, s):
         if self.pool is not None:
             self.pool.release(s.admit_seq)
+        self.release_prefix(s.req, s.shared_tokens)
         decode_s = float(s.decode_cycles) * CYCLE_S
         itl_ms = decode_s / float(s.req.out) * 1e3
         self.per_adapter[s.req.adapter]["served"] += 1
@@ -1634,7 +1822,7 @@ class Server:
                     i = self.policy.peek(self.waiting[:arrived],
                                          self.active_adapter(), self.resident)
                     if i is not None:
-                        blocked = self.pool.pages_for(self.waiting[i].inp) \
+                        blocked = self.admission_page_need(self.waiting[i]) \
                             > self.pool.free_pages()
                 if not blocked:
                     pick = self.policy.pick(self.waiting[:arrived],
@@ -1760,6 +1948,72 @@ def workload_load_checksums(seed, n, adapters, max_input, max_output):
     return a_sum, i_sum, o_sum
 
 
+def workload_prefix_checksums(seed, n, adapters, max_input, max_output,
+                              share=0.5, preambles=4):
+    """WorkloadKind::Prefix load-stream checksums: same 4-draw contract
+    (adapter pick, share coin, Zipf preamble pick, output draw), prompts
+    pinned at max_input. Returns (adapter_sum, input_sum, output_sum,
+    preamble_checksum) where the last mirrors trace::workload::
+    preamble_checksum (sum of preamble id + 1 over shared requests)."""
+    load = Rng(seed ^ LOAD_STREAM_SALT)
+    weights = [1.0 / (k + 1.0) for k in range(adapters)]
+    total_weight = 0.0
+    for w in weights:
+        total_weight += w
+    pre_weights = [1.0 / (k + 1.0) for k in range(max(preambles, 1))]
+    pre_total = 0.0
+    for w in pre_weights:
+        pre_total += w
+    a_sum = i_sum = o_sum = p_sum = 0
+    for _ in range(n):
+        pick = load.f64() * total_weight
+        acc = 0.0
+        adapter = adapters - 1
+        for k, w in enumerate(weights):
+            acc += w
+            if pick < acc:
+                adapter = k
+                break
+        shared = load.f64() < share
+        ppick = load.f64() * pre_total  # drawn even when the coin misses
+        pacc = 0.0
+        p = preambles - 1
+        for k, w in enumerate(pre_weights):
+            pacc += w
+            if ppick < pacc:
+                p = k
+                break
+        out = 4 + load.range(0, max(max_output, 1))
+        a_sum += adapter
+        i_sum += max_input
+        o_sum += out
+        if shared:
+            p_sum += p + 1
+    return a_sum, i_sum, o_sum, p_sum
+
+
+def mix64(x):
+    """splitmix64 finalizer (the preamble-library block content hash)."""
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & MASK64
+    return x ^ (x >> 31)
+
+
+def preamble_library_chains(preambles, max_blocks):
+    """trace::workload::PreambleLibrary::new — chain p keeps
+    1 + p % max_blocks blocks; block d hashes the preamble-index group
+    p >> (max_blocks - 1 - d): coarse at the root, unique at the leaves,
+    prefix-closed by construction."""
+    assert max_blocks >= 1
+    chains = []
+    for p in range(preambles):
+        depth = 1 + p % max_blocks
+        chains.append([mix64(((d << 32) | (p >> (max_blocks - 1 - d)))
+                             & MASK64)
+                       for d in range(depth)])
+    return chains
+
+
 # ---------------------------------------------------------------------------
 # heterogeneous batched engine mirror (total_cycles only)
 # ---------------------------------------------------------------------------
@@ -1839,8 +2093,26 @@ def proxies_13b():
     for i in range(8):
         cont.submit(Req(i, 0, 128, 140, 0.0))
     assert len(cont.drain()) == 8, "continuous backlog lost requests"
+    # Prefix-reuse ledger on the 8-way shared-preamble wave (the bench's
+    # scenario): one cold intern, seven hits, exact u64 cycle/RRAM credit.
+    pfx = Server("1b", ["Q", "V"], 256, max_batch=8, policy="fcfs",
+                 continuous=True, fast_forward=False)
+    pfx.register_preamble(0, [0xBEEF])
+    for i in range(8):
+        pfx.submit(Req(i, 0, 256, 16, 0.0, preamble=0))
+    assert len(pfx.drain()) == 8, "prefix wave lost requests"
+    template = sum(pfx.block_cycles) * pfx.n_layers
+    assert pfx.prefix_cycles_saved + pfx.prefix_cycles_charged \
+        == pfx.prefix_admissions * template, "prefill FLOP conservation"
+    assert pfx.prefix.interns == pfx.prefix.releases \
+        and pfx.prefix.live_nodes() == 0, "prefix refcount conservation"
+    assert pfx.pool.allocs == pfx.pool.frees and pfx.pool.used == 0, \
+        "prefix wave leaked pages"
     hetero13b = hetero_cycles("13b", targets, [512, 1024, 2048], 2048)
     wl_a, wl_i, wl_o = workload_load_checksums(42, 4096, 8, 512, 32)
+    wp_a, _, wp_o, wp_pre = workload_prefix_checksums(42, 4096, 8, 512, 32)
+    assert (wp_a, wp_o) == (wl_a, wl_o), \
+        "prefix mix shifted the adapter/output draw positions"
     return {
         "cont_page_allocs": cont.pool.allocs,
         "cont_page_frees": cont.pool.frees,
@@ -1860,10 +2132,15 @@ def proxies_13b():
         "e2e13b_total_cycles": e2e["cycles"],
         "hetero13b_total_cycles": hetero13b,
         "prefill128_kv1024_cycles": pre.cycles,
+        "prefix_cycles_saved": pfx.prefix_cycles_saved,
+        "prefix_hit_blocks": pfx.prefix.hit_blocks,
+        "prefix_miss_blocks": pfx.prefix.miss_blocks,
+        "prefix_rram_saved": pfx.prefix_rram_saved,
         "reprogram_cycles": rep.cycles,
         "workload_adapter_sum": wl_a,
         "workload_input_sum": wl_i,
         "workload_output_sum": wl_o,
+        "workload_preamble_sum": wp_pre,
     }, lm
 
 
@@ -2081,6 +2358,198 @@ def main():
          rb1 == rb2 and sb1.now == sb2.now
          and sb1.preemptions == sb2.preemptions
          and sb1.preempted_tokens == sb2.preempted_tokens)
+
+    # ---- cross-request KV prefix reuse -----------------------------------
+    print("\n== KV prefix reuse on the paged pool ==")
+
+    def prefix_serv(batch, pool_pages=None, chunk=None, policy="fcfs"):
+        s = Server("1b", ["Q", "V"], 256, max_batch=batch, policy=policy,
+                   prefill_chunk=chunk, continuous=True,
+                   kv_pool_pages=pool_pages, fast_forward=False)
+        s.register_preamble(0, [0xFEEDFACE])
+        return s
+
+    def pfx_conserved(s):
+        template = sum(s.block_cycles) * s.n_layers
+        return (s.prefix_cycles_saved + s.prefix_cycles_charged
+                == s.prefix_admissions * template
+                and s.prefix.interns == s.prefix.releases
+                and s.prefix.nodes_created == s.prefix.nodes_freed
+                and s.prefix.live_nodes() == 0
+                and s.pool.allocs == s.pool.frees and s.pool.used == 0)
+
+    # A registered-but-unused preamble must be bit-invisible: plain
+    # requests on a preamble-bearing server == the PR 7 continuous run.
+    inv_ok = True
+    for batch in (1, 4):
+        runs = []
+        for register in (False, True):
+            s = Server("1b", ["Q", "V"], 256, max_batch=batch,
+                       policy="fcfs", continuous=True, fast_forward=False)
+            if register:
+                s.register_preamble(0, [0xFEEDFACE])
+            for i in range(6):
+                s.submit(Req(i, i % 2, 256, 12, 0.003 * i))
+            res = s.drain()
+            runs.append((res, s.now, s.gaps_ms, s.swaps, s.hits))
+            if register:
+                inv_ok &= s.prefix_admissions == 0 \
+                    and s.prefix.interns == 0 and s.prefix.hit_blocks == 0
+        inv_ok &= runs[0] == runs[1]
+    gate("share-0 traffic bit-matches plain continuous mode", inv_ok)
+
+    # A cold chain charges the full template: one preambled request is
+    # bit-identical to one plain request (hits only change what is
+    # skipped, never how the remainder is costed).
+    cold_runs = []
+    for pre in (None, 0):
+        s = prefix_serv(2)
+        s.submit(Req(0, 0, 256, 8, 0.0, preamble=pre))
+        cold_runs.append((s.drain(), s.now))
+    gate("cold chain bit-matches a plain request", cold_runs[0] == cold_runs[1])
+
+    # Sibling two-block chains: the exact hit/miss/node ledger the Rust
+    # integration test asserts (root shared, leaves private).
+    s2b = Server("1b", ["Q", "V"], 256, max_batch=4, policy="fcfs",
+                 continuous=True, fast_forward=False)
+    s2b.register_preamble(0, [0xAB, 0x01])
+    s2b.register_preamble(1, [0xAB, 0x02])
+    for i in range(4):
+        s2b.submit(Req(i, 0, 256, 16, 0.0, preamble=i % 2))
+    r2b = s2b.drain()
+    gate("sibling chains share the root: 5 hits / 3 misses / 3 nodes",
+         len(r2b) == 4 and s2b.prefix.hit_blocks == 5
+         and s2b.prefix.miss_blocks == 3 and s2b.prefix.nodes_created == 3
+         and pfx_conserved(s2b),
+         f"(hits {s2b.prefix.hit_blocks}, misses {s2b.prefix.miss_blocks}, "
+         f"nodes {s2b.prefix.nodes_created})")
+
+    # Preemption famine over preambled requests: re-interning on
+    # re-admission keeps every ledger conserved.
+    sfam = prefix_serv(4, pool_pages=7)
+    for i in range(8):
+        sfam.submit(Req(i, 0, 256, 96, 0.001 * i, preamble=0))
+    rfam = sfam.drain()
+    gate("preemption famine conserves refcounts/nodes/pages",
+         len(rfam) == 8 and sfam.preemptions > 0
+         and sfam.prefix_admissions > 8 and pfx_conserved(sfam),
+         f"({sfam.preemptions} preemptions, "
+         f"{sfam.prefix_admissions} prefix admissions)")
+
+    # Chunked continuous preemption: a mid-prefill victim's finished
+    # chunks are charged to preempted_tokens (the PR 8 undercount fix).
+    # 16-token pages, pool 33: the resident (256 in) holds 17 pages and
+    # needs its 18th exactly at generated == 16. A newcomer arriving
+    # inside that 16th decode step admits into the last 16 free pages,
+    # finishes exactly one 128-token chunk, and is then the LIFO victim
+    # of the resident's growth — so preempted_tokens must be exactly 128
+    # (the old code charged 0 for mid-prefill victims).
+    def chunk_serv():
+        return Server("1b", ["Q", "V"], 256, max_batch=2, policy="fcfs",
+                      prefill_chunk=64, continuous=True, kv_page_tokens=16,
+                      kv_pool_pages=33, fast_forward=False)
+    marks = []
+    for out in (15, 16):
+        sp = chunk_serv()
+        sp.submit(Req(0, 0, 256, out, 0.0))
+        sp.drain()
+        marks.append(sp.now)
+    sck = chunk_serv()
+    sck.submit(Req(0, 0, 256, 200, 0.0))
+    sck.submit(Req(1, 0, 256, 32, 0.5 * (marks[0] + marks[1])))
+    rck = sck.drain()
+    gate("chunked continuous preemption charges prefill tokens",
+         len(rck) == 2 and sck.preemptions == 1
+         and sck.preempted_tokens == 128
+         and sck.pool.allocs == sck.pool.frees and sck.pool.used == 0,
+         f"({sck.preemptions} preemptions, {sck.preempted_tokens} tokens)")
+
+    # Preamble library: prefix-closed chains (agreement at depth d implies
+    # agreement at every shallower depth) with a genuinely shared root.
+    lib_ok = True
+    chains = preamble_library_chains(4, 2)
+    for a in chains:
+        for b in chains:
+            agree = [i for i in range(min(len(a), len(b))) if a[i] == b[i]]
+            lib_ok &= agree == list(range(len(agree)))
+    lib_ok &= chains[0][0] == chains[1][0] and len(chains) == 4
+    gate("preamble library chains are prefix-closed with shared roots",
+         lib_ok)
+
+    # Conservation fuzz: preambled mixes across policies x batch x chunk.
+    pfz_ok = True
+    lib4 = preamble_library_chains(4, 2)
+    for policy in ("fcfs", "affinity", "sjf"):
+        for batch in (2, 4):
+            for chunk in (None, 128):
+                s = Server("1b", ["Q", "V"], 256, max_batch=batch,
+                           policy=policy, prefill_chunk=chunk,
+                           continuous=True, fast_forward=False)
+                for p, chain in enumerate(lib4):
+                    s.register_preamble(p, chain)
+                for i in range(16):
+                    pre = None if i % 3 == 0 else i % 4
+                    inp = 256 if i % 5 else 192  # off-template never shares
+                    s.submit(Req(i, i % 2, inp, 6 + i % 9, 0.002 * i,
+                                 preamble=pre))
+                res = s.drain()
+                ok = len(res) == 16 and s.prefix_admissions > 0 \
+                    and pfx_conserved(s) \
+                    and s.prefix.hit_blocks + s.prefix.miss_blocks \
+                    >= s.prefix.interns
+                s2x = Server("1b", ["Q", "V"], 256, max_batch=batch,
+                             policy=policy, prefill_chunk=chunk,
+                             continuous=True, fast_forward=False)
+                for p, chain in enumerate(lib4):
+                    s2x.register_preamble(p, chain)
+                for i in range(16):
+                    pre = None if i % 3 == 0 else i % 4
+                    inp = 256 if i % 5 else 192
+                    s2x.submit(Req(i, i % 2, inp, 6 + i % 9, 0.002 * i,
+                                   preamble=pre))
+                ok &= s2x.drain() == res and s2x.now == s.now
+                pfz_ok &= ok
+                if not ok:
+                    print(f"  FAIL prefix fuzz {policy}/b{batch}/chunk{chunk}")
+    gate("prefix fuzz conserves FLOPs/refcounts/pages and replays bitwise",
+         pfz_ok)
+
+    # Tail-latency payoff under near-saturation load (the integration
+    # test's scenario): arrivals paced between the shared and plain
+    # service rates make the plain queue grow without bound while the
+    # fully shared run keeps up — the p95 arrival-to-first-token drop
+    # must exceed the fraction of work removed (superlinear in hit rate).
+    def probe_service(shared):
+        s = prefix_serv(2)
+        for i in range(2):
+            s.submit(Req(i, 0, 256, 8, 0.0, preamble=0 if shared else None))
+        assert len(s.drain()) == 2
+        return s.now / 2.0
+
+    def loaded_run(shared_n, gap):
+        s = prefix_serv(2)
+        for i in range(32):
+            s.submit(Req(i, 0, 256, 8, i * gap,
+                         preamble=0 if i < shared_n else None))
+        res = s.drain()
+        assert len(res) == 32
+        ft = sorted(r["queue"] + r["ttft"] for r in res)
+        return ft[min(max(math.ceil(0.95 * len(ft)), 1), len(ft)) - 1], s
+
+    sp_plain = probe_service(False)
+    sp_shared = probe_service(True)
+    gap = 0.65 * sp_plain + 0.35 * sp_shared
+    p95_plain, _ = loaded_run(0, gap)
+    p95_half, _ = loaded_run(16, gap)
+    p95_full, sfull = loaded_run(32, gap)
+    drop_full = (p95_plain - p95_full) / p95_plain
+    print(f"  p95 first-token: plain {p95_plain*1e3:.2f} ms, "
+          f"half {p95_half*1e3:.2f} ms, full {p95_full*1e3:.2f} ms "
+          f"(drop {drop_full*100:.1f}%)")
+    gate("p95 first-token falls monotonically with the share",
+         p95_full < p95_half < p95_plain)
+    gate("full-share drop is superlinear (> 50% for half the prefill)",
+         drop_full > 0.5 and sfull.prefix.hit_blocks > 0)
 
     # ---- heterogeneous batched engine ------------------------------------
     print("\n== heterogeneous batched engine (Table II --hetero) ==")

@@ -19,12 +19,12 @@ mod common;
 
 use common::{finish, measure, report};
 use primal::config::{ExperimentConfig, LoraTarget, ModelId};
-use primal::coordinator::{AdapterId, Request, SchedCounters, ServerBuilder};
+use primal::coordinator::{AdapterId, PreambleId, Request, SchedCounters, ServerBuilder};
 use primal::dataflow::{decode_program, prefill_program, reprogram_program};
 use primal::mapping::map_model;
 use primal::sim::cost::program_cost;
 use primal::sim::{LayerCostModel, PhaseCost, Simulator};
-use primal::trace::{load_checksum, WorkloadKind, WorkloadSpec};
+use primal::trace::{load_checksum, preamble_checksum, WorkloadKind, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -248,6 +248,84 @@ fn main() {
         ok = false;
     }
 
+    // ---- prefix-reuse proxies (deterministic) ----------------------------
+    // Eight same-preamble requests arriving together on a continuous-mode
+    // server: the first admission interns the 128-token preamble block
+    // cold, the other seven hit it and prefill only their private suffix.
+    // The hit/miss split and the exact prefill-cycle/RRAM-pass ledger are
+    // pure integers of the admission sequence, blessed from the mirror.
+    let prefix = {
+        let cfg1b = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        let mut s = ServerBuilder::from_experiment(cfg1b)
+            .max_batch(8)
+            .continuous(true)
+            .build()
+            .expect("prefix server");
+        s.register_adapter(AdapterId(0));
+        s.register_preamble(PreambleId(0), vec![0xBEEF]).expect("register preamble");
+        for i in 0..8u64 {
+            s.submit(
+                Request::new(i, AdapterId(0), 256, 16).with_preamble(PreambleId(0)),
+            )
+            .expect("submit");
+        }
+        let results = s.drain(None).expect("drain prefix");
+        if results.len() != 8 {
+            eprintln!("proxy gate: prefix scenario lost requests ({}/8)", results.len());
+            ok = false;
+        }
+        let st = s.stats();
+        // Prefill FLOP conservation: hit + miss cost must equal the
+        // monolithic cost bit-for-bit, per preambled admission.
+        let monolithic = st.prefix_admissions
+            * s.prefill_template_cycles()
+            * s.n_layers() as u64;
+        if st.prefix_prefill_cycles_saved + st.prefix_prefill_cycles_charged != monolithic
+        {
+            eprintln!(
+                "proxy gate: prefill FLOP conservation violated \
+                 ({} saved + {} charged != {} monolithic)",
+                st.prefix_prefill_cycles_saved,
+                st.prefix_prefill_cycles_charged,
+                monolithic
+            );
+            ok = false;
+        }
+        if st.prefix_interns != st.prefix_releases || st.prefix_live_nodes != 0 {
+            eprintln!(
+                "proxy gate: prefix refcount conservation violated \
+                 ({} interns, {} releases, {} live nodes)",
+                st.prefix_interns, st.prefix_releases, st.prefix_live_nodes
+            );
+            ok = false;
+        }
+        if st.kv_page_allocs != st.kv_page_frees || st.kv_used_pages != 0 {
+            eprintln!(
+                "proxy gate: prefix scenario leaked pages ({} allocs, {} frees, {} held)",
+                st.kv_page_allocs, st.kv_page_frees, st.kv_used_pages
+            );
+            ok = false;
+        }
+        st
+    };
+    println!(
+        "prefix reuse: {} admissions, {} hit / {} miss blocks, \
+         {} prefill cycles saved, {} RRAM passes saved",
+        prefix.prefix_admissions,
+        prefix.prefix_hit_blocks,
+        prefix.prefix_miss_blocks,
+        prefix.prefix_prefill_cycles_saved,
+        prefix.prefix_rram_passes_saved,
+    );
+    if prefix.prefix_hit_blocks == 0 {
+        eprintln!("proxy gate: shared-preamble wave produced no prefix hits");
+        ok = false;
+    }
+
     // Heterogeneous batched engine: equal prompts must collapse exactly to
     // the uniform engine (bit-identity gated cheaply here; the full grid
     // lives in the engine tests), and the mixed-prompt 13B point is pinned
@@ -276,6 +354,21 @@ fn main() {
     wl_poisson.max_output = 32;
     if load_checksum(&wl_poisson.generate()) != (wl_adapter, wl_input, wl_output) {
         eprintln!("proxy gate: load stream not independent of the arrival law");
+        ok = false;
+    }
+    // The prefix mix spends the middle draws on its share coin + preamble
+    // pick but keeps the adapter and output draw positions, so those sums
+    // match the bursty/poisson traces exactly; the preamble checksum is
+    // its own mirror-blessed key.
+    let mut wl_prefix = WorkloadSpec::new(WorkloadKind::Prefix, 42, 4096);
+    wl_prefix.adapters = 8;
+    wl_prefix.max_input = 512;
+    wl_prefix.max_output = 32;
+    let prefix_trace = wl_prefix.generate();
+    let (wp_adapter, _, wp_output) = load_checksum(&prefix_trace);
+    let wl_preamble = preamble_checksum(&prefix_trace);
+    if (wp_adapter, wp_output) != (wl_adapter, wl_output) {
+        eprintln!("proxy gate: prefix mix shifted the adapter/output draw positions");
         ok = false;
     }
 
@@ -310,6 +403,14 @@ fn main() {
         ("workload_adapter_sum", wl_adapter),
         ("workload_input_sum", wl_input),
         ("workload_output_sum", wl_output),
+        // Prefix-reuse ledger on the 8-way shared-preamble wave (1B,
+        // ctx 256, continuous) plus the prefix-mix preamble checksum
+        // (seed 42, 4096 requests, share 0.5, 4 preambles).
+        ("prefix_hit_blocks", prefix.prefix_hit_blocks),
+        ("prefix_miss_blocks", prefix.prefix_miss_blocks),
+        ("prefix_cycles_saved", prefix.prefix_prefill_cycles_saved),
+        ("prefix_rram_saved", prefix.prefix_rram_passes_saved),
+        ("workload_preamble_sum", wl_preamble),
     ]);
     println!("\ninstruction-count proxies (13B):");
     for (name, v) in &proxies {

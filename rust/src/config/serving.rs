@@ -17,6 +17,10 @@ pub enum PolicyKind {
     AdapterAffinity,
     /// Admit the shortest admissible job first (fewest output tokens).
     ShortestJobFirst,
+    /// Group requests sharing a prompt preamble (adapter admissibility
+    /// still comes first), so admissions land while their prefix is still
+    /// interned in the KV prefix cache and hit instead of re-prefilling.
+    PrefixAffinity,
 }
 
 impl PolicyKind {
@@ -26,6 +30,7 @@ impl PolicyKind {
             "fcfs" => Some(PolicyKind::Fcfs),
             "affinity" | "adapter-affinity" => Some(PolicyKind::AdapterAffinity),
             "sjf" | "shortest-job-first" => Some(PolicyKind::ShortestJobFirst),
+            "prefix" | "prefix-affinity" => Some(PolicyKind::PrefixAffinity),
             _ => None,
         }
     }
@@ -35,6 +40,7 @@ impl PolicyKind {
             PolicyKind::Fcfs => "fcfs",
             PolicyKind::AdapterAffinity => "adapter-affinity",
             PolicyKind::ShortestJobFirst => "shortest-job-first",
+            PolicyKind::PrefixAffinity => "prefix-affinity",
         }
     }
 }
@@ -133,11 +139,13 @@ mod tests {
             PolicyKind::Fcfs,
             PolicyKind::AdapterAffinity,
             PolicyKind::ShortestJobFirst,
+            PolicyKind::PrefixAffinity,
         ] {
             assert_eq!(PolicyKind::parse(k.name()), Some(k));
         }
         assert_eq!(PolicyKind::parse("sjf"), Some(PolicyKind::ShortestJobFirst));
         assert_eq!(PolicyKind::parse("affinity"), Some(PolicyKind::AdapterAffinity));
+        assert_eq!(PolicyKind::parse("prefix"), Some(PolicyKind::PrefixAffinity));
         assert_eq!(PolicyKind::parse("lifo"), None);
     }
 

@@ -66,6 +66,11 @@ pub struct PrefillJob {
     /// Cumulative prefill seconds after each chunk; the last entry equals
     /// the monolithic prefill expression bit-for-bit.
     cum_prefill_s: Vec<f64>,
+    /// Cumulative *prompt tokens* prefilled after each chunk (same indexing
+    /// as `cum_prefill_s`; the last entry is the tokens this job prefills —
+    /// the whole prompt, minus any prefix-shared blocks). Preemption uses
+    /// this to cost the discarded work of completed chunks exactly.
+    cum_tokens: Vec<usize>,
     /// Chunks completed so far.
     done: usize,
     /// Simulated time that elapsed during the job from interleaved decode
@@ -77,6 +82,10 @@ pub struct PrefillJob {
     /// key under continuous batching (0 in lockstep mode, where no pool
     /// exists).
     pub admit_seq: u64,
+    /// Prompt tokens served out of the shared prefix cache (0 when the
+    /// request has no interned preamble). These tokens hold no pages under
+    /// `admit_seq` and are skipped by the chunk schedule.
+    pub shared_tokens: usize,
 }
 
 impl PrefillJob {
@@ -86,25 +95,39 @@ impl PrefillJob {
         start_s: f64,
         reprog_s: f64,
         cum_prefill_s: Vec<f64>,
+        cum_tokens: Vec<usize>,
         golden_exec_ms: Option<f64>,
     ) -> Self {
         debug_assert!(!cum_prefill_s.is_empty(), "chunk schedule cannot be empty");
+        debug_assert_eq!(
+            cum_prefill_s.len(),
+            cum_tokens.len(),
+            "seconds/tokens schedules must cover the same chunks"
+        );
         Self {
             req,
             swap,
             start_s,
             reprog_s,
             cum_prefill_s,
+            cum_tokens,
             done: 0,
             external_s: 0.0,
             golden_exec_ms,
             admit_seq: 0,
+            shared_tokens: 0,
         }
     }
 
     /// Tag the job with the admission sequence that owns its KV pages.
     pub fn with_admit_seq(mut self, seq: u64) -> Self {
         self.admit_seq = seq;
+        self
+    }
+
+    /// Tag the job with its prefix-shared prompt token count.
+    pub fn with_shared_tokens(mut self, tokens: usize) -> Self {
+        self.shared_tokens = tokens;
         self
     }
 
@@ -120,6 +143,18 @@ impl PrefillJob {
     /// Chunks completed so far.
     pub fn chunks_done(&self) -> usize {
         self.done
+    }
+
+    /// Prompt tokens prefilled by the chunks completed so far. Partial
+    /// chunks contribute nothing: preempting a mid-chunk job discards the
+    /// in-progress chunk's accounting entirely, and the completed-chunk
+    /// tokens reported here are what `preempted_tokens` must charge.
+    pub fn tokens_done(&self) -> usize {
+        if self.done == 0 {
+            0
+        } else {
+            self.cum_tokens[self.done - 1]
+        }
     }
 
     pub fn is_done(&self) -> bool {
@@ -164,6 +199,7 @@ impl PrefillJob {
             pending_stall_s: 0.0,
             golden_exec_ms: self.golden_exec_ms,
             admit_seq: self.admit_seq,
+            shared_tokens: self.shared_tokens,
         }
     }
 }
@@ -197,12 +233,27 @@ pub struct Slot {
     /// The server's admission sequence number — the paged KV pool's owner
     /// key under continuous batching (0 in lockstep mode).
     pub admit_seq: u64,
+    /// Prompt tokens served out of the shared prefix cache (0 when the
+    /// request has no interned preamble). Shared tokens live in the
+    /// cache's ref-counted node pages, not under `admit_seq`, so every
+    /// page-demand expression uses `private_kv_len`, never `kv_len`.
+    pub shared_tokens: usize,
 }
 
 impl Slot {
     /// Current KV length seen by the next decode step.
     pub fn kv_len(&self) -> usize {
         self.req.input_tokens + self.generated
+    }
+
+    /// KV tokens held under this slot's own admit seq: the full KV length
+    /// minus the prefix-shared prompt blocks (which are block-aligned, so
+    /// private pages never straddle a shared page). Decode *cost* still
+    /// reads the full `kv_len` — sharing changes where KV lives, not how
+    /// much attention reads.
+    pub fn private_kv_len(&self) -> usize {
+        debug_assert!(self.shared_tokens <= self.req.input_tokens);
+        self.req.input_tokens - self.shared_tokens + self.generated
     }
 
     pub fn done(&self) -> bool {
@@ -401,13 +452,24 @@ mod tests {
     #[test]
     fn prefill_job_walks_its_schedule() {
         let req = Request::new(7, AdapterId(2), 256, 4);
-        let mut j = PrefillJob::new(req, true, 10.0, 0.5, vec![1.0, 2.0, 3.5], None);
+        let mut j = PrefillJob::new(
+            req,
+            true,
+            10.0,
+            0.5,
+            vec![1.0, 2.0, 3.5],
+            vec![128, 224, 256],
+            None,
+        );
         assert_eq!(j.chunks(), 3);
         assert_eq!(j.chunks_done(), 0);
         assert!(!j.is_done());
+        assert_eq!(j.tokens_done(), 0, "no completed chunks yet");
         assert_eq!(j.advance(), 10.0 + 0.0 + (0.5 + 1.0));
+        assert_eq!(j.tokens_done(), 128);
         j.note_external(0.25); // a decode step ran in between
         assert_eq!(j.advance(), 10.0 + 0.25 + (0.5 + 2.0));
+        assert_eq!(j.tokens_done(), 224, "mid-schedule, partial chunks excluded");
         assert_eq!(j.advance(), 10.0 + 0.25 + (0.5 + 3.5));
         assert!(j.is_done());
         let ttft = j.ttft_s();
@@ -435,6 +497,7 @@ mod tests {
             3.0,
             reprog,
             vec![0.04, prefill],
+            vec![64, 128],
             None,
         );
         assert_eq!(j.ttft_s().to_bits(), (reprog + prefill).to_bits());
@@ -453,6 +516,7 @@ mod tests {
             pending_stall_s: 0.0,
             golden_exec_ms: None,
             admit_seq: id,
+            shared_tokens: 0,
         };
         let mut b = DecodeBatch::new(4);
         b.push(mk(0, 2, 2)); // done
@@ -480,6 +544,7 @@ mod tests {
             pending_stall_s: 0.0,
             golden_exec_ms: None,
             admit_seq: id,
+            shared_tokens: 0,
         };
         let mut b = DecodeBatch::new(4);
         b.push(mk(0, 16, 3));

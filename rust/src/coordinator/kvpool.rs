@@ -114,8 +114,15 @@ impl KvPool {
     }
 
     /// Allocate `n` pages to `owner` (lowest free ids first). Errors — with
-    /// the pool untouched — if fewer than `n` pages are free.
+    /// the pool untouched — if fewer than `n` pages are free. A zero-page
+    /// allocation is a true no-op: it must not register `owner` as a holder
+    /// (a phantom empty holding would survive until release and break the
+    /// held-map/used-pages audit for fully prefix-shared prompts, whose
+    /// private prompt needs zero pages).
     pub fn alloc(&mut self, owner: u64, n: usize) -> Result<(), String> {
+        if n == 0 {
+            return Ok(());
+        }
         if n > self.free.len() {
             return Err(format!(
                 "kv pool exhausted: owner {owner} needs {n} page(s) but only \
@@ -282,6 +289,41 @@ mod tests {
         assert_eq!(p.held_pages(1), 3);
         p.grow_to(1, 100).unwrap(); // never shrinks
         assert_eq!(p.held_pages(1), 3);
+    }
+
+    #[test]
+    fn zero_page_alloc_registers_no_holder() {
+        let mut p = KvPool::new(128, 4).unwrap();
+        p.alloc(7, 0).unwrap();
+        assert!(!p.held.contains_key(&7), "zero alloc must not create a holding");
+        assert_eq!(p.held_pages(7), 0);
+        assert_eq!(p.release(7), 0);
+        let c = p.counters();
+        assert_eq!((c.allocs, c.frees, c.peak_pages), (0, 0, 0));
+        #[cfg(debug_assertions)]
+        p.debug_validate();
+    }
+
+    #[test]
+    fn sub_page_prompt_allocates_once_and_never_regrows() {
+        // An admission whose prompt plus its first decode token fits in page
+        // 0 must take exactly one page up front and never touch the
+        // allocator again until the page boundary: counters are pinned so a
+        // regression to alloc-then-immediately-grow shows up as drift.
+        let mut p = KvPool::new(128, 4).unwrap();
+        let (input, owner) = (100, 1);
+        p.alloc(owner, p.pages_for_tokens(input)).unwrap();
+        assert_eq!(p.counters().allocs, 1);
+        for generated in 0..(128 - input) {
+            p.grow_to(owner, input + generated + 1).unwrap();
+            assert_eq!(p.held_pages(owner), 1, "within page 0 at kv={}", input + generated + 1);
+        }
+        assert_eq!(p.counters().allocs, 1, "no churn inside page 0");
+        p.grow_to(owner, 129).unwrap(); // first token past the boundary
+        assert_eq!(p.held_pages(owner), 2);
+        assert_eq!(p.counters().allocs, 2);
+        assert_eq!(p.release(owner), 2);
+        assert_eq!(p.counters().frees, 2);
     }
 
     #[test]

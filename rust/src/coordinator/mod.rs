@@ -26,14 +26,17 @@
 mod adapter;
 mod batch;
 mod kvpool;
+mod prefixcache;
 mod scheduler;
 mod server;
 
 pub use adapter::{AdapterCounters, AdapterId, AdapterManager, SwapOutcome};
 pub use batch::{DecodeBatch, PrefillJob, Slot};
 pub use kvpool::{KvPool, KvPoolCounters};
+pub use prefixcache::{PreambleId, PrefixCache, PrefixCounters, NODE_OWNER_BASE};
 pub use scheduler::{
-    policy_of, AdapterAffinity, Fcfs, SchedContext, SchedulePolicy, ShortestJobFirst,
+    policy_of, AdapterAffinity, Fcfs, PrefixAffinity, SchedContext, SchedulePolicy,
+    ShortestJobFirst,
 };
 pub use server::{
     AdapterUsage, FunctionalMode, LatencyStats, Request, RequestResult, SchedCounters,

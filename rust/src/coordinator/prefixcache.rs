@@ -1,0 +1,306 @@
+//! Cross-request KV prefix reuse: a deterministic prefix tree over admitted
+//! prompts, interned at the paged pool's block granularity.
+//!
+//! Millions of users share system prompts and few-shot preambles, so the
+//! paged KV pool repeatedly prefills identical prefixes. This module makes
+//! the shared part cost one prefill: prompts declare a *preamble* — a chain
+//! of 128-token block content keys registered with the server — and
+//! admission interns that chain into a trie whose nodes each own exactly one
+//! ref-counted `KvPool` page. A request whose leading blocks are already
+//! interned skips their prefill entirely (the scheduler charges only the
+//! unshared suffix blocks) and the RRAM passes those blocks would have
+//! burned are credited to the energy ledger as passes saved.
+//!
+//! Lifecycle rules, chosen so replay is bit-identical and page accounting
+//! audits exactly:
+//! - **Intern** (at admission): walk the chain from the root; every node
+//!   already present gains one ref (a *hit* block), every missing node is
+//!   created with one ref and one freshly allocated pool page (a *miss*
+//!   block). Present chains are prefix-closed, so hits are always a leading
+//!   run — the hit count is exactly the number of template blocks whose
+//!   prefill is skipped.
+//! - **Release** (at retirement *or* preemption): walk the chain leaf→root
+//!   decrementing refs; a node is freed — page returned, trie unlinked —
+//!   only when its refcount hits zero. A holder's refs cover its whole
+//!   chain, so ancestors always carry at least their descendants' refs and
+//!   preemption can never free a node another in-flight request holds.
+//! - Node pages live under reserved owner ids (`NODE_OWNER_BASE | node id`,
+//!   high bit set) that can never collide with per-admission sequence
+//!   numbers, so the pool's double-release guarantees carry over.
+//!
+//! The cache holds no timing state: hits change *what* is charged at
+//! admission (suffix blocks instead of the whole template), never *how*
+//! block costs are computed, which is what makes the prefill FLOP
+//! conservation gate exact (hit + miss cycles == monolithic cycles in u64).
+
+use std::collections::BTreeMap;
+
+use super::kvpool::KvPool;
+
+/// Identifier of a registered prompt preamble (a shared-prefix block chain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PreambleId(pub u32);
+
+/// Lifetime counters over cache events (for stats and the proxy gates).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCounters {
+    /// Chain acquisitions — one per admission that went through the cache.
+    pub interns: u64,
+    /// Chain releases — one per retirement or preemption of a holder.
+    pub releases: u64,
+    /// Blocks found already interned at acquisition (prefill skipped).
+    pub hit_blocks: u64,
+    /// Blocks interned fresh at acquisition (prefill charged).
+    pub miss_blocks: u64,
+    /// Trie nodes (= shared pool pages) created.
+    pub nodes_created: u64,
+    /// Trie nodes (= shared pool pages) freed.
+    pub nodes_freed: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    parent: Option<u64>,
+    key: u64,
+    refs: u64,
+    children: BTreeMap<u64, u64>,
+}
+
+/// The prefix trie (see module docs). One node == one interned block == one
+/// pool page; determinism comes from monotone node ids and the pool's
+/// lowest-id-first free list.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixCache {
+    nodes: BTreeMap<u64, Node>,
+    roots: BTreeMap<u64, u64>,
+    next_node: u64,
+    counters: PrefixCounters,
+}
+
+/// Node pages are held under owner ids with the high bit set; admission
+/// sequence numbers are small monotone counters, so the spaces are disjoint.
+pub const NODE_OWNER_BASE: u64 = 1 << 63;
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Leading blocks of `chain` currently interned (side-effect-free; the
+    /// admission gate uses this to price an admission before committing).
+    /// Returns `(hit_blocks, miss_blocks)` with `hit + miss == chain.len()`.
+    pub fn probe(&self, chain: &[u64]) -> (usize, usize) {
+        let mut hits = 0;
+        let mut at: Option<u64> = None;
+        for key in chain {
+            let next = match at {
+                None => self.roots.get(key),
+                Some(id) => self.nodes[&id].children.get(key),
+            };
+            match next {
+                Some(&id) => {
+                    hits += 1;
+                    at = Some(id);
+                }
+                None => break,
+            }
+        }
+        (hits, chain.len() - hits)
+    }
+
+    /// Acquire one ref on every node of `chain`, creating missing nodes with
+    /// one pool page each. Returns the hit-block count (the leading run of
+    /// nodes that already existed). Errors — with cache and pool unchanged —
+    /// if the pool cannot cover the miss blocks; callers gate admissions on
+    /// `probe` + free pages first, so this is exceptional.
+    pub fn intern(&mut self, chain: &[u64], pool: &mut KvPool) -> Result<usize, String> {
+        debug_assert!(!chain.is_empty(), "empty chains are not interned");
+        let (hits, misses) = self.probe(chain);
+        if misses > pool.free_pages() {
+            return Err(format!(
+                "prefix intern needs {misses} page(s) but only {} are free",
+                pool.free_pages()
+            ));
+        }
+        let mut at: Option<u64> = None;
+        for (depth, key) in chain.iter().enumerate() {
+            let existing = match at {
+                None => self.roots.get(key).copied(),
+                Some(id) => self.nodes[&id].children.get(key).copied(),
+            };
+            let id = match existing {
+                Some(id) => {
+                    debug_assert!(depth < hits, "present nodes form a leading run");
+                    self.nodes.get_mut(&id).expect("live node").refs += 1;
+                    id
+                }
+                None => {
+                    let id = self.next_node;
+                    self.next_node += 1;
+                    pool.alloc(NODE_OWNER_BASE | id, 1)?;
+                    self.nodes.insert(
+                        id,
+                        Node { parent: at, key: *key, refs: 1, children: BTreeMap::new() },
+                    );
+                    match at {
+                        None => self.roots.insert(*key, id),
+                        Some(p) => self.nodes.get_mut(&p).expect("live parent").children.insert(*key, id),
+                    };
+                    self.counters.nodes_created += 1;
+                    id
+                }
+            };
+            at = Some(id);
+        }
+        self.counters.interns += 1;
+        self.counters.hit_blocks += hits as u64;
+        self.counters.miss_blocks += misses as u64;
+        Ok(hits)
+    }
+
+    /// Drop one ref from every node of `chain` (which must be fully
+    /// interned — callers only release chains they acquired). Nodes whose
+    /// refcount reaches zero are freed leaf→root: page released, trie
+    /// unlinked. A preempted holder therefore never frees a node a
+    /// different in-flight holder still refs.
+    pub fn release(&mut self, chain: &[u64], pool: &mut KvPool) {
+        let mut ids = Vec::with_capacity(chain.len());
+        let mut at: Option<u64> = None;
+        for key in chain {
+            let id = match at {
+                None => self.roots.get(key),
+                Some(p) => self.nodes[&p].children.get(key),
+            };
+            let id = *id.expect("released chain must be interned");
+            ids.push(id);
+            at = Some(id);
+        }
+        for &id in ids.iter().rev() {
+            let node = self.nodes.get_mut(&id).expect("live node");
+            debug_assert!(node.refs > 0, "refcount underflow");
+            node.refs -= 1;
+            if node.refs == 0 {
+                debug_assert!(node.children.is_empty(), "zero-ref node with live children");
+                let node = self.nodes.remove(&id).expect("live node");
+                match node.parent {
+                    None => self.roots.remove(&node.key),
+                    Some(p) => self.nodes.get_mut(&p).expect("live parent").children.remove(&node.key),
+                };
+                let freed = pool.release(NODE_OWNER_BASE | id);
+                debug_assert_eq!(freed, 1, "each node owns exactly one page");
+                self.counters.nodes_freed += 1;
+            }
+        }
+        self.counters.releases += 1;
+    }
+
+    /// Nodes currently interned (== shared pool pages currently held).
+    pub fn live_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn counters(&self) -> PrefixCounters {
+        self.counters
+    }
+
+    #[cfg(debug_assertions)]
+    pub(crate) fn debug_validate(&self) {
+        for (id, node) in &self.nodes {
+            debug_assert!(node.refs > 0, "live node {id} with zero refs");
+            let child_refs: u64 = node.children.values().map(|c| self.nodes[c].refs).sum();
+            debug_assert!(
+                node.refs >= child_refs,
+                "node {id}: refs {} < children refs {child_refs}",
+                node.refs
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(pages: usize) -> KvPool {
+        KvPool::new(128, pages).unwrap()
+    }
+
+    #[test]
+    fn intern_counts_hits_as_the_leading_shared_run() {
+        let mut c = PrefixCache::new();
+        let mut p = pool(8);
+        assert_eq!(c.probe(&[1, 2, 3]), (0, 3));
+        assert_eq!(c.intern(&[1, 2, 3], &mut p).unwrap(), 0, "cold chain");
+        assert_eq!(p.used_pages(), 3);
+        // A second holder sharing the first two blocks hits exactly those.
+        assert_eq!(c.probe(&[1, 2, 9]), (2, 1));
+        assert_eq!(c.intern(&[1, 2, 9], &mut p).unwrap(), 2);
+        assert_eq!(p.used_pages(), 4, "only the miss block allocates");
+        assert_eq!(c.live_nodes(), 4);
+        let k = c.counters();
+        assert_eq!((k.interns, k.hit_blocks, k.miss_blocks, k.nodes_created), (2, 2, 4, 4));
+        #[cfg(debug_assertions)]
+        c.debug_validate();
+    }
+
+    #[test]
+    fn release_frees_only_last_sharer_nodes() {
+        let mut c = PrefixCache::new();
+        let mut p = pool(8);
+        c.intern(&[1, 2, 3], &mut p).unwrap();
+        c.intern(&[1, 2], &mut p).unwrap();
+        // First holder retires: block 3 had one ref and frees; 1,2 survive.
+        c.release(&[1, 2, 3], &mut p);
+        assert_eq!(c.live_nodes(), 2);
+        assert_eq!(p.used_pages(), 2);
+        // Second holder (a "preemption" is the same operation) releases the
+        // rest; the cache drains to empty and every page returns.
+        c.release(&[1, 2], &mut p);
+        assert_eq!(c.live_nodes(), 0);
+        assert_eq!(p.used_pages(), 0);
+        let k = c.counters();
+        assert_eq!(k.nodes_created, k.nodes_freed);
+        assert_eq!(k.interns, k.releases);
+    }
+
+    #[test]
+    fn reintern_after_drain_recreates_nodes_deterministically() {
+        let run = || {
+            let mut c = PrefixCache::new();
+            let mut p = pool(4);
+            c.intern(&[7, 8], &mut p).unwrap();
+            c.release(&[7, 8], &mut p);
+            c.intern(&[7, 8], &mut p).unwrap();
+            c.release(&[7, 8], &mut p);
+            (c.counters(), p.counters())
+        };
+        let (ck, pk) = run();
+        assert_eq!((ck.nodes_created, ck.nodes_freed), (4, 4), "drain means re-prefill");
+        assert_eq!((pk.allocs, pk.frees), (4, 4));
+        assert_eq!(run(), run(), "bitwise-identical replay");
+    }
+
+    #[test]
+    fn intern_without_pages_fails_and_leaves_state_untouched() {
+        let mut c = PrefixCache::new();
+        let mut p = pool(2);
+        c.intern(&[1, 2], &mut p).unwrap();
+        assert!(c.intern(&[1, 2, 3], &mut p).is_err(), "no page for block 3");
+        assert_eq!(c.live_nodes(), 2, "failed intern creates nothing");
+        assert_eq!(c.counters().interns, 1);
+        // The shared blocks are still re-usable by fitting chains.
+        assert_eq!(c.intern(&[1, 2], &mut p).unwrap(), 2);
+    }
+
+    #[test]
+    fn disjoint_roots_do_not_share() {
+        let mut c = PrefixCache::new();
+        let mut p = pool(8);
+        c.intern(&[1, 2], &mut p).unwrap();
+        assert_eq!(c.intern(&[5, 2], &mut p).unwrap(), 0, "different root key");
+        assert_eq!(c.live_nodes(), 4);
+        c.release(&[1, 2], &mut p);
+        c.release(&[5, 2], &mut p);
+        assert_eq!(c.live_nodes(), 0);
+    }
+}

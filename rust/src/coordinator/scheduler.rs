@@ -21,6 +21,7 @@
 //! `drain()` always terminates, whatever the policy does.
 
 use super::adapter::AdapterId;
+use super::prefixcache::PreambleId;
 use super::server::Request;
 use crate::config::{PolicyKind, ServingConfig};
 use std::collections::BTreeMap;
@@ -242,8 +243,129 @@ impl SchedulePolicy for ShortestJobFirst {
     }
 }
 
+/// Prefix-affinity scheduling: group admissions by shared prompt preamble
+/// the way [`AdapterAffinity`] groups by adapter, so requests that can hit
+/// the prefix cache admit while their preamble's nodes are still interned
+/// (the cache frees a node when its last sharer retires — back-to-back
+/// admissions are what turn a shared preamble into actual hits). Adapter
+/// admissibility is still honored first: the SRAM-DCIM macros bind the
+/// batch to one task, so only requests matching `ctx.active_adapter` are
+/// candidates, whatever their preamble.
+///
+/// The run key is the *preamble* of the policy's own consecutive picks
+/// (preamble-less requests form one "no prefix" group); unlike adapters,
+/// mixing preambles in a batch is legal — it merely forfeits reuse — so an
+/// anchored group with no admissible member regroups immediately instead
+/// of draining. `max_run_len` is the same starvation bound as
+/// `AdapterAffinity`: after that many consecutive same-preamble admissions
+/// while a different group waits, the run stops extending (hold if work is
+/// in flight, else regroup on the deepest other backlog).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixAffinity {
+    /// Maximum consecutive same-preamble admissions while another group
+    /// waits; `None` = unbounded.
+    pub max_run_len: Option<usize>,
+    /// Group key of the current run (`None` = no run yet; the inner
+    /// `Option` is the picked request's preamble).
+    run_key: Option<Option<PreambleId>>,
+    run_len: usize,
+}
+
+impl PrefixAffinity {
+    /// Unbounded prefix affinity.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prefix affinity with a starvation bound of `n` consecutive
+    /// admissions.
+    pub fn with_max_run_len(n: usize) -> Self {
+        Self { max_run_len: Some(n.max(1)), ..Self::default() }
+    }
+
+    /// Record an admission in the run counters and pass the pick through.
+    fn note(&mut self, waiting: &[Request], pick: Option<usize>) -> Option<usize> {
+        if let Some(i) = pick {
+            let k = waiting[i].preamble;
+            if self.run_key == Some(k) {
+                self.run_len += 1;
+            } else {
+                self.run_key = Some(k);
+                self.run_len = 1;
+            }
+        }
+        pick
+    }
+}
+
+/// First index of the preamble group with the deepest *adapter-admissible*
+/// backlog (ties broken by earliest arrival), optionally excluding one
+/// group.
+fn deepest_prefix_backlog(
+    waiting: &[Request],
+    ctx: &SchedContext,
+    exclude: Option<Option<PreambleId>>,
+) -> Option<usize> {
+    let mut groups: BTreeMap<Option<PreambleId>, (usize, usize)> = BTreeMap::new();
+    for (i, r) in waiting.iter().enumerate() {
+        if !ctx.active_adapter.is_none_or(|a| r.adapter == a) {
+            continue;
+        }
+        if Some(r.preamble) == exclude {
+            continue;
+        }
+        let e = groups.entry(r.preamble).or_insert((0, i));
+        e.0 += 1;
+    }
+    groups
+        .values()
+        .copied()
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
+        .map(|(_, first)| first)
+}
+
+impl SchedulePolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix-affinity"
+    }
+
+    fn pick(&mut self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
+        let pick = self.peek(waiting, ctx);
+        self.note(waiting, pick)
+    }
+
+    /// The pure decision function behind `pick` — run accounting happens
+    /// only in `pick`, so fast-forward probes cannot inflate the run.
+    fn peek(&self, waiting: &[Request], ctx: &SchedContext) -> Option<usize> {
+        if waiting.is_empty() {
+            return None;
+        }
+        let ok = |r: &Request| ctx.active_adapter.is_none_or(|a| r.adapter == a);
+        // Starvation bound: once the run is exhausted and another group
+        // has an admissible member, refuse to extend it.
+        if let (Some(limit), Some(k)) = (self.max_run_len, self.run_key) {
+            if self.run_len >= limit && waiting.iter().any(|r| ok(r) && r.preamble != k) {
+                if ctx.active_adapter.is_some() {
+                    // Drain the in-flight work, then regroup.
+                    return None;
+                }
+                return deepest_prefix_backlog(waiting, ctx, Some(k));
+            }
+        }
+        if let Some(k) = self.run_key {
+            if let Some(i) = waiting.iter().position(|r| ok(r) && r.preamble == k) {
+                return Some(i);
+            }
+            // No admissible member of the anchored group: regroup (prefix
+            // mixing is legal, so no drain is needed).
+        }
+        deepest_prefix_backlog(waiting, ctx, None)
+    }
+}
+
 /// Instantiate the policy object for a config-level selector, applying
-/// the serving knobs that parameterize it (`affinity_max_run_len`).
+/// the serving knobs that parameterize it (`affinity_max_run_len`, shared
+/// with the prefix policy — both bound starvation the same way).
 pub fn policy_of(kind: PolicyKind, serving: &ServingConfig) -> Box<dyn SchedulePolicy> {
     match kind {
         PolicyKind::Fcfs => Box::new(Fcfs),
@@ -252,6 +374,10 @@ pub fn policy_of(kind: PolicyKind, serving: &ServingConfig) -> Box<dyn ScheduleP
             ..AdapterAffinity::default()
         }),
         PolicyKind::ShortestJobFirst => Box::new(ShortestJobFirst),
+        PolicyKind::PrefixAffinity => Box::new(PrefixAffinity {
+            max_run_len: serving.affinity_max_run_len,
+            ..PrefixAffinity::default()
+        }),
     }
 }
 
@@ -364,5 +490,80 @@ mod tests {
         assert_eq!(p.name(), "adapter-affinity");
         let f = policy_of(PolicyKind::Fcfs, &serving);
         assert_eq!(f.name(), "fcfs");
+        let x = policy_of(PolicyKind::PrefixAffinity, &serving);
+        assert_eq!(x.name(), "prefix-affinity");
+    }
+
+    fn preq(id: u64, adapter: u32, preamble: Option<u32>) -> Request {
+        let r = Request::new(id, AdapterId(adapter), 256, 8);
+        match preamble {
+            Some(p) => r.with_preamble(PreambleId(p)),
+            None => r,
+        }
+    }
+
+    #[test]
+    fn prefix_affinity_groups_by_preamble() {
+        let mut p = PrefixAffinity::default();
+        let w = [preq(0, 1, Some(7)), preq(1, 1, Some(9)), preq(2, 1, Some(9))];
+        // Cold start: preamble 9 has the deeper backlog.
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(1));
+        // The run anchors on 9: its remaining member wins over the head.
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(1), "w[1] admitted; w[2] is next match");
+        let rest = [preq(0, 1, Some(7)), preq(2, 1, Some(9))];
+        assert_eq!(p.pick(&rest, &ctx(Some(1), None)), Some(1));
+        // Anchored group exhausted: regroup immediately (no drain needed —
+        // prefix mixing inside a batch is legal).
+        let only7 = [preq(0, 1, Some(7))];
+        assert_eq!(p.pick(&only7, &ctx(Some(1), None)), Some(0));
+    }
+
+    #[test]
+    fn prefix_affinity_honors_adapter_admissibility_first() {
+        let mut p = PrefixAffinity::default();
+        // The hot preamble 9 lives on adapter 2, but the batch is bound to
+        // adapter 1: only adapter-1 requests are candidates.
+        let w = [preq(0, 2, Some(9)), preq(1, 2, Some(9)), preq(2, 1, Some(7))];
+        assert_eq!(p.pick(&w, &ctx(Some(1), None)), Some(2));
+        // Nothing admissible at all -> hold.
+        let w2 = [preq(0, 2, Some(9))];
+        assert_eq!(p.pick(&w2, &ctx(Some(1), None)), None);
+    }
+
+    #[test]
+    fn prefix_affinity_run_bound_forces_regroup() {
+        let mut p = PrefixAffinity::with_max_run_len(2);
+        let w = [preq(0, 1, Some(9)), preq(1, 1, Some(9)), preq(2, 1, Some(7))];
+        assert_eq!(p.pick(&w, &ctx(None, None)), Some(0));
+        assert_eq!(p.pick(&w[1..], &ctx(Some(1), None)), Some(0));
+        // Third same-preamble admission while group 7 waits: hold when work
+        // is in flight, regroup on the other backlog once drained.
+        let rest = [preq(3, 1, Some(9)), preq(2, 1, Some(7))];
+        assert_eq!(p.pick(&rest, &ctx(Some(1), None)), None);
+        assert_eq!(p.pick(&rest, &ctx(None, None)), Some(1), "regroups on preamble 7");
+        // With nobody else waiting the run may continue unboundedly.
+        let only9 = [preq(4, 1, Some(9))];
+        let mut q = PrefixAffinity::with_max_run_len(1);
+        assert_eq!(q.pick(&only9, &ctx(None, None)), Some(0));
+        assert_eq!(q.pick(&only9, &ctx(Some(1), None)), Some(0));
+    }
+
+    #[test]
+    fn prefix_affinity_peek_matches_pick_and_never_mutates() {
+        let mut p = PrefixAffinity::with_max_run_len(2);
+        let w = [preq(0, 1, Some(9)), preq(1, 1, Some(7)), preq(2, 1, Some(9))];
+        let c = ctx(None, None);
+        for _ in 0..5 {
+            assert_eq!(p.peek(&w, &c), Some(0), "peek is stable");
+        }
+        assert_eq!(p.pick(&w, &c), Some(0));
+        assert_eq!(p.pick(&w[1..], &ctx(Some(1), None)), Some(1));
+        // Bound of 2 reached by the two PICKS (not inflated by peeks).
+        assert_eq!(p.peek(&w[1..], &ctx(Some(1), None)), None);
+        // Preamble-less requests form one group with a working run key.
+        let mut q = PrefixAffinity::default();
+        let plain = [preq(0, 1, None), preq(1, 1, Some(7))];
+        assert_eq!(q.pick(&plain, &ctx(None, None)), Some(0), "ties: earliest arrival");
+        assert_eq!(q.peek(&plain, &ctx(None, None)), q.pick(&plain, &ctx(None, None)));
     }
 }

@@ -37,6 +37,7 @@
 use super::adapter::{AdapterId, AdapterManager, SwapOutcome};
 use super::batch::{cycles_f64, DecodeBatch, PrefillJob, Slot};
 use super::kvpool::KvPool;
+use super::prefixcache::{PreambleId, PrefixCache};
 use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
@@ -64,17 +65,28 @@ pub struct Request {
     /// Simulated arrival time (s). The request is not admissible before
     /// it; 0.0 means "available from the start" (the legacy model).
     pub arrival_s: f64,
+    /// Shared prompt preamble, if any: the request's leading prompt
+    /// blocks match a chain registered via [`Server::register_preamble`],
+    /// making them candidates for cross-request KV prefix reuse in
+    /// continuous mode. `None` (the default) is a plain prompt.
+    pub preamble: Option<PreambleId>,
 }
 
 impl Request {
     /// A request available from simulated time zero.
     pub fn new(id: u64, adapter: AdapterId, input_tokens: usize, output_tokens: usize) -> Self {
-        Self { id, adapter, input_tokens, output_tokens, arrival_s: 0.0 }
+        Self { id, adapter, input_tokens, output_tokens, arrival_s: 0.0, preamble: None }
     }
 
     /// Set the arrival timestamp (builder-style).
     pub fn at(mut self, arrival_s: f64) -> Self {
         self.arrival_s = arrival_s;
+        self
+    }
+
+    /// Declare a shared prompt preamble (builder-style).
+    pub fn with_preamble(mut self, p: PreambleId) -> Self {
+        self.preamble = Some(p);
         self
     }
 }
@@ -180,7 +192,9 @@ pub struct ServerStats {
     /// Continuous mode: in-flight requests evicted under KV pressure
     /// (restart-from-prefill; each re-admission is a fresh sequence).
     pub preemptions: u64,
-    /// Continuous mode: decode tokens discarded by those evictions (the
+    /// Continuous mode: tokens discarded by those evictions — decode
+    /// tokens a slot had generated plus prompt tokens a chunked prefill
+    /// had already written (both are re-done from scratch on restart; the
     /// preemption cost the restart policy pays).
     pub preempted_tokens: u64,
     /// Paged KV pool counters (all zero in lockstep mode, which has no
@@ -192,6 +206,30 @@ pub struct ServerStats {
     pub kv_used_pages: u64,
     pub kv_capacity_pages: u64,
     pub kv_page_tokens: u64,
+    /// KV prefix cache (continuous mode with registered preambles; all
+    /// zero otherwise). Admissions that went through the cache, block
+    /// hit/miss counts, chain intern/release pairs, trie node (= shared
+    /// page) churn, and the current trie size.
+    pub prefix_admissions: u64,
+    pub prefix_hit_blocks: u64,
+    pub prefix_miss_blocks: u64,
+    pub prefix_interns: u64,
+    pub prefix_releases: u64,
+    pub prefix_nodes_created: u64,
+    pub prefix_nodes_freed: u64,
+    pub prefix_live_nodes: u64,
+    /// Prefill FLOP conservation ledger (u64 cycles, all layers): cycles
+    /// actually charged for unshared suffix blocks plus cycles saved by
+    /// hit blocks always equals the monolithic prefill cost of every
+    /// prefix admission, exactly — `charged + saved ==
+    /// prefix_admissions * prefill_template_cycles() * layers`.
+    pub prefix_prefill_cycles_charged: u64,
+    pub prefix_prefill_cycles_saved: u64,
+    /// RRAM analog passes the hit blocks' skipped prefills would have
+    /// burned, and their energy credit (the same per-pass conversion the
+    /// energy ledger posts with).
+    pub prefix_rram_passes_saved: u64,
+    pub prefix_energy_saved_j: f64,
 }
 
 /// Running sums + samples behind [`ServerStats`].
@@ -209,10 +247,17 @@ struct StatsAccum {
     /// adapter manager.
     per_adapter: BTreeMap<AdapterId, (u64, u64)>,
     max_batch_observed: usize,
-    /// Continuous mode: evictions under KV pressure and the decode
-    /// tokens they discarded.
+    /// Continuous mode: evictions under KV pressure and the tokens
+    /// (decode + prefilled prompt) they discarded.
     preemptions: u64,
     preempted_tokens: u64,
+    /// Prefix-cache conservation ledger (see [`ServerStats`]): admissions
+    /// through the cache, and u64 prefill cycles charged/saved plus RRAM
+    /// passes saved, all scaled to every layer.
+    prefix_admissions: u64,
+    prefix_cycles_charged: u64,
+    prefix_cycles_saved: u64,
+    prefix_rram_saved: u64,
 }
 
 /// Nearest-rank percentile over an unsorted sample set: the q-th
@@ -535,6 +580,8 @@ impl ServerBuilder {
         let block = 128usize.min(exp.input_tokens.max(1));
         let n_blocks = exp.input_tokens.div_ceil(block);
         let mut prefill_block_s = Vec::new();
+        let mut prefill_block_cycles = Vec::new();
+        let mut prefill_block_rram = Vec::new();
         for b in 0..n_blocks {
             let this_block = if b + 1 == n_blocks {
                 exp.input_tokens - b * block
@@ -543,14 +590,19 @@ impl ServerBuilder {
             };
             let kv = (b * block + this_block / 2).max(1);
             let prog = prefill_program(&exp, lm0, this_block, kv);
-            let compute = if n_chips == 1 {
-                program_cost(&prog, &exp.system, &exp.calib).cycles
+            let cost = if n_chips == 1 {
+                program_cost(&prog, &exp.system, &exp.calib)
             } else {
                 program_cost(&shard_program_slice(&prog, 0, n_chips), &exp.system, &exp.calib)
-                    .cycles
             };
-            let cycles = compute + mesh.layer_all_reduce_cycles(exp.model.hidden, this_block);
+            let cycles = cost.cycles + mesh.layer_all_reduce_cycles(exp.model.hidden, this_block);
             prefill_block_s.push((this_block, cycles_f64(cycles) * cyc));
+            // The u64 twins of the template: the prefix cache's FLOP
+            // conservation ledger sums these exactly (no float
+            // re-association), and the RRAM passes per block are the
+            // energy credit of a skipped (hit) block.
+            prefill_block_cycles.push(cycles);
+            prefill_block_rram.push(cost.rram_passes);
         }
 
         let (golden, golden_exe) = match self.functional {
@@ -584,6 +636,8 @@ impl ServerBuilder {
             counters: Cell::new(SchedCounters::default()),
             batch: DecodeBatch::new(self.max_batch),
             jobs: VecDeque::new(),
+            prefix: pool.is_some().then(PrefixCache::new),
+            preambles: BTreeMap::new(),
             pool,
             admit_seq: 0,
             prefill_turn: false,
@@ -595,6 +649,8 @@ impl ServerBuilder {
             shard_ar_decode_cycles,
             reprog_ttft_s,
             prefill_block_s,
+            prefill_block_cycles,
+            prefill_block_rram,
             golden,
             golden_exe,
             acc: StatsAccum::default(),
@@ -642,6 +698,12 @@ pub struct Server {
     /// Paged KV pool (continuous mode only; `None` = lockstep
     /// whole-request reservations).
     pool: Option<KvPool>,
+    /// KV prefix cache over the pool (continuous mode only): the trie of
+    /// interned preamble blocks, each node holding one ref-counted page.
+    prefix: Option<PrefixCache>,
+    /// Registered prompt preambles: id -> chain of 128-token block
+    /// content keys (see [`Server::register_preamble`]).
+    preambles: BTreeMap<PreambleId, Vec<u64>>,
     /// Monotone admission sequence number: the pool's owner key. A
     /// preempted request re-admits under a fresh sequence, so stale page
     /// holdings can never be confused with the retry's.
@@ -670,6 +732,11 @@ pub struct Server {
     shard_ar_decode_cycles: u64,
     reprog_ttft_s: f64,
     prefill_block_s: Vec<(usize, f64)>, // (block tokens, seconds) template
+    /// u64 twins of the prefill template: per-block one-layer cycles (the
+    /// prefix cache's exact conservation ledger) and per-block one-layer
+    /// RRAM passes (the energy credit of a skipped block).
+    prefill_block_cycles: Vec<u64>,
+    prefill_block_rram: Vec<u64>,
     n_layers: usize,
     golden: Option<GoldenRuntime>,
     golden_exe: Option<Executable>,
@@ -698,6 +765,34 @@ impl Server {
         self.adapters.register(id, bytes);
     }
 
+    /// Register a prompt preamble: a chain of 128-token block content
+    /// keys that requests may declare via [`Request::with_preamble`].
+    /// In continuous mode, admissions whose prompt leads with a
+    /// registered chain intern it into the KV prefix cache and skip the
+    /// prefill of every block already interned (see
+    /// `coordinator::prefixcache`). Outside continuous mode the
+    /// registration is accepted and ignored — there is no pool to share
+    /// pages on, so every request takes the plain path.
+    pub fn register_preamble(&mut self, id: PreambleId, blocks: Vec<u64>) -> Result<()> {
+        if blocks.is_empty() {
+            bail!("preamble {id:?} has no blocks");
+        }
+        if let Some(pool) = &self.pool {
+            let need = blocks.len() * pool.page_tokens();
+            if need > self.cfg.input_tokens {
+                bail!(
+                    "preamble {id:?} spans {need} tokens ({} blocks of {}) \
+                     but the serving point's prompts are {} tokens",
+                    blocks.len(),
+                    pool.page_tokens(),
+                    self.cfg.input_tokens
+                );
+            }
+        }
+        self.preambles.insert(id, blocks);
+        Ok(())
+    }
+
     /// Enqueue a request (validated against the server's context budget).
     pub fn submit(&mut self, req: Request) -> Result<()> {
         if !self.adapters.is_registered(req.adapter) {
@@ -708,6 +803,11 @@ impl Server {
         }
         if !req.arrival_s.is_finite() || req.arrival_s < 0.0 {
             bail!("request {} has invalid arrival time {}", req.id, req.arrival_s);
+        }
+        if let Some(p) = req.preamble {
+            if !self.preambles.contains_key(&p) {
+                bail!("request {} declares unregistered preamble {p:?}", req.id);
+            }
         }
         if let Some(pool) = &self.pool {
             // A request whose full context outgrows the whole pool can
@@ -893,6 +993,7 @@ impl Server {
         }
         let ttft = latency_stats(&a.ttfts_s);
         let pc = self.pool.as_ref().map(KvPool::counters).unwrap_or_default();
+        let xc = self.prefix.as_ref().map(PrefixCache::counters).unwrap_or_default();
         ServerStats {
             served,
             adapter_swaps: self.adapters.swaps,
@@ -914,7 +1015,35 @@ impl Server {
             kv_used_pages: self.pool.as_ref().map_or(0, |p| p.used_pages() as u64),
             kv_capacity_pages: self.pool.as_ref().map_or(0, |p| p.capacity_pages() as u64),
             kv_page_tokens: self.pool.as_ref().map_or(0, |p| p.page_tokens() as u64),
+            prefix_admissions: a.prefix_admissions,
+            prefix_hit_blocks: xc.hit_blocks,
+            prefix_miss_blocks: xc.miss_blocks,
+            prefix_interns: xc.interns,
+            prefix_releases: xc.releases,
+            prefix_nodes_created: xc.nodes_created,
+            prefix_nodes_freed: xc.nodes_freed,
+            prefix_live_nodes: self.prefix.as_ref().map_or(0, |c| c.live_nodes() as u64),
+            prefix_prefill_cycles_charged: a.prefix_cycles_charged,
+            prefix_prefill_cycles_saved: a.prefix_cycles_saved,
+            prefix_rram_passes_saved: a.prefix_rram_saved,
+            prefix_energy_saved_j: crate::energy::rram_passes_j(
+                a.prefix_rram_saved,
+                &self.cfg.calib,
+            ),
         }
+    }
+
+    /// One-layer prefill cycles of the full on-template prompt (u64): the
+    /// conservation ledger's per-admission denominator — for any hit
+    /// count, `prefix_prefill_cycles_charged + prefix_prefill_cycles_saved
+    /// == prefix_admissions * prefill_template_cycles() * layers` exactly.
+    pub fn prefill_template_cycles(&self) -> u64 {
+        self.prefill_block_cycles.iter().sum()
+    }
+
+    /// Model depth (the conservation ledger's layer multiplier).
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
     }
 
     /// Process one event. See [`StepOutcome`].
@@ -945,8 +1074,8 @@ impl Server {
                 let mut blocked = false;
                 if let Some(pool) = &self.pool {
                     if let Some(i) = self.policy.peek(&self.waiting[..arrived], &ctx) {
-                        blocked = pool.pages_for_tokens(self.waiting[i].input_tokens)
-                            > pool.free_pages();
+                        blocked =
+                            self.admission_page_need(&self.waiting[i]) > pool.free_pages();
                     }
                 }
                 // When blocked, fall through to decode: steps retire
@@ -1101,26 +1230,120 @@ impl Server {
             self.now_run_base_s + cycles_f64(self.now_run_cycles) * self.cfg.system.cycle_s();
     }
 
-    /// Admit `req`: monolithic (the paper's model) or chunked, depending
-    /// on `prefill_chunk`.
+    /// The preamble block chain `req` maps to, when prefix caching
+    /// applies: continuous mode (the cache lives on the pool), a
+    /// registered preamble, an on-template prompt (off-template lengths
+    /// are costed by per-token scaling and have no block decomposition to
+    /// share), the template's block size matching the pool's page size,
+    /// and a chain that fits inside the prompt. `None` means the request
+    /// takes the plain (PR 7) path, bit-for-bit.
+    fn prefix_chain(&self, req: &Request) -> Option<&Vec<u64>> {
+        let pool = self.pool.as_ref()?;
+        self.prefix.as_ref()?;
+        let chain = self.preambles.get(&req.preamble?)?;
+        if req.input_tokens != self.cfg.input_tokens {
+            return None;
+        }
+        let block = self.prefill_block_s.first().map(|(t, _)| *t).unwrap_or(0);
+        if block != pool.page_tokens() || chain.len() * pool.page_tokens() > req.input_tokens
+        {
+            return None;
+        }
+        Some(chain)
+    }
+
+    /// Pool pages an admission of `req` takes right now: with an
+    /// applicable prefix chain, fresh pages for the chain's miss blocks
+    /// (side-effect-free probe) plus private pages for the unshared
+    /// prompt suffix; otherwise the whole prompt. Stable across a
+    /// fast-forward window — cache state only changes at admissions,
+    /// retirements, and preemptions, none of which occur mid-window.
+    fn admission_page_need(&self, req: &Request) -> usize {
+        let pool = self.pool.as_ref().expect("paged admission gate requires a pool");
+        match (self.prefix_chain(req), self.prefix.as_ref()) {
+            (Some(chain), Some(cache)) => {
+                let (_, misses) = cache.probe(chain);
+                let shared = chain.len() * pool.page_tokens();
+                misses + pool.pages_for_tokens(req.input_tokens - shared)
+            }
+            _ => pool.pages_for_tokens(req.input_tokens),
+        }
+    }
+
+    /// Intern `req`'s preamble chain (when applicable): bump refs on hit
+    /// blocks, allocate one fresh page per miss block, and post the
+    /// admission to the prefill conservation ledger — hit blocks' cycles
+    /// and RRAM passes are credited as saved, suffix blocks' as charged,
+    /// so `saved + charged` equals the monolithic cost exactly. Returns
+    /// `(hit_blocks, shared_tokens)`; `(0, 0)` for plain requests.
+    fn intern_prefix(&mut self, req: &Request) -> Result<(usize, usize)> {
+        let Some(chain) = self.prefix_chain(req).cloned() else {
+            return Ok((0, 0));
+        };
+        let pool = self.pool.as_mut().expect("chain implies a pool");
+        let cache = self.prefix.as_mut().expect("chain implies a cache");
+        let hits = match cache.intern(&chain, pool) {
+            Ok(h) => h,
+            Err(e) => bail!("prefix intern for request {}: {e}", req.id),
+        };
+        #[cfg(debug_assertions)]
+        cache.debug_validate();
+        let l = self.n_layers as u64;
+        let saved: u64 = self.prefill_block_cycles[..hits].iter().sum();
+        let charged: u64 = self.prefill_block_cycles[hits..].iter().sum();
+        let rram: u64 = self.prefill_block_rram[..hits].iter().sum();
+        self.acc.prefix_admissions += 1;
+        self.acc.prefix_cycles_saved += saved * l;
+        self.acc.prefix_cycles_charged += charged * l;
+        self.acc.prefix_rram_saved += rram * l;
+        let shared = chain.len() * self.pool.as_ref().expect("still a pool").page_tokens();
+        Ok((hits, shared))
+    }
+
+    /// Drop `req`'s refs on its interned preamble chain — retirement and
+    /// preemption release identically (a preempted request re-interns at
+    /// re-admission under the then-current cache state). Zero-ref nodes
+    /// free their pages; nodes another in-flight holder refs survive.
+    /// No-op for plain requests.
+    fn release_prefix(&mut self, req: &Request, shared_tokens: usize) {
+        if shared_tokens == 0 {
+            return;
+        }
+        let p = req.preamble.expect("shared tokens imply a preamble");
+        let chain = self.preambles[&p].clone();
+        let pool = self.pool.as_mut().expect("shared tokens imply a pool");
+        let cache = self.prefix.as_mut().expect("shared tokens imply a cache");
+        cache.release(&chain, pool);
+        #[cfg(debug_assertions)]
+        cache.debug_validate();
+    }
+
+    /// Admit `req`: intern its prefix (continuous mode, applicable
+    /// preambles only), then run monolithic (the paper's model) or
+    /// chunked admission over the unshared suffix.
     fn admit(&mut self, req: Request) -> Result<StepOutcome> {
+        let (hit_blocks, shared_tokens) = self.intern_prefix(&req)?;
         match self.prefill_chunk {
-            None => self.admit_monolithic(req),
-            Some(chunk) => self.admit_chunked(req, chunk),
+            None => self.admit_monolithic(req, hit_blocks, shared_tokens),
+            Some(chunk) => self.admit_chunked(req, chunk, hit_blocks, shared_tokens),
         }
     }
 
     /// Assign the next admission sequence number and, in continuous mode,
-    /// allocate the prompt's KV pages under it. A chunked admission takes
-    /// all its prompt pages here too (prefill writes the whole prompt's
-    /// KV before the first decode token; holding the pages from admission
-    /// keeps the gate conservative). The admission gate in `step` checked
-    /// the free-page count, so the allocation cannot fail.
-    fn next_admit_seq(&mut self, req: &Request) -> Result<u64> {
+    /// allocate the prompt's *private* KV pages under it (the shared
+    /// prefix's pages are held by the cache's trie nodes, not the
+    /// admission). A chunked admission takes all its prompt pages here
+    /// too (prefill writes the whole prompt's KV before the first decode
+    /// token; holding the pages from admission keeps the gate
+    /// conservative). The admission gate in `step` checked the free-page
+    /// count, so the allocation cannot fail. A fully shared prompt needs
+    /// zero private pages — the pool registers no holder and the slot's
+    /// first page arrives via `grow_to` at its first decode step.
+    fn next_admit_seq(&mut self, req: &Request, shared_tokens: usize) -> Result<u64> {
         let seq = self.admit_seq;
         self.admit_seq += 1;
         if let Some(pool) = self.pool.as_mut() {
-            let need = pool.pages_for_tokens(req.input_tokens);
+            let need = pool.pages_for_tokens(req.input_tokens - shared_tokens);
             if let Err(e) = pool.alloc(seq, need) {
                 bail!("kv pool admission for request {}: {e}", req.id);
             }
@@ -1145,9 +1368,17 @@ impl Server {
     /// optional golden execution — one atomic event. Prefill occupies the
     /// whole accelerator (the paper's prefill is layer-sequential across
     /// every CT group), so in-flight decode slots stall for the duration.
-    fn admit_monolithic(&mut self, req: Request) -> Result<StepOutcome> {
+    /// With `hit_blocks > 0` the leading interned blocks' prefill is
+    /// skipped: only the suffix blocks are summed — at zero hits the
+    /// expression is the identical full-template sum, bit-for-bit.
+    fn admit_monolithic(
+        &mut self,
+        req: Request,
+        hit_blocks: usize,
+        shared_tokens: usize,
+    ) -> Result<StepOutcome> {
         let start_s = self.now_s;
-        let admit_seq = self.next_admit_seq(&req)?;
+        let admit_seq = self.next_admit_seq(&req, shared_tokens)?;
         let swap = match self.adapters.admit(req.adapter) {
             SwapOutcome::Hit => false,
             SwapOutcome::Swap { .. } => true,
@@ -1158,8 +1389,9 @@ impl Server {
         // Scale the prefill template if the request length differs from
         // the server's configured point (simple re-blocking).
         let prefill_per_layer: f64 = if req.input_tokens == self.cfg.input_tokens {
-            self.prefill_block_s.iter().map(|(_, s)| s).sum()
+            self.prefill_block_s[hit_blocks..].iter().map(|(_, s)| s).sum()
         } else {
+            debug_assert_eq!(hit_blocks, 0, "off-template prompts never share");
             let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
                 / self.cfg.input_tokens as f64;
             per_tok * req.input_tokens as f64
@@ -1186,6 +1418,7 @@ impl Server {
             pending_stall_s: 0.0,
             golden_exec_ms,
             admit_seq,
+            shared_tokens,
         });
         self.acc.max_batch_observed = self.acc.max_batch_observed.max(self.batch.len());
         Ok(StepOutcome::Admitted { request: id, swap })
@@ -1197,58 +1430,91 @@ impl Server {
     /// no simulated time (the swap's reprogramming latency is folded into
     /// the job's first chunk — with an adapter mismatch the batch is
     /// necessarily empty, so there is nobody to stall).
-    fn admit_chunked(&mut self, req: Request, chunk: usize) -> Result<StepOutcome> {
+    fn admit_chunked(
+        &mut self,
+        req: Request,
+        chunk: usize,
+        hit_blocks: usize,
+        shared_tokens: usize,
+    ) -> Result<StepOutcome> {
         let start_s = self.now_s;
-        let admit_seq = self.next_admit_seq(&req)?;
+        let admit_seq = self.next_admit_seq(&req, shared_tokens)?;
         let swap = match self.adapters.admit(req.adapter) {
             SwapOutcome::Hit => false,
             SwapOutcome::Swap { .. } => true,
         };
         let reprog_s = if swap { self.reprog_ttft_s } else { 0.0 };
-        let cum = self.chunk_schedule(req.input_tokens, chunk);
+        let (cum, cum_tokens) = self.chunk_schedule(req.input_tokens, chunk, hit_blocks);
         let golden_exec_ms = self.golden_step_ms()?;
         let id = req.id;
         self.jobs.push_back(
-            PrefillJob::new(req, swap, start_s, reprog_s, cum, golden_exec_ms)
-                .with_admit_seq(admit_seq),
+            PrefillJob::new(req, swap, start_s, reprog_s, cum, cum_tokens, golden_exec_ms)
+                .with_admit_seq(admit_seq)
+                .with_shared_tokens(shared_tokens),
         );
         Ok(StepOutcome::Admitted { request: id, swap })
     }
 
     /// Cumulative chunk schedule for a prompt of `input` tokens at chunk
-    /// size `chunk`: entry `j` is the prefill compute (seconds, all
-    /// layers) after chunks `0..=j`.
+    /// size `chunk`, skipping the first `skip_blocks` template blocks
+    /// (the prefix-cache hits, whose prefill is already interned): the
+    /// first vector's entry `j` is the prefill compute (seconds, all
+    /// layers) after chunks `0..=j`, the second's is the prompt tokens
+    /// whose KV *this job* has written by then — hit blocks are excluded
+    /// (their KV pre-exists in the cache and is not lost to eviction), so
+    /// the preemption-cost ledger charges exactly the prefill work a
+    /// mid-flight eviction discards.
     ///
     /// Chunks are realized on the prefill block decomposition the
     /// monolithic path costs (blocks of <= 128 tokens via
     /// `dataflow::prefill_program`, causal KV at mid-block), so the chunk
     /// boundary rounds up to whole blocks and the *last* cumulative entry
     /// is computed with the exact monolithic expression — total prefill
-    /// time is conserved bit-for-bit across every chunk size.
-    fn chunk_schedule(&self, input: usize, chunk: usize) -> Vec<f64> {
+    /// time is conserved bit-for-bit across every chunk size, and with
+    /// `skip_blocks == 0` the schedule is the PR 7 schedule unchanged.
+    fn chunk_schedule(
+        &self,
+        input: usize,
+        chunk: usize,
+        skip_blocks: usize,
+    ) -> (Vec<f64>, Vec<usize>) {
         let nl = self.n_layers as f64;
         if input == self.cfg.input_tokens {
-            let blocks = &self.prefill_block_s;
-            let block_tokens = blocks.first().map(|(t, _)| *t).unwrap_or(1).max(1);
+            let blocks = &self.prefill_block_s[skip_blocks..];
+            let block_tokens =
+                self.prefill_block_s.first().map(|(t, _)| *t).unwrap_or(1).max(1);
             let per_chunk = chunk.div_ceil(block_tokens).max(1);
             let mut cum = Vec::new();
+            let mut cum_tokens = Vec::new();
             let mut k = 0usize;
             while k < blocks.len() {
                 let k1 = (k + per_chunk).min(blocks.len());
                 let sum: f64 = blocks[..k1].iter().map(|(_, s)| s).sum();
                 cum.push(sum * nl);
+                cum_tokens.push(blocks[..k1].iter().map(|(t, _)| t).sum::<usize>());
                 k = k1;
             }
-            cum
+            if cum.is_empty() {
+                // A fully interned prompt has nothing left to prefill;
+                // one zero-cost chunk carries the job through the event
+                // machinery (the swap's reprogramming latency, if any,
+                // still runs inside it).
+                cum.push(0.0);
+                cum_tokens.push(0);
+            }
+            (cum, cum_tokens)
         } else {
+            debug_assert_eq!(skip_blocks, 0, "off-template prompts never share");
             // Off-template lengths use the same per-token scaling as the
             // monolithic path, cut at exact chunk boundaries.
             let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
                 / self.cfg.input_tokens as f64;
             let n_chunks = input.div_ceil(chunk).max(1);
-            (1..=n_chunks)
+            let cum = (1..=n_chunks)
                 .map(|j| (per_tok * ((j * chunk).min(input)) as f64) * nl)
-                .collect()
+                .collect();
+            let cum_tokens = (1..=n_chunks).map(|j| (j * chunk).min(input)).collect();
+            (cum, cum_tokens)
         }
     }
 
@@ -1305,7 +1571,7 @@ impl Server {
                 .slots()
                 .iter()
                 .map(|s| {
-                    pool.pages_for_tokens(s.kv_len() + 1)
+                    pool.pages_for_tokens(s.private_kv_len() + 1)
                         .saturating_sub(pool.held_pages(s.admit_seq))
                 })
                 .sum();
@@ -1339,13 +1605,19 @@ impl Server {
         }
     }
 
-    /// Evict the prefill job at `ji` (restart-from-prefill).
+    /// Evict the prefill job at `ji` (restart-from-prefill), discarding
+    /// the prompt KV its finished chunks already wrote — the restart
+    /// re-prefills them, so they are charged to the preemption-cost
+    /// ledger exactly like a slot's generated tokens (the historic path
+    /// silently dropped them and undercounted `preempted_tokens`).
     fn preempt_job(&mut self, ji: usize) -> u64 {
         let job = self.jobs.remove(ji).expect("victim job index");
         if let Some(pool) = self.pool.as_mut() {
             pool.release(job.admit_seq);
         }
         self.acc.preemptions += 1;
+        self.acc.preempted_tokens += job.tokens_done() as u64;
+        self.release_prefix(&job.req, job.shared_tokens);
         let req = job.req;
         let id = req.id;
         let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
@@ -1362,6 +1634,7 @@ impl Server {
         }
         self.acc.preemptions += 1;
         self.acc.preempted_tokens += slot.generated as u64;
+        self.release_prefix(&slot.req, slot.shared_tokens);
         let req = slot.req;
         let id = req.id;
         let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
@@ -1381,7 +1654,7 @@ impl Server {
         }
         if let Some(pool) = self.pool.as_mut() {
             for s in self.batch.slots() {
-                pool.grow_to(s.admit_seq, s.kv_len() + 1)
+                pool.grow_to(s.admit_seq, s.private_kv_len() + 1)
                     .expect("resolve_kv_pressure guarantees capacity");
             }
             #[cfg(debug_assertions)]
@@ -1468,10 +1741,14 @@ impl Server {
                         // Page-blocked admission stays blocked for the
                         // whole window: free pages only shrink as slots
                         // grow (no completion before the window's end),
-                        // so the candidate cannot become admissible
-                        // mid-window and decode may fast-forward past it.
+                        // prefix-cache state only changes at admissions,
+                        // retirements, and preemptions (none occur
+                        // mid-window, so the probe's miss count is
+                        // stable too) — the candidate cannot become
+                        // admissible mid-window and decode may
+                        // fast-forward past it.
                         Some(pool)
-                            if pool.pages_for_tokens(self.waiting[i].input_tokens)
+                            if self.admission_page_need(&self.waiting[i])
                                 > pool.free_pages() => {}
                         _ => return None,
                     }
@@ -1503,7 +1780,7 @@ impl Server {
                     .slots()
                     .iter()
                     .map(|s| {
-                        pool.pages_for_tokens(s.kv_len() + m)
+                        pool.pages_for_tokens(s.private_kv_len() + m)
                             .saturating_sub(pool.held_pages(s.admit_seq))
                     })
                     .sum()
@@ -1600,7 +1877,7 @@ impl Server {
         if let Some(pool) = &self.pool {
             let pt = pool.page_tokens();
             for (si, s) in self.batch.slots().iter().enumerate() {
-                let kv = s.kv_len();
+                let kv = s.private_kv_len();
                 for step in 0..k {
                     if (kv + step) % pt == 0 {
                         window_allocs.push((step, si, s.admit_seq));
@@ -1680,11 +1957,14 @@ impl Server {
     }
 
     fn retire(&mut self, s: Slot) {
-        // Continuous mode: a completed slot frees its pages immediately,
-        // re-opening the admission gate at the very next event.
+        // Continuous mode: a completed slot frees its private pages
+        // immediately, re-opening the admission gate at the very next
+        // event; its refs on shared prefix nodes drop too, freeing each
+        // node's page only when this was its last sharer.
         if let Some(pool) = self.pool.as_mut() {
             pool.release(s.admit_seq);
         }
+        self.release_prefix(&s.req, s.shared_tokens);
         let decode_s = s.decode_s(self.cfg.system.cycle_s());
         let itl_ms = decode_s / s.req.output_tokens as f64 * 1e3;
         let total = s.ttft_s + s.stall_s + decode_s;
@@ -2280,5 +2560,215 @@ mod tests {
         assert_eq!(sl.ttft.p95.to_bits(), sc.ttft.p95.to_bits());
         assert_eq!(sl.itl.p99.to_bits(), sc.itl.p99.to_bits());
         assert_eq!(sc.preemptions, 0);
+    }
+
+    #[test]
+    fn stats_are_zero_and_finite_with_no_samples() {
+        // Satellite of the continuous-mode bugfix sweep: a stats snapshot
+        // over zero served requests (e.g. an all-preempted window probe)
+        // must be all-zero, never NaN — `latency_stats` returns the
+        // default on empty sample sets and nearest-rank clamps at n = 1.
+        let empty = latency_stats(&[]);
+        assert_eq!(
+            (empty.mean, empty.p50, empty.p95, empty.p99),
+            (0.0, 0.0, 0.0, 0.0)
+        );
+        let s = server();
+        let st = s.stats();
+        assert_eq!(st.served, 0);
+        for v in [
+            st.mean_ttft_s,
+            st.mean_itl_ms,
+            st.ttft.mean,
+            st.ttft.p50,
+            st.ttft.p95,
+            st.ttft.p99,
+            st.itl.p99,
+            st.queue.p95,
+            st.prefix_energy_saved_j,
+        ] {
+            assert!(v.is_finite(), "empty-set stat must be finite, got {v}");
+            assert_eq!(v, 0.0);
+        }
+    }
+
+    fn prefix_server(max_batch: usize) -> Server {
+        let exp = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            256,
+        );
+        ServerBuilder::from_experiment(exp)
+            .max_batch(max_batch)
+            .continuous(true)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn prefix_reuse_skips_shared_prefill_and_conserves_flops() {
+        let mut s = prefix_server(2);
+        s.register_adapter(AdapterId(1));
+        s.register_preamble(PreambleId(0), vec![0xA1]).unwrap();
+        for i in 0..4u64 {
+            s.submit(req(i, 1).with_preamble(PreambleId(0))).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 4);
+        // Request 1 admitted while request 0 held the preamble interned:
+        // its prefill skipped the shared block (strictly smaller TTFT even
+        // ignoring request 0's adapter swap — one template block of two).
+        let t0 = results.iter().find(|r| r.request == 0).unwrap().ttft_s;
+        let t1 = results.iter().find(|r| r.request == 1).unwrap().ttft_s;
+        assert!(t1 < t0, "hit TTFT {t1} must undercut cold TTFT {t0}");
+        let st = s.stats();
+        assert_eq!(st.prefix_admissions, 4);
+        assert!(st.prefix_hit_blocks >= 1, "in-flight sharers must hit");
+        assert_eq!(st.prefix_interns, 4);
+        assert_eq!(st.prefix_releases, 4, "every intern released at drain");
+        assert_eq!(st.prefix_nodes_created, st.prefix_nodes_freed);
+        assert_eq!(st.prefix_live_nodes, 0);
+        // Prefill FLOP conservation, exact in u64: charged + saved is the
+        // monolithic cost of every prefix admission.
+        let total = s.prefill_template_cycles() * s.n_layers() as u64;
+        assert_eq!(
+            st.prefix_prefill_cycles_charged + st.prefix_prefill_cycles_saved,
+            st.prefix_admissions * total,
+            "hit + miss prefill cycles must equal the monolithic cost"
+        );
+        assert!(st.prefix_rram_passes_saved > 0);
+        assert!(st.prefix_energy_saved_j > 0.0);
+        // Page audit: pool drained, cache drained.
+        assert_eq!(st.kv_page_allocs, st.kv_page_frees);
+        assert_eq!(st.kv_used_pages, 0);
+    }
+
+    #[test]
+    fn cold_prefix_chains_bitmatch_plain_requests() {
+        // At batch 1 each retirement frees the sole holder's nodes, so
+        // every admission re-interns cold (zero hits) — the prefix path
+        // must then be numerically invisible: timing bits identical to
+        // the same trace without preambles, pool counters identical
+        // (chain pages + private pages == the plain prompt's pages).
+        let run = |preamble: bool| {
+            let mut s = prefix_server(1);
+            s.register_adapter(AdapterId(1));
+            s.register_preamble(PreambleId(7), vec![0xB2]).unwrap();
+            for i in 0..3u64 {
+                let r = req(i, 1);
+                let r = if preamble { r.with_preamble(PreambleId(7)) } else { r };
+                s.submit(r).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            (results, s.stats())
+        };
+        let (rp, sp) = run(true);
+        let (rn, sn) = run(false);
+        for (a, b) in rp.iter().zip(&rn) {
+            assert_eq!(a.request, b.request);
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits());
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        }
+        assert_eq!(sp.sim_time_s.to_bits(), sn.sim_time_s.to_bits());
+        assert_eq!(sp.kv_page_allocs, sn.kv_page_allocs);
+        assert_eq!(sp.kv_page_frees, sn.kv_page_frees);
+        assert_eq!(sp.kv_peak_pages, sn.kv_peak_pages);
+        assert_eq!(sp.prefix_hit_blocks, 0, "batch 1 never overlaps holders");
+        assert_eq!(sp.prefix_admissions, 3);
+        assert_eq!(sn.prefix_admissions, 0);
+    }
+
+    #[test]
+    fn fully_shared_prompt_admits_with_zero_private_pages() {
+        // A preamble covering the whole 256-token prompt: the second
+        // admission hits both blocks and allocates zero private pages
+        // (the pool's zero-alloc no-op path) — its first page arrives at
+        // its first decode step via grow_to.
+        let mut s = prefix_server(2);
+        s.register_adapter(AdapterId(1));
+        s.register_preamble(PreambleId(3), vec![0xC1, 0xC2]).unwrap();
+        for i in 0..2u64 {
+            s.submit(req(i, 1).with_preamble(PreambleId(3))).unwrap();
+        }
+        let results = s.drain(None).unwrap();
+        assert_eq!(results.len(), 2);
+        let st = s.stats();
+        assert_eq!(st.prefix_hit_blocks, 2, "second admission hits the whole chain");
+        assert_eq!(st.prefix_miss_blocks, 2);
+        assert_eq!(st.kv_used_pages, 0);
+        assert_eq!(st.kv_page_allocs, st.kv_page_frees);
+        assert_eq!(st.preemptions, 0);
+    }
+
+    #[test]
+    fn preambles_validate_at_registration_and_submit() {
+        let mut s = prefix_server(1);
+        s.register_adapter(AdapterId(1));
+        // Unregistered preambles are rejected at the door.
+        assert!(s.submit(req(0, 1).with_preamble(PreambleId(9))).is_err());
+        // Empty chains and chains past the prompt length are rejected.
+        assert!(s.register_preamble(PreambleId(0), vec![]).is_err());
+        assert!(s.register_preamble(PreambleId(0), vec![1, 2, 3]).is_err());
+        assert!(s.register_preamble(PreambleId(0), vec![1, 2]).is_ok());
+        assert!(s.submit(req(1, 1).with_preamble(PreambleId(0))).is_ok());
+        // Lockstep servers accept preambles and ignore them (no pool to
+        // share pages on — the plain path, with zero prefix stats).
+        let mut l = server();
+        l.register_adapter(AdapterId(1));
+        l.register_preamble(PreambleId(0), vec![1]).unwrap();
+        l.submit(req(0, 1).with_preamble(PreambleId(0))).unwrap();
+        assert_eq!(l.drain(None).unwrap().len(), 1);
+        assert_eq!(l.stats().prefix_admissions, 0);
+        assert_eq!(l.stats().prefix_interns, 0);
+    }
+
+    #[test]
+    fn chunked_prefix_admission_prefills_only_the_suffix() {
+        // Chunked + prefix: the job's schedule covers only unshared
+        // suffix blocks. Request 1's TTFT includes waiting out request
+        // 0's chunks either way, so the sharing win shows against the
+        // same trace without preambles, not against request 0.
+        let run = |share: bool| {
+            let exp = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                256,
+            );
+            let mut s = ServerBuilder::from_experiment(exp)
+                .max_batch(2)
+                .continuous(true)
+                .prefill_chunk(Some(128))
+                .build()
+                .unwrap();
+            s.register_adapter(AdapterId(1));
+            s.register_preamble(PreambleId(0), vec![0xD1]).unwrap();
+            for i in 0..2u64 {
+                let r = req(i, 1);
+                let r = if share { r.with_preamble(PreambleId(0)) } else { r };
+                s.submit(r).unwrap();
+            }
+            let results = s.drain(None).unwrap();
+            let t1 = results.iter().find(|r| r.request == 1).unwrap().ttft_s;
+            let conservation = {
+                let st = s.stats();
+                let total = s.prefill_template_cycles() * s.n_layers() as u64;
+                (st, total)
+            };
+            (t1, conservation)
+        };
+        let (t1_shared, (st, total)) = run(true);
+        let (t1_plain, _) = run(false);
+        assert!(
+            t1_shared < t1_plain,
+            "hit suffix prefill {t1_shared} must undercut the full prompt {t1_plain}"
+        );
+        assert_eq!(st.prefix_hit_blocks, 1, "second admission hits the shared block");
+        assert_eq!(
+            st.prefix_prefill_cycles_charged + st.prefix_prefill_cycles_saved,
+            st.prefix_admissions * total
+        );
+        assert_eq!(st.prefix_interns, st.prefix_releases);
+        assert_eq!(st.kv_used_pages, 0);
     }
 }

@@ -17,6 +17,13 @@ pub use macros_model::{MacroBreakdown, MacroKind, macro_breakdown};
 
 use crate::config::{CalibConstants, SystemConfig};
 
+/// Joules of `n` RRAM-ACIM analog passes. This is the single conversion
+/// both the ledger's dynamic posting and the serving side's prefix-reuse
+/// "passes saved" credit use, so the two accountings can never drift.
+pub fn rram_passes_j(n: u64, calib: &CalibConstants) -> f64 {
+    n as f64 * calib.rram_pass_energy_nj * 1e-9
+}
+
 /// Power state of one compute tile at a point in simulated time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CtPowerState {
@@ -86,7 +93,7 @@ impl EnergyLedger {
 
     /// `n` RRAM-ACIM analog passes (DAC -> crossbar -> ADC).
     pub fn post_rram_passes(&mut self, n: u64) {
-        self.breakdown.rram_j += n as f64 * self.calib.rram_pass_energy_nj * 1e-9;
+        self.breakdown.rram_j += rram_passes_j(n, &self.calib);
     }
 
     /// `n` SRAM-DCIM digital MAC passes.

@@ -13,7 +13,8 @@
 
 use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use primal::coordinator::{
-    AdapterId, FunctionalMode, Request, RequestResult, ServerBuilder, ServerStats,
+    AdapterId, FunctionalMode, PreambleId, Request, RequestResult, ServerBuilder,
+    ServerStats,
 };
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
@@ -37,15 +38,21 @@ commands:
               to --jobs 1, just faster; --hetero: table 2 variant with
               mixed prompt lengths per batch — one row per prompt mix)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
-             [--batch N] [--chips N] [--policy fcfs|affinity|sjf[,..]]
+             [--batch N] [--chips N] [--policy fcfs|affinity|sjf|prefix[,..]]
              [--rate R] [--seeds K] [--jobs N] [--prefill-chunk N]
              [--max-run-len N] [--no-calendar] [--golden]
-             [--trace poisson|bursty|diurnal] [--continuous] [--kv-pages N]
+             [--trace poisson|bursty|diurnal|prefix] [--continuous]
+             [--kv-pages N] [--prefix-share F] [--preambles N]
              (--rate R: Poisson arrivals at R req/s; 0 = all at t=0;
               --trace <kind>: generate the request mix from the seeded
               fleet-scale workload generator (arrival law <kind>, Zipf
               adapter mix, mixed lengths; scales to 10^5+ requests;
               --rate then sets the generator's mean rate);
+              --trace prefix: shared-prefix mix — a --prefix-share
+              fraction of requests carry a preamble drawn Zipf-style
+              from a --preambles-entry library; their leading prompt
+              blocks hit the KV prefix cache and skip re-prefilling
+              (continuous mode only; prompts pin the template length);
               --continuous: continuous batching on the paged KV pool —
               admission gates on free pages, retirement frees them,
               KV pressure preempts the youngest admission;
@@ -73,6 +80,8 @@ examples:
                --seeds 2 --jobs 2
   primal serve --model 1b --requests 100000 --trace bursty --continuous \\
                --batch 8 --rate 200
+  primal serve --model 1b --ctx 256 --requests 64 --trace prefix \\
+               --continuous --batch 4 --prefix-share 0.8 --policy prefix
   primal report --table 2 --hetero --chips 2
   primal validate"
     );
@@ -319,7 +328,7 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
         .map(|name| {
             PolicyKind::parse(name.trim()).unwrap_or_else(|| {
                 eprintln!(
-                    "unknown policy '{name}' (try fcfs, affinity, sjf; \
+                    "unknown policy '{name}' (try fcfs, affinity, sjf, prefix; \
                      comma-separate for a policy grid)"
                 );
                 usage()
@@ -358,12 +367,24 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     let max_run_len = positive_flag("max-run-len");
     let trace_kind = flags.get("trace").map(|name| {
         WorkloadKind::parse(name).unwrap_or_else(|| {
-            eprintln!("unknown trace kind '{name}' (try poisson, bursty, diurnal)");
+            eprintln!("unknown trace kind '{name}' (try poisson, bursty, diurnal, prefix)");
             usage()
         })
     });
     let continuous = flags.contains_key("continuous");
     let kv_pages = positive_flag("kv-pages");
+    // --prefix-share is a probability: reject anything outside [0, 1].
+    let prefix_share: f64 = match flags.get("prefix-share") {
+        None => 0.5,
+        Some(v) => match v.parse::<f64>() {
+            Ok(f) if (0.0..=1.0).contains(&f) => f,
+            _ => {
+                eprintln!("--prefix-share expects a fraction in [0, 1], got '{v}'");
+                usage()
+            }
+        },
+    };
+    let preambles = num_flag(&flags, "preambles", 4).max(1);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     cfg.serving.affinity_max_run_len = max_run_len;
     cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
@@ -398,8 +419,20 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
             let mut spec = WorkloadSpec::new(kind, seed, n_requests);
             spec.adapters = n_adapters;
             spec.max_input = ctx;
+            spec.prefix_share = prefix_share;
+            spec.preambles = preambles;
             if rate > 0.0 {
                 spec.rate_per_s = rate;
+            }
+            if kind == WorkloadKind::Prefix {
+                // Register the trace's preamble library before any shared
+                // request arrives: the server rejects submissions naming
+                // an unknown preamble.
+                for (p, chain) in spec.preamble_library().chains().iter().enumerate() {
+                    server
+                        .register_preamble(PreambleId(p as u32), chain.clone())
+                        .map_err(|e| format!("preamble registration failed: {e:#}"))?;
+                }
             }
             for req in spec.generate() {
                 server
@@ -540,6 +573,22 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
                     s.kv_page_frees,
                     s.preemptions,
                     s.preempted_tokens,
+                );
+            }
+            if s.prefix_admissions > 0 {
+                let blocks = s.prefix_hit_blocks + s.prefix_miss_blocks;
+                println!(
+                    "prefix reuse: {} preambled admissions, {}/{} blocks hit; \
+                     {} prefill cycles saved ({} charged); {} RRAM passes \
+                     saved ({:.3} mJ); {} cache nodes live at end",
+                    s.prefix_admissions,
+                    s.prefix_hit_blocks,
+                    blocks,
+                    s.prefix_prefill_cycles_saved,
+                    s.prefix_prefill_cycles_charged,
+                    s.prefix_rram_passes_saved,
+                    s.prefix_energy_saved_j * 1e3,
+                    s.prefix_live_nodes,
                 );
             }
             println!("\nadapter  served  tokens_out  swaps  hits");

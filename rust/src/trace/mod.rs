@@ -7,12 +7,15 @@
 //! layer-sequential decode sweep.
 //!
 //! The [`workload`] submodule is the other kind of trace: fleet-scale
-//! synthetic *request* traces (seeded Poisson / bursty / diurnal
-//! arrivals) feeding the serving coordinator via `serve --trace`.
+//! synthetic *request* traces (seeded Poisson / bursty / diurnal /
+//! shared-prefix arrivals) feeding the serving coordinator via
+//! `serve --trace`.
 
 pub mod workload;
 
-pub use workload::{load_checksum, WorkloadKind, WorkloadSpec};
+pub use workload::{
+    load_checksum, preamble_checksum, PreambleLibrary, WorkloadKind, WorkloadSpec,
+};
 
 /// Activity classes shown in the timing diagram.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

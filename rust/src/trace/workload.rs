@@ -17,16 +17,20 @@
 //!   pick, prompt length, and output length with a *fixed* number of
 //!   draws per request, regardless of the arrival process.
 //!
-//! Consequence: the (adapter, input, output) sequence is identical for
-//! every [`WorkloadKind`] at a given seed and is reproducible from
-//! integer RNG output alone (the adapter pick compares `f64()` values,
-//! which are exact dyadic rationals), so the Python mirror blesses
-//! load-stream checksums while arrival-gap bits — the only libm-touching
-//! values — are gated Rust-vs-Rust by the replay tests. The diurnal rate
-//! modulation is a triangle wave, not a sinusoid, for the same reason:
-//! no transcendental calls whose bits could drift across toolchains.
+//! Consequence: the (adapter, output) sequence is identical for every
+//! [`WorkloadKind`] at a given seed and is reproducible from integer RNG
+//! output alone (the adapter pick compares `f64()` values, which are
+//! exact dyadic rationals), so the Python mirror blesses load-stream
+//! checksums while arrival-gap bits — the only libm-touching values —
+//! are gated Rust-vs-Rust by the replay tests. The prompt length is also
+//! identical across kinds except [`WorkloadKind::Prefix`], which spends
+//! the same two middle draws on its share coin and preamble pick and pins
+//! the prompt at `max_input` (shared-prefix reuse needs on-template
+//! prompts). The diurnal rate modulation is a triangle wave, not a
+//! sinusoid, for the same reason: no transcendental calls whose bits
+//! could drift across toolchains.
 
-use crate::coordinator::{AdapterId, Request};
+use crate::coordinator::{AdapterId, PreambleId, Request};
 use crate::util::Rng;
 
 /// Decouples the load stream from the time stream (any fixed odd salt).
@@ -45,6 +49,12 @@ pub enum WorkloadKind {
     /// triangle wave between `(1 - amplitude)` and `(1 + amplitude)`
     /// times the mean rate.
     Diurnal,
+    /// Shared-prefix mix: Poisson arrivals where a `prefix_share`
+    /// fraction of requests carry a preamble drawn Zipf-style from a
+    /// deterministic [`PreambleLibrary`], and every prompt is pinned at
+    /// `max_input` so shared requests are on the prefill template the
+    /// prefix cache can intern.
+    Prefix,
 }
 
 impl WorkloadKind {
@@ -54,6 +64,7 @@ impl WorkloadKind {
             "poisson" => Some(WorkloadKind::Poisson),
             "bursty" => Some(WorkloadKind::Bursty),
             "diurnal" => Some(WorkloadKind::Diurnal),
+            "prefix" => Some(WorkloadKind::Prefix),
             _ => None,
         }
     }
@@ -63,6 +74,7 @@ impl WorkloadKind {
             WorkloadKind::Poisson => "poisson",
             WorkloadKind::Bursty => "bursty",
             WorkloadKind::Diurnal => "diurnal",
+            WorkloadKind::Prefix => "prefix",
         }
     }
 }
@@ -81,10 +93,21 @@ pub struct WorkloadSpec {
     /// (weight 1/(k+1)), so adapter 0 dominates and the tail thins out.
     pub adapters: usize,
     /// Prompt-length ceiling; prompts are drawn at the ceiling, its half,
-    /// or its quarter, minus integer jitter (floor 16 tokens).
+    /// or its quarter, minus integer jitter (floor 16 tokens). The
+    /// [`WorkloadKind::Prefix`] mix instead pins every prompt at the
+    /// ceiling (shared prefixes require on-template prompts).
     pub max_input: usize,
     /// Output lengths are uniform in [4, 4 + max_output).
     pub max_output: usize,
+    /// Fraction of requests carrying a preamble under
+    /// [`WorkloadKind::Prefix`] (ignored by the other kinds). The share
+    /// coin is compared as `f64() < prefix_share`, exact for dyadic
+    /// shares like 0.5.
+    pub prefix_share: f64,
+    /// Preamble-library size for [`WorkloadKind::Prefix`]: shared
+    /// requests draw their preamble Zipf-style from
+    /// `PreambleLibrary::new(preambles, max_input / 128)`.
+    pub preambles: usize,
 }
 
 impl WorkloadSpec {
@@ -98,7 +121,17 @@ impl WorkloadSpec {
             adapters: 4,
             max_input: 256,
             max_output: 60,
+            prefix_share: 0.5,
+            preambles: 4,
         }
+    }
+
+    /// The preamble library this spec's shared requests draw from: one
+    /// chain per library entry, depths cycling up to the template span
+    /// (`max_input / 128` blocks). Re-derive this on the serving side to
+    /// register the same chains the trace references.
+    pub fn preamble_library(&self) -> PreambleLibrary {
+        PreambleLibrary::new(self.preambles, (self.max_input / 128).max(1))
     }
 
     /// Realize the spec as `requests` arrival-sorted [`Request`]s with
@@ -114,12 +147,24 @@ impl WorkloadSpec {
         let weights: Vec<f64> = (0..self.adapters).map(|k| 1.0 / (k as f64 + 1.0)).collect();
         let total_weight: f64 = weights.iter().sum();
 
+        if self.kind == WorkloadKind::Prefix {
+            assert!(self.preambles > 0, "prefix workload needs a preamble library");
+        }
+        // Same Zipf shape for the preamble pick as for the adapter pick.
+        let pre_weights: Vec<f64> =
+            (0..self.preambles.max(1)).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let pre_total: f64 = pre_weights.iter().sum();
+
         let mut arrivals = ArrivalProcess::new(self.kind, self.rate_per_s);
         let mut out = Vec::with_capacity(self.requests);
         for id in 0..self.requests as u64 {
             let t = arrivals.next_arrival(&mut time);
             // Load stream: exactly 4 draws per request (1 adapter pick +
-            // 2 prompt draws + 1 output draw), whatever the arrival law.
+            // 2 middle draws + 1 output draw), whatever the arrival law.
+            // The middle draws are prompt length draws for the classic
+            // kinds; the prefix mix spends them on its share coin and
+            // preamble pick (drawn even when the coin misses, so the
+            // stream alignment never depends on the coin's outcome).
             let pick = load.f64() * total_weight;
             let mut acc = 0.0;
             let mut adapter = self.adapters - 1;
@@ -130,15 +175,83 @@ impl WorkloadSpec {
                     break;
                 }
             }
-            let base = self.max_input.max(16) >> load.range(0, 3);
-            let jitter = load.range(0, base / 8 + 1);
-            let input = (base - jitter).max(16);
+            let (input, preamble) = if self.kind == WorkloadKind::Prefix {
+                let shared = load.f64() < self.prefix_share;
+                let ppick = load.f64() * pre_total;
+                let mut pacc = 0.0;
+                let mut p = self.preambles - 1;
+                for (k, w) in pre_weights.iter().enumerate() {
+                    pacc += w;
+                    if ppick < pacc {
+                        p = k;
+                        break;
+                    }
+                }
+                (self.max_input, shared.then_some(PreambleId(p as u32)))
+            } else {
+                let base = self.max_input.max(16) >> load.range(0, 3);
+                let jitter = load.range(0, base / 8 + 1);
+                ((base - jitter).max(16), None)
+            };
             let output = 4 + load.range(0, self.max_output.max(1));
-            out.push(
-                Request::new(id, AdapterId(adapter as u32), input, output).at(t),
-            );
+            let mut req = Request::new(id, AdapterId(adapter as u32), input, output).at(t);
+            if let Some(p) = preamble {
+                req = req.with_preamble(p);
+            }
+            out.push(req);
         }
         out
+    }
+}
+
+/// Deterministic preamble library: `n` prompt-prefix chains of 128-token
+/// block content hashes, prefix-closed by construction (two chains that
+/// agree at block depth `d` agree at every shallower depth), so interning
+/// them builds a genuine tree with shared roots. Chain `p` keeps
+/// `1 + p % max_blocks` blocks; block `d` hashes the preamble-index group
+/// `p >> (max_blocks - 1 - d)` — coarse at the root (many preambles share
+/// the fleet's system prompt), unique at the leaves. Pure integer mixing
+/// (splitmix64 finalizer), so the Python mirror re-derives identical
+/// chains.
+#[derive(Debug, Clone, Default)]
+pub struct PreambleLibrary {
+    chains: Vec<Vec<u64>>,
+}
+
+/// splitmix64 finalizer: the block content hash behind the library.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl PreambleLibrary {
+    pub fn new(preambles: usize, max_blocks: usize) -> Self {
+        assert!(max_blocks >= 1, "preamble chains need at least one block");
+        let chains = (0..preambles)
+            .map(|p| {
+                let depth = 1 + p % max_blocks;
+                (0..depth)
+                    .map(|d| {
+                        let group = (p >> (max_blocks - 1 - d)) as u64;
+                        mix64((d as u64) << 32 | group)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { chains }
+    }
+
+    pub fn chains(&self) -> &[Vec<u64>] {
+        &self.chains
+    }
+
+    pub fn len(&self) -> usize {
+        self.chains.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chains.is_empty()
     }
 }
 
@@ -177,7 +290,9 @@ impl ArrivalProcess {
 
     fn next_arrival(&mut self, time: &mut Rng) -> f64 {
         match self.kind {
-            WorkloadKind::Poisson => {
+            // The prefix mix is memoryless in time: it differs from
+            // Poisson only in how the load stream is spent.
+            WorkloadKind::Poisson | WorkloadKind::Prefix => {
                 self.t += time.exponential(self.rate);
             }
             WorkloadKind::Bursty => {
@@ -226,12 +341,24 @@ pub fn load_checksum(reqs: &[Request]) -> (u64, u64, u64) {
     (a, i, o)
 }
 
+/// Integer preamble checksum for the prefix mix: `sum(preamble + 1)` over
+/// requests carrying one (the `+ 1` distinguishes "everyone drew preamble
+/// 0" from "nobody shared"). Reproducible from RNG integer output alone,
+/// like [`load_checksum`].
+pub fn preamble_checksum(reqs: &[Request]) -> u64 {
+    reqs.iter().filter_map(|r| r.preamble).map(|p| u64::from(p.0) + 1).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    const KINDS: [WorkloadKind; 3] =
-        [WorkloadKind::Poisson, WorkloadKind::Bursty, WorkloadKind::Diurnal];
+    const KINDS: [WorkloadKind; 4] = [
+        WorkloadKind::Poisson,
+        WorkloadKind::Bursty,
+        WorkloadKind::Diurnal,
+        WorkloadKind::Prefix,
+    ];
 
     #[test]
     fn parse_round_trips() {
@@ -270,6 +397,7 @@ mod tests {
                 assert_eq!(x.adapter, y.adapter);
                 assert_eq!(x.input_tokens, y.input_tokens);
                 assert_eq!(x.output_tokens, y.output_tokens);
+                assert_eq!(x.preamble, y.preamble);
                 assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
             }
         }
@@ -289,6 +417,78 @@ mod tests {
             }
             assert_eq!(load_checksum(&base), load_checksum(&other));
         }
+        // The prefix mix spends the middle draws differently (share coin +
+        // preamble pick instead of prompt length), but the adapter and
+        // output positions in the stream are unchanged, and its arrival
+        // bits are exactly Poisson's (same time-stream consumption).
+        let prefix = WorkloadSpec::new(WorkloadKind::Prefix, 5, 800).generate();
+        for (x, y) in base.iter().zip(&prefix) {
+            assert_eq!(x.adapter, y.adapter, "prefix keeps the adapter draw");
+            assert_eq!(x.output_tokens, y.output_tokens, "prefix keeps the output draw");
+            assert_eq!(y.input_tokens, 256, "prefix prompts pin the template");
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "poisson arrivals");
+        }
+    }
+
+    #[test]
+    fn prefix_share_controls_the_preamble_fraction() {
+        let mut spec = WorkloadSpec::new(WorkloadKind::Prefix, 11, 2_000);
+        spec.prefix_share = 0.0;
+        assert!(spec.generate().iter().all(|r| r.preamble.is_none()));
+        assert_eq!(preamble_checksum(&spec.generate()), 0);
+        spec.prefix_share = 1.0;
+        let all = spec.generate();
+        assert!(all.iter().all(|r| r.preamble.is_some()));
+        for r in &all {
+            assert!((r.preamble.unwrap().0 as usize) < spec.preambles);
+        }
+        assert!(preamble_checksum(&all) >= all.len() as u64, "every preamble counts >= 1");
+        spec.prefix_share = 0.5;
+        let half = spec.generate();
+        let shared = half.iter().filter(|r| r.preamble.is_some()).count();
+        assert!((600..1_400).contains(&shared), "share 0.5 is roughly half: {shared}");
+        // The share coin never perturbs the rest of the stream: adapter,
+        // output, and arrival sequences are identical across share values.
+        for (x, y) in all.iter().zip(&half) {
+            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(x.output_tokens, y.output_tokens);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        // Zipf skew: preamble 0 is the most popular among shared requests.
+        let count = |p: u32| {
+            all.iter().filter(|r| r.preamble == Some(PreambleId(p))).count()
+        };
+        assert!(count(0) > count(1) && count(1) > count(3), "zipf-skewed preambles");
+    }
+
+    #[test]
+    fn preamble_library_is_prefix_closed() {
+        let lib = PreambleLibrary::new(8, 2);
+        assert_eq!(lib.len(), 8);
+        let chains = lib.chains();
+        for (p, c) in chains.iter().enumerate() {
+            assert_eq!(c.len(), 1 + p % 2, "depths cycle");
+        }
+        // Prefix closure: agreement at depth d implies agreement at every
+        // shallower depth (interning builds a genuine tree).
+        for a in chains {
+            for b in chains {
+                for d in 0..a.len().min(b.len()) {
+                    if a[d] == b[d] {
+                        assert_eq!(&a[..d], &b[..d], "prefix-closed chains");
+                    }
+                }
+            }
+        }
+        // Neighbors share the root block; distant entries do not.
+        assert_eq!(chains[0][0], chains[1][0], "shared system prompt");
+        assert_ne!(chains[0][0], chains[2][0], "roots diverge across groups");
+        // Depth is salted into the hash: a deep block never collides with
+        // a root block even within one chain.
+        assert_ne!(chains[1][0], chains[1][1]);
+        // Replays are identical.
+        assert_eq!(PreambleLibrary::new(8, 2).chains(), lib.chains());
+        assert!(!lib.is_empty());
     }
 
     #[test]
@@ -326,6 +526,8 @@ mod tests {
             adapters: 8,
             max_input: 512,
             max_output: 32,
+            prefix_share: 0.0,
+            preambles: 0,
         };
         let reqs = spec.generate();
         assert_eq!(reqs.len(), 100_000);

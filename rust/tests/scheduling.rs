@@ -1083,6 +1083,238 @@ fn continuous_generated_traces_hold_conservation() {
     }
 }
 
+// ---- cross-request prefix reuse fuzz axis --------------------------------
+
+/// One shared-prefix workload run through a continuous-mode server with
+/// the trace's preamble library registered (or not, for the plain
+/// baseline), returning completions + the full stats block.
+fn prefix_fuzz_run(
+    seed: u64,
+    policy: PolicyKind,
+    batch: usize,
+    chunk: Option<usize>,
+    share: f64,
+    register: bool,
+    fast_forward: bool,
+) -> (Vec<RequestResult>, ServerStats, u64) {
+    use primal::trace::{WorkloadKind, WorkloadSpec};
+    let mut spec = WorkloadSpec::new(WorkloadKind::Prefix, seed, 24);
+    spec.adapters = FUZZ_ADAPTERS as usize;
+    spec.max_input = 256;
+    spec.prefix_share = share;
+    spec.rate_per_s = 200.0;
+    let mut s = ServerBuilder::from_experiment(exp_1b(256))
+        .max_batch(batch)
+        .policy_kind(policy)
+        .prefill_chunk(chunk)
+        .continuous(true)
+        .decode_fast_forward(fast_forward)
+        .build()
+        .expect("server");
+    for a in 0..FUZZ_ADAPTERS {
+        s.register_adapter(AdapterId(a));
+    }
+    if register {
+        for (p, chain) in spec.preamble_library().chains().iter().enumerate() {
+            s.register_preamble(primal::coordinator::PreambleId(p as u32), chain.clone())
+                .expect("register preamble");
+        }
+    }
+    for r in spec.generate() {
+        s.submit(r).unwrap();
+    }
+    let results = s.drain(None).unwrap();
+    let monolithic =
+        s.stats().prefix_admissions * s.prefill_template_cycles() * s.n_layers() as u64;
+    let stats = s.stats();
+    (results, stats, monolithic)
+}
+
+#[test]
+fn prefix_fuzz_holds_conservation_across_modes() {
+    // The tentpole's conservation gates over policies x batch x chunk x
+    // share x seed: (a) prefill FLOP conservation — cycles saved by hits
+    // plus cycles charged for misses equal the monolithic prefill cost of
+    // every preambled admission, as exact u64s; (b) refcount conservation
+    // — every intern is released, every created node is freed, nothing
+    // lives past drain; (c) page conservation; (d) bitwise replay.
+    for seed in [7u64, 42] {
+        for &(batch, chunk) in &[(2usize, None), (4, None), (4, Some(128))] {
+            for policy in [
+                PolicyKind::Fcfs,
+                PolicyKind::AdapterAffinity,
+                PolicyKind::PrefixAffinity,
+            ] {
+                for &share in &[0.5f64, 1.0] {
+                    let label = format!(
+                        "seed {seed} / {} / batch {batch} / chunk {chunk:?} / share {share}",
+                        policy.name()
+                    );
+                    let (results, st, monolithic) =
+                        prefix_fuzz_run(seed, policy, batch, chunk, share, true, true);
+                    assert_eq!(results.len(), 24, "{label}: conservation");
+                    let mut ids: Vec<u64> = results.iter().map(|r| r.request).collect();
+                    ids.sort_unstable();
+                    assert_eq!(ids, (0..24u64).collect::<Vec<_>>(), "{label}: ids");
+
+                    assert!(st.prefix_admissions > 0, "{label}: shared requests admitted");
+                    assert_eq!(
+                        st.prefix_prefill_cycles_saved + st.prefix_prefill_cycles_charged,
+                        monolithic,
+                        "{label}: prefill FLOP conservation"
+                    );
+                    assert_eq!(st.prefix_interns, st.prefix_releases, "{label}: refcounts");
+                    assert_eq!(
+                        st.prefix_nodes_created, st.prefix_nodes_freed,
+                        "{label}: node lifecycle"
+                    );
+                    assert_eq!(st.prefix_live_nodes, 0, "{label}: cache drained");
+                    assert!(
+                        st.prefix_hit_blocks + st.prefix_miss_blocks >= st.prefix_interns,
+                        "{label}: every interned chain is at least one block"
+                    );
+                    assert_eq!(st.kv_page_allocs, st.kv_page_frees, "{label}: pages");
+                    assert_eq!(st.kv_used_pages, 0, "{label}: pool empty");
+
+                    // Bitwise replay determinism.
+                    let (r2, s2, _) =
+                        prefix_fuzz_run(seed, policy, batch, chunk, share, true, true);
+                    assert_eq!(st.sim_time_s.to_bits(), s2.sim_time_s.to_bits(), "{label}");
+                    assert_eq!(st.prefix_hit_blocks, s2.prefix_hit_blocks, "{label}");
+                    assert_eq!(
+                        st.prefix_prefill_cycles_saved, s2.prefix_prefill_cycles_saved,
+                        "{label}"
+                    );
+                    for (a, b) in results.iter().zip(&r2) {
+                        assert_eq!(a.request, b.request, "{label}: replay order");
+                        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+                        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+                    }
+
+                    // Fast-forward must be invisible on the prefix axis too.
+                    let (r3, s3, _) =
+                        prefix_fuzz_run(seed, policy, batch, chunk, share, true, false);
+                    assert_eq!(st.sim_time_s.to_bits(), s3.sim_time_s.to_bits(), "{label}: ff");
+                    assert_eq!(st.prefix_hit_blocks, s3.prefix_hit_blocks, "{label}: ff");
+                    assert_eq!(st.preempted_tokens, s3.preempted_tokens, "{label}: ff");
+                    for (a, b) in results.iter().zip(&r3) {
+                        assert_eq!(a.request, b.request, "{label}: ff order");
+                        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}: ff");
+                        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}: ff");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_share_zero_bitmatches_plain_continuous() {
+    // With sharing disabled the prefix machinery must be invisible: a
+    // share-0 trace (no request carries a preamble) through a server with
+    // the library registered bit-matches the same trace through a plain
+    // continuous server with no registrations at all — and every prefix
+    // counter stays zero.
+    for &(batch, chunk) in &[(2usize, None), (4usize, Some(128))] {
+        let label = format!("batch {batch} / chunk {chunk:?}");
+        let (rp, sp, _) =
+            prefix_fuzz_run(7, PolicyKind::Fcfs, batch, chunk, 0.0, true, true);
+        let (rn, sn, _) =
+            prefix_fuzz_run(7, PolicyKind::Fcfs, batch, chunk, 0.0, false, true);
+        assert_eq!(rp.len(), rn.len(), "{label}");
+        for (a, b) in rp.iter().zip(&rn) {
+            assert_eq!(a.request, b.request, "{label}: order");
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+        }
+        assert_eq!(sp.sim_time_s.to_bits(), sn.sim_time_s.to_bits(), "{label}");
+        assert_eq!(sp.kv_page_allocs, sn.kv_page_allocs, "{label}: page churn");
+        assert_eq!(sp.kv_peak_pages, sn.kv_peak_pages, "{label}");
+        for v in [
+            sp.prefix_admissions,
+            sp.prefix_interns,
+            sp.prefix_releases,
+            sp.prefix_hit_blocks,
+            sp.prefix_miss_blocks,
+            sp.prefix_prefill_cycles_saved,
+            sp.prefix_rram_passes_saved,
+        ] {
+            assert_eq!(v, 0, "{label}: prefix counters silent at share 0");
+        }
+    }
+}
+
+#[test]
+fn chunked_continuous_preemption_charges_prefill_and_bitmatches_ff() {
+    // Continuous x chunked prefill under an engineered eviction: with
+    // 16-token pages and a 33-page pool, the resident (256-token) slot
+    // holds 17 pages and needs its 18th exactly at generated == 16. A
+    // newcomer arriving inside that 16th decode step admits into the
+    // last 16 free pages, finishes exactly one 128-token prefill chunk,
+    // and is then the LIFO victim of the resident's growth — a mid-chunk
+    // PrefillJob, which must (a) release its pages and (b) charge the
+    // prompt tokens already prefilled to `preempted_tokens`. The
+    // historic undercount left that ledger at zero when only jobs were
+    // evicted. The fast-forward and stepwise paths must agree bit for
+    // bit, replays included.
+    let build = |ff: bool| {
+        let mut s = ServerBuilder::from_experiment(exp_1b(256))
+            .max_batch(2)
+            .prefill_chunk(Some(64))
+            .continuous(true)
+            .kv_page_tokens(16)
+            .kv_pool_pages(Some(33))
+            .decode_fast_forward(ff)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(0));
+        s
+    };
+    // Probe the ends of the resident's 15th and 16th decode steps; the
+    // midpoint lands the newcomer strictly inside the eviction window.
+    let mark = |out: usize| {
+        let mut s = build(false);
+        s.submit(Request::new(0, AdapterId(0), 256, out)).unwrap();
+        s.drain(None).unwrap();
+        s.stats().sim_time_s
+    };
+    let t1 = 0.5 * (mark(15) + mark(16));
+    let run = |ff: bool| {
+        let mut s = build(ff);
+        s.submit(Request::new(0, AdapterId(0), 256, 200)).unwrap();
+        s.submit(Request::new(1, AdapterId(0), 256, 32).at(t1)).unwrap();
+        let results = s.drain(None).unwrap();
+        (results, s.stats())
+    };
+    let (r1, s1) = run(true);
+    let (r2, s2) = run(true);
+    let (r3, s3) = run(false);
+    assert_eq!(r1.len(), 2, "conservation under preemption");
+    assert_eq!(s1.preemptions, 1, "the engineered famine evicts exactly the newcomer");
+    assert_eq!(
+        s1.preempted_tokens, 128,
+        "the mid-prefill victim's one finished chunk must be charged"
+    );
+    assert_eq!(s1.kv_page_allocs, s1.kv_page_frees, "page conservation");
+    assert_eq!(s1.kv_used_pages, 0);
+    for (other_r, other_s, label) in [(&r2, &s2, "replay"), (&r3, &s3, "ff-off")] {
+        assert_eq!(r1.len(), other_r.len(), "{label}");
+        for (a, b) in r1.iter().zip(other_r.iter()) {
+            assert_eq!(a.request, b.request, "{label}: completion order");
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "{label}");
+            assert_eq!(a.itl_ms.to_bits(), b.itl_ms.to_bits(), "{label}");
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "{label}");
+        }
+        assert_eq!(s1.preemptions, other_s.preemptions, "{label}");
+        assert_eq!(s1.preempted_tokens, other_s.preempted_tokens, "{label}");
+        assert_eq!(s1.kv_page_allocs, other_s.kv_page_allocs, "{label}");
+        assert_eq!(s1.sim_time_s.to_bits(), other_s.sim_time_s.to_bits(), "{label}");
+    }
+}
+
 #[test]
 fn token_stream_covers_batched_requests() {
     let mut s = server_1b(256, 3, PolicyKind::Fcfs, 1);
