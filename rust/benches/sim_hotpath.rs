@@ -21,7 +21,7 @@ use common::{finish, measure, report};
 use primal::config::{ExperimentConfig, LoraTarget, ModelId};
 use primal::coordinator::{AdapterId, PreambleId, Request, SchedCounters, ServerBuilder};
 use primal::dataflow::{decode_program, prefill_program, reprogram_program};
-use primal::mapping::map_model;
+use primal::mapping::{map_model, PoolPlan};
 use primal::sim::cost::program_cost;
 use primal::sim::{LayerCostModel, PhaseCost, Simulator};
 use primal::trace::{load_checksum, preamble_checksum, WorkloadKind, WorkloadSpec};
@@ -339,6 +339,100 @@ fn main() {
     }
     let hetero = sim.run_hetero_batched(&[512, 1024, 2048], 1);
 
+    // ---- disaggregated-pool proxies (deterministic) ----------------------
+    // Engine: the closed-batch 13B 2048-in/256-out point on a 2-prefill +
+    // 2-decode pool split (plus its 2-stage pipelined variant), pinned by
+    // mirror-blessed cycle counts. Serving: the Table II --disagg winning
+    // cell — 8 prefill-heavy FCFS requests drained at batch 4 — where the
+    // 2p+2d split must beat the symmetric 4-chip baseline; the truncated-ns
+    // drain witnesses and the decode pool's page ledger are the committed
+    // integers.
+    let (disagg_e2e, disagg_pipe2) = {
+        let mut c13 = ExperimentConfig::paper_point(
+            ModelId::Llama2_13b,
+            &[LoraTarget::Q, LoraTarget::V],
+            2048,
+        );
+        c13.output_tokens = 256;
+        let sim13 = Simulator::new(&c13);
+        // Degenerate collapse: the unified single-stage pool plan must
+        // bit-match the symmetric sharded engine (the tests/disagg.rs
+        // gate, echoed cheaply here).
+        let uni = sim13.run_disagg_batched(4, &PoolPlan::unified(4, c13.model.layers));
+        let sym = sim13.run_sharded_batched(4, 4);
+        if uni.total_cycles != sym.total_cycles
+            || uni.throughput_tps.to_bits() != sym.throughput_tps.to_bits()
+            || uni.total_energy_j.to_bits() != sym.total_energy_j.to_bits()
+        {
+            eprintln!("proxy gate: unified pool plan diverges from run_sharded_batched");
+            ok = false;
+        }
+        let p1 = PoolPlan::split(2, 2, 1, c13.model.layers).expect("2p+2d");
+        let p2 = PoolPlan::split(2, 2, 2, c13.model.layers).expect("2p+2d staged");
+        (
+            sim13.run_disagg_batched(4, &p1).total_cycles,
+            sim13.run_disagg_batched(4, &p2).total_cycles,
+        )
+    };
+    let disagg_serve = |pools: Option<(usize, usize)>| {
+        let mut c13 = ExperimentConfig::paper_point(
+            ModelId::Llama2_13b,
+            &[LoraTarget::Q, LoraTarget::V],
+            2048,
+        );
+        c13.shard.n_chips = 4;
+        if let Some((p, d)) = pools {
+            c13.shard.prefill_chips = Some(p);
+            c13.shard.decode_chips = Some(d);
+        }
+        let mut s = ServerBuilder::from_experiment(c13)
+            .max_batch(4)
+            .continuous(true)
+            .build()
+            .expect("disagg server");
+        s.register_adapter(AdapterId(0));
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(0), 2048, 256)).expect("submit");
+        }
+        let n = s.drain(None).expect("drain disagg").len();
+        (n, s.stats())
+    };
+    let (sym_n, sym_stats) = disagg_serve(None);
+    let (dsp_n, dsp_stats) = disagg_serve(Some((2, 2)));
+    let sym_drain_ns = (sym_stats.sim_time_s * 1e9) as u64;
+    let dsp_drain_ns = (dsp_stats.sim_time_s * 1e9) as u64;
+    println!(
+        "\ndisaggregated serve (13B 2048/256 x8, batch 4): symmetric {sym_drain_ns} ns \
+         vs 2p+2d {dsp_drain_ns} ns"
+    );
+    if sym_n != 8 || dsp_n != 8 {
+        eprintln!("proxy gate: disagg serve lost requests ({sym_n}/{dsp_n} of 8)");
+        ok = false;
+    }
+    if dsp_drain_ns >= sym_drain_ns {
+        eprintln!(
+            "proxy gate: 2p+2d drain {dsp_drain_ns} ns does not beat the \
+             symmetric 4-chip {sym_drain_ns} ns on the prefill-heavy mix"
+        );
+        ok = false;
+    }
+    if sym_stats.preemptions != 0 || dsp_stats.preemptions != 0 {
+        eprintln!(
+            "proxy gate: Table II disagg cells preempted ({} sym, {} split)",
+            sym_stats.preemptions, dsp_stats.preemptions
+        );
+        ok = false;
+    }
+    if dsp_stats.kv_page_allocs != dsp_stats.kv_page_frees
+        || dsp_stats.kv_used_pages != 0
+    {
+        eprintln!(
+            "proxy gate: decode-pool page ledger violated ({} allocs, {} frees, {} held)",
+            dsp_stats.kv_page_allocs, dsp_stats.kv_page_frees, dsp_stats.kv_used_pages
+        );
+        ok = false;
+    }
+
     // Workload load-stream checksums: the (adapter, input, output) draws
     // come from a dedicated RNG stream with a fixed draw count per request,
     // so the integer sums are identical across arrival laws and across the
@@ -411,6 +505,16 @@ fn main() {
         ("prefix_cycles_saved", prefix.prefix_prefill_cycles_saved),
         ("prefix_rram_saved", prefix.prefix_rram_passes_saved),
         ("workload_preamble_sum", wl_preamble),
+        // Disaggregated pools: mirror-blessed engine cycles (13B 2048/256,
+        // 2p+2d, single-stage + 2-stage pipeline) and the Table II --disagg
+        // serving witnesses (truncated-ns drains + the winning cell's
+        // decode-pool page ledger).
+        ("disagg13b_e2e_cycles", disagg_e2e),
+        ("disagg13b_pipe2_cycles", disagg_pipe2),
+        ("disagg13b_sym4_drain_ns", sym_drain_ns),
+        ("disagg13b_2p2d_drain_ns", dsp_drain_ns),
+        ("disagg13b_2p2d_page_allocs", dsp_stats.kv_page_allocs),
+        ("disagg13b_2p2d_peak_pages", dsp_stats.kv_peak_pages),
     ]);
     println!("\ninstruction-count proxies (13B):");
     for (name, v) in &proxies {

@@ -102,6 +102,55 @@ impl ExperimentConfig {
         if self.shard.n_chips == 0 {
             problems.push("shard.n_chips must be >= 1".into());
         }
+        // Disaggregated pool split: both pools set together, >= 1 chip
+        // each, and summing to the total — the same contract
+        // `mapping::PoolPlan::new` enforces (config cannot depend on
+        // mapping, so the arithmetic is repeated here for early CLI
+        // rejection).
+        match (self.shard.prefill_chips, self.shard.decode_chips) {
+            (None, None) => {}
+            (Some(p), Some(d)) => {
+                if p == 0 || d == 0 {
+                    problems.push(
+                        "disaggregated pools need >= 1 chip each \
+                         (prefill_chips and decode_chips)"
+                            .into(),
+                    );
+                } else if p + d != self.shard.n_chips {
+                    problems.push(format!(
+                        "prefill_chips {p} + decode_chips {d} != n_chips {}",
+                        self.shard.n_chips
+                    ));
+                }
+            }
+            _ => problems.push(
+                "prefill_chips and decode_chips must be set together".into(),
+            ),
+        }
+        if self.shard.pipeline_stages == 0 {
+            problems.push("shard.pipeline_stages must be >= 1".into());
+        } else {
+            let s = self.shard.pipeline_stages;
+            if s > self.model.layers {
+                problems.push(format!(
+                    "pipeline_stages {s} exceeds the model's {} layers",
+                    self.model.layers
+                ));
+            }
+            let pools: Vec<usize> = match (self.shard.prefill_chips, self.shard.decode_chips)
+            {
+                (Some(p), Some(d)) if p >= 1 && d >= 1 => vec![p, d],
+                _ => vec![self.shard.n_chips.max(1)],
+            };
+            for pool in pools {
+                if pool % s != 0 {
+                    problems.push(format!(
+                        "pipeline_stages {s} must divide the pool's {pool} chip(s) \
+                         (each stage is one tensor-split group)"
+                    ));
+                }
+            }
+        }
         // KV capacity: the cyclic ring stripes fp16 K+V over every router
         // of a layer's CT group (see mapping::layer). Estimate the group
         // size from the weight footprint and check the per-router share

@@ -20,6 +20,17 @@ pub struct ShardConfig {
     /// Chips the model is tensor-parallel-sharded over (1 = the paper's
     /// single-chip system; the sharded cost paths all collapse exactly).
     pub n_chips: usize,
+    /// Chips dedicated to the prefill pool when the phases are
+    /// disaggregated (`None` = unified: every chip serves both phases).
+    /// Must be set together with `decode_chips`, and the two must sum to
+    /// `n_chips` (`ExperimentConfig::validate`).
+    pub prefill_chips: Option<usize>,
+    /// Chips dedicated to the decode pool (see `prefill_chips`).
+    pub decode_chips: Option<usize>,
+    /// Inter-layer pipeline stages within each pool: contiguous layer
+    /// ranges per stage, tensor-split within a stage. 1 = pure tensor
+    /// split (the paper's model; every pipelined term collapses exactly).
+    pub pipeline_stages: usize,
     /// Per-hop latency of one chip-to-chip ring link in cycles (SerDes +
     /// package traversal; an order of magnitude above the intra-chip
     /// `CalibConstants::d2d_latency_cycles` turnaround).
@@ -33,6 +44,9 @@ impl Default for ShardConfig {
     fn default() -> Self {
         Self {
             n_chips: 1,
+            prefill_chips: None,
+            decode_chips: None,
+            pipeline_stages: 1,
             chip_hop_cycles: 250,
             chip_link_bytes_per_cycle: 32.0,
         }
@@ -44,6 +58,19 @@ impl ShardConfig {
     pub fn with_chips(mut self, n_chips: usize) -> Self {
         self.n_chips = n_chips.max(1);
         self
+    }
+
+    /// A copy with an explicit prefill/decode pool split.
+    pub fn with_pools(mut self, prefill: usize, decode: usize) -> Self {
+        self.prefill_chips = Some(prefill);
+        self.decode_chips = Some(decode);
+        self.n_chips = prefill + decode;
+        self
+    }
+
+    /// Whether the phases are disaggregated onto separate pools.
+    pub fn is_disagg(&self) -> bool {
+        self.prefill_chips.is_some() || self.decode_chips.is_some()
     }
 }
 
@@ -63,5 +90,17 @@ mod tests {
     fn with_chips_clamps_to_one() {
         assert_eq!(ShardConfig::default().with_chips(4).n_chips, 4);
         assert_eq!(ShardConfig::default().with_chips(0).n_chips, 1);
+    }
+
+    #[test]
+    fn default_is_unified_single_stage() {
+        let s = ShardConfig::default();
+        assert!(!s.is_disagg());
+        assert_eq!(s.pipeline_stages, 1);
+        let d = s.with_pools(3, 1);
+        assert!(d.is_disagg());
+        assert_eq!(d.n_chips, 4);
+        assert_eq!(d.prefill_chips, Some(3));
+        assert_eq!(d.decode_chips, Some(1));
     }
 }

@@ -42,7 +42,7 @@ use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
 use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
-use crate::mapping::ShardPlan;
+use crate::mapping::{PoolPlan, ShardPlan};
 use crate::noc::ChipMesh;
 use crate::runtime::{Executable, GoldenRuntime};
 use crate::sim::cost::program_cost;
@@ -527,7 +527,40 @@ impl ServerBuilder {
         let mapping = sim.mapping();
         let lm0 = &mapping.layers[0];
         let n_chips = exp.shard.n_chips.max(1);
-        let mesh = ChipMesh::new(&exp.shard, n_chips);
+
+        // Pool tier: a disaggregated shard config splits the chips into a
+        // prefill pool (admission prefills run there, *overlapped* with
+        // decode) and a decode pool (decode widths, KV capacity, decode
+        // all-reduce). The unified plan keeps both pool widths at
+        // `n_chips`, so every expression below is unchanged bit-for-bit.
+        let pool_plan = match PoolPlan::from_shard(&exp.shard, exp.model.layers) {
+            Ok(p) => p,
+            Err(e) => bail!("serving pool plan: {e}"),
+        };
+        let disagg = pool_plan.is_disagg();
+        if disagg && !self.continuous {
+            bail!(
+                "disaggregated pools require continuous batching (the decode \
+                 pool steps while the prefill pool admits; set --continuous)"
+            );
+        }
+        if disagg && self.prefill_chunk.is_some() {
+            bail!(
+                "disaggregated pools exclude chunked prefill: admissions run \
+                 monolithically on the prefill pool, already overlapped with \
+                 decode"
+            );
+        }
+        if pool_plan.stages > 1 {
+            bail!(
+                "pipeline_stages > 1 applies to the closed-batch engine \
+                 (simulate/report), not the serving loop"
+            );
+        }
+        let tw_p = pool_plan.prefill_pool_chips();
+        let tw_d = pool_plan.decode_pool_chips();
+        let mesh = ChipMesh::new(&exp.shard, tw_d);
+        let mesh_p = ChipMesh::new(&exp.shard, tw_p);
 
         // Batched KV pressure: every in-flight slot stripes its own KV
         // ring over the layer group's scratchpads; tensor-parallel
@@ -537,7 +570,7 @@ impl ServerBuilder {
         // mode replaces the whole-request x max_batch reservation with a
         // paged pool over the same capacity, so the static bail does not
         // apply there — the pool constructor is its capacity check.
-        let plan = ShardPlan::new(&exp, mapping, n_chips);
+        let plan = ShardPlan::new(&exp, mapping, tw_d);
         let pool = if self.continuous {
             let cap_tokens = plan.kv_capacity_tokens(exp.system.scratchpad_bytes);
             match KvPool::from_capacity_tokens(self.kv_page_tokens, cap_tokens, self.kv_pool_pages)
@@ -561,7 +594,7 @@ impl ServerBuilder {
             None
         };
 
-        let layer_model = LayerCostModel::build_cached_for_chips(&exp, lm0, n_chips);
+        let layer_model = LayerCostModel::build_cached_for_chips(&exp, lm0, tw_d);
         let shard_ar_decode_cycles = mesh.layer_all_reduce_cycles(exp.model.hidden, 1);
         let cyc = exp.system.cycle_s();
 
@@ -573,8 +606,9 @@ impl ServerBuilder {
             cycles_f64(reprog.cycles * exp.model.layers as u64) * cyc
         };
 
-        // Prefill stage template at the experiment's input length. The
-        // sharded block cost mirrors `Simulator::run_sharded_batched`:
+        // Prefill stage template at the experiment's input length, costed
+        // at the *prefill pool's* width (the whole machine when unified).
+        // The sharded block cost mirrors `Simulator::run_sharded_batched`:
         // chip 0's (widest) program slice plus the block's per-layer
         // all-reduce; both collapse to the unsharded cost at one chip.
         let block = 128usize.min(exp.input_tokens.max(1));
@@ -590,12 +624,13 @@ impl ServerBuilder {
             };
             let kv = (b * block + this_block / 2).max(1);
             let prog = prefill_program(&exp, lm0, this_block, kv);
-            let cost = if n_chips == 1 {
+            let cost = if tw_p == 1 {
                 program_cost(&prog, &exp.system, &exp.calib)
             } else {
-                program_cost(&shard_program_slice(&prog, 0, n_chips), &exp.system, &exp.calib)
+                program_cost(&shard_program_slice(&prog, 0, tw_p), &exp.system, &exp.calib)
             };
-            let cycles = cost.cycles + mesh.layer_all_reduce_cycles(exp.model.hidden, this_block);
+            let cycles =
+                cost.cycles + mesh_p.layer_all_reduce_cycles(exp.model.hidden, this_block);
             prefill_block_s.push((this_block, cycles_f64(cycles) * cyc));
             // The u64 twins of the template: the prefix cache's FLOP
             // conservation ledger sums these exactly (no float
@@ -621,6 +656,11 @@ impl ServerBuilder {
 
         Ok(Server {
             n_layers: exp.model.layers,
+            disagg,
+            pool_mesh: ChipMesh::new(&exp.shard, n_chips),
+            kv_token_bytes: lm0.kv_token_bytes,
+            pending: Vec::new(),
+            prefill_pool_free_s: 0.0,
             max_batch: self.max_batch,
             batch_overhead_cycles: self.batch_overhead_cycles,
             prefill_chunk: self.prefill_chunk,
@@ -656,6 +696,15 @@ impl ServerBuilder {
             acc: StatsAccum::default(),
         })
     }
+}
+
+/// A disaggregated admission in flight on the prefill pool: the decode
+/// slot it will become, and the simulated time its migrated KV lands on
+/// the decode pool (prefill finish plus the pool-to-pool transfer).
+#[derive(Debug)]
+struct PendingSlot {
+    ready_s: f64,
+    slot: Slot,
 }
 
 /// The PRIMAL inference server: a discrete-event loop over arrival-timed
@@ -704,6 +753,26 @@ pub struct Server {
     /// Registered prompt preambles: id -> chain of 128-token block
     /// content keys (see [`Server::register_preamble`]).
     preambles: BTreeMap<PreambleId, Vec<u64>>,
+    /// Disaggregated pools enabled (`ShardConfig::prefill_chips` +
+    /// `decode_chips`): admission prefills run on the prefill pool,
+    /// overlapped with the decode pool's steps.
+    disagg: bool,
+    /// Chip link for the pool-to-pool KV migration (point-to-point
+    /// transfer; independent of the ring size).
+    pool_mesh: ChipMesh,
+    /// Unsharded K+V bytes per token per layer (the migration payload's
+    /// per-token unit).
+    kv_token_bytes: usize,
+    /// Disaggregated admissions whose prefill-pool pass or KV migration
+    /// has not yet landed on the decode pool. They hold their admission
+    /// pages, count against `max_batch`, and join the decode batch (in
+    /// admission order) once the clock reaches their `ready_s`. Always
+    /// empty outside disaggregated serving.
+    pending: Vec<PendingSlot>,
+    /// Simulated time at which the prefill pool frees up: admissions
+    /// serialize on the pool (each is a monolithic layer-sequential pass
+    /// at the prefill width), while the decode pool keeps stepping.
+    prefill_pool_free_s: f64,
     /// Monotone admission sequence number: the pool's owner key. A
     /// preempted request re-admits under a fresh sequence, so stale page
     /// holdings can never be confused with the retry's.
@@ -857,6 +926,13 @@ impl Server {
         self.jobs.len()
     }
 
+    /// Disaggregated admissions whose prefill-pool pass or KV migration
+    /// has not yet landed on the decode pool (0 outside disaggregated
+    /// serving).
+    pub fn migrating(&self) -> usize {
+        self.pending.len()
+    }
+
     /// The simulated clock (seconds).
     pub fn now_s(&self) -> f64 {
         self.now_s
@@ -867,16 +943,27 @@ impl Server {
     }
 
     /// Whether a new admission fits: decoding slots plus in-flight
-    /// prefills are bounded by `max_batch`.
+    /// prefills (chunked jobs or disaggregated pending migrations) are
+    /// bounded by `max_batch`.
     fn has_capacity(&self) -> bool {
-        self.batch.len() + self.jobs.len() < self.max_batch
+        self.batch.len() + self.jobs.len() + self.pending.len() < self.max_batch
+    }
+
+    /// In-flight work count exposed to the admission policy (the same sum
+    /// `has_capacity` bounds).
+    fn in_flight_count(&self) -> usize {
+        self.batch.len() + self.jobs.len() + self.pending.len()
     }
 
     /// Adapter bound to the in-flight work: the decode batch's adapter,
-    /// or the queued prefills' when the batch is empty (slots and jobs
-    /// always share one adapter by construction).
+    /// or the queued prefills' / pending migrations' when the batch is
+    /// empty (slots, jobs, and pending always share one adapter by
+    /// construction).
     fn active_adapter(&self) -> Option<AdapterId> {
-        self.batch.adapter().or_else(|| self.jobs.front().map(|j| j.adapter()))
+        self.batch
+            .adapter()
+            .or_else(|| self.jobs.front().map(|j| j.adapter()))
+            .or_else(|| self.pending.first().map(|p| p.slot.req.adapter))
     }
 
     /// Earliest simulated time at which the server has work, if any.
@@ -887,13 +974,12 @@ impl Server {
         // Scan mode: `waiting.first()` is the global earliest arrival.
         // Calendar mode: the earliest of the arrived list and the heap
         // head (between syncs the heap may still hold entries at or
-        // before the clock) — the same value by construction.
+        // before the clock) — the same value by construction. A pending
+        // disaggregated migration's landing is an event too.
         let w = self.waiting.first().map(|r| r.arrival_s);
         let h = self.arrivals.peek().map(|e| e.0.req.arrival_s);
-        let earliest = match (w, h) {
-            (Some(a), Some(b)) => Some(if a <= b { a } else { b }),
-            (a, b) => a.or(b),
-        };
+        let p = self.pending.iter().map(|p| p.ready_s).reduce(f64::min);
+        let earliest = [w, h, p].into_iter().flatten().reduce(f64::min);
         earliest.map(|a| if a <= self.now_s { self.now_s } else { a })
     }
 
@@ -1053,6 +1139,13 @@ impl Server {
     ) -> Result<StepOutcome> {
         self.note_event();
         self.sync_arrivals();
+        // ---- disaggregated joins ----------------------------------------
+        // Pending admissions whose migrated KV has landed join the decode
+        // batch first, so the admission gate below sees the freed pending
+        // capacity and the decode step below sees the new slots.
+        if self.disagg {
+            self.join_pending();
+        }
         // ---- admission opportunity --------------------------------------
         if self.has_capacity() && !self.waiting.is_empty() {
             let arrived = self.arrived_count();
@@ -1060,7 +1153,7 @@ impl Server {
                 let ctx = SchedContext {
                     active_adapter: self.active_adapter(),
                     resident: self.adapters.resident(),
-                    in_flight: self.batch.len() + self.jobs.len(),
+                    in_flight: self.in_flight_count(),
                     prefill_in_flight: !self.jobs.is_empty(),
                 };
                 // Paged admission gate (continuous mode): probe with the
@@ -1089,6 +1182,7 @@ impl Server {
                     if pick.is_none()
                         && self.batch.is_empty()
                         && self.jobs.is_empty()
+                        && self.pending.is_empty()
                         && arrived == self.waiting.len()
                         && self.arrivals.is_empty()
                     {
@@ -1129,8 +1223,18 @@ impl Server {
             return Ok(self.decode_step(tokens));
         }
 
-        // ---- clock jump to the next arrival -----------------------------
-        if let Some(next) = self.next_arrival_after_now() {
+        // ---- clock jump to the next arrival or KV landing ---------------
+        // The next runnable event is the earlier of the next arrival and
+        // the earliest pending migration's landing (disaggregated pools:
+        // the decode pool idles until the KV arrives).
+        let mut next = self.next_arrival_after_now();
+        if let Some(ready) = self.pending.iter().map(|p| p.ready_s).reduce(f64::min) {
+            next = Some(match next {
+                Some(a) if a <= ready => a,
+                _ => ready,
+            });
+        }
+        if let Some(next) = next {
             self.set_clock(next);
             // Calendar mode: the arrival itself moves off the heap at
             // the next step's sync.
@@ -1323,6 +1427,9 @@ impl Server {
     /// chunked admission over the unshared suffix.
     fn admit(&mut self, req: Request) -> Result<StepOutcome> {
         let (hit_blocks, shared_tokens) = self.intern_prefix(&req)?;
+        if self.disagg {
+            return self.admit_disagg(req, hit_blocks, shared_tokens);
+        }
         match self.prefill_chunk {
             None => self.admit_monolithic(req, hit_blocks, shared_tokens),
             Some(chunk) => self.admit_chunked(req, chunk, hit_blocks, shared_tokens),
@@ -1364,6 +1471,26 @@ impl Server {
         }
     }
 
+    /// Layer-sequential (monolithic) prefill seconds of an `input`-token
+    /// prompt whose first `hit_blocks` template blocks are already
+    /// interned (skipped). Exactly the historical inline expression of
+    /// `admit_monolithic`, factored so the disaggregated admission prices
+    /// the prefill-pool pass with identical float-op order: the per-layer
+    /// template sum (scaled per-token for off-template lengths), then one
+    /// multiply by the layer count. At zero hits the slice sum is the
+    /// full-template sum bit-for-bit.
+    fn monolithic_prefill_s(&self, input: usize, hit_blocks: usize) -> f64 {
+        let per_layer: f64 = if input == self.cfg.input_tokens {
+            self.prefill_block_s[hit_blocks..].iter().map(|(_, s)| s).sum()
+        } else {
+            debug_assert_eq!(hit_blocks, 0, "off-template prompts never share");
+            let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
+                / self.cfg.input_tokens as f64;
+            per_tok * input as f64
+        };
+        per_layer * self.n_layers as f64
+    }
+
     /// Monolithic admission: residency check (+ swap), the whole prefill,
     /// optional golden execution — one atomic event. Prefill occupies the
     /// whole accelerator (the paper's prefill is layer-sequential across
@@ -1386,17 +1513,7 @@ impl Server {
 
         // ---- TTFT: (swap ? reprogram :) + layer-sequential prefill ------
         let mut ttft = if swap { self.reprog_ttft_s } else { 0.0 };
-        // Scale the prefill template if the request length differs from
-        // the server's configured point (simple re-blocking).
-        let prefill_per_layer: f64 = if req.input_tokens == self.cfg.input_tokens {
-            self.prefill_block_s[hit_blocks..].iter().map(|(_, s)| s).sum()
-        } else {
-            debug_assert_eq!(hit_blocks, 0, "off-template prompts never share");
-            let per_tok: f64 = self.prefill_block_s.iter().map(|(_, s)| s).sum::<f64>()
-                / self.cfg.input_tokens as f64;
-            per_tok * req.input_tokens as f64
-        };
-        ttft += prefill_per_layer * self.n_layers as f64;
+        ttft += self.monolithic_prefill_s(req.input_tokens, hit_blocks);
 
         let golden_exec_ms = self.golden_step_ms()?;
 
@@ -1422,6 +1539,87 @@ impl Server {
         });
         self.acc.max_batch_observed = self.acc.max_batch_observed.max(self.batch.len());
         Ok(StepOutcome::Admitted { request: id, swap })
+    }
+
+    /// Disaggregated admission: the prefill runs on the *prefill pool*
+    /// while the decode pool keeps stepping — the admission event itself
+    /// takes zero decode-pool time (no batch stall, no clock advance);
+    /// the overlap is the whole point of disaggregation. Admissions
+    /// serialize on the prefill pool (`prefill_pool_free_s`), adapter
+    /// residency and swaps are the prefill pool's (the reprogramming runs
+    /// there, ahead of the pass), and the finished prompt KV migrates to
+    /// the decode pool as one explicit [`ChipMesh::transfer_cycles`] hop
+    /// — prefix-shared blocks already live in the decode pool's cache and
+    /// do not move. The request joins the decode batch (`join_pending`)
+    /// once the migration lands; its KV pages are allocated from the
+    /// decode pool's paged KV at admission, exactly like the other paths,
+    /// so the admission gate stays conservative.
+    fn admit_disagg(
+        &mut self,
+        req: Request,
+        hit_blocks: usize,
+        shared_tokens: usize,
+    ) -> Result<StepOutcome> {
+        let admit_seq = self.next_admit_seq(&req, shared_tokens)?;
+        let swap = match self.adapters.admit(req.adapter) {
+            SwapOutcome::Hit => false,
+            SwapOutcome::Swap { .. } => true,
+        };
+        // The prefill pool picks the request up as soon as it is free.
+        let pf_start = self.now_s.max(self.prefill_pool_free_s);
+        let mut ttft = if swap { self.reprog_ttft_s } else { 0.0 };
+        ttft += self.monolithic_prefill_s(req.input_tokens, hit_blocks);
+        let finish = pf_start + ttft;
+        self.prefill_pool_free_s = finish;
+        // KV migration: the unshared prompt KV of every layer crosses the
+        // pool link (hits are served from the decode-side prefix cache).
+        let bytes =
+            ((req.input_tokens - shared_tokens) * self.kv_token_bytes * self.n_layers) as u64;
+        let migrate_s =
+            cycles_f64(self.pool_mesh.transfer_cycles(bytes)) * self.cfg.system.cycle_s();
+        let golden_exec_ms = self.golden_step_ms()?;
+        let id = req.id;
+        self.pending.push(PendingSlot {
+            ready_s: finish + migrate_s,
+            slot: Slot {
+                req,
+                generated: 0,
+                start_s: pf_start,
+                swap,
+                ttft_s: ttft + migrate_s,
+                decode_cycles: 0,
+                stall_s: 0.0,
+                pending_stall_s: 0.0,
+                golden_exec_ms,
+                admit_seq,
+                shared_tokens,
+            },
+        });
+        Ok(StepOutcome::Admitted { request: id, swap })
+    }
+
+    /// Move every pending disaggregated admission whose migrated KV has
+    /// landed on the decode pool (`ready_s <= now`) into the decode
+    /// batch, in admission order. The gap between the landing and the
+    /// decode pool picking the slot up is charged as stall (it surfaces
+    /// in the slot's first inter-token gap), mirroring how monolithic
+    /// admissions charge in-flight slots.
+    fn join_pending(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].ready_s <= self.now_s {
+                let p = self.pending.remove(i);
+                let mut slot = p.slot;
+                let wait = self.now_s - p.ready_s;
+                slot.stall_s += wait;
+                slot.pending_stall_s += wait;
+                self.batch.push(slot);
+                self.acc.max_batch_observed =
+                    self.acc.max_batch_observed.max(self.batch.len());
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Chunked admission: residency check (+ swap) only; the prefill is
@@ -1582,7 +1780,10 @@ impl Server {
                     None
                 };
             }
-            // Youngest admission across jobs and slots.
+            // Youngest admission across jobs, slots, and pending
+            // migrations (disaggregated pools: a migrating request is a
+            // preemption victim too — its prompt pages are held and its
+            // KV has not started decoding).
             let job = self
                 .jobs
                 .iter()
@@ -1596,11 +1797,25 @@ impl Server {
                 .enumerate()
                 .max_by_key(|(_, s)| s.admit_seq)
                 .map(|(i, s)| (i, s.admit_seq));
-            last_victim = Some(match (job, slot) {
-                (Some((ji, jseq)), Some((_, sseq))) if jseq > sseq => self.preempt_job(ji),
-                (Some((ji, _)), None) => self.preempt_job(ji),
-                (_, Some((si, _))) => self.preempt_slot(si),
-                (None, None) => unreachable!("pressure without in-flight work"),
+            let pend = self
+                .pending
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, p)| p.slot.admit_seq)
+                .map(|(i, p)| (i, p.slot.admit_seq));
+            last_victim = Some(match (pend, job, slot) {
+                (Some((pi, pseq)), j, s)
+                    if j.is_none_or(|(_, jseq)| pseq > jseq)
+                        && s.is_none_or(|(_, sseq)| pseq > sseq) =>
+                {
+                    self.preempt_pending(pi)
+                }
+                (_, Some((ji, jseq)), Some((_, sseq))) if jseq > sseq => {
+                    self.preempt_job(ji)
+                }
+                (_, Some((ji, _)), None) => self.preempt_job(ji),
+                (_, _, Some((si, _))) => self.preempt_slot(si),
+                (_, None, None) => unreachable!("pressure without in-flight work"),
             });
         }
     }
@@ -1619,6 +1834,29 @@ impl Server {
         self.acc.preempted_tokens += job.tokens_done() as u64;
         self.release_prefix(&job.req, job.shared_tokens);
         let req = job.req;
+        let id = req.id;
+        let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
+        self.waiting.insert(pos, req);
+        id
+    }
+
+    /// Evict the pending disaggregated admission at `pi`: its unshared
+    /// prompt KV was already prefilled on (or is migrating from) the
+    /// prefill pool and is discarded — those tokens are the preemption
+    /// cost, exactly like a chunked job's finished chunks. The prefill
+    /// pool's busy time is *not* rolled back (the pass genuinely ran);
+    /// the re-admission pays a fresh pass.
+    fn preempt_pending(&mut self, pi: usize) -> u64 {
+        let p = self.pending.remove(pi);
+        let slot = p.slot;
+        if let Some(pool) = self.pool.as_mut() {
+            pool.release(slot.admit_seq);
+        }
+        self.acc.preemptions += 1;
+        self.acc.preempted_tokens +=
+            (slot.req.input_tokens - slot.shared_tokens) as u64;
+        self.release_prefix(&slot.req, slot.shared_tokens);
+        let req = slot.req;
         let id = req.id;
         let pos = self.waiting.partition_point(|r| r.arrival_s <= req.arrival_s);
         self.waiting.insert(pos, req);
@@ -1727,7 +1965,7 @@ impl Server {
                 let ctx = SchedContext {
                     active_adapter: self.active_adapter(),
                     resident: self.adapters.resident(),
-                    in_flight: self.batch.len() + self.jobs.len(),
+                    in_flight: self.in_flight_count(),
                     prefill_in_flight: false,
                 };
                 // Probe with the side-effect-free `peek`: a discarded
@@ -1760,6 +1998,15 @@ impl Server {
             if let Some(next_arr) = self.next_arrival_after_now() {
                 k = k.min(self.steps_within(next_arr, true, k) + 1);
             }
+        }
+        // A pending disaggregated admission joins the batch once its
+        // migrated KV lands: every step of the window must start strictly
+        // before the earliest `ready_s`. Unlike the arrival bound this
+        // sits *outside* the capacity-gated admission probe — joins
+        // happen even at full capacity (the pending slot already holds
+        // its admission).
+        if let Some(ready) = self.pending.iter().map(|p| p.ready_s).reduce(f64::min) {
+            k = k.min(self.steps_within(ready, true, k) + 1);
         }
         if let Some(t) = deadline {
             // `run_until` runs a step only while the clock before it is

@@ -16,6 +16,7 @@ use primal::coordinator::{
     AdapterId, FunctionalMode, PreambleId, Request, RequestResult, ServerBuilder,
     ServerStats,
 };
+use primal::mapping::PoolPlan;
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
 use primal::sim::{sweep, Simulator};
@@ -30,13 +31,23 @@ fn usage() -> ! {
 
 commands:
   simulate   --model <1b|8b|13b> [--ctx N] [--lora q|qv] [--batch N]
-             [--chips N] [--no-srpg] [--trace]
+             [--chips N] [--prefill-chips N] [--decode-chips N]
+             [--stages N] [--no-srpg] [--trace]
+             (--prefill-chips/--decode-chips: disaggregate the chips into
+              a prefill pool and a decode pool (must sum to --chips; KV
+              migrates between them over the chip ring); --stages N:
+              inter-layer pipeline stages per pool — 1 collapses to the
+              pure tensor split bit-for-bit)
   report     --table <1|2|3|4|h100|srpg> [--batch N] [--chips N] [--jobs N]
-             [--hetero]
+             [--hetero] [--disagg [--requests N] [--out N]]
              (batch/chips: tables 2/3 only; --jobs N: simulate the grid
               points across N worker threads — results are bit-identical
               to --jobs 1, just faster; --hetero: table 2 variant with
-              mixed prompt lengths per batch — one row per prompt mix)
+              mixed prompt lengths per batch — one row per prompt mix;
+              --disagg: table 2 variant serving a prefill-heavy backlog
+              over every prefill/decode split of the chip budget vs the
+              symmetric baseline — defaults: 13b, ctx 2048, --chips 4,
+              --batch 4, --requests 8, --out 256)
   serve      --model <1b|8b|13b> [--requests N] [--adapters N] [--ctx N]
              [--batch N] [--chips N] [--policy fcfs|affinity|sjf|prefix[,..]]
              [--rate R] [--seeds K] [--jobs N] [--prefill-chunk N]
@@ -67,7 +78,11 @@ commands:
               --max-run-len N: affinity starvation bound;
               --no-calendar: scan-based reference event loop (identical
               results, O(n) event lookup — see DESIGN.md §Calendar);
-              --chips N: tensor-parallel shard over N chips)
+              --chips N: tensor-parallel shard over N chips;
+              --prefill-chips/--decode-chips: disaggregated pools — the
+              prefill pool admits while the decode pool steps, overlapped;
+              KV migrates over the chip ring at admission (continuous
+              mode only, sums to --chips))
   sweep      --model <1b|8b|13b> [--from N] [--to N] [--jobs N]
   validate   [--artifacts DIR]
 
@@ -83,6 +98,11 @@ examples:
   primal serve --model 1b --ctx 256 --requests 64 --trace prefix \\
                --continuous --batch 4 --prefix-share 0.8 --policy prefix
   primal report --table 2 --hetero --chips 2
+  primal report --table 2 --disagg --chips 4 --jobs 4
+  primal simulate --model 13b --ctx 2048 --chips 4 --prefill-chips 2 \\
+                  --decode-chips 2
+  primal serve --model 13b --ctx 2048 --requests 8 --batch 4 --continuous \\
+               --chips 4 --prefill-chips 2 --decode-chips 2
   primal validate"
     );
     std::process::exit(2)
@@ -155,11 +175,24 @@ fn jobs_arg(flags: &BTreeMap<String, String>) -> usize {
     }
 }
 
+/// Optional `--prefill-chips` / `--decode-chips` pool override. The
+/// value is parsed verbatim (0 included) so contradictions reach
+/// `ExperimentConfig::validate` as real errors, never silent clamps.
+fn pool_flag(flags: &BTreeMap<String, String>, key: &str) -> Option<usize> {
+    flags.get(key)?;
+    Some(num_flag(flags, key, 0))
+}
+
 fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     let ctx = num_flag(&flags, "ctx", 1024);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
-    cfg.serving.max_batch = num_flag(&flags, "batch", 1).max(1);
-    cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
+    // No clamping: a zero batch or chip count is a config error that
+    // `validate()` reports below, not something to silently round up.
+    cfg.serving.max_batch = num_flag(&flags, "batch", 1);
+    cfg.shard.n_chips = num_flag(&flags, "chips", 1);
+    cfg.shard.prefill_chips = pool_flag(&flags, "prefill-chips");
+    cfg.shard.decode_chips = pool_flag(&flags, "decode-chips");
+    cfg.shard.pipeline_stages = num_flag(&flags, "stages", 1);
     if flags.contains_key("no-srpg") {
         cfg.srpg = false;
     }
@@ -175,12 +208,33 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
     } else {
         Simulator::new(&cfg)
     };
-    let r = sim.run();
+    // A pool split or pipeline depth routes through the disaggregated
+    // engine; the unified single-stage default keeps the paper path
+    // (the two are bit-identical there — gated in tests/disagg.rs).
+    let disagg = cfg.shard.is_disagg() || cfg.shard.pipeline_stages > 1;
+    let r = if disagg {
+        let pool = match PoolPlan::from_shard(&cfg.shard, cfg.model.layers) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("config: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        sim.run_disagg(&pool)
+    } else {
+        sim.run()
+    };
     println!("model        : {}", r.model);
     println!("LoRA         : rank 8 ({})", r.lora_label);
     println!("context      : {}/{}", r.input_tokens, r.output_tokens);
     println!("batch        : {}", r.batch);
     println!("chips        : {}", r.n_chips);
+    if let (Some(p), Some(d)) = (cfg.shard.prefill_chips, cfg.shard.decode_chips) {
+        println!("pools        : {p} prefill + {d} decode (KV migrates at admission)");
+    }
+    if cfg.shard.pipeline_stages > 1 {
+        println!("stages       : {} (inter-layer pipeline per pool)", cfg.shard.pipeline_stages);
+    }
     println!("SRPG         : {}", if r.srpg { "on" } else { "off" });
     println!("CTs          : {} ({} per layer)", r.total_cts, r.cts_per_layer);
     println!("TTFT         : {:.3} s", r.ttft_s);
@@ -199,11 +253,68 @@ fn cmd_simulate(flags: BTreeMap<String, String>) -> ExitCode {
 
 fn cmd_report(flags: BTreeMap<String, String>) -> ExitCode {
     let which = flags.get("table").map(String::as_str).unwrap_or("2");
-    let batch = num_flag(&flags, "batch", 1).max(1);
-    let chips = num_flag(&flags, "chips", 1).max(1);
+    let batch = num_flag(&flags, "batch", 1);
+    let chips = num_flag(&flags, "chips", 1);
+    if batch == 0 {
+        eprintln!("--batch expects a count >= 1");
+        return ExitCode::FAILURE;
+    }
+    if chips == 0 {
+        eprintln!("--chips expects a count >= 1");
+        return ExitCode::FAILURE;
+    }
     let jobs = jobs_arg(&flags);
     match which {
         "1" => println!("{}", metrics::table1(&metrics::paper_grid()[0])),
+        "2" if flags.contains_key("disagg") => {
+            // Disaggregated-pools Table II: serving-based — the win
+            // comes from overlapping admission prefills (prefill pool)
+            // with in-flight decode (decode pool), which the closed-batch
+            // engine cannot express at equal chips. One row per pool
+            // split of the chip budget plus the symmetric baseline, all
+            // serving the same prefill-heavy backlog.
+            let chips = if flags.contains_key("chips") { chips } else { 4 };
+            let batch = if flags.contains_key("batch") { batch } else { 4 };
+            if chips < 2 {
+                eprintln!("--disagg needs --chips >= 2 (one chip per pool)");
+                return ExitCode::FAILURE;
+            }
+            let requests = num_flag(&flags, "requests", 8);
+            let out = num_flag(&flags, "out", 256);
+            let model = if flags.contains_key("model") {
+                model_flag(&flags)
+            } else {
+                ModelId::Llama2_13b
+            };
+            let ctx = num_flag(&flags, "ctx", 2048);
+            let mut cfg = ExperimentConfig::paper_point(model, &lora_flag(&flags), ctx);
+            // The symmetric baseline row (split = None) serves on the
+            // full chip budget; split rows overwrite n_chips with p + d.
+            cfg.shard.n_chips = chips;
+            eprintln!(
+                "serving the disagg backlog ({requests} x {ctx}/{out} requests, \
+                 FCFS, batch {batch}) over every pool split of {chips} chip(s)..."
+            );
+            let mut splits: Vec<Option<(usize, usize)>> = vec![None];
+            for p in 1..chips {
+                splits.push(Some((p, chips - p)));
+            }
+            let cells = sweep::run_indexed(jobs, splits.len(), |i| {
+                metrics::run_point_disagg_serve(&cfg, requests, out, batch, splits[i])
+            });
+            let mut rows = Vec::new();
+            for cell in cells {
+                match cell {
+                    Ok(row) => rows.push(row),
+                    Err(e) => eprintln!("skipping: {e}"),
+                }
+            }
+            if rows.is_empty() {
+                eprintln!("no pool split of {chips} chip(s) is servable");
+                return ExitCode::FAILURE;
+            }
+            println!("{}", metrics::table2_disagg(&cfg.model.id.to_string(), ctx, out, &rows));
+        }
         "2" if flags.contains_key("hetero") => {
             // Heterogeneous-batch Table II: one row per (grid point,
             // prompt mix), batch fixed by the mix width. Feasibility is
@@ -387,7 +498,18 @@ fn cmd_serve(flags: BTreeMap<String, String>) -> ExitCode {
     let preambles = num_flag(&flags, "preambles", 4).max(1);
     let mut cfg = ExperimentConfig::paper_point(model_flag(&flags), &lora_flag(&flags), ctx);
     cfg.serving.affinity_max_run_len = max_run_len;
-    cfg.shard.n_chips = num_flag(&flags, "chips", 1).max(1);
+    let chips = num_flag(&flags, "chips", 1);
+    if chips == 0 {
+        eprintln!("--chips expects a count >= 1");
+        usage()
+    }
+    cfg.shard.n_chips = chips;
+    // Pool flags pass through unclamped: a contradictory split (zero
+    // chips, or not summing to --chips) must fail server construction
+    // with the real validation message, never be rounded into shape.
+    cfg.shard.prefill_chips = pool_flag(&flags, "prefill-chips");
+    cfg.shard.decode_chips = pool_flag(&flags, "decode-chips");
+    cfg.shard.pipeline_stages = num_flag(&flags, "stages", 1);
     let functional = if flags.contains_key("golden") {
         FunctionalMode::Golden
     } else {

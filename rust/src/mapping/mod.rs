@@ -28,7 +28,7 @@ mod shard;
 pub use layer::{LayerMapping, ModelMapping};
 pub use optimizer::{optimize_layer, MappingStrategy};
 pub use placement::{MatrixId, MatrixRegion, MatrixShape};
-pub use shard::{share_of, split_even, ShardPlan, ShardSlice};
+pub use shard::{share_of, split_even, PoolPlan, ShardPlan, ShardSlice};
 
 use crate::config::ExperimentConfig;
 

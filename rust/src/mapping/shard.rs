@@ -150,6 +150,201 @@ impl ShardPlan {
     }
 }
 
+/// The pool tier above the chip tier: a partition of `n_chips` into a
+/// prefill pool and a decode pool (phase disaggregation), each packed
+/// into `stages` inter-layer pipeline stages of contiguous layer ranges.
+/// Within a stage the chips form one tensor-split group (the all-reduce
+/// group); between stages activations hand off over the chip mesh.
+///
+/// `prefill_chips == 0` encodes the **unified** plan: every chip serves
+/// both phases, which at `stages == 1` is exactly the symmetric
+/// tensor-parallel model — `Simulator::run_disagg_batched` collapses
+/// bit-for-bit onto `run_sharded_batched` there (gated in
+/// `tests/disagg.rs` and the mirror).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolPlan {
+    pub n_chips: usize,
+    /// Chips in the prefill pool; 0 = unified (no phase split).
+    pub prefill_chips: usize,
+    /// Chips in the decode pool; 0 = unified.
+    pub decode_chips: usize,
+    /// Inter-layer pipeline stages per pool (1 = pure tensor split).
+    pub stages: usize,
+    pub n_layers: usize,
+    /// Contiguous layer counts per stage ([`split_even`] over the layers:
+    /// sums to `n_layers` exactly, stage 0 largest).
+    pub stage_layers: Vec<u64>,
+}
+
+impl PoolPlan {
+    /// The unified single-stage plan (the degenerate point every sharded
+    /// run already models). Never fails.
+    pub fn unified(n_chips: usize, n_layers: usize) -> Self {
+        Self::new(n_chips.max(1), None, None, 1, n_layers.max(1))
+            .expect("unified single-stage plan is always valid")
+    }
+
+    /// The general constructor: optional explicit pool split, pipeline
+    /// stage count, and the model's layer count. Validates the same
+    /// contract `ExperimentConfig::validate` reports on: pools set
+    /// together, >= 1 chip each, summing to `n_chips`; stages >= 1,
+    /// <= `n_layers`, and dividing every pool's chip count.
+    pub fn new(
+        n_chips: usize,
+        prefill: Option<usize>,
+        decode: Option<usize>,
+        stages: usize,
+        n_layers: usize,
+    ) -> Result<Self, String> {
+        if n_chips == 0 {
+            return Err("pool plan needs >= 1 chip".into());
+        }
+        if n_layers == 0 {
+            return Err("pool plan needs >= 1 layer".into());
+        }
+        if stages == 0 {
+            return Err("pipeline_stages must be >= 1".into());
+        }
+        if stages > n_layers {
+            return Err(format!(
+                "pipeline_stages {stages} exceeds the model's {n_layers} layers"
+            ));
+        }
+        let (p, d) = match (prefill, decode) {
+            (None, None) => (0, 0),
+            (Some(p), Some(d)) => {
+                if p == 0 || d == 0 {
+                    return Err(
+                        "disaggregated pools need >= 1 chip each".into()
+                    );
+                }
+                if p + d != n_chips {
+                    return Err(format!(
+                        "prefill_chips {p} + decode_chips {d} != n_chips {n_chips}"
+                    ));
+                }
+                (p, d)
+            }
+            _ => {
+                return Err(
+                    "prefill_chips and decode_chips must be set together".into()
+                )
+            }
+        };
+        let plan = Self {
+            n_chips,
+            prefill_chips: p,
+            decode_chips: d,
+            stages,
+            n_layers,
+            stage_layers: split_even(n_layers as u64, stages),
+        };
+        for pool in [plan.prefill_pool_chips(), plan.decode_pool_chips()] {
+            if pool % stages != 0 {
+                return Err(format!(
+                    "pipeline_stages {stages} must divide the pool's {pool} \
+                     chip(s) (each stage is one tensor-split group)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// An explicit phase-disaggregated split.
+    pub fn split(
+        prefill: usize,
+        decode: usize,
+        stages: usize,
+        n_layers: usize,
+    ) -> Result<Self, String> {
+        Self::new(prefill + decode, Some(prefill), Some(decode), stages, n_layers)
+    }
+
+    /// The plan a [`crate::config::ShardConfig`] describes.
+    pub fn from_shard(
+        shard: &crate::config::ShardConfig,
+        n_layers: usize,
+    ) -> Result<Self, String> {
+        Self::new(
+            shard.n_chips.max(1),
+            shard.prefill_chips,
+            shard.decode_chips,
+            shard.pipeline_stages.max(1),
+            n_layers,
+        )
+    }
+
+    /// The optimizer's pool chooser: split `n_chips` proportionally to
+    /// the trace's prefill:decode FLOP ratio (`prefill_weight` /
+    /// `decode_weight`, e.g. summed prompt vs generated tokens). The
+    /// ideal share is rounded, clamped to leave every pool >= 1 chip,
+    /// then nudged to the nearest split both pools' stage counts divide
+    /// (smaller prefill pool preferred on ties — decode holds the KV).
+    pub fn balanced(
+        n_chips: usize,
+        stages: usize,
+        n_layers: usize,
+        prefill_weight: u64,
+        decode_weight: u64,
+    ) -> Result<Self, String> {
+        if n_chips < 2 {
+            return Err("a disaggregated split needs >= 2 chips".into());
+        }
+        let s = prefill_weight + decode_weight;
+        if s == 0 {
+            return Err("balanced pool split needs a non-zero FLOP weight".into());
+        }
+        // round(n * pw / s), half away from zero, in exact integers.
+        let ideal = ((2 * n_chips as u128 * prefill_weight as u128 + s as u128)
+            / (2 * s as u128)) as usize;
+        let ideal = ideal.clamp(1, n_chips - 1);
+        let mut candidates: Vec<usize> = (1..n_chips).collect();
+        candidates.sort_by_key(|&p| (p.abs_diff(ideal), p));
+        for p in candidates {
+            if let Ok(plan) = Self::split(p, n_chips - p, stages, n_layers) {
+                return Ok(plan);
+            }
+        }
+        Err(format!(
+            "no prefill/decode split of {n_chips} chips is divisible into \
+             {stages} pipeline stage(s) per pool"
+        ))
+    }
+
+    /// Whether the phases run on separate pools.
+    pub fn is_disagg(&self) -> bool {
+        self.prefill_chips > 0
+    }
+
+    /// Chips the prefill phase runs on (the whole machine when unified).
+    pub fn prefill_pool_chips(&self) -> usize {
+        if self.is_disagg() {
+            self.prefill_chips
+        } else {
+            self.n_chips
+        }
+    }
+
+    /// Chips the decode phase runs on (the whole machine when unified).
+    pub fn decode_pool_chips(&self) -> usize {
+        if self.is_disagg() {
+            self.decode_chips
+        } else {
+            self.n_chips
+        }
+    }
+
+    /// Tensor-split width of one prefill pipeline stage.
+    pub fn prefill_width(&self) -> usize {
+        (self.prefill_pool_chips() / self.stages).max(1)
+    }
+
+    /// Tensor-split width of one decode pipeline stage.
+    pub fn decode_width(&self) -> usize {
+        (self.decode_pool_chips() / self.stages).max(1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +430,58 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pool_plan_degenerate_and_split_shapes() {
+        let u = PoolPlan::unified(4, 16);
+        assert!(!u.is_disagg());
+        assert_eq!(u.prefill_pool_chips(), 4);
+        assert_eq!(u.decode_pool_chips(), 4);
+        assert_eq!(u.prefill_width(), 4);
+        assert_eq!(u.stage_layers, vec![16]);
+
+        let p = PoolPlan::split(3, 1, 1, 16).expect("3+1 split");
+        assert!(p.is_disagg());
+        assert_eq!(p.n_chips, 4);
+        assert_eq!(p.prefill_width(), 3);
+        assert_eq!(p.decode_width(), 1);
+
+        let staged = PoolPlan::split(2, 2, 2, 16).expect("2+2 at 2 stages");
+        assert_eq!(staged.prefill_width(), 1);
+        assert_eq!(staged.stage_layers, vec![8, 8]);
+        assert_eq!(staged.stage_layers.iter().sum::<u64>(), 16);
+    }
+
+    #[test]
+    fn pool_plan_rejects_bad_shapes() {
+        assert!(PoolPlan::split(0, 4, 1, 16).is_err(), "empty prefill pool");
+        assert!(PoolPlan::new(4, Some(2), Some(1), 1, 16).is_err(), "2+1 != 4");
+        assert!(PoolPlan::new(4, Some(2), None, 1, 16).is_err(), "half-set pools");
+        assert!(PoolPlan::new(4, None, None, 0, 16).is_err(), "zero stages");
+        assert!(PoolPlan::new(4, None, None, 17, 16).is_err(), "stages > layers");
+        assert!(
+            PoolPlan::split(3, 1, 2, 16).is_err(),
+            "2 stages must divide both pools (3 % 2 != 0)"
+        );
+    }
+
+    #[test]
+    fn balanced_tracks_the_flop_ratio() {
+        // Prefill-heavy trace: 3x the prefill FLOPs -> 3 of 4 chips.
+        let p = PoolPlan::balanced(4, 1, 16, 3000, 1000).expect("balanced");
+        assert_eq!((p.prefill_chips, p.decode_chips), (3, 1));
+        // Decode-heavy flips it.
+        let d = PoolPlan::balanced(4, 1, 16, 1000, 3000).expect("balanced");
+        assert_eq!((d.prefill_chips, d.decode_chips), (1, 3));
+        // Extreme ratios still leave each pool a chip.
+        let e = PoolPlan::balanced(4, 1, 16, 1_000_000, 1).expect("balanced");
+        assert_eq!((e.prefill_chips, e.decode_chips), (3, 1));
+        // Stage divisibility nudges 50:50 on 4 chips at 2 stages to 2+2.
+        let s = PoolPlan::balanced(4, 2, 16, 1, 1).expect("balanced staged");
+        assert_eq!((s.prefill_chips, s.decode_chips), (2, 2));
+        assert!(PoolPlan::balanced(1, 1, 16, 1, 1).is_err(), "1 chip can't split");
+        assert!(PoolPlan::balanced(4, 1, 16, 0, 0).is_err(), "zero weights");
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! into this module, so the printed artifacts are identical everywhere.
 
 use crate::baseline::H100Model;
-use crate::config::{ExperimentConfig, LoraTarget, ModelId};
-use crate::energy::macro_breakdown;
+use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+use crate::coordinator::{AdapterId, Request, ServerBuilder};
+use crate::mapping::PoolPlan;
 use crate::sim::{SimReport, Simulator};
+use crate::energy::macro_breakdown;
 use crate::util::table::{fnum, Align, Table};
 
 /// The paper's benchmark grid: 3 models x {Q}, {Q,V} x 2 contexts.
@@ -76,6 +78,128 @@ pub fn hetero_mix_label(prompts: &[usize]) -> String {
         s.push_str(&p.to_string());
     }
     s
+}
+
+/// Run one grid point through the closed-batch disaggregated engine
+/// (prefill pool -> explicit KV migration -> decode pool, optional
+/// inter-layer pipeline stages). A unified single-stage plan bit-matches
+/// [`run_point_sharded`] on every report field — gated in
+/// `tests/disagg.rs` and mirrored in `sim_mirror.py --check`.
+pub fn run_point_disagg(cfg: &ExperimentConfig, batch: usize, pool: &PoolPlan) -> SimReport {
+    Simulator::new(cfg).run_disagg_batched(batch, pool)
+}
+
+/// Render a pool split as a compact cell label (`"2p+2d"`; unified pools
+/// print the chip count, e.g. `"4 (unified)"`).
+pub fn pool_label(split: Option<(usize, usize)>, n_chips: usize) -> String {
+    match split {
+        Some((p, d)) => format!("{p}p+{d}d"),
+        None => format!("{n_chips} (unified)"),
+    }
+}
+
+/// One `report --table 2 --disagg` row: a pool split served against the
+/// prefill-heavy reference backlog and drained to completion.
+#[derive(Debug, Clone)]
+pub struct DisaggServeRow {
+    pub pools: String,
+    pub served: u64,
+    pub total_tokens: u64,
+    /// Simulated time to drain the whole backlog (s).
+    pub drain_s: f64,
+    pub throughput_tps: f64,
+    pub ttft_p95_s: f64,
+    pub itl_p95_ms: f64,
+    pub preemptions: u64,
+}
+
+/// Serve the disaggregated Table II reference backlog: `n_requests`
+/// identical prefill-heavy requests (`cfg.input_tokens` in,
+/// `out_tokens` out), all arriving at t=0, FCFS, continuous batching at
+/// `max_batch`, over either a `(prefill, decode)` pool split or (with
+/// `split == None`) the symmetric `cfg.shard.n_chips`-chip baseline.
+///
+/// The closed-batch engine cannot show a disaggregation win at equal
+/// chips (the decode pool is strictly narrower), so the Table II
+/// `--disagg` rows are serving-based: the win comes from overlapping the
+/// next request's prefill (on the prefill pool) with in-flight decode
+/// (on the decode pool).
+pub fn run_point_disagg_serve(
+    cfg: &ExperimentConfig,
+    n_requests: usize,
+    out_tokens: usize,
+    max_batch: usize,
+    split: Option<(usize, usize)>,
+) -> Result<DisaggServeRow, String> {
+    let mut exp = cfg.clone();
+    match split {
+        Some((p, d)) => {
+            exp.shard.n_chips = p + d;
+            exp.shard.prefill_chips = Some(p);
+            exp.shard.decode_chips = Some(d);
+        }
+        None => {
+            exp.shard.prefill_chips = None;
+            exp.shard.decode_chips = None;
+        }
+    }
+    let pools = pool_label(split, exp.shard.n_chips);
+    let mut server = ServerBuilder::from_experiment(exp)
+        .max_batch(max_batch)
+        .policy_kind(PolicyKind::Fcfs)
+        .continuous(true)
+        .build()
+        .map_err(|e| format!("pools {pools}: server init failed: {e:#}"))?;
+    server.register_adapter(AdapterId(0));
+    for i in 0..n_requests {
+        server
+            .submit(Request::new(i as u64, AdapterId(0), cfg.input_tokens, out_tokens))
+            .map_err(|e| format!("pools {pools}: submit failed: {e:#}"))?;
+    }
+    server
+        .drain(None)
+        .map_err(|e| format!("pools {pools}: serving failed: {e:#}"))?;
+    let s = server.stats();
+    Ok(DisaggServeRow {
+        pools,
+        served: s.served,
+        total_tokens: s.total_tokens,
+        drain_s: s.sim_time_s,
+        throughput_tps: s.total_tokens as f64 / s.sim_time_s.max(1e-12),
+        ttft_p95_s: s.ttft.p95,
+        itl_p95_ms: s.itl.p95,
+        preemptions: s.preemptions,
+    })
+}
+
+/// Table II, disaggregated-pools variant (`report --table 2 --disagg`):
+/// one row per pool split of the same chip budget, served against the
+/// same prefill-heavy backlog ([`run_point_disagg_serve`]). The `Pools`
+/// column carries the split; the symmetric row is the baseline every
+/// split is judged against.
+pub fn table2_disagg(model: &str, ctx: usize, out: usize, rows: &[DisaggServeRow]) -> String {
+    let mut t = Table::new(&[
+        "Pools", "Served", "Tokens", "Drain (ms)",
+        "Throughput (tok/s)", "TTFT p95 (s)", "ITL p95 (ms)", "Preempt",
+    ])
+    .align(0, Align::Left)
+    .title(&format!(
+        "Table II (disagg): {model} {ctx}/{out} backlog — prefill/decode pool splits \
+         vs the symmetric baseline"
+    ));
+    for r in rows {
+        t.row(vec![
+            r.pools.clone(),
+            r.served.to_string(),
+            r.total_tokens.to_string(),
+            fnum(r.drain_s * 1e3, 3),
+            fnum(r.throughput_tps, 2),
+            fnum(r.ttft_p95_s, 3),
+            fnum(r.itl_p95_ms, 3),
+            r.preemptions.to_string(),
+        ]);
+    }
+    t.render()
 }
 
 /// Table II, heterogeneous-batch variant: one row per (model, mix) with
@@ -385,6 +509,41 @@ mod tests {
         let uref = run_point_sharded(&hetero_cfg, 4, 1);
         assert_eq!(href.throughput_tps.to_bits(), uref.throughput_tps.to_bits());
         assert_eq!(href.total_cycles, uref.total_cycles);
+    }
+
+    #[test]
+    fn disagg_point_bitmatches_sharded_when_unified() {
+        let grid = paper_grid();
+        let cfg = &grid[0]; // 1B, ctx 1024 (cheap)
+        let pool = PoolPlan::unified(2, cfg.model.layers);
+        let disagg = run_point_disagg(cfg, 2, &pool);
+        let sym = run_point_sharded(cfg, 2, 2);
+        assert_eq!(disagg.throughput_tps.to_bits(), sym.throughput_tps.to_bits());
+        assert_eq!(disagg.avg_power_w.to_bits(), sym.avg_power_w.to_bits());
+        assert_eq!(disagg.total_cycles, sym.total_cycles);
+        // A genuine split costs the migration + narrower decode pool, so
+        // the closed-batch engine is strictly slower at equal chips.
+        let split = PoolPlan::split(1, 1, 1, cfg.model.layers).unwrap();
+        let d = run_point_disagg(cfg, 2, &split);
+        assert!(d.total_cycles > sym.total_cycles);
+    }
+
+    #[test]
+    fn disagg_table_renders_pool_labels() {
+        assert_eq!(pool_label(Some((2, 2)), 4), "2p+2d");
+        assert_eq!(pool_label(None, 4), "4 (unified)");
+        let grid = paper_grid();
+        let cfg = &grid[0]; // 1B ctx 1024: 1p+1d is feasible and cheap
+        let rows = vec![
+            run_point_disagg_serve(cfg, 2, 8, 2, None).unwrap(),
+            run_point_disagg_serve(cfg, 2, 8, 2, Some((1, 1))).unwrap(),
+        ];
+        assert_eq!(rows[0].served, 2);
+        assert_eq!(rows[1].served, 2);
+        assert_eq!(rows[0].pools, "1 (unified)");
+        let t = table2_disagg("Llama 3.2 1B", cfg.input_tokens, 8, &rows);
+        assert!(t.contains("Pools"), "disagg table carries the pool column");
+        assert!(t.contains("1p+1d"));
     }
 
     #[test]

@@ -85,6 +85,18 @@ impl ChipMesh {
         ALLREDUCES_PER_LAYER
             * self.all_reduce_link_bytes((hidden * 4 * tokens) as u64)
     }
+
+    /// Point-to-point transfer of a `bytes` payload across one chip link
+    /// (pool-to-pool KV migration, pipeline-stage activation handoff):
+    /// one hop's latency plus the streamed volume. Zero at zero bytes
+    /// (nothing moves — the unified/degenerate collapse), strictly
+    /// positive otherwise (the hop term alone guarantees it).
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.hop_cycles + self.stream_cycles(bytes)
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +146,18 @@ mod tests {
         assert!(v8 < 2 * bytes);
         assert!(v8 > (2 * bytes) * 3 / 4);
         assert!(mesh(8).all_reduce_link_bytes(bytes) > mesh(2).all_reduce_link_bytes(bytes));
+    }
+
+    #[test]
+    fn transfer_is_zero_only_at_zero_bytes() {
+        let m = mesh(4);
+        assert_eq!(m.transfer_cycles(0), 0);
+        // 1 byte still pays the full hop latency.
+        assert_eq!(m.transfer_cycles(1), 250 + 1);
+        // 8192 B at 32 B/cycle: 250 + 256.
+        assert_eq!(m.transfer_cycles(8192), 250 + 256);
+        // Independent of the ring size (a point-to-point hop).
+        assert_eq!(mesh(1).transfer_cycles(8192), mesh(8).transfer_cycles(8192));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use super::layer_model::LayerCostModel;
 use crate::config::ExperimentConfig;
 use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
 use crate::energy::{CtPowerState, EnergyLedger};
-use crate::mapping::{map_model, map_model_naive, ModelMapping};
+use crate::mapping::{map_model, map_model_naive, ModelMapping, PoolPlan};
 use crate::noc::ChipMesh;
 use crate::srpg::SrpgSchedule;
 use crate::trace::{Trace, TraceEvent, TraceKind};
@@ -820,6 +820,338 @@ impl Simulator {
             itl_last_ms: itl_last as f64 * cyc * 1e3,
         }
     }
+
+    /// Phase-disaggregated serving at the experiment's configured batch.
+    pub fn run_disagg(&self, pool: &PoolPlan) -> SimReport {
+        self.run_disagg_batched(self.cfg.serving.max_batch, pool)
+    }
+
+    /// The pool-tier engine: `batch` identical requests over a
+    /// [`PoolPlan`] that splits the chips into a prefill pool and a
+    /// decode pool, each packed into `stages` inter-layer pipeline stages
+    /// (contiguous layer ranges, tensor-split within a stage).
+    ///
+    /// Timing model:
+    ///  * **Prefill pipeline.** Each request prefills layer-sequentially
+    ///    at the prefill pool's stage width; with `s` stages request `r`
+    ///    finishes at `fill + r * M` where `fill` is the full stage chain
+    ///    plus `(s-1)` activation handoffs and `M` is the bottleneck
+    ///    (max stage cost vs handoff) — the standard pipelined-packing
+    ///    bound. At one stage this is exactly the back-to-back
+    ///    layer-sequential model of [`Simulator::run_sharded_batched`].
+    ///  * **KV migration.** A split plan moves each request's prefill KV
+    ///    (`input_tokens * kv_token_bytes * n_layers` bytes) to the
+    ///    decode pool as one explicit [`ChipMesh::transfer_cycles`] hop —
+    ///    strictly positive for any real split, exactly zero unified.
+    ///  * **Overlapped decode staircase.** Split pools decode request `r`
+    ///    from `ready_r = finish_r + migrate` while later requests still
+    ///    prefill — the overlap is the whole point of disaggregation. A
+    ///    unified plan shares the hardware between phases, so every slot's
+    ///    `ready_r` is the *last* prefill finish and the staircase
+    ///    degenerates to the lockstep loop.
+    ///
+    /// The degenerate collapse is bitwise: a unified single-stage plan
+    /// reproduces `run_sharded_batched(batch, n_chips)` on every report
+    /// field, cycles and energy bits alike (gated in `tests/disagg.rs`
+    /// and in `sim_mirror.py --check`), because each arithmetic term
+    /// above reduces op-for-op to the symmetric engine's expression.
+    pub fn run_disagg_batched(&self, batch: usize, pool: &PoolPlan) -> SimReport {
+        let b = batch.max(1);
+        let bu = b as u64;
+        let nc = pool.n_chips.max(1);
+        let cfg = &self.cfg;
+        let m = &cfg.model;
+        let tw_p = pool.prefill_width();
+        let tw_d = pool.decode_width();
+        let s = pool.stages.max(1);
+        let su = s as u64;
+        let mesh_p = ChipMesh::new(&cfg.shard, tw_p);
+        let mesh_d = ChipMesh::new(&cfg.shard, tw_d);
+        // Point-to-point pool/stage links (hop + bandwidth constants only).
+        let link = ChipMesh::new(&cfg.shard, nc);
+        let mut ledger = EnergyLedger::new(&cfg.system, &cfg.calib);
+        let mut trace = Trace::new(self.trace_enabled);
+
+        let lm0 = &self.mapping.layers[0];
+        let n_groups = m.layers;
+        debug_assert_eq!(pool.n_layers, n_groups, "plan built for another model");
+        let cts_per_group = self.mapping.cts_per_layer();
+        let total_cts = self.mapping.total_cts * nc;
+
+        // ---- reprogramming: identical to the symmetric engine ----------
+        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let srpg = SrpgSchedule {
+            n_groups,
+            cts_per_group,
+            reprog_cycles: reprog.cycles,
+            enabled: cfg.srpg,
+        };
+
+        // ---- prefill: block decomposition at the prefill stage width ---
+        let block = 128usize.min(cfg.input_tokens.max(1));
+        let n_blocks = cfg.input_tokens.div_ceil(block);
+        let mut stage_compute = 0u64;
+        let mut lpc = 0u64; // per-layer prefill cycles (compute + all-reduce)
+        let mut prefill_events = PhaseCost::default();
+        let mut prefill_ar_link_bytes = 0u64;
+        for blk in 0..n_blocks {
+            let this_block = if blk + 1 == n_blocks {
+                cfg.input_tokens - blk * block
+            } else {
+                block
+            };
+            let kv = blk * block + this_block / 2;
+            let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
+            let c = program_cost(&prog, &cfg.system, &cfg.calib);
+            let compute = if tw_p == 1 {
+                c.cycles
+            } else {
+                program_cost(&shard_program_slice(&prog, 0, tw_p), &cfg.system, &cfg.calib)
+                    .cycles
+            };
+            lpc += compute + mesh_p.layer_all_reduce_cycles(m.hidden, this_block);
+            stage_compute += compute;
+            prefill_ar_link_bytes += mesh_p.layer_all_reduce_link_bytes(m.hidden, this_block);
+            prefill_events.add_events(&c);
+        }
+        let mut group_start = vec![0u64; n_groups];
+        for (l, gs) in group_start.iter_mut().enumerate() {
+            *gs = l as u64 * lpc;
+        }
+        let plan = srpg.plan(&group_start);
+        for e in &plan.events {
+            trace.push(*e);
+        }
+        if self.trace_enabled {
+            for (l, gs) in group_start.iter().enumerate() {
+                trace.push(TraceEvent {
+                    ct_group: l,
+                    kind: TraceKind::Prefill,
+                    start: plan.ttft_penalty + gs,
+                    end: plan.ttft_penalty + gs + lpc,
+                });
+            }
+        }
+
+        // ---- prefill pipeline packing ----------------------------------
+        // Stage j holds `stage_layers[j]` contiguous layers, so its cost
+        // is that many per-layer waves; the whole chain is the request's
+        // full prefill (the stage layer counts partition the model).
+        let stage_max = pool.stage_layers.iter().map(|&lj| lj * lpc).max().unwrap_or(0);
+        // Stage-boundary activation handoff: the whole prompt's
+        // activations cross one pool link (zero at one stage).
+        let act_bytes = (m.hidden * 4 * cfg.input_tokens) as u64;
+        let h_p = if s > 1 { link.transfer_cycles(act_bytes) } else { 0 };
+        let fill = n_groups as u64 * lpc + (su - 1) * h_p;
+        let m_p = stage_max.max(h_p);
+        // finish_r: when request r's prefill drains out of the pipeline.
+        // At one stage, fill = the full layer-sequential prefill and
+        // M = the same, so finish_{b-1} = penalty + stalls + b * prefill
+        // — exactly the symmetric engine's ttft_cycles.
+        let finish_of =
+            |r: u64| plan.ttft_penalty + plan.pipeline_stalls + fill + r * m_p;
+        let prefill_span = finish_of(bu - 1);
+
+        // ---- KV migration (pool-to-pool) -------------------------------
+        let migrate_bytes_per_req =
+            (cfg.input_tokens * lm0.kv_token_bytes) as u64 * n_groups as u64;
+        let migrate_cycles = if pool.is_disagg() {
+            link.transfer_cycles(migrate_bytes_per_req)
+        } else {
+            0
+        };
+        // Decode readiness: split pools overlap (request r decodes while
+        // r+1 still prefills); a unified pool serializes the phases.
+        let ready: Vec<u64> = (0..bu)
+            .map(|r| {
+                if pool.is_disagg() {
+                    finish_of(r) + migrate_cycles
+                } else {
+                    prefill_span
+                }
+            })
+            .collect();
+        let ready_last = ready[b - 1];
+
+        // ---- prefill energy (same post order as the symmetric engine) --
+        prefill_events.events_scaled((n_groups * b) as u64).post(&mut ledger);
+        ledger.post_sram_writes(reprog.reprog_bytes * n_groups as u64);
+        if tw_p > 1 {
+            ledger.post_network(prefill_ar_link_bytes * (n_groups * b) as u64 * 4, 1);
+        }
+        if s > 1 {
+            ledger.post_network(act_bytes * (su - 1) * bu * 4, 1);
+        }
+        if pool.is_disagg() {
+            ledger.post_network(migrate_bytes_per_req * bu * 4, 1);
+        }
+        let active_ct_cycles =
+            stage_compute as f64 * (n_groups * cts_per_group * b * tw_p) as f64;
+        let total_ct_cycles = prefill_span as f64 * total_cts as f64;
+        let reprog_cycles_total = plan.reprog_ct_cycles * nc as f64;
+        let idle_ct_cycles =
+            (total_ct_cycles - active_ct_cycles - reprog_cycles_total).max(0.0);
+        ledger.post_ct_state(CtPowerState::Active, active_ct_cycles, 1);
+        ledger.post_ct_state(srpg.idle_state(), idle_ct_cycles, 1);
+        ledger.post_ct_state(CtPowerState::Reprogramming, reprog_cycles_total, 1);
+
+        // ---- decode staircase ------------------------------------------
+        let layer_model = LayerCostModel::build_cached(cfg, lm0);
+        let shard_model = if tw_d == 1 {
+            Arc::clone(&layer_model)
+        } else {
+            LayerCostModel::build_cached_for_chips(cfg, lm0, tw_d)
+        };
+        let ar_decode_cycles = mesh_d.layer_all_reduce_cycles(m.hidden, 1);
+        let ar_decode_link_bytes = mesh_d.layer_all_reduce_link_bytes(m.hidden, 1);
+        let lm_head = if cfg.include_lm_head {
+            let head = super::lm_head::LmHead::build(cfg);
+            let cost = head.decode_cost(cfg);
+            Some((head, cost))
+        } else {
+            None
+        };
+        let out = cfg.output_tokens;
+        let outu = out as u64;
+        let kv0 = cfg.input_tokens;
+        let ovh = cfg.serving.batch_overhead_cycles;
+        let head_cycles = lm_head.as_ref().map(|(_, c)| c.cycles).unwrap_or(0);
+        let tok_act_bytes = (m.hidden * 4) as u64;
+
+        let mut t_clock = *ready.iter().min().expect("batch >= 1");
+        let mut done = vec![0u64; b];
+        let mut decode_events = PhaseCost::default();
+        let mut decode_compute_sum = 0u64;
+        let mut token_slots = 0u64; // Σ present slots over steps = b * out
+        let mut handoff_bytes = 0u64;
+        let mut itl_first = 0u64;
+        let mut itl_last = 0u64;
+        if out == 0 {
+            t_clock = ready_last;
+        }
+        let mut costs: Vec<u64> = Vec::with_capacity(b);
+        while done.iter().any(|&d| d < outu) {
+            let present: Vec<usize> =
+                (0..b).filter(|&r| done[r] < outu && ready[r] <= t_clock).collect();
+            if present.is_empty() {
+                match (0..b).filter(|&r| done[r] < outu).map(|r| ready[r]).min() {
+                    // A migrating request is still in flight: the decode
+                    // pool idles until its KV lands.
+                    Some(t) => {
+                        t_clock = t;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            costs.clear();
+            for &r in &present {
+                let kv = kv0 + done[r] as usize;
+                let per_layer = layer_model.eval(kv);
+                let compute = if tw_d == 1 {
+                    per_layer.cycles
+                } else {
+                    shard_model.eval_cycles(kv)
+                };
+                costs.push(compute + ar_decode_cycles);
+                decode_events.add_events(&per_layer);
+                decode_compute_sum += compute;
+            }
+            let k = present.len() as u64;
+            let step_handoff_bytes = if s > 1 { tok_act_bytes * k * (su - 1) } else { 0 };
+            let handoff = if s > 1 {
+                link.transfer_cycles(tok_act_bytes * k) * (su - 1)
+            } else {
+                0
+            };
+            let step = pipelined_step_cycles(&costs, n_groups, ovh)
+                + head_cycles * k
+                + handoff;
+            if itl_first == 0 {
+                itl_first = step;
+            }
+            itl_last = step;
+            t_clock += step;
+            token_slots += k;
+            handoff_bytes += step_handoff_bytes;
+            for &r in &present {
+                done[r] += 1;
+            }
+        }
+        let total_cycles = t_clock.max(ready_last);
+        let decode_span = total_cycles - ready_last;
+
+        // ---- decode energy (same post order) ---------------------------
+        if out > 0 {
+            decode_events.events_scaled(n_groups as u64).post(&mut ledger);
+            if tw_d > 1 {
+                ledger.post_network(
+                    ar_decode_link_bytes * token_slots * n_groups as u64 * 4,
+                    1,
+                );
+            }
+            if let Some((_, head_cost)) = &lm_head {
+                head_cost.events_scaled(token_slots).post(&mut ledger);
+            }
+            if s > 1 {
+                ledger.post_network(handoff_bytes * 4, 1);
+            }
+            if b == 1 && nc == 1 {
+                let active = decode_span as f64 * cts_per_group as f64;
+                let idle =
+                    decode_span as f64 * ((n_groups - 1) * cts_per_group) as f64;
+                ledger.post_ct_state(CtPowerState::Active, active, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle, 1);
+            } else {
+                let active_int = (n_groups * tw_d) as u64
+                    * decode_compute_sum
+                    * cts_per_group as u64;
+                let total_int = decode_span * (n_groups * cts_per_group * nc) as u64;
+                let idle_int = total_int.saturating_sub(active_int);
+                ledger.post_ct_state(CtPowerState::Active, active_int as f64, 1);
+                ledger.post_ct_state(srpg.idle_state(), idle_int as f64, 1);
+            }
+        }
+
+        // ---- report ----------------------------------------------------
+        let cyc = cfg.system.cycle_s();
+        ledger.span_cycles = total_cycles;
+        let ttft_s = ready_last as f64 * cyc;
+        let itl_ms = if out > 0 {
+            decode_span as f64 / out as f64 * cyc * 1e3
+        } else {
+            0.0
+        };
+        let total_s = ttft_s + decode_span as f64 * cyc;
+        let tokens = ((cfg.input_tokens + out) * b) as f64;
+        let throughput = tokens / total_s;
+        let avg_power = ledger.average_power_w();
+        let energy_j = ledger.total_j();
+
+        SimReport {
+            model: m.id.to_string(),
+            lora_label: crate::config::LoraTarget::label(&cfg.lora.targets),
+            input_tokens: cfg.input_tokens,
+            output_tokens: out,
+            batch: b,
+            n_chips: nc,
+            srpg: cfg.srpg,
+            ttft_s,
+            itl_ms,
+            throughput_tps: throughput,
+            avg_power_w: avg_power,
+            efficiency_tpj: throughput / avg_power.max(1e-12),
+            total_cts,
+            cts_per_layer: cts_per_group,
+            total_cycles,
+            total_energy_j: energy_j,
+            energy: ledger.breakdown,
+            reprog_stall_cycles: plan.pipeline_stalls,
+            trace,
+            itl_first_ms: itl_first as f64 * cyc * 1e3,
+            itl_last_ms: itl_last as f64 * cyc * 1e3,
+        }
+    }
 }
 
 /// Push one decode token's per-group trace spans (first few tokens only;
@@ -1079,6 +1411,51 @@ mod tests {
             assert_eq!(hetero.input_tokens, 512);
             assert_reports_bit_identical(&uniform, &hetero, &format!("b{batch}/c{chips}"));
         }
+    }
+
+    #[test]
+    fn disagg_unified_single_stage_collapses_bitwise() {
+        // The tentpole's acceptance gate at unit scope: one pool holding
+        // all chips at one pipeline stage IS the symmetric engine — every
+        // staircase term reduces op-for-op, so every report field matches
+        // to the bit (cycles and energy alike). The cross-crate suite in
+        // tests/disagg.rs and the mirror repeat this over a wider grid.
+        for (batch, chips) in [(1usize, 1usize), (3, 1), (2, 2), (4, 4)] {
+            let cfg = ExperimentConfig::paper_point(
+                ModelId::Llama32_1b,
+                &[LoraTarget::Q, LoraTarget::V],
+                512,
+            );
+            let sim = Simulator::new(&cfg);
+            let sym = sim.run_sharded_batched(batch, chips);
+            let pool = crate::mapping::PoolPlan::unified(chips, cfg.model.layers);
+            let dis = sim.run_disagg_batched(batch, &pool);
+            assert_eq!(dis.n_chips, chips.max(1));
+            assert_reports_bit_identical(&sym, &dis, &format!("b{batch}/c{chips}"));
+        }
+    }
+
+    #[test]
+    fn disagg_split_pays_migration_but_overlaps_phases() {
+        let cfg = ExperimentConfig::paper_point(
+            ModelId::Llama32_1b,
+            &[LoraTarget::Q, LoraTarget::V],
+            512,
+        );
+        let sim = Simulator::new(&cfg);
+        let unified = sim.run_disagg_batched(
+            4,
+            &crate::mapping::PoolPlan::unified(2, cfg.model.layers),
+        );
+        let split = sim.run_disagg_batched(
+            4,
+            &crate::mapping::PoolPlan::split(1, 1, 1, cfg.model.layers).expect("1+1"),
+        );
+        assert_eq!(split.n_chips, 2);
+        // Same total chips: the split pools each run narrower, but the
+        // staircase overlaps request r's decode with r+1's prefill.
+        assert!(split.total_cycles != unified.total_cycles);
+        assert!(split.throughput_tps > 0.0 && split.total_energy_j > 0.0);
     }
 
     #[test]

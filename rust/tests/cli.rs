@@ -1,0 +1,201 @@
+//! Negative-path CLI contract: contradictory or malformed flags must
+//! fail with the real validation message on stderr and a non-zero exit
+//! code — never a panic, and never a silent clamp into a runnable shape.
+//!
+//! Exit-code convention (checked per case): flag-syntax errors route
+//! through `usage()` (exit 2); semantic config errors surface after
+//! parsing (exit 1). Every case also asserts the process did not panic.
+
+use std::process::{Command, Output};
+
+/// Run the `primal` binary with `args`, capturing both streams.
+fn primal(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_primal"))
+        .args(args)
+        .output()
+        .expect("spawn primal binary")
+}
+
+/// Assert a failed invocation: exact exit code, the real error message
+/// on stderr, and no panic anywhere in the output.
+fn assert_fails(args: &[&str], exit: i32, needle: &str) {
+    let out = primal(args);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !stderr.contains("panicked at") && !stdout.contains("panicked at"),
+        "primal {args:?} panicked:\n{stderr}"
+    );
+    assert_eq!(
+        out.status.code(),
+        Some(exit),
+        "primal {args:?}: expected exit {exit}, got {:?}\nstderr:\n{stderr}",
+        out.status.code()
+    );
+    assert!(
+        stderr.contains(needle),
+        "primal {args:?}: stderr missing {needle:?}:\n{stderr}"
+    );
+}
+
+#[test]
+fn simulate_rejects_zero_chips_with_the_validate_message() {
+    // `--chips 0` is a config error `validate()` reports — not a clamp
+    // to 1 chip, and not a panic in the sharding arithmetic.
+    assert_fails(
+        &["simulate", "--model", "1b", "--chips", "0"],
+        1,
+        "config: shard.n_chips must be >= 1",
+    );
+}
+
+#[test]
+fn simulate_rejects_pool_splits_that_do_not_sum_to_chips() {
+    assert_fails(
+        &[
+            "simulate", "--model", "1b", "--chips", "3", "--prefill-chips", "2",
+            "--decode-chips", "2",
+        ],
+        1,
+        "prefill_chips 2 + decode_chips 2 != n_chips 3",
+    );
+}
+
+#[test]
+fn simulate_rejects_a_lone_pool_flag() {
+    // One pool flag without the other is ambiguous — setting only the
+    // prefill side must not default the decode side into existence.
+    assert_fails(
+        &["simulate", "--model", "1b", "--chips", "4", "--prefill-chips", "2"],
+        1,
+        "prefill_chips and decode_chips must be set together",
+    );
+}
+
+#[test]
+fn simulate_rejects_an_empty_pool() {
+    assert_fails(
+        &[
+            "simulate", "--model", "1b", "--chips", "4", "--prefill-chips", "0",
+            "--decode-chips", "4",
+        ],
+        1,
+        "disaggregated pools need >= 1 chip each",
+    );
+}
+
+#[test]
+fn report_rejects_zero_chips() {
+    assert_fails(
+        &["report", "--table", "2", "--chips", "0"],
+        1,
+        "--chips expects a count >= 1",
+    );
+}
+
+#[test]
+fn jobs_over_the_worker_ceiling_is_a_hard_error_not_a_clamp() {
+    // 65 workers exceeds MAX_JOBS = 64: the sweep driver refuses with
+    // the requested number in the message instead of clamping quietly.
+    assert_fails(
+        &["report", "--table", "2", "--jobs", "65"],
+        2,
+        "--jobs 65 exceeds the 64-worker ceiling",
+    );
+}
+
+#[test]
+fn serve_rejects_non_numeric_and_non_finite_rates() {
+    // Both a parse failure and a successfully-parsed infinity must die
+    // on the same guard: inf would silently poison every arrival time.
+    assert_fails(
+        &["serve", "--model", "1b", "--rate", "abc"],
+        2,
+        "--rate expects a finite, non-negative req/s value, got 'abc'",
+    );
+    assert_fails(
+        &["serve", "--model", "1b", "--rate", "inf"],
+        2,
+        "--rate expects a finite, non-negative req/s value, got 'inf'",
+    );
+    assert_fails(
+        &["serve", "--model", "1b", "--rate", "-1"],
+        2,
+        "--rate expects a finite, non-negative req/s value, got '-1'",
+    );
+}
+
+#[test]
+fn serve_rejects_prefix_shares_outside_the_unit_interval() {
+    assert_fails(
+        &["serve", "--model", "1b", "--prefix-share", "1.5"],
+        2,
+        "--prefix-share expects a fraction in [0, 1], got '1.5'",
+    );
+    assert_fails(
+        &["serve", "--model", "1b", "--prefix-share", "-0.1"],
+        2,
+        "--prefix-share expects a fraction in [0, 1], got '-0.1'",
+    );
+}
+
+#[test]
+fn serve_rejects_zero_chips_and_zero_seeds() {
+    assert_fails(
+        &["serve", "--model", "1b", "--chips", "0"],
+        2,
+        "--chips expects a count >= 1",
+    );
+    assert_fails(
+        &["serve", "--model", "1b", "--seeds", "0"],
+        2,
+        "--seeds expects a count >= 1",
+    );
+}
+
+#[test]
+fn serve_disagg_without_continuous_fails_server_construction() {
+    // The pools overlap prefill admission with decode stepping — that
+    // only exists in continuous mode, so the builder refuses up front
+    // rather than serving a silently-symmetric configuration.
+    assert_fails(
+        &[
+            "serve", "--model", "1b", "--requests", "2", "--chips", "4",
+            "--prefill-chips", "2", "--decode-chips", "2",
+        ],
+        1,
+        "continuous",
+    );
+}
+
+#[test]
+fn serve_disagg_split_must_sum_to_chips() {
+    assert_fails(
+        &[
+            "serve", "--model", "1b", "--requests", "2", "--continuous", "--chips",
+            "3", "--prefill-chips", "2", "--decode-chips", "2",
+        ],
+        1,
+        "prefill_chips 2 + decode_chips 2 != n_chips 3",
+    );
+}
+
+#[test]
+fn malformed_numeric_flags_report_the_offending_value() {
+    assert_fails(
+        &["simulate", "--model", "1b", "--chips", "two"],
+        2,
+        "--chips expects a number, got 'two'",
+    );
+}
+
+#[test]
+fn a_valid_invocation_still_succeeds() {
+    // Positive control: the negative paths above must not have made the
+    // happy path unreachable.
+    let out = primal(&["simulate", "--model", "1b", "--ctx", "128"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{stderr}");
+    assert!(stdout.contains("model"), "report header missing:\n{stdout}");
+}

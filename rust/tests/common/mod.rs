@@ -1,0 +1,42 @@
+//! Shared integration-test helpers.
+//!
+//! Cargo compiles `tests/common/` into every suite that declares
+//! `mod common;` (a directory is not its own test target), so the
+//! config/server constructors and the nearest-rank percentile live here
+//! once instead of being copy-pasted per suite. Each suite uses a
+//! subset, hence the module-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+use primal::coordinator::{AdapterId, Server, ServerBuilder};
+
+/// The paper point for `model` at context `ctx` with the Q+V LoRA targets
+/// (the configuration every Table II cell uses).
+pub fn cfg_of(model: ModelId, ctx: usize) -> ExperimentConfig {
+    ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], ctx)
+}
+
+/// The 1B paper point — the cheap model the serving suites iterate on.
+pub fn exp_1b(ctx: usize) -> ExperimentConfig {
+    cfg_of(ModelId::Llama32_1b, ctx)
+}
+
+/// A 1B legacy-mode server with `adapters` registered adapters.
+pub fn server_1b(ctx: usize, max_batch: usize, policy: PolicyKind, adapters: u32) -> Server {
+    let mut s = ServerBuilder::from_experiment(exp_1b(ctx))
+        .max_batch(max_batch)
+        .policy_kind(policy)
+        .build()
+        .expect("server");
+    for a in 0..adapters {
+        s.register_adapter(AdapterId(a));
+    }
+    s
+}
+
+/// Nearest-rank p95 (the same `ceil(q*n)` rank `latency_stats` uses).
+pub fn p95(samples: &mut Vec<f64>) -> f64 {
+    samples.sort_by(f64::total_cmp);
+    let rank = ((0.95 * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+    samples[rank - 1]
+}

@@ -7,20 +7,12 @@
 //! `tests/scheduling.rs`; this suite exercises the end-to-end behavior a
 //! deployment would measure.
 
-use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+mod common;
+
+use common::{exp_1b, p95};
+use primal::config::PolicyKind;
 use primal::coordinator::{AdapterId, PreambleId, Request, Server, ServerBuilder};
 use primal::energy::rram_passes_j;
-
-/// Nearest-rank p95 (the same `ceil(q*n)` rank `latency_stats` uses).
-fn p95(samples: &mut Vec<f64>) -> f64 {
-    samples.sort_by(f64::total_cmp);
-    let rank = ((0.95 * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
-    samples[rank - 1]
-}
-
-fn exp_1b(ctx: usize) -> ExperimentConfig {
-    ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], ctx)
-}
 
 /// A continuous-mode server with one registered adapter and one
 /// single-block preamble (128 of the 256 prompt tokens).
@@ -165,6 +157,53 @@ fn preemption_pressure_never_strands_shared_nodes() {
     assert_eq!(st.prefix_live_nodes, 0, "cache empty at drain");
     assert_eq!(st.kv_page_allocs, st.kv_page_frees, "page conservation");
     assert_eq!(st.kv_used_pages, 0);
+}
+
+#[test]
+fn prefix_affinity_starvation_bound_limits_minority_queue_delay() {
+    // The prefix-affinity twin of scheduling.rs's adapter-affinity
+    // starvation test: eight requests sharing one preamble and one
+    // carrying a different preamble, all at t=0 on one adapter. Unbounded
+    // affinity rides the majority chain to the end; a run bound of 2
+    // regroups onto the minority after two same-preamble admissions.
+    let run = |max_run_len: Option<usize>| {
+        let mut exp = exp_1b(256);
+        exp.serving.affinity_max_run_len = max_run_len;
+        let mut s = ServerBuilder::from_experiment(exp)
+            .max_batch(1)
+            .policy_kind(PolicyKind::PrefixAffinity)
+            .continuous(true)
+            .build()
+            .unwrap();
+        s.register_adapter(AdapterId(0));
+        s.register_preamble(PreambleId(0), vec![0xAA]).unwrap();
+        s.register_preamble(PreambleId(1), vec![0xBB]).unwrap();
+        for i in 0..8u64 {
+            s.submit(Request::new(i, AdapterId(0), 256, 8).with_preamble(PreambleId(0)))
+                .unwrap();
+        }
+        s.submit(Request::new(8, AdapterId(0), 256, 8).with_preamble(PreambleId(1)))
+            .unwrap();
+        let res = s.drain(None).unwrap();
+        assert_eq!(res.len(), 9);
+        let pos = res.iter().position(|r| r.request == 8).unwrap();
+        let queue = res.iter().find(|r| r.request == 8).unwrap().queue_s;
+        (pos, queue)
+    };
+    let (pos_unbounded, q_unbounded) = run(None);
+    let (pos_bounded, q_bounded) = run(Some(2));
+    assert_eq!(
+        pos_unbounded, 8,
+        "unbounded prefix affinity starves the minority preamble to the end"
+    );
+    assert!(
+        pos_bounded <= 2,
+        "run bound 2 must serve the minority within one bounded run, got {pos_bounded}"
+    );
+    assert!(
+        q_bounded < q_unbounded * 0.5,
+        "bounded queue delay {q_bounded} not well below unbounded {q_unbounded}"
+    );
 }
 
 #[test]

@@ -16,6 +16,7 @@
 //!  * flit sim vs analytic: random unicasts stay within the model band.
 
 use primal::config::{CalibConstants, ExperimentConfig, LoraTarget, ModelId, SystemConfig};
+use primal::coordinator::{KvPool, NODE_OWNER_BASE};
 use primal::energy::{CtPowerState, EnergyLedger};
 use primal::isa::{decode, encode, Coord, Instr, Rect};
 use primal::mapping::{optimize_layer, MappingStrategy, MatrixShape};
@@ -404,6 +405,115 @@ fn prop_gating_monotone_in_idle_fraction() {
     let g = power(1.0, true);
     let u = power(1.0, false);
     assert!(g < u * 0.2, "gated {g} W vs ungated {u} W");
+}
+
+#[test]
+fn prop_kvpool_random_interleavings_conserve_the_page_ledger() {
+    // Randomized seeded interleavings of alloc / grow_to / release over a
+    // mixed owner space (request admission sequences plus prefix-node
+    // owners under NODE_OWNER_BASE), audited against an independent
+    // shadow ledger after EVERY operation:
+    //  * allocs == frees + live pages (the lifetime ledger identity);
+    //  * peak_pages is the exact running max of the live count;
+    //  * a failed (over-capacity) alloc leaves the pool untouched;
+    //  * release of an unknown / already-released owner frees nothing;
+    //  * zero-page allocations register no phantom holder;
+    //  * used + free == capacity at all times.
+    let mut rng = Rng::new(0x4B5F00);
+    for case in 0..CASES {
+        let page_tokens = [64usize, 128, 256][rng.range(0, 3)];
+        let capacity = rng.range(1, 33);
+        let mut pool = KvPool::new(page_tokens, capacity).expect("pool");
+        let mut live: std::collections::BTreeMap<u64, usize> = Default::default();
+        let (mut allocs, mut frees, mut peak) = (0u64, 0u64, 0u64);
+        let mut used = 0usize;
+        for op in 0..rng.range(20, 120) {
+            let tag = format!("case {case} op {op}");
+            // A quarter of the traffic targets prefix-node owners — the
+            // same reserved-id path the prefix cache allocates under.
+            let owner = if rng.f64() < 0.25 {
+                NODE_OWNER_BASE | rng.range(0, 4) as u64
+            } else {
+                rng.range(0, 8) as u64
+            };
+            match rng.range(0, 4) {
+                0 => {
+                    // Plain alloc, zero included (the fully prefix-shared
+                    // prompt allocates zero private pages).
+                    let n = rng.range(0, 5);
+                    let res = pool.alloc(owner, n);
+                    if n <= capacity - used {
+                        res.unwrap_or_else(|e| panic!("{tag}: alloc {n} failed: {e}"));
+                        if n > 0 {
+                            *live.entry(owner).or_default() += n;
+                            used += n;
+                            allocs += n as u64;
+                            peak = peak.max(used as u64);
+                        }
+                    } else {
+                        assert!(res.is_err(), "{tag}: over-capacity alloc must fail");
+                    }
+                }
+                1 => {
+                    // Decode growth: top up to a random token count.
+                    let tokens = rng.range(0, page_tokens * 6);
+                    let need = tokens.div_ceil(page_tokens);
+                    let have = live.get(&owner).copied().unwrap_or(0);
+                    let res = pool.grow_to(owner, tokens);
+                    if need <= have {
+                        res.unwrap_or_else(|e| panic!("{tag}: no-op grow failed: {e}"));
+                    } else if need - have <= capacity - used {
+                        res.unwrap_or_else(|e| panic!("{tag}: grow failed: {e}"));
+                        *live.entry(owner).or_default() += need - have;
+                        used += need - have;
+                        allocs += (need - have) as u64;
+                        peak = peak.max(used as u64);
+                    } else {
+                        assert!(res.is_err(), "{tag}: over-capacity grow must fail");
+                    }
+                }
+                2 => {
+                    // Retirement (or preemption rollback): frees the whole
+                    // holding; repeating it must be a structural no-op.
+                    let have = live.remove(&owner).unwrap_or(0);
+                    assert_eq!(pool.release(owner), have, "{tag}: release count");
+                    used -= have;
+                    frees += have as u64;
+                    assert_eq!(pool.release(owner), 0, "{tag}: double free");
+                }
+                _ => {
+                    // Release probe over a wider id space: half the probes
+                    // hit owners that never allocated.
+                    let probe = rng.range(0, 16) as u64;
+                    let have = live.remove(&probe).unwrap_or(0);
+                    assert_eq!(pool.release(probe), have, "{tag}: probe release");
+                    used -= have;
+                    frees += have as u64;
+                }
+            }
+            assert_eq!(pool.held_pages(owner), live.get(&owner).copied().unwrap_or(0), "{tag}: holder audit");
+            assert_eq!(pool.used_pages(), used, "{tag}: used drift");
+            assert_eq!(
+                pool.used_pages() + pool.free_pages(),
+                pool.capacity_pages(),
+                "{tag}: page conservation"
+            );
+            let c = pool.counters();
+            assert_eq!(c.allocs, allocs, "{tag}: alloc counter");
+            assert_eq!(c.frees, frees, "{tag}: free counter");
+            assert_eq!(c.allocs, c.frees + used as u64, "{tag}: ledger identity");
+            assert_eq!(c.peak_pages, peak, "{tag}: peak not the exact running max");
+        }
+        // Drain every survivor: the lifetime ledger must close exactly.
+        for owner in live.keys().copied().collect::<Vec<_>>() {
+            pool.release(owner);
+        }
+        assert_eq!(pool.used_pages(), 0, "case {case}: survivors leaked");
+        assert_eq!(pool.free_pages(), pool.capacity_pages(), "case {case}");
+        let c = pool.counters();
+        assert_eq!(c.allocs, c.frees, "case {case}: lifetime ledger open");
+        assert!(c.peak_pages <= capacity as u64, "case {case}: peak past capacity");
+    }
 }
 
 #[test]

@@ -3,7 +3,10 @@
 //! randomized fuzz harness over policies x prefill modes x batch widths,
 //! and the adapter-affinity starvation bound.
 
-use primal::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
+mod common;
+
+use common::{exp_1b, server_1b};
+use primal::config::{ExperimentConfig, PolicyKind};
 use primal::coordinator::{
     AdapterId, Fcfs, FunctionalMode, Request, RequestResult, SchedCounters, Server,
     ServerBuilder, ServerConfig, ServerStats, ShortestJobFirst, TokenEvent,
@@ -11,22 +14,6 @@ use primal::coordinator::{
 use primal::dataflow::{prefill_program, reprogram_program};
 use primal::sim::{program_cost, LayerCostModel, Simulator};
 use primal::util::Rng;
-
-fn exp_1b(ctx: usize) -> ExperimentConfig {
-    ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], ctx)
-}
-
-fn server_1b(ctx: usize, max_batch: usize, policy: PolicyKind, adapters: u32) -> Server {
-    let mut s = ServerBuilder::from_experiment(exp_1b(ctx))
-        .max_batch(max_batch)
-        .policy_kind(policy)
-        .build()
-        .expect("server");
-    for a in 0..adapters {
-        s.register_adapter(AdapterId(a));
-    }
-    s
-}
 
 /// Independent reference for the paper's serial batch-1 FCFS model,
 /// computed straight from the sim primitives with the legacy server's

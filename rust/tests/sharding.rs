@@ -15,16 +15,15 @@
 //!  4. the chip-ring all-reduce cost is strictly increasing in the shard
 //!     count for a fixed layer size.
 
+mod common;
+
+use common::cfg_of;
 use primal::config::{ExperimentConfig, LoraTarget, ModelId, ShardConfig};
 use primal::dataflow::{decode_program, prefill_program, shard_program_slice};
 use primal::mapping::{map_model, split_even, ShardPlan};
 use primal::metrics::{paper_grid, run_point, run_point_sharded};
 use primal::noc::ChipMesh;
 use primal::sim::{program_cost, PhaseCost, Simulator};
-
-fn cfg_of(model: ModelId, ctx: usize) -> ExperimentConfig {
-    ExperimentConfig::paper_point(model, &[LoraTarget::Q, LoraTarget::V], ctx)
-}
 
 // ---- 1. one-chip bit-match ------------------------------------------------
 
