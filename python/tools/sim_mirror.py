@@ -35,6 +35,7 @@ Usage:  python3 python/tools/sim_mirror.py [--check]
 
 import heapq
 import math
+import os
 import sys
 from dataclasses import dataclass, field
 
@@ -2354,6 +2355,135 @@ def run_disagg(model, targets, ctx, batch=1, prefill_chips=None,
 # proxy baseline + checks
 # ---------------------------------------------------------------------------
 
+# The 12 registry counters in Rust declaration order (the field order of
+# RegistryStats and of every pass object in BENCH_sweep.json).
+REGISTRY_FIELDS = [
+    "mapping_hits", "mapping_builds",
+    "layer_model_hits", "layer_model_builds",
+    "prefill_hits", "prefill_builds",
+    "reprog_hits", "reprog_builds",
+    "programs_generated",
+    "window_hits", "window_inserts", "window_full_skips",
+]
+
+BUILD_FIELDS = ["mapping_builds", "layer_model_builds", "prefill_builds",
+                "reprog_builds"]
+
+
+def sweepcache_replay():
+    """Structural replay of the Rust sweep-costing-cache counters on the
+    bench's 12-point grid (1B, LoRA on Q only; ctx {256, 512, 1024} x
+    batch {1, 4} x chips {1, 2}).
+
+    The registry keys every cached artifact on the structural class
+    (model, LoRA set, system, calibration — plus per-kind fields), never
+    on the swept ctx/batch axes, so hit/build counts are a pure function
+    of the grid shape and the engine's lookup pattern:
+
+      * one ModelMapping lookup per point;
+      * one width-1 LayerCostModel lookup per point, plus one
+        width-`chips` lookup when sharded (each build generates the 10
+        decode-sample programs);
+      * one prefill block-cost lookup per 128-token block, keyed
+        (width, block, mid-block causal kv) — a miss generates one
+        prefill program;
+      * one reprogram-template lookup per point (a miss generates one
+        program);
+      * the decode window memo: one `sum_window` fold per point on the
+        width-1 model, keyed (kv0 = ctx, n = out = ctx), plus one
+        `sum_cycles_window` fold on the width-`chips` model when
+        sharded.
+
+    Cache state persists across passes, so pass 1 is the cold run and
+    passes 2-3 are incremental reruns. Warm counters are worker-width
+    independent (every lookup hits an already-present key), which is why
+    the Rust bench pins warm_jobs1 == warm_jobs4 bit-for-bit.
+    """
+    grid = [(ctx, batch, chips)
+            for ctx in (256, 512, 1024)
+            for batch in (1, 4)
+            for chips in (1, 2)]
+    mappings, models, prefills, reprogs = set(), set(), set(), set()
+    windows = {}
+    passes = []
+    for _ in range(3):
+        st = {k: 0 for k in REGISTRY_FIELDS}
+
+        def touch(cache, key, kind, n_programs=0):
+            if key in cache:
+                st[kind + "_hits"] += 1
+            else:
+                cache.add(key)
+                st[kind + "_builds"] += 1
+                st["programs_generated"] += n_programs
+
+        for (ctx, _batch, chips) in grid:
+            touch(mappings, "1b-q", "mapping")
+            touch(models, ("1b-q", 1), "layer_model", 10)
+            if chips > 1:
+                touch(models, ("1b-q", chips), "layer_model", 10)
+            touch(reprogs, "1b-q", "reprog", 1)
+            block = 128
+            for b in range(ctx // block):
+                kv = b * block + block // 2
+                touch(prefills, ("1b-q", chips, block, kv), "prefill", 1)
+            folds = [("events", 1)]
+            if chips > 1:
+                folds.append(("cycles", chips))
+            for fold in folds:
+                memo = windows.setdefault(fold, set())
+                if (ctx, ctx) in memo:
+                    st["window_hits"] += 1
+                else:
+                    memo.add((ctx, ctx))
+                    st["window_inserts"] += 1
+        passes.append(st)
+    return grid, passes
+
+
+def sweepcache_proxies():
+    """The seven sweepcache_* entries of sim_proxy.txt, from the replay."""
+    _, (cold, warm1, warm4) = sweepcache_replay()
+    return {
+        "sweepcache_cold_mapping_builds": cold["mapping_builds"],
+        "sweepcache_cold_model_builds": cold["layer_model_builds"],
+        "sweepcache_cold_prefill_builds": cold["prefill_builds"],
+        "sweepcache_cold_program_gens": cold["programs_generated"],
+        "sweepcache_cold_reprog_builds": cold["reprog_builds"],
+        "sweepcache_warm_program_gens":
+            warm1["programs_generated"] + warm4["programs_generated"],
+        "sweepcache_warm_total_builds":
+            sum(warm1[k] + warm4[k] for k in BUILD_FIELDS),
+    }
+
+
+def sweepcache_json():
+    """BENCH_sweep.json, byte-identical to the Rust bench's emitter."""
+    _, passes = sweepcache_replay()
+    out = [
+        '{',
+        '  "schema": "primal-sweep-cache-v1",',
+        '  "grid": {',
+        '    "model": "1b",',
+        '    "lora_targets": "q",',
+        '    "ctx": [256, 512, 1024],',
+        '    "batch": [1, 4],',
+        '    "chips": [1, 2],',
+        '    "points": 12',
+        '  },',
+        '  "passes": {',
+    ]
+    names = ("cold_jobs1", "warm_jobs1", "warm_jobs4")
+    for i, (name, st) in enumerate(zip(names, passes)):
+        out.append(f'    "{name}": {{')
+        for j, k in enumerate(REGISTRY_FIELDS):
+            comma = "," if j + 1 < len(REGISTRY_FIELDS) else ""
+            out.append(f'      "{k}": {st[k]}{comma}')
+        out.append('    }' + ("," if i + 1 < len(names) else ""))
+    out.extend(['  }', '}'])
+    return "\n".join(out) + "\n"
+
+
 def proxies_13b():
     targets = ["Q", "V"]
     lm = map_model("13b", targets)
@@ -2475,8 +2605,14 @@ def proxies_13b():
 
 def main():
     check = "--check" in sys.argv
+    if "--bench-sweep-json" in sys.argv:
+        # Emit BENCH_sweep.json for blessing (byte-identical to the Rust
+        # bench's emitter and to the committed baseline).
+        sys.stdout.write(sweepcache_json())
+        return
 
     px, lm13 = proxies_13b()
+    px.update(sweepcache_proxies())
     print(f"# 13B mapping: {lm13.n_cts} CTs/layer")
     print("# instruction-count proxies (13B Q+V 2048 point):")
     for k in sorted(px):
@@ -3261,6 +3397,41 @@ def main():
     gate("bounded affinity serves minority earlier", pos_b < pos_u and q_b < q_u)
     gate("unbounded affinity starves to the end", pos_u == len(star_trace) - 1)
     gate("bounded run length respected", pos_b <= 2)
+
+    # ---- sweep costing cache (structural replay) -------------------------
+    print("\n== sweep costing cache (structural replay of the bench grid) ==")
+    sw_grid, (sw_cold, sw_warm1, sw_warm4) = sweepcache_replay()
+    gate("grid is the bench's 12-point 1B sweep", len(sw_grid) == 12)
+    gate("cold pass builds each shared artifact exactly once",
+         sw_cold["mapping_builds"] == 1
+         and sw_cold["layer_model_builds"] == 2
+         and sw_cold["prefill_builds"] == 16
+         and sw_cold["reprog_builds"] == 1
+         and sw_cold["programs_generated"] == 37,
+         "(1 mapping, 2 models, 16 prefill, 1 reprog, 37 programs)")
+    gate("cold window memo: 6 inserts, 12 hits, no cap skips",
+         sw_cold["window_hits"] == 12 and sw_cold["window_inserts"] == 6
+         and sw_cold["window_full_skips"] == 0)
+    gate("incremental rerun rebuilds nothing",
+         sum(sw_warm1[k] + sw_warm4[k] for k in BUILD_FIELDS) == 0
+         and sw_warm1["programs_generated"] + sw_warm4["programs_generated"] == 0
+         and sw_warm1["window_inserts"] + sw_warm4["window_inserts"] == 0)
+    gate("warm counters independent of worker width", sw_warm1 == sw_warm4)
+    gate("warm pass is all hits (56 prefill / 18 model / 12 mapping lookups)",
+         sw_warm1["prefill_hits"] == 56 and sw_warm1["layer_model_hits"] == 18
+         and sw_warm1["mapping_hits"] == 12 and sw_warm1["reprog_hits"] == 12
+         and sw_warm1["window_hits"] == 18)
+    sweep_base = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "..", "..", "rust", "benches", "baselines",
+                              "BENCH_sweep.json")
+    if os.path.exists(sweep_base):
+        with open(sweep_base) as f:
+            committed = f.read()
+        gate("committed BENCH_sweep.json matches the replay byte-for-byte",
+             committed == sweepcache_json())
+    else:
+        gate("BENCH_sweep.json baseline present", False,
+             f"(missing {sweep_base})")
 
     print()
     if failures:

@@ -21,12 +21,14 @@ use common::{finish, measure, report};
 use primal::config::{ExperimentConfig, LoraTarget, ModelId};
 use primal::coordinator::{AdapterId, PreambleId, Request, SchedCounters, ServerBuilder};
 use primal::dataflow::{decode_program, prefill_program, reprogram_program};
+use primal::energy::EnergyBreakdown;
 use primal::mapping::{map_model, PoolPlan};
 use primal::sim::cost::program_cost;
-use primal::sim::{LayerCostModel, PhaseCost, Simulator};
+use primal::sim::{sweep, LayerCostModel, PhaseCost, RegistryStats, SimReport, Simulator};
 use primal::trace::{load_checksum, preamble_checksum, WorkloadKind, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 
 /// Drain `requests` simultaneous t=0 arrivals (adapters alternating, so
 /// FCFS head-of-line mismatches keep the batch narrow) plus one far-future
@@ -55,6 +57,96 @@ fn serve_counters(requests: usize, calendar: bool) -> SchedCounters {
         .expect("submit sentinel");
     s.drain(None).expect("drain");
     s.sched_counters()
+}
+
+/// The eight energy components as raw bits, so `-0.0` vs `0.0` or a NaN
+/// would fail the identity gate instead of slipping through `==`.
+fn energy_bits(e: &EnergyBreakdown) -> [u64; 8] {
+    [
+        e.rram_j.to_bits(),
+        e.sram_j.to_bits(),
+        e.scratchpad_j.to_bits(),
+        e.router_j.to_bits(),
+        e.dmac_j.to_bits(),
+        e.network_j.to_bits(),
+        e.retention_j.to_bits(),
+        e.static_j.to_bits(),
+    ]
+}
+
+/// Field-by-field bit identity of two reports: integers compared
+/// directly, every f64 compared as bits, trace events included.
+fn reports_bit_identical(a: &SimReport, b: &SimReport) -> bool {
+    a.model == b.model
+        && a.lora_label == b.lora_label
+        && a.input_tokens == b.input_tokens
+        && a.output_tokens == b.output_tokens
+        && a.batch == b.batch
+        && a.n_chips == b.n_chips
+        && a.srpg == b.srpg
+        && a.ttft_s.to_bits() == b.ttft_s.to_bits()
+        && a.itl_ms.to_bits() == b.itl_ms.to_bits()
+        && a.throughput_tps.to_bits() == b.throughput_tps.to_bits()
+        && a.avg_power_w.to_bits() == b.avg_power_w.to_bits()
+        && a.efficiency_tpj.to_bits() == b.efficiency_tpj.to_bits()
+        && a.total_cts == b.total_cts
+        && a.cts_per_layer == b.cts_per_layer
+        && a.total_cycles == b.total_cycles
+        && a.total_energy_j.to_bits() == b.total_energy_j.to_bits()
+        && energy_bits(&a.energy) == energy_bits(&b.energy)
+        && a.reprog_stall_cycles == b.reprog_stall_cycles
+        && a.trace.events == b.trace.events
+        && a.itl_first_ms.to_bits() == b.itl_first_ms.to_bits()
+        && a.itl_last_ms.to_bits() == b.itl_last_ms.to_bits()
+}
+
+/// The 12 registry counters in declaration order (the `BENCH_sweep.json`
+/// field order, mirrored byte-for-byte by `sim_mirror.py`).
+fn stats_fields(s: &RegistryStats) -> [(&'static str, u64); 12] {
+    [
+        ("mapping_hits", s.mapping_hits),
+        ("mapping_builds", s.mapping_builds),
+        ("layer_model_hits", s.layer_model_hits),
+        ("layer_model_builds", s.layer_model_builds),
+        ("prefill_hits", s.prefill_hits),
+        ("prefill_builds", s.prefill_builds),
+        ("reprog_hits", s.reprog_hits),
+        ("reprog_builds", s.reprog_builds),
+        ("programs_generated", s.programs_generated),
+        ("window_hits", s.window_hits),
+        ("window_inserts", s.window_inserts),
+        ("window_full_skips", s.window_full_skips),
+    ]
+}
+
+/// Render the machine-readable sweep-cache counter report. The byte
+/// layout is part of the gate: the committed baseline and the mirror's
+/// `--bench-sweep-json` emitter must both match it exactly.
+fn sweep_cache_json(cold: &RegistryStats, warm1: &RegistryStats, warm4: &RegistryStats) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"primal-sweep-cache-v1\",\n");
+    s.push_str("  \"grid\": {\n");
+    s.push_str("    \"model\": \"1b\",\n");
+    s.push_str("    \"lora_targets\": \"q\",\n");
+    s.push_str("    \"ctx\": [256, 512, 1024],\n");
+    s.push_str("    \"batch\": [1, 4],\n");
+    s.push_str("    \"chips\": [1, 2],\n");
+    s.push_str("    \"points\": 12\n");
+    s.push_str("  },\n");
+    s.push_str("  \"passes\": {\n");
+    let passes = [("cold_jobs1", cold), ("warm_jobs1", warm1), ("warm_jobs4", warm4)];
+    for (i, (name, st)) in passes.iter().enumerate() {
+        s.push_str(&format!("    \"{name}\": {{\n"));
+        let fields = stats_fields(st);
+        for (j, (k, v)) in fields.iter().enumerate() {
+            let comma = if j + 1 < fields.len() { "," } else { "" };
+            s.push_str(&format!("      \"{k}\": {v}{comma}\n"));
+        }
+        let comma = if i + 1 < passes.len() { "," } else { "" };
+        s.push_str(&format!("    }}{comma}\n"));
+    }
+    s.push_str("  }\n}\n");
+    s
 }
 
 fn main() {
@@ -466,6 +558,91 @@ fn main() {
         ok = false;
     }
 
+    // ---- sweep costing cache (incremental grid reruns) -------------------
+    // A structural class no earlier section touches (1B, LoRA on Q only)
+    // swept over ctx {256, 512, 1024} x batch {1, 4} x chips {1, 2}. The
+    // cold pass builds every shared artifact exactly once — one mapping,
+    // two layer models (widths 1 and 2), 16 prefill block costs (8 kv
+    // points x 2 widths), one reprogram cost, 37 generated programs — and
+    // the warm reruns, serial and at 4 workers, rebuild NOTHING while
+    // reproducing every report bit-for-bit. The expected counters are
+    // blessed from the mirror's structural replay of the cache-key
+    // semantics (`sim_mirror.py --check`).
+    let mut sweep_grid: Vec<(usize, usize, usize)> = Vec::new();
+    for ctx in [256usize, 512, 1024] {
+        for batch in [1usize, 4] {
+            for chips in [1usize, 2] {
+                sweep_grid.push((ctx, batch, chips));
+            }
+        }
+    }
+    let sweep_point = |i: usize| -> SimReport {
+        let (ctx, batch, chips) = sweep_grid[i];
+        let c = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], ctx);
+        Simulator::new(&c).run_sharded_batched(batch, chips)
+    };
+    let n_pts = sweep_grid.len();
+    let t_cold = Instant::now();
+    let (cold_reports, cold) = sweep::run_cached(1, n_pts, &sweep_point);
+    let cold_s = t_cold.elapsed().as_secs_f64();
+    let t_warm = Instant::now();
+    let (warm1_reports, warm1) = sweep::run_cached(1, n_pts, &sweep_point);
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    let (warm4_reports, warm4) = sweep::run_cached(4, n_pts, &sweep_point);
+    println!(
+        "\nsweep costing cache ({n_pts}-point 1B grid): cold {:.1} ms, warm {:.1} ms",
+        cold_s * 1e3,
+        warm_s * 1e3
+    );
+    println!("cold (jobs 1) {cold}");
+    println!("warm (jobs 1) {warm1}");
+    println!("warm (jobs 4) {warm4}");
+    let expect_cold = RegistryStats {
+        mapping_hits: 11,
+        mapping_builds: 1,
+        layer_model_hits: 16,
+        layer_model_builds: 2,
+        prefill_hits: 40,
+        prefill_builds: 16,
+        reprog_hits: 11,
+        reprog_builds: 1,
+        programs_generated: 37,
+        window_hits: 12,
+        window_inserts: 6,
+        window_full_skips: 0,
+    };
+    let expect_warm = RegistryStats {
+        mapping_hits: 12,
+        mapping_builds: 0,
+        layer_model_hits: 18,
+        layer_model_builds: 0,
+        prefill_hits: 56,
+        prefill_builds: 0,
+        reprog_hits: 12,
+        reprog_builds: 0,
+        programs_generated: 0,
+        window_hits: 18,
+        window_inserts: 0,
+        window_full_skips: 0,
+    };
+    if cold != expect_cold {
+        eprintln!("proxy gate: cold sweep counters drifted from the blessed grid replay");
+        ok = false;
+    }
+    if warm1 != expect_warm || warm4 != expect_warm {
+        eprintln!("proxy gate: warm sweep rebuilt something (must be all-hits at any --jobs)");
+        ok = false;
+    }
+    for i in 0..n_pts {
+        if !reports_bit_identical(&cold_reports[i], &warm1_reports[i])
+            || !reports_bit_identical(&cold_reports[i], &warm4_reports[i])
+        {
+            let (gctx, gb, gc) = sweep_grid[i];
+            eprintln!("proxy gate: warm rerun diverged at ctx {gctx} batch {gb} chips {gc}");
+            ok = false;
+        }
+    }
+
     let proxies: BTreeMap<&'static str, u64> = BTreeMap::from([
         ("decode2048_cycles", d2048.cycles),
         ("decode2048_dmac_macs", d2048.dmac_macs),
@@ -515,6 +692,17 @@ fn main() {
         ("disagg13b_2p2d_drain_ns", dsp_drain_ns),
         ("disagg13b_2p2d_page_allocs", dsp_stats.kv_page_allocs),
         ("disagg13b_2p2d_peak_pages", dsp_stats.kv_peak_pages),
+        // Sweep costing cache: cold-pass build counts on the fresh 12-point
+        // 1B grid, and the warm passes' combined rebuild counts (which must
+        // be zero — an incremental rerun costs no mapping / model / program
+        // work at all).
+        ("sweepcache_cold_mapping_builds", cold.mapping_builds),
+        ("sweepcache_cold_model_builds", cold.layer_model_builds),
+        ("sweepcache_cold_prefill_builds", cold.prefill_builds),
+        ("sweepcache_cold_program_gens", cold.programs_generated),
+        ("sweepcache_cold_reprog_builds", cold.reprog_builds),
+        ("sweepcache_warm_program_gens", warm1.programs_generated + warm4.programs_generated),
+        ("sweepcache_warm_total_builds", warm1.total_builds() + warm4.total_builds()),
     ]);
     println!("\ninstruction-count proxies (13B):");
     for (name, v) in &proxies {
@@ -654,6 +842,38 @@ fn main() {
                 baseline_path.display()
             ),
             Err(e) => println!("\ncould not write baseline ({e}); proxies printed only"),
+        }
+    }
+
+    // Machine-readable sweep-cache counters, gated byte-for-byte against
+    // the committed baseline with the same CI-fails / local-bless
+    // discipline as sim_proxy.txt (a regression must never self-bless).
+    let sweep_json = sweep_cache_json(&cold, &warm1, &warm4);
+    let sweep_path =
+        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/benches/baselines/BENCH_sweep.json"));
+    if sweep_path.exists() {
+        let committed = std::fs::read_to_string(sweep_path).expect("read BENCH_sweep.json");
+        if committed != sweep_json {
+            eprintln!(
+                "proxy gate: sweep-cache counters drifted from the committed {}",
+                sweep_path.display()
+            );
+            ok = false;
+        }
+    } else if std::env::var_os("CI").is_some() {
+        eprintln!(
+            "proxy gate: {} missing under CI — run `cargo bench --bench \
+             sim_hotpath` locally and commit the blessed file",
+            sweep_path.display()
+        );
+        ok = false;
+    } else {
+        match std::fs::write(sweep_path, &sweep_json) {
+            Ok(()) => println!(
+                "wrote {} — commit it to gate the sweep-cache counters",
+                sweep_path.display()
+            ),
+            Err(e) => println!("could not write BENCH_sweep.json ({e}); counters printed only"),
         }
     }
     finish(ok);

@@ -3,7 +3,7 @@
 
 
 /// The models evaluated in the paper, plus the reduced functional model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ModelId {
     /// Llama 3.2 1B (16 layers, hidden 2048, GQA 8).
     Llama32_1b,

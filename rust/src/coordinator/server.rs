@@ -41,11 +41,9 @@ use super::prefixcache::{PreambleId, PrefixCache};
 use super::scheduler::{policy_of, SchedContext, SchedulePolicy};
 use crate::bail;
 use crate::config::{ExperimentConfig, LoraTarget, ModelId, PolicyKind};
-use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
 use crate::mapping::{PoolPlan, ShardPlan};
 use crate::noc::ChipMesh;
 use crate::runtime::{Executable, GoldenRuntime};
-use crate::sim::cost::program_cost;
 use crate::sim::{LayerCostModel, Simulator};
 use crate::util::error::Result;
 use std::cell::Cell;
@@ -599,7 +597,7 @@ impl ServerBuilder {
         let cyc = exp.system.cycle_s();
 
         // Reprogramming cost for one group (SRPG pipelines the rest).
-        let reprog = program_cost(&reprogram_program(&exp, lm0), &exp.system, &exp.calib);
+        let reprog = crate::sim::registry::reprogram_cost(&exp, lm0);
         let reprog_ttft_s = if exp.srpg {
             cycles_f64(reprog.cycles) * cyc
         } else {
@@ -623,12 +621,8 @@ impl ServerBuilder {
                 block
             };
             let kv = (b * block + this_block / 2).max(1);
-            let prog = prefill_program(&exp, lm0, this_block, kv);
-            let cost = if tw_p == 1 {
-                program_cost(&prog, &exp.system, &exp.calib)
-            } else {
-                program_cost(&shard_program_slice(&prog, 0, tw_p), &exp.system, &exp.calib)
-            };
+            let cost = crate::sim::registry::prefill_block_cost(&exp, lm0, tw_p, this_block, kv)
+                .sliced;
             let cycles =
                 cost.cycles + mesh_p.layer_all_reduce_cycles(exp.model.hidden, this_block);
             prefill_block_s.push((this_block, cycles_f64(cycles) * cyc));

@@ -367,6 +367,7 @@ pub fn shard_program_slice(prog: &Program, chip: usize, n_chips: usize) -> Progr
 
 /// Decode-step program (one token through one layer).
 pub fn decode_program(cfg: &ExperimentConfig, lm: &LayerMapping, kv_len: usize) -> Program {
+    crate::sim::registry::note_program_generated();
     layer_program(cfg, lm, ProgramParams { tokens: 1, kv_len })
 }
 
@@ -377,6 +378,7 @@ pub fn prefill_program(
     block: usize,
     kv_len: usize,
 ) -> Program {
+    crate::sim::registry::note_program_generated();
     layer_program(cfg, lm, ProgramParams { tokens: block, kv_len })
 }
 
@@ -384,6 +386,7 @@ pub fn prefill_program(
 /// the adapter bytes over the D2D port and write them into the SRAM-DCIM
 /// macros of the adapted regions.
 pub fn reprogram_program(cfg: &ExperimentConfig, lm: &LayerMapping) -> Program {
+    crate::sim::registry::note_program_generated();
     let mut prog = Program::new();
     let group = Rect::new(0, 0, cfg.system.mesh_dim, cfg.system.mesh_dim);
     let bytes = lm.lora_bytes.min(u32::MAX as usize) as u32;

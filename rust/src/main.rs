@@ -19,7 +19,7 @@ use primal::coordinator::{
 use primal::mapping::PoolPlan;
 use primal::metrics;
 use primal::runtime::{default_artifacts_dir, GoldenRuntime};
-use primal::sim::{sweep, Simulator};
+use primal::sim::{sweep, RegistryStats, Simulator};
 use primal::trace::{render_gantt, WorkloadKind, WorkloadSpec};
 use primal::util::Rng;
 use std::collections::BTreeMap;
@@ -85,6 +85,12 @@ commands:
               mode only, sums to --chips))
   sweep      --model <1b|8b|13b> [--from N] [--to N] [--jobs N]
   validate   [--artifacts DIR]
+
+global flags:
+  --cache-stats   after the command, print the sweep costing cache's
+                  per-stage hit/miss counters (mappings, layer models,
+                  prefill blocks, reprogramming, generated programs,
+                  window memo) for this invocation on stderr
 
 examples:
   primal simulate --model 13b --ctx 2048 --lora qv
@@ -803,13 +809,22 @@ fn cmd_validate(flags: BTreeMap<String, String>) -> ExitCode {
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
-    let flags = parse_flags(&args[1..]);
-    match cmd.as_str() {
+    let mut flags = parse_flags(&args[1..]);
+    // Global flag: report the sweep costing cache's per-stage hit/miss
+    // delta for this invocation on stderr after the command finishes
+    // (stderr so piped table output stays clean).
+    let cache_stats = flags.remove("cache-stats").is_some();
+    let before = RegistryStats::snapshot();
+    let code = match cmd.as_str() {
         "simulate" => cmd_simulate(flags),
         "report" => cmd_report(flags),
         "serve" => cmd_serve(flags),
         "sweep" => cmd_sweep(flags),
         "validate" => cmd_validate(flags),
         _ => usage(),
+    };
+    if cache_stats {
+        eprintln!("{}", RegistryStats::snapshot().delta_since(&before));
     }
+    code
 }

@@ -58,6 +58,10 @@ pub struct ModelMapping {
 
 impl ModelMapping {
     pub fn build(cfg: &ExperimentConfig, strategy: MappingStrategy) -> Self {
+        // Every mapping construction (cached or not, optimized or naive)
+        // counts toward the sweep registry's build counter — the "warm
+        // sweeps rebuild nothing" gates measure this.
+        crate::sim::registry::note_mapping_build();
         let m = &cfg.model;
         let matrices =
             MatrixShape::layer_matrices(m.hidden, m.q_dim(), m.kv_dim(), m.intermediate);

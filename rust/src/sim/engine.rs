@@ -5,12 +5,12 @@
 //! the Table II/III quantities. See DESIGN.md for the timing-model
 //! derivation and EXPERIMENTS.md for calibration.
 
-use super::cost::{pipelined_step_cycles, pipelined_step_cycles_uniform, program_cost, PhaseCost};
+use super::cost::{pipelined_step_cycles, pipelined_step_cycles_uniform, PhaseCost};
 use super::layer_model::LayerCostModel;
+use super::registry;
 use crate::config::ExperimentConfig;
-use crate::dataflow::{prefill_program, reprogram_program, shard_program_slice};
 use crate::energy::{CtPowerState, EnergyLedger};
-use crate::mapping::{map_model, map_model_naive, ModelMapping, PoolPlan};
+use crate::mapping::{map_model_naive, ModelMapping, PoolPlan};
 use crate::noc::ChipMesh;
 use crate::srpg::SrpgSchedule;
 use crate::trace::{Trace, TraceEvent, TraceKind};
@@ -101,21 +101,25 @@ struct DecodeTotals {
 }
 
 /// The simulator: owns the mapping and cost models for one experiment.
+/// The mapping is the shared, registry-cached build (`Arc`): every grid
+/// point with the same structural (system, model, LoRA, calib) key reuses
+/// one optimized mapping instead of re-running the optimizer.
 pub struct Simulator {
     cfg: ExperimentConfig,
-    mapping: ModelMapping,
+    mapping: Arc<ModelMapping>,
     trace_enabled: bool,
 }
 
 impl Simulator {
     pub fn new(cfg: &ExperimentConfig) -> Self {
-        let mapping = map_model(cfg);
+        let mapping = registry::map_model_cached(cfg);
         Self { cfg: cfg.clone(), mapping, trace_enabled: false }
     }
 
-    /// A2 ablation: the naive mapping baseline.
+    /// A2 ablation: the naive mapping baseline (uncached — the ablation
+    /// wants the raw build).
     pub fn new_naive_mapping(cfg: &ExperimentConfig) -> Self {
-        let mapping = map_model_naive(cfg);
+        let mapping = Arc::new(map_model_naive(cfg));
         Self { cfg: cfg.clone(), mapping, trace_enabled: false }
     }
 
@@ -216,7 +220,7 @@ impl Simulator {
         // chip's group holds the Reprogramming state for the whole window
         // (state integral x nc below), and the dynamic write energy stays
         // the conserved per-layer adapter volume.
-        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let reprog = registry::reprogram_cost(cfg, lm0);
         let srpg = SrpgSchedule {
             n_groups,
             cts_per_group,
@@ -246,21 +250,16 @@ impl Simulator {
             };
             // Mid-block causal span: tokens before the block + half of it.
             let kv = b * block + this_block / 2;
-            let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
-            let c = program_cost(&prog, &cfg.system, &cfg.calib);
-            // Sharded: the block's critical path is chip 0's (widest)
-            // program slice plus the per-layer all-reduce of the block's
-            // activations; at one chip both reduce to the unsharded cost.
-            let compute = if nc == 1 {
-                c.cycles
-            } else {
-                program_cost(&shard_program_slice(&prog, 0, nc), &cfg.system, &cfg.calib)
-                    .cycles
-            };
+            // Registry-cached block cost: `full` is the unsharded event
+            // counters, `sliced` is chip 0's (widest) program slice — the
+            // block's critical path when sharded; at one chip the two are
+            // the same `PhaseCost` bit-for-bit.
+            let pc = registry::prefill_block_cost(cfg, lm0, nc, this_block, kv.max(1));
+            let compute = pc.sliced.cycles;
             stage_cost.push(compute + mesh.layer_all_reduce_cycles(m.hidden, this_block));
             stage_compute.push(compute);
             prefill_ar_link_bytes += mesh.layer_all_reduce_link_bytes(m.hidden, this_block);
-            stage_events.push(c);
+            stage_events.push(pc.full);
         }
         let layer_prefill_cycles: u64 = stage_cost.iter().sum();
         let layer_prefill_compute: u64 = stage_compute.iter().sum();
@@ -590,7 +589,7 @@ impl Simulator {
         let total_cts = self.mapping.total_cts * nc;
 
         // ---- reprogramming: identical to the uniform engine ----------
-        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let reprog = registry::reprogram_cost(cfg, lm0);
         let srpg = SrpgSchedule {
             n_groups,
             cts_per_group,
@@ -610,18 +609,12 @@ impl Simulator {
             for blk in 0..n_blocks {
                 let this_block = if blk + 1 == n_blocks { p - blk * block } else { block };
                 let kv = blk * block + this_block / 2;
-                let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
-                let c = program_cost(&prog, &cfg.system, &cfg.calib);
-                let compute = if nc == 1 {
-                    c.cycles
-                } else {
-                    program_cost(&shard_program_slice(&prog, 0, nc), &cfg.system, &cfg.calib)
-                        .cycles
-                };
+                let pc = registry::prefill_block_cost(cfg, lm0, nc, this_block, kv.max(1));
+                let compute = pc.sliced.cycles;
                 layer_cycles += compute + mesh.layer_all_reduce_cycles(m.hidden, this_block);
                 prefill_compute_sum += compute;
                 prefill_ar_link_bytes += mesh.layer_all_reduce_link_bytes(m.hidden, this_block);
-                prefill_events.add_events(&c);
+                prefill_events.add_events(&pc.full);
             }
             prefill_layer_cycles.push(layer_cycles);
         }
@@ -879,7 +872,7 @@ impl Simulator {
         let total_cts = self.mapping.total_cts * nc;
 
         // ---- reprogramming: identical to the symmetric engine ----------
-        let reprog = program_cost(&reprogram_program(cfg, lm0), &cfg.system, &cfg.calib);
+        let reprog = registry::reprogram_cost(cfg, lm0);
         let srpg = SrpgSchedule {
             n_groups,
             cts_per_group,
@@ -901,18 +894,12 @@ impl Simulator {
                 block
             };
             let kv = blk * block + this_block / 2;
-            let prog = prefill_program(cfg, lm0, this_block, kv.max(1));
-            let c = program_cost(&prog, &cfg.system, &cfg.calib);
-            let compute = if tw_p == 1 {
-                c.cycles
-            } else {
-                program_cost(&shard_program_slice(&prog, 0, tw_p), &cfg.system, &cfg.calib)
-                    .cycles
-            };
+            let pc = registry::prefill_block_cost(cfg, lm0, tw_p, this_block, kv.max(1));
+            let compute = pc.sliced.cycles;
             lpc += compute + mesh_p.layer_all_reduce_cycles(m.hidden, this_block);
             stage_compute += compute;
             prefill_ar_link_bytes += mesh_p.layer_all_reduce_link_bytes(m.hidden, this_block);
-            prefill_events.add_events(&c);
+            prefill_events.add_events(&pc.full);
         }
         let mut group_start = vec![0u64; n_groups];
         for (l, gs) in group_start.iter_mut().enumerate() {

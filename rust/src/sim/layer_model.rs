@@ -27,11 +27,12 @@
 //! costs O(#segments) instead of O(tokens) — exactly, not approximately.
 
 use super::cost::{program_cost, PhaseCost};
-use crate::config::ExperimentConfig;
+use super::registry;
+use crate::config::{ExperimentConfig, ModelId};
 use crate::dataflow::{decode_program, shard_program_slice};
 use crate::mapping::LayerMapping;
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -44,71 +45,31 @@ const KV_SAMPLES: [usize; 10] = [0, 128, 256, 512, 1024, 1536, 2048, 3072, 4096,
 /// hit the same (model, mapping) key over and over, and each uncached build
 /// generates + costs ten decode programs.
 static CACHE: OnceLock<Mutex<BTreeMap<CacheKey, Arc<LayerCostModel>>>> = OnceLock::new();
-static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
-static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 
 /// Hashed cache key. Everything the sampled decode cost depends on — the
 /// hardware, the model shape, the LoRA configuration, the calibration
 /// constants, the layer mapping itself — is streamed through two
-/// independent 64-bit FNV-1a states (no multi-kilobyte Debug `String` is
-/// allocated, stored, or compared, which the old format!-keyed map did on
-/// every lookup); the tensor-parallel chip count rides alongside in the
-/// clear. Deliberately excludes input/output lengths, batch, and SRPG
-/// (the decode program is kv-parameterized and SRPG only affects
-/// reprogramming/power, not the decode instruction stream). 128 bits of
-/// hash across two independent states makes an accidental collision
-/// astronomically unlikely; a collision-sanity test sweeps nearby configs.
+/// independent 64-bit FNV-1a states (`registry::config_fingerprint`; no
+/// multi-kilobyte Debug `String` is allocated, stored, or compared, which
+/// the old format!-keyed map did on every lookup); the `ModelId` and the
+/// tensor-parallel chip count ride alongside in the clear, so even an
+/// (astronomically unlikely) 128-bit hash collision could not silently
+/// alias two models or two widths. Deliberately excludes input/output
+/// lengths, batch, and SRPG (the decode program is kv-parameterized and
+/// SRPG only affects reprogramming/power, not the decode instruction
+/// stream). A collision-sanity test sweeps nearby configs here and the
+/// full paper grid × chips × batch in `tests/sweep_cache.rs`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct CacheKey {
     h1: u64,
     h2: u64,
+    model: ModelId,
     n_chips: usize,
 }
 
-/// Two independent FNV-1a 64 streams fed through `fmt::Write`, so the
-/// Debug representations hash without materializing a string.
-struct DualFnv {
-    h1: u64,
-    h2: u64,
-}
-
-impl DualFnv {
-    const OFFSET1: u64 = 0xcbf2_9ce4_8422_2325;
-    const OFFSET2: u64 = 0x6c62_272e_07bb_0142; // distinct basis
-    const PRIME: u64 = 0x1000_0000_01b3;
-
-    fn new() -> Self {
-        Self { h1: Self::OFFSET1, h2: Self::OFFSET2 }
-    }
-}
-
-impl Default for DualFnv {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl std::fmt::Write for DualFnv {
-    fn write_str(&mut self, s: &str) -> std::fmt::Result {
-        for &byte in s.as_bytes() {
-            self.h1 = (self.h1 ^ byte as u64).wrapping_mul(Self::PRIME);
-            // The second stream folds the running length parity in, so it
-            // is not a bijection of the first.
-            self.h2 = (self.h2 ^ byte.rotate_left(3) as u64).wrapping_mul(Self::PRIME);
-        }
-        Ok(())
-    }
-}
-
 fn cache_key(cfg: &ExperimentConfig, lm: &LayerMapping, n_chips: usize) -> CacheKey {
-    let mut h = DualFnv::new();
-    write!(
-        h,
-        "{:?}|{:?}|{:?}|{:?}|{:?}",
-        cfg.system, cfg.model, cfg.lora, cfg.calib, lm
-    )
-    .expect("hashing Debug output is infallible");
-    CacheKey { h1: h.h1, h2: h.h2, n_chips }
+    let (h1, h2, model, n_chips) = registry::cost_key_fingerprint(cfg, lm, n_chips);
+    CacheKey { h1, h2, model, n_chips }
 }
 
 /// Exact rounded lerp between `(k0, a)` and `(k1, b)` at offset `j`
@@ -195,6 +156,27 @@ fn floor_sum(n: i128, m: i128, a: i128, b: i128) -> i128 {
 /// limit.
 const WINDOW_MEMO_CAP: usize = 4096;
 
+/// The shared window memo of one sampled model: `sum_window` /
+/// `sum_cycles_window` results keyed on (kv0, n), plus the hit / full-skip
+/// observability counters. Lives behind an `Arc` on the owning
+/// [`LayerCostModel`], so clones share one warm memo — the model is
+/// immutable after build and every stored value is a pure function of
+/// (samples, kv0, n), so sharing cannot change any result, it only skips
+/// recomputation (insert-once discipline keeps it bit-identical at any
+/// `--jobs` width).
+#[derive(Debug, Default)]
+struct WindowMemo {
+    window: Mutex<BTreeMap<(usize, usize), PhaseCost>>,
+    cycles: Mutex<BTreeMap<(usize, usize), u64>>,
+    /// Hits (both maps) served by this memo.
+    hits: AtomicU64,
+    /// Inserts declined because the map sat at [`WINDOW_MEMO_CAP`]: the
+    /// value was computed (and returned — correctness is unaffected) but
+    /// not stored, so the key recomputes on every revisit. Counted so a
+    /// saturated memo is observable, not invisible.
+    full_skips: AtomicU64,
+}
+
 /// Piecewise-linear per-layer decode model.
 #[derive(Debug)]
 pub struct LayerCostModel {
@@ -204,16 +186,8 @@ pub struct LayerCostModel {
     /// paths must not scale it with tokens). Instance-scoped so counting
     /// tests don't race other tests sharing the process.
     evals: AtomicU64,
-    /// Memoized `sum_window` results keyed on (kv0, n). Sweep points
-    /// sharing one cached model (see `build_cached`) ask for the same
-    /// decode windows over and over; the floor-sum is exact and the model
-    /// is immutable after build, so replaying the stored value is
-    /// bit-identical to recomputing. Deliberately does NOT touch `evals`.
-    window_memo: Mutex<BTreeMap<(usize, usize), PhaseCost>>,
-    /// Same, for the cycles-only `sum_cycles_window`.
-    cycles_memo: Mutex<BTreeMap<(usize, usize), u64>>,
-    /// Window-memo hits (both maps) served by THIS instance.
-    window_hits: AtomicU64,
+    /// Shared memo of the closed-form window sums (see [`WindowMemo`]).
+    memo: Arc<WindowMemo>,
 }
 
 impl Clone for LayerCostModel {
@@ -221,12 +195,10 @@ impl Clone for LayerCostModel {
         Self {
             samples: self.samples.clone(),
             evals: AtomicU64::new(self.evals.load(Ordering::Relaxed)),
-            // A clone starts with a cold memo: the maps are a cache, not
-            // state, and sharing them would need an Arc the callers of
-            // `build_cached` already provide.
-            window_memo: Mutex::new(BTreeMap::new()),
-            cycles_memo: Mutex::new(BTreeMap::new()),
-            window_hits: AtomicU64::new(0),
+            // Clones SHARE the memo: the maps cache pure functions of the
+            // (immutable) samples, so a clone replays the original's warm
+            // entries bit-identically instead of starting cold.
+            memo: Arc::clone(&self.memo),
         }
     }
 }
@@ -236,9 +208,7 @@ impl LayerCostModel {
         Self {
             samples,
             evals: AtomicU64::new(0),
-            window_memo: Mutex::new(BTreeMap::new()),
-            cycles_memo: Mutex::new(BTreeMap::new()),
-            window_hits: AtomicU64::new(0),
+            memo: Arc::new(WindowMemo::default()),
         }
     }
 
@@ -292,24 +262,24 @@ impl LayerCostModel {
         {
             let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(hit) = guard.get(&key) {
-                CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+                registry::note_layer_model_hit();
                 return Arc::clone(hit);
             }
         }
         // Build outside the lock (it is the expensive part); a racing
         // builder for the same key keeps the first insertion.
         let built = Arc::new(Self::build_for_chips(cfg, lm, n));
-        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        registry::note_layer_model_build();
         let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
         Arc::clone(guard.entry(key).or_insert(built))
     }
 
-    /// Global (hits, misses) counters of [`LayerCostModel::build_cached`].
+    /// Global (hits, misses) counters of [`LayerCostModel::build_cached`]
+    /// — a shim over the sweep registry's `layer_model_*` counters (see
+    /// `sim::registry::RegistryStats` for the full per-stage view).
     pub fn cache_counters() -> (u64, u64) {
-        (
-            CACHE_HITS.load(Ordering::Relaxed),
-            CACHE_MISSES.load(Ordering::Relaxed),
-        )
+        let s = registry::RegistryStats::snapshot();
+        (s.layer_model_hits, s.layer_model_builds)
     }
 
     /// Per-kv `eval`/`eval_cycles` calls served by THIS model instance —
@@ -411,16 +381,30 @@ impl LayerCostModel {
     /// cached model replay the stored value bit-identically.
     pub fn sum_window(&self, kv0: usize, n: usize) -> PhaseCost {
         {
-            let memo = self.window_memo.lock().unwrap_or_else(|e| e.into_inner());
+            let memo = self.memo.window.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(hit) = memo.get(&(kv0, n)) {
-                self.window_hits.fetch_add(1, Ordering::Relaxed);
+                self.memo.hits.fetch_add(1, Ordering::Relaxed);
+                registry::note_window_hit();
                 return *hit;
             }
         }
         let acc = self.sum_window_uncached(kv0, n);
-        let mut memo = self.window_memo.lock().unwrap_or_else(|e| e.into_inner());
-        if memo.len() < WINDOW_MEMO_CAP {
-            memo.insert((kv0, n), acc);
+        let mut memo = self.memo.window.lock().unwrap_or_else(|e| e.into_inner());
+        // Insert-once: if a racing thread stored the key first, keep its
+        // (bit-identical) value; a declined at-cap insert is counted, not
+        // silent.
+        let at_cap = memo.len() >= WINDOW_MEMO_CAP;
+        match memo.entry((kv0, n)) {
+            Entry::Occupied(_) => {}
+            Entry::Vacant(slot) => {
+                if at_cap {
+                    self.memo.full_skips.fetch_add(1, Ordering::Relaxed);
+                    registry::note_window_full_skip();
+                } else {
+                    slot.insert(acc);
+                    registry::note_window_insert();
+                }
+            }
         }
         acc
     }
@@ -448,9 +432,10 @@ impl LayerCostModel {
     /// memoized per (kv0, n) like [`LayerCostModel::sum_window`].
     pub fn sum_cycles_window(&self, kv0: usize, n: usize) -> u64 {
         {
-            let memo = self.cycles_memo.lock().unwrap_or_else(|e| e.into_inner());
+            let memo = self.memo.cycles.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(hit) = memo.get(&(kv0, n)) {
-                self.window_hits.fetch_add(1, Ordering::Relaxed);
+                self.memo.hits.fetch_add(1, Ordering::Relaxed);
+                registry::note_window_hit();
                 return *hit;
             }
         }
@@ -464,18 +449,37 @@ impl LayerCostModel {
                 (hi - k0) as i128,
             );
         });
-        let mut memo = self.cycles_memo.lock().unwrap_or_else(|e| e.into_inner());
-        if memo.len() < WINDOW_MEMO_CAP {
-            memo.insert((kv0, n), acc);
+        let mut memo = self.memo.cycles.lock().unwrap_or_else(|e| e.into_inner());
+        let at_cap = memo.len() >= WINDOW_MEMO_CAP;
+        match memo.entry((kv0, n)) {
+            Entry::Occupied(_) => {}
+            Entry::Vacant(slot) => {
+                if at_cap {
+                    self.memo.full_skips.fetch_add(1, Ordering::Relaxed);
+                    registry::note_window_full_skip();
+                } else {
+                    slot.insert(acc);
+                    registry::note_window_insert();
+                }
+            }
         }
         acc
     }
 
     /// Window-memo hits (`sum_window` + `sum_cycles_window`) served by
-    /// THIS model instance. Like `eval_count`, instance-scoped so tests
-    /// don't race each other through the shared build cache.
+    /// this model's (shared) memo. Clones share the memo, so a clone's
+    /// replays count here too; tests wanting isolation build a fresh
+    /// (uncached) instance.
     pub fn window_memo_hits(&self) -> u64 {
-        self.window_hits.load(Ordering::Relaxed)
+        self.memo.hits.load(Ordering::Relaxed)
+    }
+
+    /// Inserts declined because the window memo sat at its cap
+    /// (`WINDOW_MEMO_CAP` keys per map). Non-zero means revisited windows
+    /// beyond the cap recompute every time — observable saturation, never
+    /// a wrong result.
+    pub fn window_memo_full_skips(&self) -> u64 {
+        self.memo.full_skips.load(Ordering::Relaxed)
     }
 
     /// Whether the per-layer cycle cost is non-decreasing in kv across the
@@ -848,12 +852,55 @@ mod tests {
         // Memoized values also match the uncached path and stay eval-free.
         assert_eq!(first, m.sum_window_uncached(100, 500));
         assert_eq!(m.eval_count(), 0);
-        // A clone starts with a cold memo but identical values.
+        // A clone SHARES the memo (the historical cold-clone behavior made
+        // every `LayerCostModel` clone rebuild its windows from scratch):
+        // its first replay of an already-stored key is a hit, counted on
+        // the shared memo, with the identical bits.
         let c = m.clone();
-        assert_eq!(c.window_memo_hits(), 0);
+        assert_eq!(c.window_memo_hits(), 2, "clone shares the warm memo");
         assert_eq!(c.sum_window(100, 500), first);
-        assert_eq!(c.window_memo_hits(), 0, "clone's first call is a miss");
-        assert_eq!(c.sum_window(100, 500), first);
-        assert_eq!(c.window_memo_hits(), 1);
+        assert_eq!(c.window_memo_hits(), 3, "clone's replay is a shared hit");
+        assert_eq!(m.window_memo_hits(), 3, "the original observes it too");
+        // A key first seen via the clone warms the original symmetrically.
+        let via_clone = c.sum_window(700, 40);
+        assert_eq!(m.sum_window(700, 40), via_clone);
+        assert_eq!(m.window_memo_hits(), 4);
+    }
+
+    #[test]
+    fn window_memo_cap_skips_are_counted() {
+        // A tiny synthetic 2-sample model (slope 1 cycle/kv) makes filling
+        // the memo to its cap cheap; the at-cap contract is: new keys
+        // still compute correct values, they just are not stored — and
+        // every declined insert is counted, never silent.
+        let lo = PhaseCost::default();
+        let hi = PhaseCost { cycles: 128, ..PhaseCost::default() };
+        let m = LayerCostModel::from_samples(vec![(0, lo), (128, hi)]);
+        for i in 0..WINDOW_MEMO_CAP {
+            let _ = m.sum_window(i, 1);
+        }
+        assert_eq!(m.window_memo_full_skips(), 0, "below cap nothing skips");
+        // The next distinct key lands on a full map: computed, returned,
+        // not inserted — one counted skip...
+        let v = m.sum_window(WINDOW_MEMO_CAP, 1);
+        assert_eq!(m.window_memo_full_skips(), 1);
+        // ...bit-equal to the uncached computation, and recomputed (and
+        // re-counted) on every revisit since it was never stored.
+        assert_eq!(v, m.sum_window_uncached(WINDOW_MEMO_CAP, 1));
+        assert_eq!(m.sum_window(WINDOW_MEMO_CAP, 1), v);
+        assert_eq!(m.window_memo_full_skips(), 2);
+        // Keys stored before saturation still hit.
+        let hits = m.window_memo_hits();
+        let _ = m.sum_window(0, 1);
+        assert_eq!(m.window_memo_hits(), hits + 1);
+        // The cycles memo saturates (and counts) independently.
+        for i in 0..WINDOW_MEMO_CAP {
+            let _ = m.sum_cycles_window(i, 1);
+        }
+        assert_eq!(m.window_memo_full_skips(), 2, "cycles map was still filling");
+        let c = m.sum_cycles_window(WINDOW_MEMO_CAP, 1);
+        assert_eq!(m.window_memo_full_skips(), 3);
+        assert_eq!(m.sum_cycles_window(WINDOW_MEMO_CAP, 1), c);
+        assert_eq!(m.window_memo_full_skips(), 4);
     }
 }

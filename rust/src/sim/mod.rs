@@ -17,6 +17,7 @@ pub mod cost;
 pub mod engine;
 pub mod layer_model;
 pub mod lm_head;
+pub mod registry;
 pub mod sweep;
 
 pub use cost::{
@@ -26,3 +27,4 @@ pub use cost::{
 pub use engine::{DecodeEval, SimReport, Simulator};
 pub use layer_model::{CyclesCursor, LayerCostModel};
 pub use lm_head::LmHead;
+pub use registry::{PrefillBlockCost, RegistryStats};

@@ -1,0 +1,501 @@
+//! Process-wide sweep costing registry: deterministic caches spanning the
+//! config → mapping → dataflow → program-cost pipeline.
+//!
+//! A grid sweep (`report --table 2 --jobs N`, `sweep`, a policy × seed
+//! serving study) revisits the same (system, model, LoRA, calib) point
+//! under different ctx / batch / chips / policy axes. Everything the
+//! expensive stages produce — the optimized `ModelMapping`, the sampled
+//! `LayerCostModel` (cached in `layer_model`), the prefill-template block
+//! costs, the reprogramming cost — depends only on the *structural* axes,
+//! so one build per structural key serves the whole grid. The registry
+//! holds those caches plus per-stage hit/build counters, so a warm rerun
+//! is observable: zero mapping builds, zero program generations.
+//!
+//! Determinism argument (same as `LayerCostModel::build_cached`): every
+//! cached value is a pure function of its key, lookups happen under the
+//! map lock, builds happen outside it, and a racing builder keeps the
+//! first insertion (`entry().or_insert`). Since racing builders compute
+//! bit-identical values from identical inputs, results are bit-identical
+//! at any `--jobs` width — gated in `tests/sweep_cache.rs` and
+//! `benches/sim_hotpath.rs`.
+
+use super::cost::{program_cost, PhaseCost};
+use crate::config::{ExperimentConfig, ModelId};
+use crate::dataflow::{prefill_program, shard_program_slice};
+use crate::mapping::{map_model, LayerMapping, ModelMapping};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Two independent FNV-1a 64 streams fed through `fmt::Write`, so Debug
+/// representations hash without materializing a string. 128 bits across
+/// two independent states makes an accidental collision astronomically
+/// unlikely; every hashed key additionally carries a clear-text
+/// structural discriminant (the `ModelId`, plus the chip width where it
+/// applies), so even a collision could not alias two models.
+pub(crate) struct DualFnv {
+    pub(crate) h1: u64,
+    pub(crate) h2: u64,
+}
+
+impl DualFnv {
+    const OFFSET1: u64 = 0xcbf2_9ce4_8422_2325;
+    const OFFSET2: u64 = 0x6c62_272e_07bb_0142; // distinct basis
+    const PRIME: u64 = 0x1000_0000_01b3;
+
+    pub(crate) fn new() -> Self {
+        Self { h1: Self::OFFSET1, h2: Self::OFFSET2 }
+    }
+}
+
+impl Default for DualFnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Write for DualFnv {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for &byte in s.as_bytes() {
+            self.h1 = (self.h1 ^ byte as u64).wrapping_mul(Self::PRIME);
+            // The second stream folds the running length parity in, so it
+            // is not a bijection of the first.
+            self.h2 = (self.h2 ^ byte.rotate_left(3) as u64).wrapping_mul(Self::PRIME);
+        }
+        Ok(())
+    }
+}
+
+/// Structural fingerprint of everything the mapping depends on: the
+/// hardware, the model shape, the LoRA configuration, the calibration
+/// constants. Deliberately excludes input/output lengths, batch, SRPG,
+/// and the shard axes — the mapping is per-chip and those axes ride on
+/// top of it.
+fn model_fingerprint(cfg: &ExperimentConfig) -> (u64, u64) {
+    let mut h = DualFnv::new();
+    write!(h, "{:?}|{:?}|{:?}|{:?}", cfg.system, cfg.model, cfg.lora, cfg.calib)
+        .expect("hashing Debug output is infallible");
+    (h.h1, h.h2)
+}
+
+/// Fingerprint of everything a *program cost* depends on: the model
+/// fingerprint plus the layer mapping the program is generated against.
+pub(crate) fn config_fingerprint(cfg: &ExperimentConfig, lm: &LayerMapping) -> (u64, u64) {
+    let mut h = DualFnv::new();
+    write!(
+        h,
+        "{:?}|{:?}|{:?}|{:?}|{:?}",
+        cfg.system, cfg.model, cfg.lora, cfg.calib, lm
+    )
+    .expect("hashing Debug output is infallible");
+    (h.h1, h.h2)
+}
+
+/// The full layer-model cache key as a transparent tuple
+/// `(h1, h2, model, n_chips)` — exposed so the collision-sanity suite in
+/// `tests/sweep_cache.rs` can sweep the grid and assert that keys are
+/// equal exactly within a structural class (that sharing IS the cache
+/// contract) and distinct across classes.
+pub fn cost_key_fingerprint(
+    cfg: &ExperimentConfig,
+    lm: &LayerMapping,
+    n_chips: usize,
+) -> (u64, u64, ModelId, usize) {
+    let (h1, h2) = config_fingerprint(cfg, lm);
+    (h1, h2, cfg.model.id, n_chips.max(1))
+}
+
+// ---- per-stage counters -------------------------------------------------
+
+static MAPPING_HITS: AtomicU64 = AtomicU64::new(0);
+static MAPPING_BUILDS: AtomicU64 = AtomicU64::new(0);
+static LAYER_MODEL_HITS: AtomicU64 = AtomicU64::new(0);
+static LAYER_MODEL_BUILDS: AtomicU64 = AtomicU64::new(0);
+static PREFILL_HITS: AtomicU64 = AtomicU64::new(0);
+static PREFILL_BUILDS: AtomicU64 = AtomicU64::new(0);
+static REPROG_HITS: AtomicU64 = AtomicU64::new(0);
+static REPROG_BUILDS: AtomicU64 = AtomicU64::new(0);
+static PROGRAMS_GENERATED: AtomicU64 = AtomicU64::new(0);
+static WINDOW_HITS: AtomicU64 = AtomicU64::new(0);
+static WINDOW_INSERTS: AtomicU64 = AtomicU64::new(0);
+static WINDOW_FULL_SKIPS: AtomicU64 = AtomicU64::new(0);
+
+/// Every dataflow program generation (`decode_program`,
+/// `prefill_program`, `reprogram_program`) notes itself here — the
+/// "0 program generations on a warm pass" proxy counts real generator
+/// invocations, not cache bookkeeping.
+pub(crate) fn note_program_generated() {
+    PROGRAMS_GENERATED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Every `ModelMapping::build` (cached or not, optimized or naive) notes
+/// itself here, so an uncached mapping construction is visible as a
+/// build even when it bypasses [`map_model_cached`].
+pub(crate) fn note_mapping_build() {
+    MAPPING_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_layer_model_hit() {
+    LAYER_MODEL_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_layer_model_build() {
+    LAYER_MODEL_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_window_hit() {
+    WINDOW_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_window_insert() {
+    WINDOW_INSERTS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_window_full_skip() {
+    WINDOW_FULL_SKIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A snapshot of the registry's per-stage hit/build counters. Counters
+/// are process-wide and monotone; take a snapshot before a sweep and
+/// [`RegistryStats::delta_since`] after it to attribute work to that
+/// sweep (`sim::sweep::run_cached` packages exactly that).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub mapping_hits: u64,
+    pub mapping_builds: u64,
+    pub layer_model_hits: u64,
+    pub layer_model_builds: u64,
+    pub prefill_hits: u64,
+    pub prefill_builds: u64,
+    pub reprog_hits: u64,
+    pub reprog_builds: u64,
+    pub programs_generated: u64,
+    pub window_hits: u64,
+    pub window_inserts: u64,
+    pub window_full_skips: u64,
+}
+
+impl RegistryStats {
+    /// Current process-wide counter values.
+    pub fn snapshot() -> Self {
+        Self {
+            mapping_hits: MAPPING_HITS.load(Ordering::Relaxed),
+            mapping_builds: MAPPING_BUILDS.load(Ordering::Relaxed),
+            layer_model_hits: LAYER_MODEL_HITS.load(Ordering::Relaxed),
+            layer_model_builds: LAYER_MODEL_BUILDS.load(Ordering::Relaxed),
+            prefill_hits: PREFILL_HITS.load(Ordering::Relaxed),
+            prefill_builds: PREFILL_BUILDS.load(Ordering::Relaxed),
+            reprog_hits: REPROG_HITS.load(Ordering::Relaxed),
+            reprog_builds: REPROG_BUILDS.load(Ordering::Relaxed),
+            programs_generated: PROGRAMS_GENERATED.load(Ordering::Relaxed),
+            window_hits: WINDOW_HITS.load(Ordering::Relaxed),
+            window_inserts: WINDOW_INSERTS.load(Ordering::Relaxed),
+            window_full_skips: WINDOW_FULL_SKIPS.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Per-stage deltas against an earlier snapshot (saturating, so a
+    /// stale `earlier` cannot underflow).
+    pub fn delta_since(&self, earlier: &RegistryStats) -> RegistryStats {
+        RegistryStats {
+            mapping_hits: self.mapping_hits.saturating_sub(earlier.mapping_hits),
+            mapping_builds: self.mapping_builds.saturating_sub(earlier.mapping_builds),
+            layer_model_hits: self.layer_model_hits.saturating_sub(earlier.layer_model_hits),
+            layer_model_builds: self
+                .layer_model_builds
+                .saturating_sub(earlier.layer_model_builds),
+            prefill_hits: self.prefill_hits.saturating_sub(earlier.prefill_hits),
+            prefill_builds: self.prefill_builds.saturating_sub(earlier.prefill_builds),
+            reprog_hits: self.reprog_hits.saturating_sub(earlier.reprog_hits),
+            reprog_builds: self.reprog_builds.saturating_sub(earlier.reprog_builds),
+            programs_generated: self
+                .programs_generated
+                .saturating_sub(earlier.programs_generated),
+            window_hits: self.window_hits.saturating_sub(earlier.window_hits),
+            window_inserts: self.window_inserts.saturating_sub(earlier.window_inserts),
+            window_full_skips: self
+                .window_full_skips
+                .saturating_sub(earlier.window_full_skips),
+        }
+    }
+
+    /// Total expensive builds across every cached stage — the "a warm
+    /// sweep rebuilds nothing" gate asserts this is zero.
+    pub fn total_builds(&self) -> u64 {
+        self.mapping_builds + self.layer_model_builds + self.prefill_builds + self.reprog_builds
+    }
+
+    /// Total cache hits across every cached stage.
+    pub fn total_hits(&self) -> u64 {
+        self.mapping_hits + self.layer_model_hits + self.prefill_hits + self.reprog_hits
+    }
+}
+
+impl std::fmt::Display for RegistryStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "sweep costing cache:")?;
+        writeln!(
+            f,
+            "  mappings        : {} hits / {} builds",
+            self.mapping_hits, self.mapping_builds
+        )?;
+        writeln!(
+            f,
+            "  layer models    : {} hits / {} builds",
+            self.layer_model_hits, self.layer_model_builds
+        )?;
+        writeln!(
+            f,
+            "  prefill blocks  : {} hits / {} builds",
+            self.prefill_hits, self.prefill_builds
+        )?;
+        writeln!(
+            f,
+            "  reprogramming   : {} hits / {} builds",
+            self.reprog_hits, self.reprog_builds
+        )?;
+        writeln!(f, "  programs generated: {}", self.programs_generated)?;
+        write!(
+            f,
+            "  window memo     : {} hits / {} inserts / {} full-skips",
+            self.window_hits, self.window_inserts, self.window_full_skips
+        )
+    }
+}
+
+// ---- mapping cache ------------------------------------------------------
+
+type MapKey = (u64, u64, ModelId);
+static MAPPINGS: OnceLock<Mutex<BTreeMap<MapKey, Arc<ModelMapping>>>> = OnceLock::new();
+
+/// Cached [`map_model`]: one optimized `ModelMapping` per structural
+/// (system, model, LoRA, calib) key, shared process-wide. ctx / batch /
+/// chips / policy axes all reuse the same build — the mapping optimizer
+/// never sees those axes.
+pub fn map_model_cached(cfg: &ExperimentConfig) -> Arc<ModelMapping> {
+    let (h1, h2) = model_fingerprint(cfg);
+    let key = (h1, h2, cfg.model.id);
+    let cache = MAPPINGS.get_or_init(|| Mutex::new(BTreeMap::new()));
+    {
+        let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(hit) = guard.get(&key) {
+            MAPPING_HITS.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+    }
+    // Build outside the lock (`ModelMapping::build` notes the build); a
+    // racing builder for the same key keeps the first insertion.
+    let built = Arc::new(map_model(cfg));
+    let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+    Arc::clone(guard.entry(key).or_insert(built))
+}
+
+// ---- prefill-template block cost cache ----------------------------------
+
+/// Cost of one prefill block at a tensor-parallel width: the unsharded
+/// program cost (`full` — the energy events every chip's shares sum to)
+/// and chip 0's widest-slice cost (`sliced` — the critical path). At
+/// width 1 the two are the same `PhaseCost` bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillBlockCost {
+    pub full: PhaseCost,
+    pub sliced: PhaseCost,
+}
+
+type PrefillKey = (u64, u64, ModelId, usize, usize, usize);
+static PREFILL: OnceLock<Mutex<BTreeMap<PrefillKey, PrefillBlockCost>>> = OnceLock::new();
+
+/// Cached prefill-template block cost for `(cfg, lm, width, block, kv)`:
+/// generates + costs the block program at most once per key per process.
+/// Every engine's prefill loop and the serving builder's stage template
+/// share this cache, so a ctx × batch × chips grid generates each
+/// distinct (block, kv, width) program exactly once.
+pub fn prefill_block_cost(
+    cfg: &ExperimentConfig,
+    lm: &LayerMapping,
+    width: usize,
+    block: usize,
+    kv: usize,
+) -> PrefillBlockCost {
+    let w = width.max(1);
+    let (h1, h2) = config_fingerprint(cfg, lm);
+    let key = (h1, h2, cfg.model.id, w, block, kv);
+    let cache = PREFILL.get_or_init(|| Mutex::new(BTreeMap::new()));
+    {
+        let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(hit) = guard.get(&key) {
+            PREFILL_HITS.fetch_add(1, Ordering::Relaxed);
+            return *hit;
+        }
+    }
+    let prog = prefill_program(cfg, lm, block, kv);
+    let full = program_cost(&prog, &cfg.system, &cfg.calib);
+    let sliced = if w == 1 {
+        full
+    } else {
+        program_cost(&shard_program_slice(&prog, 0, w), &cfg.system, &cfg.calib)
+    };
+    PREFILL_BUILDS.fetch_add(1, Ordering::Relaxed);
+    let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+    *guard.entry(key).or_insert(PrefillBlockCost { full, sliced })
+}
+
+// ---- reprogramming cost cache -------------------------------------------
+
+type ReprogKey = (u64, u64, ModelId);
+static REPROG: OnceLock<Mutex<BTreeMap<ReprogKey, PhaseCost>>> = OnceLock::new();
+
+/// Cached cost of one layer's LoRA adapter reprogramming
+/// (`dataflow::reprogram_program` + `program_cost`). Width-independent:
+/// adapter distribution is host-link-bound, so every engine charges the
+/// single-chip duration.
+pub fn reprogram_cost(cfg: &ExperimentConfig, lm: &LayerMapping) -> PhaseCost {
+    let (h1, h2) = config_fingerprint(cfg, lm);
+    let key = (h1, h2, cfg.model.id);
+    let cache = REPROG.get_or_init(|| Mutex::new(BTreeMap::new()));
+    {
+        let guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(hit) = guard.get(&key) {
+            REPROG_HITS.fetch_add(1, Ordering::Relaxed);
+            return *hit;
+        }
+    }
+    let built = program_cost(
+        &crate::dataflow::reprogram_program(cfg, lm),
+        &cfg.system,
+        &cfg.calib,
+    );
+    REPROG_BUILDS.fetch_add(1, Ordering::Relaxed);
+    let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+    *guard.entry(key).or_insert(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LoraTarget, ModelId};
+    use crate::dataflow::reprogram_program;
+
+    fn cfg_for(ctx: usize) -> ExperimentConfig {
+        ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q, LoraTarget::V], ctx)
+    }
+
+    #[test]
+    fn mapping_cache_shares_across_ctx_and_batch() {
+        let a_cfg = cfg_for(448);
+        let mut b_cfg = cfg_for(896);
+        b_cfg.serving.max_batch = 4;
+        b_cfg.shard.n_chips = 2;
+        let a = map_model_cached(&a_cfg);
+        let before = RegistryStats::snapshot();
+        let b = map_model_cached(&b_cfg);
+        let delta = RegistryStats::snapshot().delta_since(&before);
+        assert!(Arc::ptr_eq(&a, &b), "ctx/batch/chips axes must share one mapping");
+        assert_eq!(delta.mapping_builds, 0, "second lookup must not rebuild");
+        assert!(delta.mapping_hits >= 1);
+        // The cached mapping is the same structure an uncached build makes.
+        let fresh = map_model(&a_cfg);
+        assert_eq!(a.total_cts, fresh.total_cts);
+        assert_eq!(a.layers.len(), fresh.layers.len());
+    }
+
+    #[test]
+    fn prefill_block_cost_matches_uncached_build() {
+        let cfg = cfg_for(640);
+        let mapping = map_model_cached(&cfg);
+        let lm0 = &mapping.layers[0];
+        for width in [1usize, 2, 4] {
+            let pc = prefill_block_cost(&cfg, lm0, width, 128, 64);
+            let prog = prefill_program(&cfg, lm0, 128, 64);
+            let full = program_cost(&prog, &cfg.system, &cfg.calib);
+            assert_eq!(pc.full, full, "width {width}: full cost");
+            let sliced = if width == 1 {
+                full
+            } else {
+                program_cost(&shard_program_slice(&prog, 0, width), &cfg.system, &cfg.calib)
+            };
+            assert_eq!(pc.sliced, sliced, "width {width}: sliced cost");
+            // Replay is a hit and bit-identical.
+            let before = RegistryStats::snapshot();
+            assert_eq!(prefill_block_cost(&cfg, lm0, width, 128, 64), pc);
+            let delta = RegistryStats::snapshot().delta_since(&before);
+            assert_eq!(delta.prefill_builds, 0);
+            assert!(delta.prefill_hits >= 1);
+        }
+    }
+
+    #[test]
+    fn reprogram_cost_matches_uncached_build() {
+        let cfg = cfg_for(704);
+        let mapping = map_model_cached(&cfg);
+        let lm0 = &mapping.layers[0];
+        let cached = reprogram_cost(&cfg, lm0);
+        let direct = program_cost(&reprogram_program(&cfg, lm0), &cfg.system, &cfg.calib);
+        assert_eq!(cached, direct);
+        let before = RegistryStats::snapshot();
+        assert_eq!(reprogram_cost(&cfg, lm0), direct);
+        let delta = RegistryStats::snapshot().delta_since(&before);
+        assert_eq!(delta.reprog_builds, 0);
+        assert!(delta.reprog_hits >= 1);
+    }
+
+    #[test]
+    fn program_generation_is_counted() {
+        let cfg = cfg_for(832);
+        let mapping = map_model_cached(&cfg);
+        let lm0 = &mapping.layers[0];
+        let before = RegistryStats::snapshot();
+        let _ = crate::dataflow::decode_program(&cfg, lm0, 333);
+        let _ = prefill_program(&cfg, lm0, 128, 64);
+        let _ = reprogram_program(&cfg, lm0);
+        let delta = RegistryStats::snapshot().delta_since(&before);
+        assert!(delta.programs_generated >= 3, "three direct generations must count");
+    }
+
+    #[test]
+    fn fingerprints_separate_structural_classes() {
+        let a = cfg_for(1024);
+        let b = {
+            let mut c = cfg_for(1024);
+            c.calib.rram_pass_cycles += 1;
+            c
+        };
+        assert_ne!(model_fingerprint(&a), model_fingerprint(&b), "calib must move the key");
+        let q = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], 1024);
+        assert_ne!(model_fingerprint(&a), model_fingerprint(&q), "LoRA targets must move the key");
+        // ctx / batch / srpg do NOT move the structural key — that
+        // sharing is the cache contract.
+        let mut wide = cfg_for(2048);
+        wide.serving.max_batch = 4;
+        wide.srpg = false;
+        assert_eq!(model_fingerprint(&a), model_fingerprint(&wide));
+    }
+
+    #[test]
+    fn stats_delta_and_totals_are_consistent() {
+        let a = RegistryStats {
+            mapping_hits: 5,
+            mapping_builds: 1,
+            layer_model_hits: 7,
+            layer_model_builds: 2,
+            prefill_hits: 11,
+            prefill_builds: 3,
+            reprog_hits: 13,
+            reprog_builds: 4,
+            programs_generated: 40,
+            window_hits: 17,
+            window_inserts: 6,
+            window_full_skips: 0,
+        };
+        assert_eq!(a.total_builds(), 10);
+        assert_eq!(a.total_hits(), 36);
+        let zero = a.delta_since(&a);
+        assert_eq!(zero, RegistryStats::default());
+        assert_eq!(zero.total_builds(), 0);
+        // Display renders every stage (smoke: the format is for humans).
+        let text = a.to_string();
+        assert!(text.contains("prefill blocks"));
+        assert!(text.contains("full-skips"));
+    }
+}

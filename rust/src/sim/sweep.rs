@@ -13,6 +13,7 @@
 //! keyed insert-once map whose values are identical however the race
 //! resolves.
 
+use super::registry::RegistryStats;
 use crate::bail;
 use crate::util::error::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -59,6 +60,29 @@ where
     tagged.sort_by_key(|(i, _)| *i);
     debug_assert_eq!(tagged.len(), n);
     tagged.into_iter().map(|(_, v)| v).collect()
+}
+
+/// [`run_indexed`] plus the sweep costing cache's per-stage hit/miss
+/// delta for exactly this grid: snapshot the process-wide
+/// [`RegistryStats`] before the fan-out, run, and return the results with
+/// `after - before`. An **incremental** rerun of a grid the process has
+/// already costed reports zero mapping/model/program builds — the gate
+/// `benches/sim_hotpath.rs` and `tests/sweep_cache.rs` pin. Results are
+/// bit-identical at every `jobs` width (insert-once caches: a racing
+/// build's value is identical to the winner's). The counter delta is
+/// exact on serial runs and on warm reruns at any width (all builds
+/// zero); a *cold* parallel run may count a duplicate build where two
+/// workers miss the same key concurrently, so cold counters are pinned
+/// at `jobs == 1`.
+pub fn run_cached<T, F>(jobs: usize, n: usize, f: F) -> (Vec<T>, RegistryStats)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let before = RegistryStats::snapshot();
+    let results = run_indexed(jobs, n, f);
+    let delta = RegistryStats::snapshot().delta_since(&before);
+    (results, delta)
 }
 
 /// Hard ceiling on requested sweep workers: anything wider is assumed to

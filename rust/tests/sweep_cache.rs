@@ -1,0 +1,191 @@
+//! Integration gates for the sweep costing cache.
+//!
+//! Two commitments:
+//!  * an **incremental rerun** of a grid the process has already costed
+//!    rebuilds nothing — zero mapping / layer-model / prefill / reprogram
+//!    builds, zero generated programs — and replays every report
+//!    bit-for-bit, serial and at `--jobs 4`;
+//!  * the dual-FNV cost key collides **only within a structural class**:
+//!    the swept axes (ctx, batch) never move it, while model, LoRA
+//!    targets, and chip width always separate it (chips and `ModelId`
+//!    ride along as structural fields, the hash halves must each
+//!    discriminate the rest on their own).
+
+use primal::config::{ExperimentConfig, LoraTarget, ModelId};
+use primal::mapping::map_model;
+use primal::sim::registry::cost_key_fingerprint;
+use primal::sim::{sweep, RegistryStats, SimReport, Simulator};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+/// The registry counters are process-wide and both tests touch them (or
+/// the caches behind them); serialize so parallel test threads cannot
+/// smear a counter delta.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Every numeric report field as raw bits: integers widened, f64s via
+/// `to_bits` so `-0.0` vs `0.0` or a NaN fails instead of passing `==`.
+fn numeric_bits(r: &SimReport) -> Vec<u64> {
+    vec![
+        r.input_tokens as u64,
+        r.output_tokens as u64,
+        r.batch as u64,
+        r.n_chips as u64,
+        u64::from(r.srpg),
+        r.ttft_s.to_bits(),
+        r.itl_ms.to_bits(),
+        r.throughput_tps.to_bits(),
+        r.avg_power_w.to_bits(),
+        r.efficiency_tpj.to_bits(),
+        r.total_cts as u64,
+        r.cts_per_layer as u64,
+        r.total_cycles,
+        r.total_energy_j.to_bits(),
+        r.energy.rram_j.to_bits(),
+        r.energy.sram_j.to_bits(),
+        r.energy.scratchpad_j.to_bits(),
+        r.energy.router_j.to_bits(),
+        r.energy.dmac_j.to_bits(),
+        r.energy.network_j.to_bits(),
+        r.energy.retention_j.to_bits(),
+        r.energy.static_j.to_bits(),
+        r.reprog_stall_cycles,
+        r.itl_first_ms.to_bits(),
+        r.itl_last_ms.to_bits(),
+    ]
+}
+
+#[test]
+fn incremental_rerun_rebuilds_nothing_and_replays_bit_identically() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // 1B with LoRA on Q only: a structural class nothing else in this
+    // binary simulates, so the cold pass sees virgin caches.
+    let mut grid: Vec<(usize, usize, usize)> = Vec::new();
+    for ctx in [256usize, 512] {
+        for batch in [1usize, 4] {
+            for chips in [1usize, 2] {
+                grid.push((ctx, batch, chips));
+            }
+        }
+    }
+    let point = |i: usize| -> SimReport {
+        let (ctx, batch, chips) = grid[i];
+        let cfg = ExperimentConfig::paper_point(ModelId::Llama32_1b, &[LoraTarget::Q], ctx);
+        Simulator::new(&cfg).run_sharded_batched(batch, chips)
+    };
+    let (cold_reports, cold) = sweep::run_cached(1, grid.len(), &point);
+    // Serial cold pass over the 8 points: one mapping, two layer models
+    // (widths 1 and 2), 8 prefill block costs (4 kv points x 2 widths),
+    // one reprogram template, 29 generated programs (2 x 10 decode
+    // samples + 8 prefill + 1 reprogram), and 4 window-memo inserts
+    // (keys (256,256) and (512,512) on each width's memo).
+    assert_eq!(
+        cold,
+        RegistryStats {
+            mapping_hits: 7,
+            mapping_builds: 1,
+            layer_model_hits: 10,
+            layer_model_builds: 2,
+            prefill_hits: 16,
+            prefill_builds: 8,
+            reprog_hits: 7,
+            reprog_builds: 1,
+            programs_generated: 29,
+            window_hits: 8,
+            window_inserts: 4,
+            window_full_skips: 0,
+        },
+        "cold pass drifted from the structural replay of the grid"
+    );
+    // Warm reruns are all-hits at every worker width — and because every
+    // cache is keyed insert-once, the counter delta itself is exact even
+    // at jobs 4.
+    let expect_warm = RegistryStats {
+        mapping_hits: 8,
+        mapping_builds: 0,
+        layer_model_hits: 12,
+        layer_model_builds: 0,
+        prefill_hits: 24,
+        prefill_builds: 0,
+        reprog_hits: 8,
+        reprog_builds: 0,
+        programs_generated: 0,
+        window_hits: 12,
+        window_inserts: 0,
+        window_full_skips: 0,
+    };
+    for jobs in [1usize, 4] {
+        let (warm_reports, warm) = sweep::run_cached(jobs, grid.len(), &point);
+        assert_eq!(warm, expect_warm, "warm pass at jobs {jobs} rebuilt something");
+        assert_eq!(warm.total_builds(), 0);
+        for (i, (c, w)) in cold_reports.iter().zip(&warm_reports).enumerate() {
+            let at = grid[i];
+            assert_eq!(c.model, w.model, "jobs {jobs}, point {at:?}");
+            assert_eq!(c.lora_label, w.lora_label, "jobs {jobs}, point {at:?}");
+            assert_eq!(
+                numeric_bits(c),
+                numeric_bits(w),
+                "jobs {jobs}, point {at:?}: warm report not bit-identical"
+            );
+            assert_eq!(c.trace.events, w.trace.events, "jobs {jobs}, point {at:?}");
+        }
+    }
+}
+
+#[test]
+fn cost_keys_collide_only_within_a_structural_class() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let models = [ModelId::Llama32_1b, ModelId::Llama3_8b, ModelId::Llama2_13b];
+    let target_sets: [&[LoraTarget]; 2] = [&[LoraTarget::Q], &[LoraTarget::Q, LoraTarget::V]];
+    // 3 models x 2 LoRA sets x ctx {1024, 2048} x chips {1,2,4,8} x
+    // batch {1,4} = 96 grid points, bucketed by structural class.
+    // `map_model` (uncached) keeps the shared registry untouched so the
+    // incremental-rerun test stays cold on its own class in either order.
+    let mut by_class: BTreeMap<(usize, usize, usize), BTreeSet<(u64, u64, ModelId, usize)>> =
+        BTreeMap::new();
+    let mut points = 0usize;
+    for (mi, &model) in models.iter().enumerate() {
+        for (ti, &targets) in target_sets.iter().enumerate() {
+            for ctx in [1024usize, 2048] {
+                let cfg = ExperimentConfig::paper_point(model, targets, ctx);
+                let mapping = map_model(&cfg);
+                let lm0 = &mapping.layers[0];
+                for chips in [1usize, 2, 4, 8] {
+                    for _batch in [1usize, 4] {
+                        let key = cost_key_fingerprint(&cfg, lm0, chips);
+                        by_class.entry((mi, ti, chips)).or_default().insert(key);
+                        points += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(points, 96);
+    assert_eq!(by_class.len(), 24, "3 models x 2 LoRA sets x 4 chip widths");
+    // The swept axes never move the key: one key per class across both
+    // ctx values and both batch sizes.
+    for (class, set) in &by_class {
+        assert_eq!(set.len(), 1, "class {class:?} key moved across ctx/batch");
+    }
+    // Across classes every key is distinct; chips reaches the key as a
+    // structural field (the hash halves are shared across widths), and
+    // each FNV half must separate the 6 (model, LoRA) classes on its own.
+    let all: BTreeSet<(u64, u64, ModelId, usize)> =
+        by_class.values().flatten().copied().collect();
+    assert_eq!(all.len(), 24, "cross-class key collision");
+    let h1s: BTreeSet<u64> = all.iter().map(|k| k.0).collect();
+    let h2s: BTreeSet<u64> = all.iter().map(|k| k.1).collect();
+    assert_eq!(h1s.len(), 6, "h1 must separate the (model, LoRA) classes");
+    assert_eq!(h2s.len(), 6, "h2 must separate the (model, LoRA) classes");
+    for key in &all {
+        assert!([1usize, 2, 4, 8].contains(&key.3), "chip width lost from the key");
+    }
+}
+
+#[test]
+fn run_cached_on_an_empty_grid_is_a_no_op() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (results, delta) = sweep::run_cached(4, 0, |_| 0u64);
+    assert!(results.is_empty());
+    assert_eq!(delta, RegistryStats::default());
+}
